@@ -1,0 +1,117 @@
+//! End-to-end driver: regenerates every evaluation artifact of the paper
+//! (Tables 3, 7, 8, 9, 10) on the simulated cluster, validates the
+//! numerics through the AOT'd PJRT artifacts, and prints paper-vs-measured
+//! comparisons. This is the run recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example benchmark_suite
+
+use sakuraone::benchmarks::hpcg::HpcgParams;
+use sakuraone::benchmarks::hpl::HplParams;
+use sakuraone::benchmarks::hpl_mxp::MxpParams;
+use sakuraone::benchmarks::io500::{comparison_table, Io500Params};
+use sakuraone::benchmarks::{report, top500};
+use sakuraone::config::ClusterConfig;
+use sakuraone::coordinator::Platform;
+use sakuraone::llm::train;
+use sakuraone::topology::render::{render_network, render_system};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ClusterConfig::default();
+    println!("{}", render_system(&cfg));
+    println!(
+        "{}",
+        render_network(&cfg, &sakuraone::topology::build(&cfg))
+    );
+    let mut platform = Platform::new(cfg);
+
+    // ---- T7 HPL ----------------------------------------------------------
+    let hpl = platform.hpl(&HplParams::paper());
+    println!("{}", hpl.table());
+    println!("{}", report::hpl_compare(&hpl).render());
+
+    // ---- T8 HPCG ---------------------------------------------------------
+    let hpcg = platform.hpcg(&HpcgParams::paper());
+    println!("{}", hpcg.table());
+    println!("{}", report::hpcg_compare(&hpcg).render());
+
+    // ---- T9 HPL-MxP ------------------------------------------------------
+    let mxp = platform.mxp(&MxpParams::paper());
+    println!("{}", mxp.table());
+    println!("{}", report::mxp_compare(&mxp).render());
+
+    // ---- T10 IO500 -------------------------------------------------------
+    let r10 = platform.io500(&Io500Params::paper_10node());
+    let r96 = platform.io500(&Io500Params::paper_96node());
+    println!("{}", comparison_table(&r10, &r96).render());
+    println!("{}", report::io500_compare(&r10, &r96).render());
+
+    // ---- T3 + rankings ----------------------------------------------------
+    println!("{}", top500::census_table().render());
+    println!("{}", top500::rankings_table().render());
+
+    // ---- headline shape checks (the reproduction criteria) ---------------
+    let mxp_speedup = mxp.rmax / hpl.rmax;
+    let hpcg_frac = hpcg.final_gflops * 1e9 / hpl.rmax;
+    println!("shape checks:");
+    println!(
+        "  HPL-MxP / HPL speedup          : {mxp_speedup:.1}x   (paper: ~10x)"
+    );
+    println!(
+        "  HPCG / HPL fraction            : {:.2}%  (paper: ~1%)",
+        hpcg_frac * 100.0
+    );
+    println!(
+        "  IO500 96n > 10n total          : {}     (paper: 214.09 > 181.91)",
+        r96.total_score > r10.total_score
+    );
+    println!(
+        "  IO500 96n < 10n easy-write BW  : {}     (paper: 198.80 < 262.91)",
+        r96.phase("ior-easy-write").score < r10.phase("ior-easy-write").score
+    );
+    assert!(mxp_speedup > 8.0 && mxp_speedup < 12.0);
+    assert!(hpcg_frac > 0.005 && hpcg_frac < 0.02);
+    assert!(r96.total_score > r10.total_score);
+
+    // ---- real numerics through the PJRT artifacts -------------------------
+    match platform.validate_hpl_numerics() {
+        Ok(c) => {
+            println!(
+                "HPL numerics    : scaled residual {:.2e} => {}",
+                c.scaled_residual,
+                if c.passed() { "PASSED" } else { "FAILED" }
+            );
+            assert!(c.passed());
+            let m = platform.validate_mxp_numerics()?;
+            println!(
+                "HPL-MxP numerics: scaled residual {:.2e} => {}",
+                m.scaled_residual,
+                if m.passed() { "PASSED" } else { "FAILED" }
+            );
+            assert!(m.passed());
+            let g = platform.validate_hpcg_numerics()?;
+            println!(
+                "HPCG numerics   : ||r||^2 {:.2e} -> {:.2e} => {}",
+                g.rr0,
+                g.rr_final,
+                if g.passed() { "PASSED" } else { "FAILED" }
+            );
+            assert!(g.passed());
+
+            // short real training run proving the full stack composes
+            let rt = platform.runtime()?;
+            let rep = train(rt, 30, 0)?;
+            println!(
+                "E2E train (30 steps): loss {:.3} -> {:.3} => {}",
+                rep.initial_loss,
+                rep.final_loss,
+                if rep.final_loss < rep.initial_loss { "LEARNING" } else { "FLAT" }
+            );
+            assert!(rep.final_loss < rep.initial_loss);
+        }
+        Err(e) => println!("(PJRT validation skipped — run `make artifacts`: {e})"),
+    }
+
+    println!("\nmetrics: {}", platform.metrics.to_json().emit());
+    println!("SUITE COMPLETE");
+    Ok(())
+}

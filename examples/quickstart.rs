@@ -1,0 +1,60 @@
+//! Quickstart: build the SAKURAONE platform, look at the fabric, run one
+//! benchmark, and execute a real kernel through the PJRT runtime.
+//!
+//!     cargo run --release --example quickstart
+
+use sakuraone::benchmarks::hpl::HplParams;
+use sakuraone::config::ClusterConfig;
+use sakuraone::coordinator::Platform;
+use sakuraone::runtime::Runtime;
+use sakuraone::topology::render::render_system;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The paper's cluster: 100 nodes x 8 H100, rail-optimized 800GbE.
+    let cfg = ClusterConfig::default();
+    println!("{}", render_system(&cfg));
+
+    // 2. Simulate the Table 7 HPL run.
+    let mut platform = Platform::new(cfg);
+    let hpl = platform.hpl(&HplParams::paper());
+    println!(
+        "HPL: {:.2} PFLOP/s in {:.0} s ({:.1} TF per GPU)",
+        hpl.rmax / 1e15,
+        hpl.time_s,
+        hpl.rmax_per_gpu / 1e12
+    );
+
+    // 3. Execute the real tiled-GEMM Pallas kernel through PJRT (L1->L3).
+    match platform.runtime() {
+        Ok(rt) => {
+            let n = 256;
+            let a: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 * 0.1).collect();
+            let b: Vec<f32> = (0..n * n).map(|i| (i % 5) as f32 * 0.1).collect();
+            let out = rt.execute(
+                "gemm_f32_256",
+                &[
+                    Runtime::lit_f32(&a, &[n, n])?,
+                    Runtime::lit_f32(&b, &[n, n])?,
+                ],
+            )?;
+            let c = Runtime::to_vec_f32(&out[0])?;
+            println!(
+                "PJRT gemm_f32_256 on [{}]: c[0][0..4] = {:?}",
+                rt.platform(),
+                &c[..4]
+            );
+        }
+        Err(e) => println!("(runtime unavailable — run `make artifacts`: {e})"),
+    }
+
+    // 4. Numerics validation, the paper's Table 9 PASS criterion.
+    if let Ok(check) = platform.validate_hpl_numerics() {
+        println!(
+            "HPL numerics: scaled residual {:.2e} < {} => {}",
+            check.scaled_residual,
+            check.threshold,
+            if check.passed() { "PASSED" } else { "FAILED" }
+        );
+    }
+    Ok(())
+}

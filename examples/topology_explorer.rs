@@ -1,0 +1,69 @@
+//! Topology ablation (DESIGN.md §5): compare the four fabrics the paper
+//! surveys — rail-optimized (SAKURAONE's choice), rail-only, fat-tree and
+//! dragonfly — on the metrics that drove the paper's design decision:
+//! bisection bandwidth, hierarchical all-reduce time (the LLM gradient
+//! pattern), HPL wall time, and cluster-scale LLM step time.
+//!
+//!     cargo run --release --example topology_explorer
+
+use sakuraone::benchmarks::hpl::{run_hpl, HplParams};
+use sakuraone::collectives::CollectiveEngine;
+use sakuraone::config::{ClusterConfig, TopologyKind};
+use sakuraone::llm::{step_time, LlmConfig};
+use sakuraone::topology::builders::build;
+use sakuraone::topology::pod_of;
+use sakuraone::util::table::Table;
+
+fn main() {
+    let kinds = [
+        TopologyKind::RailOptimized,
+        TopologyKind::RailOnly,
+        TopologyKind::FatTree,
+        TopologyKind::Dragonfly,
+    ];
+    let mut t = Table::new(
+        "Topology ablation — 100 nodes x 8 rails, identical link budgets",
+        &[
+            "topology",
+            "bisection (Tb/s)",
+            "hier-allreduce 1GiB (ms)",
+            "HPL time (s)",
+            "70B LLM step (s)",
+            "LLM MFU",
+        ],
+    );
+    for kind in kinds {
+        let mut cfg = ClusterConfig::default();
+        cfg.network.topology = kind;
+        let fabric = build(&cfg);
+
+        let bisect = fabric
+            .bisection_bandwidth(|n| pod_of(&cfg, n) == 0)
+            * 8.0
+            / 1e12;
+
+        let engine = CollectiveEngine::new(&fabric, &cfg);
+        let nodes: Vec<usize> = (0..cfg.nodes).collect();
+        let ar = engine.hierarchical_allreduce(&nodes, 1024.0 * 1024.0 * 1024.0);
+
+        let hpl = run_hpl(&cfg, &HplParams::paper());
+
+        let llm = LlmConfig { dp: 100, tp: 8, pp: 1, ..LlmConfig::llama70b_on_sakuraone() };
+        let st = step_time(&cfg, &fabric, &llm);
+
+        t.row(&[
+            kind.name().to_string(),
+            format!("{bisect:.1}"),
+            format!("{:.1}", ar.total * 1e3),
+            format!("{:.1}", hpl.time_s),
+            format!("{:.2}", st.total),
+            format!("{:.1}%", st.mfu * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "note: rail-only has no Ethernet path between rails (cross-rail \
+         traffic must hop through NVSwitch), which is why the paper's \
+         rail-optimized design adds the spine layer."
+    );
+}

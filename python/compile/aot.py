@@ -1,0 +1,147 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO *text* artifacts for Rust (L3).
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Python runs ONCE at build time; the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entries():
+    """name -> (callable, [input ShapeDtypeStructs])."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    ents = {
+        "gemm_f32_256": (model.gemm_f32, [_spec((256, 256)), _spec((256, 256))]),
+        "gemm_bf16_256": (model.gemm_bf16, [_spec((256, 256)), _spec((256, 256))]),
+        "spmv_32": (model.spmv, [_spec((32, 32, 32))]),
+        "attention_64": (
+            model.attention,
+            [_spec((64, 64)), _spec((64, 64)), _spec((64, 64))],
+        ),
+        "hpl_solve_256": (model.hpl_solve, [_spec((256, 256)), _spec((256,))]),
+        "cg_24": (model.cg_solve, [_spec((24, 24, 24))]),
+        "mxp_solve_256": (model.mxp_solve, [_spec((256, 256)), _spec((256,))]),
+        "train_init": (model.train_init, [_spec((), i32)]),
+        "train_step": (
+            model.train_step,
+            [
+                # params (see model.py for the canonical order)
+                _spec((model.VOCAB, model.DMODEL)),
+                _spec((model.SEQ, model.DMODEL)),
+            ]
+            + [
+                _spec(s)
+                for _ in range(model.N_LAYERS)
+                for s in [
+                    (model.DMODEL, model.DMODEL),
+                    (model.DMODEL, model.DMODEL),
+                    (model.DMODEL, model.DMODEL),
+                    (model.DMODEL, model.DMODEL),
+                    (model.DMODEL, model.DFF),
+                    (model.DFF, model.DMODEL),
+                ]
+            ]
+            + [
+                _spec((model.BATCH, model.SEQ), i32),
+                _spec((model.BATCH, model.SEQ), i32),
+            ],
+        ),
+    }
+    return ents
+
+
+_DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "i32",
+    jnp.dtype("bfloat16"): "bf16",
+}
+
+
+def lower_entry(name, fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_tree = jax.eval_shape(fn, *specs)
+    leaves = jax.tree_util.tree_leaves(out_tree)
+    meta = {
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {
+                "shape": list(s.shape),
+                "dtype": _DTYPE_NAMES[jnp.dtype(s.dtype)],
+            }
+            for s in specs
+        ],
+        "outputs": [
+            {
+                "shape": list(l.shape),
+                "dtype": _DTYPE_NAMES[jnp.dtype(l.dtype)],
+            }
+            for l in leaves
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    names = None if args.only is None else set(args.only.split(","))
+    for name, (fn, specs) in entries().items():
+        if names is not None and name not in names:
+            continue
+        print(f"lowering {name} ...", flush=True)
+        text, meta = lower_entry(name, fn, specs)
+        path = os.path.join(args.out_dir, meta["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = meta
+        print(f"  wrote {path} ({len(text)} chars)", flush=True)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    existing = {}
+    if names is not None and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            existing = json.load(f)
+    existing.update(manifest)
+    with open(manifest_path, "w") as f:
+        json.dump(existing, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(existing)} entries)")
+
+
+if __name__ == "__main__":
+    main()

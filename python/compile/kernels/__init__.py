@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into HLO by ../aot.py).
+
+All kernels are authored with ``interpret=True`` so they lower to plain HLO
+ops executable on the PJRT CPU client the Rust runtime uses. Real-TPU
+lowering would emit Mosaic custom-calls; VMEM/MXU estimates for the TPU
+schedule live in DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+from .gemm import matmul_f32, matmul_bf16, TILE_M, TILE_N, TILE_K
+from .spmv import stencil27_apply
+from .trsm import trsm_lower
+from .attention import causal_attention
+
+__all__ = [
+    "matmul_f32",
+    "matmul_bf16",
+    "stencil27_apply",
+    "trsm_lower",
+    "causal_attention",
+    "TILE_M",
+    "TILE_N",
+    "TILE_K",
+]

@@ -1,0 +1,93 @@
+"""Fused causal attention Pallas kernels (forward + backward) — the LLM hot-spot.
+
+SAKURAONE's motivating workload is LLM training (abstract, §1); the
+per-GPU hot loop there is attention + GEMM. The forward kernel fuses
+QK^T -> causal mask -> softmax -> @V for one head so the (S, S) score
+matrix never round-trips to HBM — the FlashAttention insight, re-expressed
+for TPU: keep the whole (S_block, S) score stripe in VMEM instead of
+tiling over warps/shared-memory.
+
+Training needs reverse-mode: Pallas calls are not differentiable through
+the interpreter, so ``causal_attention`` carries a ``jax.custom_vjp``
+whose backward pass is *also* a fused Pallas kernel (recompute-p scheme —
+no residuals besides q, k, v and the output cotangent, exactly the
+memory discipline FlashAttention's backward uses).
+
+At the AOT size (S=64, D=64) everything fits in one block:
+VMEM fwd = 3*S*D*4 + S*S*4 = 64 KiB; bwd = 4*S*D*4 + 2*S*S*4 = 96 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _softmax_causal(q, k, scale):
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    seq = q.shape[0]
+    causal = jnp.arange(seq)[:, None] >= jnp.arange(seq)[None, :]
+    s = jnp.where(causal, s, _NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def _attention_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    p = _softmax_causal(q_ref[...], k_ref[...], scale)
+    o_ref[...] = jnp.dot(p, v_ref[...], preferred_element_type=jnp.float32)
+
+
+def _attention_bwd_kernel(
+    q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref, *, scale
+):
+    """Recompute p in VMEM, then the standard softmax/matmul adjoints."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    do = do_ref[...]
+    p = _softmax_causal(q, k, scale)
+    dv_ref[...] = jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq_ref[...] = jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+    dk_ref[...] = jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale
+
+
+@jax.custom_vjp
+def causal_attention(q, k, v):
+    """Single-head fused causal attention: (S, D) x3 -> (S, D)."""
+    return _attention_fwd(q, k, v)[0]
+
+
+def _attention_fwd(q, k, v):
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    kernel = functools.partial(_attention_fwd_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=True,
+    )(q, k, v)
+    return out, (q, k, v)
+
+
+def _attention_bwd(res, do):
+    q, k, v = res
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    kernel = functools.partial(_attention_bwd_kernel, scale=scale)
+    shape = jax.ShapeDtypeStruct(q.shape, jnp.float32)
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        out_shape=(shape, shape, shape),
+        interpret=True,
+    )(q, k, v, do.astype(jnp.float32))
+    return dq, dk, dv
+
+
+causal_attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,112 @@
+"""Tiled GEMM Pallas kernels — the HPL / HPL-MxP compute hot-spot.
+
+The paper's HPL run is dominated by trailing-submatrix DGEMM updates
+(55.34 TFLOP/s max single-GPU GEMM, Table 7) and HPL-MxP by FP8 tensor-core
+GEMM (Table 9). On CPU we validate *numerics* through these kernels; the
+TPU mapping (DESIGN.md §Hardware-Adaptation) is:
+
+* threadblock tile        -> BlockSpec (TILE_M, TILE_N) output block
+* shared-memory staging   -> VMEM residency of the (TILE_M, TILE_K) /
+                             (TILE_K, TILE_N) input blocks
+* tensor-core MMA         -> MXU contraction with
+                             ``preferred_element_type=float32``
+* FP8 pipe                -> bf16 inputs + f32 accumulate (closest
+                             CPU-runnable low-precision; the simulator
+                             separately *times* the FP8 pipe)
+
+VMEM footprint per grid step (TILE=128, bf16):
+  a-block 128*128*2 + b-block 128*128*2 + o-block 128*128*4 = 128 KiB
+well under the ~16 MiB/core VMEM budget, leaving room for double-buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly tile sizes (128x128 systolic array). 128 is the preferred
+# tile (perf pass: 8 grid steps instead of 64 at n=256, VMEM 192 KiB);
+# smaller shapes fall back to the largest aligned divisor via _pick_tile.
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+_TILE_CANDIDATES = (128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def _pick_tile(dim):
+    """Largest MXU-aligned tile that divides `dim`."""
+    for t in _TILE_CANDIDATES:
+        if dim % t == 0:
+            return t
+    return 1
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Grid (M/bm, N/bn, K/bk); K is the innermost (sequential) axis.
+
+    The output block is revisited for each k-step, so it doubles as the
+    accumulator: zero it on the first step, then accumulate partial
+    products in f32 regardless of the input dtype.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _tiled_matmul(a, b, *, bm, bn, bk):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by tile ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_f32(a, b, bm=None, bn=None, bk=None):
+    """f32 x f32 -> f32 tiled matmul (HPL DGEMM stand-in).
+
+    Tiles default to the largest aligned divisor of each dimension
+    (<= 128, the MXU edge).
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    bm = bm or _pick_tile(a.shape[0])
+    bn = bn or _pick_tile(b.shape[1])
+    bk = bk or _pick_tile(a.shape[1])
+    return _tiled_matmul(a, b, bm=bm, bn=bn, bk=bk)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_bf16(a, b, bm=None, bn=None, bk=None):
+    """bf16 x bf16 -> f32-accumulated matmul (HPL-MxP low-precision pipe).
+
+    Inputs are rounded to bf16 (the low-precision storage format), the MXU
+    contraction accumulates in f32 — the same accumulate-wide discipline
+    the FP8 tensor-core GEMM in HPL-MxP-NVIDIA uses.
+    """
+    a = a.astype(jnp.bfloat16)
+    b = b.astype(jnp.bfloat16)
+    bm = bm or _pick_tile(a.shape[0])
+    bn = bn or _pick_tile(b.shape[1])
+    bk = bk or _pick_tile(a.shape[1])
+    return _tiled_matmul(a, b, bm=bm, bn=bn, bk=bk)

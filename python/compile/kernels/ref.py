@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: pytest (and the hypothesis sweeps)
+assert each Pallas kernel matches its oracle to tight tolerances before
+anything is AOT-lowered for the Rust runtime.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(a, b, out_dtype=jnp.float32):
+    return jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def ref_stencil27(x):
+    """27-point HPCG operator: diag 26, neighbours -1, zero halo."""
+    x = x.astype(jnp.float32)
+    xp = jnp.pad(x, 1)
+    nx, ny, nz = x.shape
+    acc = 26.0 * x
+    for dx in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dz in (-1, 0, 1):
+                if dx == dy == dz == 0:
+                    continue
+                acc = acc - xp[
+                    1 + dx : 1 + dx + nx,
+                    1 + dy : 1 + dy + ny,
+                    1 + dz : 1 + dz + nz,
+                ]
+    return acc
+
+
+def ref_trsm_lower(l, b, unit_diagonal=True):
+    import jax.lax.linalg as lax_linalg
+
+    return lax_linalg.triangular_solve(
+        l.astype(jnp.float32),
+        b.astype(jnp.float32),
+        left_side=True,
+        lower=True,
+        unit_diagonal=unit_diagonal,
+    )
+
+
+def ref_causal_attention(q, k, v):
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = (q @ k.T) * scale
+    seq = q.shape[0]
+    causal = jnp.arange(seq)[:, None] >= jnp.arange(seq)[None, :]
+    s = jnp.where(causal, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def ref_lu_nopivot(a):
+    """Dense unblocked LU without pivoting (Doolittle), packed L\\U."""
+    import numpy as np
+
+    a = np.array(a, dtype=np.float64)
+    n = a.shape[0]
+    for k in range(n):
+        a[k + 1 :, k] /= a[k, k]
+        a[k + 1 :, k + 1 :] -= np.outer(a[k + 1 :, k], a[k, k + 1 :])
+    return a
+
+
+def ref_lu_solve(lu, b):
+    """Solve A x = b given packed no-pivot LU factors."""
+    import numpy as np
+
+    lu = np.array(lu, dtype=np.float64)
+    b = np.array(b, dtype=np.float64)
+    n = lu.shape[0]
+    y = b.copy()
+    for i in range(n):
+        y[i] -= lu[i, :i] @ y[:i]
+    x = y.copy()
+    for i in range(n - 1, -1, -1):
+        x[i] = (x[i] - lu[i, i + 1 :] @ x[i + 1 :]) / lu[i, i]
+    return x

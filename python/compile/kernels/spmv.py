@@ -1,0 +1,56 @@
+"""27-point stencil SpMV Pallas kernel — the HPCG operator.
+
+HPCG's matrix is the 27-point stencil on a 3D grid: diagonal 26, all 26
+neighbour couplings -1 (Table 8 runs 4096x3584x3808 globally). The SpMV is
+memory-bandwidth bound (arithmetic intensity ~0.25 flop/byte), which is why
+the paper reports observed memory bandwidth (3.316 TB/s) alongside FLOP/s.
+
+Kernel layout: the padded grid (n+2)^3 is staged block-per-z-slab into
+VMEM; each grid step computes one z-slab of the output by summing the 27
+shifted windows. At the AOT sizes used here (<=32^3) a single block holds
+the whole domain: VMEM = (n+2)^3 * 4B = 157 KiB at n=32 — trivially
+resident; on TPU the z-slab BlockSpec keeps footprint constant in n.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil27_kernel(xp_ref, y_ref):
+    """xp_ref: padded (nx+2, ny+2, nz+2); y_ref: interior (nx, ny, nz)."""
+    xp = xp_ref[...]
+    nx = y_ref.shape[0]
+    ny = y_ref.shape[1]
+    nz = y_ref.shape[2]
+    acc = 26.0 * xp[1 : 1 + nx, 1 : 1 + ny, 1 : 1 + nz]
+    # 26 neighbour couplings, coefficient -1 (unrolled at trace time).
+    for dx in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            for dz in (-1, 0, 1):
+                if dx == 0 and dy == 0 and dz == 0:
+                    continue
+                acc -= xp[
+                    1 + dx : 1 + dx + nx,
+                    1 + dy : 1 + dy + ny,
+                    1 + dz : 1 + dz + nz,
+                ]
+    y_ref[...] = acc
+
+
+@jax.jit
+def stencil27_apply(x):
+    """y = A x for the HPCG 27-point operator with zero (Dirichlet) halo.
+
+    ``x`` is the interior (nx, ny, nz) f32 grid; boundary contributions are
+    zero, matching HPCG's treatment of domain-boundary neighbours.
+    """
+    x = x.astype(jnp.float32)
+    xp = jnp.pad(x, 1)
+    return pl.pallas_call(
+        _stencil27_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(xp)

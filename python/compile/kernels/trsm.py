@@ -1,0 +1,50 @@
+"""Triangular-solve Pallas kernel — HPL panel broadcast consumer.
+
+After each HPL panel factorization, ranks apply L11^-1 to their slice of
+the U12 block-row (and U11^-1 to L21). This kernel solves
+``L y = b`` for lower-triangular L, row by row via a sequential
+``fori_loop`` — the dependency chain is inherently serial in rows, but
+each row step is a (1 x n) @ (n x m) contraction that maps onto the MXU.
+
+VMEM: L (n^2 * 4B) + b/y (2 * n*m * 4B); at the AOT size n=m=64 that is
+48 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _trsm_kernel(l_ref, b_ref, y_ref, *, unit_diagonal):
+    l = l_ref[...]
+    b = b_ref[...]
+    n = l.shape[0]
+
+    def body(i, y):
+        row = jax.lax.dynamic_slice_in_dim(l, i, 1, axis=0)[0]  # (n,)
+        below = (jnp.arange(n) < i).astype(l.dtype)
+        contrib = (row * below) @ y  # (m,)
+        bi = jax.lax.dynamic_slice_in_dim(b, i, 1, axis=0)[0]
+        if unit_diagonal:
+            yi = bi - contrib
+        else:
+            diag = jnp.sum(row * (jnp.arange(n) == i).astype(l.dtype))
+            yi = (bi - contrib) / diag
+        return jax.lax.dynamic_update_slice_in_dim(y, yi[None, :], i, axis=0)
+
+    y_ref[...] = jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+@functools.partial(jax.jit, static_argnames=("unit_diagonal",))
+def trsm_lower(l, b, unit_diagonal=True):
+    """Solve L y = b; L (n,n) lower-triangular, b (n,m)."""
+    l = l.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    kernel = functools.partial(_trsm_kernel, unit_diagonal=unit_diagonal)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(b.shape, jnp.float32),
+        interpret=True,
+    )(l, b)

@@ -1,0 +1,316 @@
+"""Layer-2 JAX compute graphs for SAKURAONE's benchmark numerics.
+
+Each public function here is AOT-lowered to HLO text by ``aot.py`` and
+executed from the Rust runtime (rust/src/runtime/) on the PJRT CPU client.
+They are the *real-numerics* counterparts of the cluster-scale simulated
+benchmarks:
+
+* ``hpl_solve``  — blocked right-looking LU (no pivoting; HPL-NVIDIA also
+  factors diagonally-dominant-friendly panels with static pivoting) +
+  forward/backward solve + the HPL residual terms (Table 7 validation).
+* ``cg_solve``   — HPCG's conjugate-gradient iteration on the 27-point
+  stencil operator (Table 8), SpMV through the Pallas kernel.
+* ``mxp_solve``  — HPL-MxP's mixed-precision scheme: low-precision LU
+  (bf16 stand-in for FP8) + f32 iterative refinement (Table 9).
+* ``train_init`` / ``train_step`` — a tiny causal-transformer LM training
+  step (the platform's motivating LLM workload), attention through the
+  fused Pallas kernel, SGD update.
+
+All shapes are static; the Python loop over HPL block steps unrolls at
+trace time so every slice is concrete.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    causal_attention,
+    matmul_bf16,
+    matmul_f32,
+    stencil27_apply,
+    trsm_lower,
+)
+
+# NOTE: jax.lax.linalg.triangular_solve is deliberately NOT used here: on
+# CPU it lowers to a `lapack_strsm_ffi` custom-call that the xla crate's
+# PJRT client (xla_extension 0.5.1) cannot execute. The Pallas TRSM
+# kernel (kernels/trsm.py) lowers to pure HLO instead; upper-triangular
+# solves reuse it through the flip identity U x = b <=> (JUJ)(Jx) = Jb.
+
+
+def _solve_lower(l, b, unit_diagonal=True):
+    """Pure-HLO lower-triangular solve via the Pallas kernel; b (n,) or (n,m)."""
+    vec = b.ndim == 1
+    bm = b[:, None] if vec else b
+    y = trsm_lower(l, bm, unit_diagonal=unit_diagonal)
+    return y[:, 0] if vec else y
+
+
+def _solve_upper(u, b, unit_diagonal=False):
+    """Upper solve through row/col reversal of the lower kernel."""
+    lrev = u[::-1, ::-1]
+    brev = b[::-1] if b.ndim == 1 else b[::-1, :]
+    yrev = _solve_lower(lrev, brev, unit_diagonal=unit_diagonal)
+    return yrev[::-1] if b.ndim == 1 else yrev[::-1, :]
+
+# ---------------------------------------------------------------------------
+# HPL: blocked LU + solve + residual terms
+# ---------------------------------------------------------------------------
+
+
+def _panel_factor(panel):
+    """Unblocked no-pivot LU of a (rows, nb) panel; multipliers stored in place.
+
+    rows >= nb; the top nb x nb square becomes L11\\U11, the rest L21.
+    Sequential over columns (the true HPL panel dependency chain), each step
+    a rank-1 elimination on the fixed-shape panel.
+    """
+    rows, nb = panel.shape
+    r_idx = jnp.arange(rows)
+    c_idx = jnp.arange(nb)
+
+    def body(j, p):
+        pivot = jax.lax.dynamic_slice(p, (j, j), (1, 1))[0, 0]
+        colj = jax.lax.dynamic_slice_in_dim(p, j, 1, axis=1)[:, 0]
+        mult = jnp.where(r_idx > j, colj / pivot, 0.0)
+        rowj = jax.lax.dynamic_slice_in_dim(p, j, 1, axis=0)[0, :]
+        urow = jnp.where(c_idx > j, rowj, 0.0)
+        p = p - jnp.outer(mult, urow)
+        newcol = jnp.where(r_idx > j, mult, colj)
+        return jax.lax.dynamic_update_slice_in_dim(
+            p, newcol[:, None], j, axis=1
+        )
+
+    return jax.lax.fori_loop(0, nb, body, panel)
+
+
+def lu_factor_blocked(a, nb=64, low_precision=False):
+    """Blocked right-looking LU without pivoting, packed L\\U result.
+
+    Mirrors HPL's per-step structure: panel factorization -> triangular
+    solve for the U12 block-row -> trailing-submatrix GEMM update (the
+    FLOP-dominant phase, through the Pallas GEMM kernel). With
+    ``low_precision`` the trailing updates run through the bf16 MXU pipe
+    (HPL-MxP's FP8 stand-in) and the packed factors are rounded to bf16.
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n) and n % nb == 0
+    gemm = matmul_bf16 if low_precision else matmul_f32
+    a = a.astype(jnp.float32)
+    for k in range(0, n, nb):
+        panel = _panel_factor(a[k:, k : k + nb])
+        a = a.at[k:, k : k + nb].set(panel)
+        if k + nb < n:
+            l11 = panel[:nb]
+            u12 = _solve_lower(l11, a[k : k + nb, k + nb :], unit_diagonal=True)
+            a = a.at[k : k + nb, k + nb :].set(u12)
+            l21 = panel[nb:]
+            t = min(nb, 64)
+            a = a.at[k + nb :, k + nb :].add(
+                -gemm(l21, u12, bm=t, bn=t, bk=t)
+            )
+    if low_precision:
+        a = a.astype(jnp.bfloat16).astype(jnp.float32)
+    return a
+
+
+def lu_apply_solve(lu, b):
+    """Solve A x = b from packed no-pivot LU factors."""
+    y = _solve_lower(lu, b, unit_diagonal=True)
+    return _solve_upper(lu, y, unit_diagonal=False)
+
+
+def _residual_terms(a, x, b):
+    r = b - a @ x
+    return (
+        jnp.max(jnp.abs(r)),
+        jnp.max(jnp.sum(jnp.abs(a), axis=1)),
+        jnp.max(jnp.abs(x)),
+        jnp.max(jnp.abs(b)),
+    )
+
+
+def hpl_solve(a, b, nb=64):
+    """HPL at one 'node': factor, solve, and return residual terms.
+
+    Returns (x, rnorm_inf, anorm_inf, xnorm_inf, bnorm_inf); the Rust side
+    forms HPL's scaled residual ||Ax-b||_inf / (eps*(||A||+||b||)*n) and
+    applies the same PASS threshold (16.0) the paper's Table 9 quotes.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    lu = lu_factor_blocked(a, nb=nb)
+    x = lu_apply_solve(lu, b)
+    rn, an, xn, bn = _residual_terms(a, x, b)
+    return x, rn, an, xn, bn
+
+
+# ---------------------------------------------------------------------------
+# HPCG: conjugate gradient on the 27-point stencil
+# ---------------------------------------------------------------------------
+
+
+def cg_solve(b, iters=32):
+    """Unpreconditioned CG on the 27-pt operator (HPCG's solver core).
+
+    HPCG 3.1 wraps this in a multigrid symmetric Gauss-Seidel
+    preconditioner; SYMGS is inherently sequential per colour, so the AOT
+    numerics artifact runs plain CG (same SpMV/dot/axpy mix that the
+    bandwidth roofline measures) — the *simulated* Table 8 run models the
+    full V-cycle cost. Returns (x, rr0, rr_final).
+    """
+    b = b.astype(jnp.float32)
+    x0 = jnp.zeros_like(b)
+    r0 = b  # x0 = 0
+    p0 = r0
+    rr0 = jnp.vdot(r0, r0)
+
+    def body(_, state):
+        x, r, p, rr = state
+        ap = stencil27_apply(p)
+        # Guarded divisions: once converged (rr == 0, e.g. zero rhs) the
+        # iteration must hold the exact solution instead of producing NaN.
+        pap = jnp.vdot(p, ap)
+        alpha = jnp.where(pap != 0.0, rr / jnp.where(pap != 0.0, pap, 1.0), 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rr_new = jnp.vdot(r, r)
+        beta = jnp.where(rr != 0.0, rr_new / jnp.where(rr != 0.0, rr, 1.0), 0.0)
+        p = r + beta * p
+        return (x, r, p, rr_new)
+
+    x, r, p, rr = jax.lax.fori_loop(0, iters, body, (x0, r0, p0, rr0))
+    return x, rr0, rr
+
+
+# ---------------------------------------------------------------------------
+# HPL-MxP: low-precision LU + iterative refinement
+# ---------------------------------------------------------------------------
+
+
+def mxp_solve(a, b, nb=64, ir_steps=3):
+    """Mixed-precision direct solve, the HPL-MxP algorithm (Table 9).
+
+    LU runs in low precision (bf16 storage / f32 accumulate — the CPU
+    stand-in for the paper's 'Sloppy FP8' mode), then iterative refinement
+    in f32 recovers working accuracy: r = b - Ax; d = LU \\ r; x += d.
+    Returns (x, rnorm_inf, anorm_inf, xnorm_inf, bnorm_inf).
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    lu_lp = lu_factor_blocked(a, nb=nb, low_precision=True)
+    x = lu_apply_solve(lu_lp, b)
+
+    def refine(_, x):
+        r = b - a @ x
+        d = lu_apply_solve(lu_lp, r)
+        return x + d
+
+    x = jax.lax.fori_loop(0, ir_steps, refine, x)
+    rn, an, xn, bn = _residual_terms(a, x, b)
+    return x, rn, an, xn, bn
+
+
+# ---------------------------------------------------------------------------
+# LLM training step (the platform's motivating workload)
+# ---------------------------------------------------------------------------
+
+VOCAB = 256
+DMODEL = 64
+DFF = 256
+SEQ = 64
+BATCH = 8
+N_LAYERS = 2
+LR = 0.05
+
+# Parameter order (flat tuple; the Rust runtime round-trips this order):
+#   0: embed (VOCAB, DMODEL)      1: pos (SEQ, DMODEL)
+#   per layer l (base 2 + 6*l):
+#     wq wk wv wo (DMODEL, DMODEL), w1 (DMODEL, DFF), w2 (DFF, DMODEL)
+N_PARAMS = 2 + 6 * N_LAYERS
+
+
+def train_init(seed):
+    """Initialise the tiny-LM parameter tuple from an int32 seed."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    keys = jax.random.split(key, N_PARAMS)
+    shapes = [(VOCAB, DMODEL), (SEQ, DMODEL)]
+    for _ in range(N_LAYERS):
+        shapes += [
+            (DMODEL, DMODEL),
+            (DMODEL, DMODEL),
+            (DMODEL, DMODEL),
+            (DMODEL, DMODEL),
+            (DMODEL, DFF),
+            (DFF, DMODEL),
+        ]
+    params = tuple(
+        jax.random.normal(k, s, dtype=jnp.float32) * (s[0] ** -0.5)
+        for k, s in zip(keys, shapes)
+    )
+    return params
+
+
+def _rmsnorm(h):
+    return h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + 1e-6)
+
+
+def _forward(params, tokens):
+    embed, pos = params[0], params[1]
+    h = embed[tokens] + pos[None, :, :]  # (B, S, D)
+    for layer in range(N_LAYERS):
+        base = 2 + 6 * layer
+        wq, wk, wv, wo, w1, w2 = params[base : base + 6]
+        hn = _rmsnorm(h)
+        q = hn @ wq
+        k = hn @ wk
+        v = hn @ wv
+        # Fused Pallas attention per batch element (sequential lax.map so
+        # the kernel lowers identically with and without batching).
+        att = jax.lax.map(
+            lambda qkv: causal_attention(qkv[0], qkv[1], qkv[2]),
+            (q, k, v),
+        )
+        h = h + att @ wo
+        hn = _rmsnorm(h)
+        h = h + jax.nn.gelu(hn @ w1) @ w2
+    return _rmsnorm(h) @ params[0].T  # tied unembedding -> logits (B,S,V)
+
+
+def _loss_fn(params, tokens, targets):
+    logits = _forward(params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(*args):
+    """(*params, tokens, targets) -> (*new_params, loss). Plain SGD."""
+    params = tuple(args[:N_PARAMS])
+    tokens, targets = args[N_PARAMS], args[N_PARAMS + 1]
+    loss, grads = jax.value_and_grad(_loss_fn)(params, tokens, targets)
+    new_params = tuple(p - LR * g for p, g in zip(params, grads))
+    return (*new_params, loss)
+
+
+# ---------------------------------------------------------------------------
+# Direct kernel entry points (per-kernel artifacts for Rust micro-benches)
+# ---------------------------------------------------------------------------
+
+
+def gemm_f32(a, b):
+    return (matmul_f32(a, b),)
+
+
+def gemm_bf16(a, b):
+    return (matmul_bf16(a, b),)
+
+
+def spmv(x):
+    return (stencil27_apply(x),)
+
+
+def attention(q, k, v):
+    return (causal_attention(q, k, v),)

@@ -1,0 +1,85 @@
+"""L1 fused attention kernel (fwd + custom-VJP bwd) vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import causal_attention
+from compile.kernels.ref import ref_causal_attention
+
+
+def _qkv(s, d, seed):
+    rs = np.random.RandomState(seed)
+    return [rs.randn(s, d).astype(np.float32) for _ in range(3)]
+
+
+def test_forward_matches_ref():
+    q, k, v = _qkv(32, 16, 0)
+    np.testing.assert_allclose(
+        causal_attention(q, k, v),
+        ref_causal_attention(q, k, v),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_first_row_is_v0():
+    """Causal mask: position 0 attends only to itself -> out[0] == v[0]."""
+    q, k, v = _qkv(16, 8, 1)
+    out = np.array(causal_attention(q, k, v))
+    np.testing.assert_allclose(out[0], v[0], rtol=1e-5, atol=1e-5)
+
+
+def test_rows_are_convex_combinations():
+    """Each output row lies inside [min(v), max(v)] per dim (softmax hull)."""
+    q, k, v = _qkv(24, 8, 2)
+    out = np.array(causal_attention(q, k, v))
+    for j in range(out.shape[0]):
+        prefix = v[: j + 1]
+        assert (out[j] <= prefix.max(axis=0) + 1e-4).all()
+        assert (out[j] >= prefix.min(axis=0) - 1e-4).all()
+
+
+def test_grad_q_matches_ref():
+    q, k, v = [jnp.array(a) for a in _qkv(16, 8, 3)]
+    g1 = jax.grad(lambda q: causal_attention(q, k, v).sum())(q)
+    g2 = jax.grad(lambda q: ref_causal_attention(q, k, v).sum())(q)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_grad_kv_matches_ref():
+    q, k, v = [jnp.array(a) for a in _qkv(16, 8, 4)]
+
+    def loss(fn, k, v):
+        return (fn(q, k, v) ** 2).sum()
+
+    gk1, gv1 = jax.grad(lambda k, v: loss(causal_attention, k, v), (0, 1))(k, v)
+    gk2, gv2 = jax.grad(lambda k, v: loss(ref_causal_attention, k, v), (0, 1))(
+        k, v
+    )
+    np.testing.assert_allclose(gk1, gk2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gv1, gv2, rtol=1e-4, atol=1e-5)
+
+
+def test_scale_invariance_of_shape():
+    """Large-magnitude inputs must not overflow the fused softmax."""
+    q, k, v = _qkv(16, 8, 5)
+    out = np.array(causal_attention(q * 100.0, k * 100.0, v))
+    assert np.isfinite(out).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(2, 48),
+    d=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 10**6),
+)
+def test_hypothesis_fwd(s, d, seed):
+    q, k, v = _qkv(s, d, seed % 100000)
+    np.testing.assert_allclose(
+        causal_attention(q, k, v),
+        ref_causal_attention(q, k, v),
+        rtol=1e-3,
+        atol=1e-4,
+    )

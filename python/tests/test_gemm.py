@@ -1,0 +1,117 @@
+"""L1 GEMM kernel vs pure-jnp oracle, incl. hypothesis shape/tile sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_f32, matmul_bf16
+from compile.kernels.ref import ref_matmul
+
+
+def _rand(shape, seed):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+class TestMatmulF32:
+    def test_square_128(self):
+        a, b = _rand((128, 128), 0), _rand((128, 128), 1)
+        np.testing.assert_allclose(
+            matmul_f32(a, b), ref_matmul(a, b), rtol=1e-5, atol=1e-4
+        )
+
+    def test_rectangular(self):
+        a, b = _rand((128, 192), 2), _rand((192, 64), 3)
+        np.testing.assert_allclose(
+            matmul_f32(a, b), ref_matmul(a, b), rtol=1e-5, atol=1e-4
+        )
+
+    def test_identity(self):
+        a = _rand((64, 64), 4)
+        eye = np.eye(64, dtype=np.float32)
+        np.testing.assert_allclose(matmul_f32(a, eye), a, rtol=1e-6, atol=1e-6)
+
+    def test_zeros(self):
+        a = _rand((64, 64), 5)
+        z = np.zeros((64, 64), np.float32)
+        assert float(np.abs(np.array(matmul_f32(a, z))).max()) == 0.0
+
+    def test_custom_tiles(self):
+        a, b = _rand((128, 128), 6), _rand((128, 128), 7)
+        out = matmul_f32(a, b, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(out, ref_matmul(a, b), rtol=1e-5, atol=1e-4)
+
+    def test_inner_dim_mismatch_raises(self):
+        a, b = _rand((64, 63), 8), _rand((64, 64), 9)
+        with pytest.raises(Exception):
+            matmul_f32(a, b)
+
+    def test_odd_shapes_fall_back_to_small_tiles(self):
+        # auto-tile picks the largest aligned divisor (here 1x..): slow
+        # but correct
+        a, b = _rand((6, 10), 20), _rand((10, 14), 21)
+        np.testing.assert_allclose(
+            matmul_f32(a, b), ref_matmul(a, b), rtol=1e-5, atol=1e-4
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([64, 128, 192]),
+        n=st.sampled_from([64, 128, 192]),
+        k=st.sampled_from([64, 128, 192]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, m, n, k, seed):
+        a = _rand((m, k), seed % 100000)
+        b = _rand((k, n), (seed + 1) % 100000)
+        np.testing.assert_allclose(
+            matmul_f32(a, b), ref_matmul(a, b), rtol=1e-4, atol=1e-3
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bm=st.sampled_from([16, 32, 64]),
+        bk=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 10**6),
+    )
+    def test_hypothesis_tiles(self, bm, bk, seed):
+        a = _rand((64, 64), seed % 100000)
+        b = _rand((64, 64), (seed + 7) % 100000)
+        out = matmul_f32(a, b, bm=bm, bn=bm, bk=bk)
+        np.testing.assert_allclose(out, ref_matmul(a, b), rtol=1e-4, atol=1e-3)
+
+
+class TestMatmulBf16:
+    def test_accumulates_f32(self):
+        # bf16 storage, f32 accumulate: error should scale like bf16 input
+        # rounding (~2^-8 relative), far better than bf16 accumulation.
+        a, b = _rand((128, 128), 10), _rand((128, 128), 11)
+        out = np.array(matmul_bf16(a, b))
+        exact = np.array(ref_matmul(a, b))
+        rel = np.abs(out - exact).max() / np.abs(exact).max()
+        assert rel < 0.02, rel
+
+    def test_output_dtype_f32(self):
+        a, b = _rand((64, 64), 12), _rand((64, 64), 13)
+        assert matmul_bf16(a, b).dtype == jnp.float32
+
+    def test_exact_on_small_ints(self):
+        # small integers are exactly representable in bf16
+        rs = np.random.RandomState(14)
+        a = rs.randint(-4, 5, (64, 64)).astype(np.float32)
+        b = rs.randint(-4, 5, (64, 64)).astype(np.float32)
+        np.testing.assert_allclose(matmul_bf16(a, b), a @ b, atol=0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.sampled_from([64, 128]),
+        k=st.sampled_from([64, 128]),
+        seed=st.integers(0, 10**6),
+    )
+    def test_hypothesis_bf16(self, m, k, seed):
+        a = _rand((m, k), seed % 100000)
+        b = _rand((k, 64), (seed + 3) % 100000)
+        out = np.array(matmul_bf16(a, b))
+        exact = np.array(a.astype(np.float32) @ b)
+        rel = np.abs(out - exact).max() / max(np.abs(exact).max(), 1e-6)
+        assert rel < 0.05, rel

@@ -1,0 +1,63 @@
+"""Guardrail: every AOT entry must lower to HLO the Rust runtime can run.
+
+The xla crate's PJRT client (xla_extension 0.5.1) cannot execute jaxlib's
+CPU custom-calls (e.g. ``lapack_strsm_ffi`` from
+``lax.linalg.triangular_solve``) — a regression here would only surface at
+Rust runtime otherwise. Lowers EVERY manifest entry and rejects any
+custom-call instruction.
+"""
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("name", sorted(aot.entries().keys()))
+def test_entry_lowers_without_custom_calls(name):
+    fn, specs = aot.entries()[name]
+    text, meta = aot.lower_entry(name, fn, specs)
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text and "custom_call" not in text, (
+        f"{name} lowered to a custom-call the PJRT CPU client cannot run"
+    )
+    assert meta["outputs"], name
+
+
+def test_solve_upper_matches_numpy():
+    """The flip-identity upper solve (the lapack workaround) is correct."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    rs = np.random.RandomState(0)
+    n = 48
+    u = np.triu(rs.randn(n, n)).astype(np.float32)
+    np.fill_diagonal(u, np.abs(np.diag(u)) + 1.0)
+    b = rs.randn(n).astype(np.float32)
+    x = np.array(model._solve_upper(jnp.array(u), jnp.array(b)))
+    np.testing.assert_allclose(u @ x, b, rtol=1e-3, atol=1e-3)
+
+
+def test_solve_upper_matrix_rhs():
+    import jax.numpy as jnp
+    import numpy as np
+
+    rs = np.random.RandomState(1)
+    n, m = 32, 8
+    u = np.triu(rs.randn(n, n)).astype(np.float32)
+    np.fill_diagonal(u, np.abs(np.diag(u)) + 1.0)
+    b = rs.randn(n, m).astype(np.float32)
+    x = np.array(model._solve_upper(jnp.array(u), jnp.array(b)))
+    np.testing.assert_allclose(u @ x, b, rtol=1e-3, atol=1e-3)
+
+
+def test_solve_lower_unit_vs_nonunit():
+    import jax.numpy as jnp
+    import numpy as np
+
+    rs = np.random.RandomState(2)
+    n = 24
+    l = np.tril(rs.randn(n, n)).astype(np.float32)
+    np.fill_diagonal(l, np.abs(np.diag(l)) + 1.0)
+    b = rs.randn(n).astype(np.float32)
+    x = np.array(model._solve_lower(jnp.array(l), jnp.array(b), unit_diagonal=False))
+    np.testing.assert_allclose(l @ x, b, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,132 @@
+"""L2 solver graphs: blocked LU / HPL residual / CG / MxP refinement."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import (
+    ref_lu_nopivot,
+    ref_lu_solve,
+    ref_stencil27,
+)
+
+EPS32 = np.finfo(np.float32).eps
+
+
+def _dd_matrix(n, seed):
+    """Diagonally dominant matrix — safe for no-pivot LU (like HPL-NVIDIA's
+    static-pivoting-friendly random matrices)."""
+    a = np.random.RandomState(seed).randn(n, n).astype(np.float32)
+    a += n * np.eye(n, dtype=np.float32)
+    return a
+
+
+class TestBlockedLU:
+    def test_matches_unblocked_ref(self):
+        a = _dd_matrix(128, 0)
+        lu = np.array(model.lu_factor_blocked(jnp.array(a), nb=64))
+        np.testing.assert_allclose(lu, ref_lu_nopivot(a), rtol=2e-4, atol=2e-3)
+
+    def test_nb_invariance(self):
+        """The packed factors must not depend on the block size."""
+        a = _dd_matrix(128, 1)
+        lu32 = np.array(model.lu_factor_blocked(jnp.array(a), nb=32))
+        lu64 = np.array(model.lu_factor_blocked(jnp.array(a), nb=64))
+        np.testing.assert_allclose(lu32, lu64, rtol=1e-3, atol=1e-2)
+
+    def test_reconstruction(self):
+        """L @ U == A."""
+        a = _dd_matrix(64, 2)
+        lu = np.array(model.lu_factor_blocked(jnp.array(a), nb=32))
+        l = np.tril(lu, -1) + np.eye(64)
+        u = np.triu(lu)
+        np.testing.assert_allclose(l @ u, a, rtol=1e-4, atol=1e-2)
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 10**6))
+    def test_hypothesis_reconstruction(self, seed):
+        a = _dd_matrix(64, seed % 100000)
+        lu = np.array(model.lu_factor_blocked(jnp.array(a), nb=32))
+        l = np.tril(lu, -1) + np.eye(64)
+        u = np.triu(lu)
+        np.testing.assert_allclose(l @ u, a, rtol=1e-3, atol=5e-2)
+
+
+class TestHplSolve:
+    def test_scaled_residual_passes(self):
+        """The same validation HPL applies: r/(eps*(||A||+||b||)*n) < 16."""
+        n = 128
+        a = _dd_matrix(n, 3)
+        b = np.random.RandomState(4).randn(n).astype(np.float32)
+        x, rn, an, xn, bn = model.hpl_solve(jnp.array(a), jnp.array(b))
+        scaled = float(rn) / (EPS32 * (float(an) + float(bn)) * n)
+        assert scaled < 16.0, scaled
+
+    def test_solution_matches_numpy(self):
+        n = 64
+        a = _dd_matrix(n, 5)
+        b = np.random.RandomState(6).randn(n).astype(np.float32)
+        x, *_ = model.hpl_solve(jnp.array(a), jnp.array(b))
+        np.testing.assert_allclose(
+            np.array(x), np.linalg.solve(a, b), rtol=1e-3, atol=1e-3
+        )
+
+    def test_lu_solve_roundtrip(self):
+        n = 64
+        a = _dd_matrix(n, 7)
+        b = np.random.RandomState(8).randn(n).astype(np.float32)
+        lu = ref_lu_nopivot(a)
+        x = ref_lu_solve(lu, b)
+        np.testing.assert_allclose(a @ x, b, rtol=1e-6, atol=1e-6)
+
+
+class TestCG:
+    def test_residual_decreases(self):
+        b = np.random.RandomState(9).randn(16, 16, 16).astype(np.float32)
+        x, rr0, rr = model.cg_solve(jnp.array(b), iters=16)
+        assert float(rr) < 1e-4 * float(rr0)
+
+    def test_solution_satisfies_system(self):
+        b = np.random.RandomState(10).randn(12, 12, 12).astype(np.float32)
+        x, rr0, rr = model.cg_solve(jnp.array(b), iters=64)
+        ax = ref_stencil27(np.array(x))
+        np.testing.assert_allclose(np.array(ax), b, rtol=1e-2, atol=1e-2)
+
+    def test_zero_rhs_zero_solution(self):
+        b = np.zeros((8, 8, 8), np.float32)
+        x, rr0, rr = model.cg_solve(jnp.array(b), iters=4)
+        assert float(np.abs(np.array(x)).max()) == 0.0
+
+
+class TestMxP:
+    def test_refinement_recovers_f32_accuracy(self):
+        """IR must beat the raw low-precision solve by orders of magnitude —
+        the entire premise of HPL-MxP (Table 9 validates 5e-5 < 16)."""
+        n = 128
+        a = _dd_matrix(n, 11)
+        b = np.random.RandomState(12).randn(n).astype(np.float32)
+        # raw low-precision solve (0 refinement steps)
+        x0, rn0, an, xn, bn = model.mxp_solve(
+            jnp.array(a), jnp.array(b), ir_steps=0
+        )
+        x3, rn3, *_ = model.mxp_solve(jnp.array(a), jnp.array(b), ir_steps=3)
+        assert float(rn3) < 0.05 * float(rn0), (float(rn0), float(rn3))
+
+    def test_scaled_residual_passes_hpl_check(self):
+        n = 128
+        a = _dd_matrix(n, 13)
+        b = np.random.RandomState(14).randn(n).astype(np.float32)
+        x, rn, an, xn, bn = model.mxp_solve(jnp.array(a), jnp.array(b))
+        scaled = float(rn) / (EPS32 * (float(an) + float(bn)) * n)
+        assert scaled < 16.0, scaled
+
+    def test_matches_full_precision_solution(self):
+        n = 64
+        a = _dd_matrix(n, 15)
+        b = np.random.RandomState(16).randn(n).astype(np.float32)
+        x, *_ = model.mxp_solve(jnp.array(a), jnp.array(b), ir_steps=4)
+        np.testing.assert_allclose(
+            np.array(x), np.linalg.solve(a, b), rtol=1e-3, atol=1e-3
+        )

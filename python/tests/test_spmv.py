@@ -1,0 +1,81 @@
+"""L1 27-pt stencil kernel vs oracle + HPCG operator invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import stencil27_apply
+from compile.kernels.ref import ref_stencil27
+
+
+def _rand(n, seed):
+    return np.random.RandomState(seed).randn(n, n, n).astype(np.float32)
+
+
+def test_matches_ref_8():
+    x = _rand(8, 0)
+    np.testing.assert_allclose(
+        stencil27_apply(x), ref_stencil27(x), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_matches_ref_rect():
+    x = np.random.RandomState(1).randn(4, 6, 8).astype(np.float32)
+    np.testing.assert_allclose(
+        stencil27_apply(x), ref_stencil27(x), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_constant_vector_interior_zero():
+    """Interior rows sum to zero (26 - 26 neighbours): A·1 = 0 inside."""
+    x = np.ones((8, 8, 8), np.float32)
+    y = np.array(stencil27_apply(x))
+    np.testing.assert_allclose(y[2:-2, 2:-2, 2:-2], 0.0, atol=1e-5)
+
+
+def test_boundary_row_sums_positive():
+    """Boundary rows lose neighbours -> A·1 > 0 on the boundary."""
+    x = np.ones((6, 6, 6), np.float32)
+    y = np.array(stencil27_apply(x))
+    assert y[0].min() > 0
+    assert (y > -1e-6).all()
+
+
+def test_symmetry():
+    """A is symmetric: <Ax, y> == <x, Ay>."""
+    x, y = _rand(6, 2), _rand(6, 3)
+    ax = np.array(stencil27_apply(x)).ravel()
+    ay = np.array(stencil27_apply(y)).ravel()
+    np.testing.assert_allclose(
+        np.dot(ax, y.ravel()), np.dot(x.ravel(), ay), rtol=1e-4
+    )
+
+
+def test_positive_definite_sample():
+    """<x, Ax> > 0 for x != 0 (diagonally dominant M-matrix)."""
+    for seed in range(5):
+        x = _rand(5, seed + 10)
+        ax = np.array(stencil27_apply(x))
+        assert float(np.vdot(x, ax)) > 0
+
+
+def test_linearity():
+    x, y = _rand(6, 4), _rand(6, 5)
+    lhs = np.array(stencil27_apply(2.0 * x + 3.0 * y))
+    rhs = 2.0 * np.array(stencil27_apply(x)) + 3.0 * np.array(stencil27_apply(y))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nx=st.integers(2, 10),
+    ny=st.integers(2, 10),
+    nz=st.integers(2, 10),
+    seed=st.integers(0, 10**6),
+)
+def test_hypothesis_grids(nx, ny, nz, seed):
+    x = np.random.RandomState(seed % 100000).randn(nx, ny, nz)
+    x = x.astype(np.float32)
+    np.testing.assert_allclose(
+        stencil27_apply(x), ref_stencil27(x), rtol=1e-4, atol=1e-3
+    )

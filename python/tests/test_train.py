@@ -1,0 +1,73 @@
+"""L2 tiny-LM training step: shapes, determinism, loss descent."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def _batch(seed=0):
+    rs = np.random.RandomState(seed)
+    toks = rs.randint(0, model.VOCAB, (model.BATCH, model.SEQ)).astype(np.int32)
+    tgts = np.roll(toks, -1, axis=1).astype(np.int32)
+    return jnp.array(toks), jnp.array(tgts)
+
+
+def test_init_shapes():
+    params = model.train_init(jnp.int32(0))
+    assert len(params) == model.N_PARAMS
+    assert params[0].shape == (model.VOCAB, model.DMODEL)
+    assert params[1].shape == (model.SEQ, model.DMODEL)
+    assert params[2].shape == (model.DMODEL, model.DMODEL)
+    assert params[6].shape == (model.DMODEL, model.DFF)
+
+
+def test_init_deterministic():
+    p1 = model.train_init(jnp.int32(7))
+    p2 = model.train_init(jnp.int32(7))
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_init_seed_sensitivity():
+    p1 = model.train_init(jnp.int32(0))
+    p2 = model.train_init(jnp.int32(1))
+    assert float(np.abs(np.array(p1[0]) - np.array(p2[0])).max()) > 1e-3
+
+
+def test_initial_loss_near_uniform():
+    """Untrained LM loss should be ~ln(VOCAB)."""
+    params = model.train_init(jnp.int32(0))
+    toks, tgts = _batch()
+    out = model.train_step(*params, toks, tgts)
+    loss = float(out[-1])
+    assert abs(loss - np.log(model.VOCAB)) < 1.0, loss
+
+
+def test_loss_decreases_when_overfitting_one_batch():
+    params = model.train_init(jnp.int32(0))
+    toks, tgts = _batch()
+    out = model.train_step(*params, toks, tgts)
+    loss0 = float(out[-1])
+    for _ in range(5):
+        out = model.train_step(*out[: model.N_PARAMS], toks, tgts)
+    loss5 = float(out[-1])
+    assert loss5 < loss0 - 0.05, (loss0, loss5)
+
+
+def test_step_output_arity_and_shapes():
+    params = model.train_init(jnp.int32(0))
+    toks, tgts = _batch(1)
+    out = model.train_step(*params, toks, tgts)
+    assert len(out) == model.N_PARAMS + 1
+    for p, q in zip(params, out[: model.N_PARAMS]):
+        assert p.shape == q.shape
+    assert out[-1].shape == ()
+
+
+def test_params_actually_update():
+    params = model.train_init(jnp.int32(0))
+    toks, tgts = _batch(2)
+    out = model.train_step(*params, toks, tgts)
+    delta = float(np.abs(np.array(out[0]) - np.array(params[0])).max())
+    assert delta > 0

@@ -1,0 +1,70 @@
+"""L1 triangular-solve kernel vs XLA TriangularSolve oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import trsm_lower
+from compile.kernels.ref import ref_trsm_lower
+
+
+def _lower(n, seed, unit=True):
+    rs = np.random.RandomState(seed)
+    l = np.tril(rs.randn(n, n)).astype(np.float32)
+    if unit:
+        np.fill_diagonal(l, 1.0)
+    else:
+        np.fill_diagonal(l, np.abs(np.diag(l)) + 1.0)
+    return l
+
+
+def test_unit_diagonal_16():
+    l = _lower(16, 0)
+    b = np.random.RandomState(1).randn(16, 8).astype(np.float32)
+    np.testing.assert_allclose(
+        trsm_lower(l, b), ref_trsm_lower(l, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_non_unit_diagonal():
+    l = _lower(16, 2, unit=False)
+    b = np.random.RandomState(3).randn(16, 4).astype(np.float32)
+    np.testing.assert_allclose(
+        trsm_lower(l, b, unit_diagonal=False),
+        ref_trsm_lower(l, b, unit_diagonal=False),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_identity_is_noop():
+    b = np.random.RandomState(4).randn(8, 8).astype(np.float32)
+    eye = np.eye(8, dtype=np.float32)
+    np.testing.assert_allclose(
+        trsm_lower(eye, b, unit_diagonal=False), b, rtol=1e-6, atol=1e-6
+    )
+
+
+def test_solution_satisfies_system():
+    l = _lower(32, 5)
+    b = np.random.RandomState(6).randn(32, 16).astype(np.float32)
+    y = np.array(trsm_lower(l, b))
+    np.testing.assert_allclose(l @ y, b, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 48),
+    m=st.integers(1, 16),
+    unit=st.booleans(),
+    seed=st.integers(0, 10**6),
+)
+def test_hypothesis(n, m, unit, seed):
+    l = _lower(n, seed % 100000, unit=unit)
+    b = np.random.RandomState((seed + 9) % 100000).randn(n, m)
+    b = b.astype(np.float32)
+    np.testing.assert_allclose(
+        trsm_lower(l, b, unit_diagonal=unit),
+        ref_trsm_lower(l, b, unit_diagonal=unit),
+        rtol=1e-3,
+        atol=1e-3,
+    )

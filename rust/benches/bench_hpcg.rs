@@ -1,0 +1,56 @@
+//! Bench for Table 8 (HPCG): simulator cost + the real Pallas SpMV
+//! artifact through PJRT (the L1 numerics hot path).
+//! Run: `cargo bench --bench bench_hpcg`
+
+use sakuraone::benchmarks::hpcg::{run_hpcg, HpcgParams};
+use sakuraone::config::ClusterConfig;
+use sakuraone::runtime::Runtime;
+use sakuraone::util::bench::Bencher;
+
+fn main() {
+    let cfg = ClusterConfig::default();
+    Bencher::header("bench_hpcg — Table 8 regeneration");
+    let mut b = Bencher::new();
+
+    b.bench("hpcg_paper (full T8 sim)", || {
+        run_hpcg(&cfg, &HpcgParams::paper())
+    });
+
+    let mut small_cfg = cfg.clone();
+    small_cfg.apply_override("nodes", "16").unwrap();
+    let small = HpcgParams {
+        nx: 1024,
+        ny: 1024,
+        nz: 512,
+        px: 4,
+        py: 4,
+        pz: 8,
+        ..HpcgParams::paper()
+    };
+    b.bench("hpcg_small_16nodes", || run_hpcg(&small_cfg, &small));
+
+    // real SpMV kernel through PJRT
+    if let Ok(mut rt) = Runtime::load_default() {
+        let n = 32;
+        let x: Vec<f32> = (0..n * n * n).map(|i| (i % 13) as f32 * 0.1).collect();
+        let lit = Runtime::lit_f32(&x, &[n, n, n]).unwrap();
+        rt.ensure_compiled("spmv_32").unwrap();
+        b.bench("pjrt_spmv_32^3 (Pallas stencil)", || {
+            rt.execute("spmv_32", std::slice::from_ref(&lit)).unwrap()
+        });
+        rt.ensure_compiled("cg_24").unwrap();
+        let bvec: Vec<f32> = (0..24 * 24 * 24).map(|i| (i % 7) as f32).collect();
+        let blit = Runtime::lit_f32(&bvec, &[24, 24, 24]).unwrap();
+        b.bench("pjrt_cg_24^3_32iters", || {
+            rt.execute("cg_24", std::slice::from_ref(&blit)).unwrap()
+        });
+    } else {
+        println!("(PJRT benches skipped — run `make artifacts`)");
+    }
+
+    let r = run_hpcg(&cfg, &HpcgParams::paper());
+    println!(
+        "\nT8 result: {:.0} GFLOP/s validated (paper 396295)",
+        r.final_gflops
+    );
+}

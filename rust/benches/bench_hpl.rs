@@ -1,0 +1,55 @@
+//! Bench for Table 7 (HPL): end-to-end simulation cost at several scales
+//! plus the communication kernels on the simulator hot path.
+//! Run: `cargo bench --bench bench_hpl`
+
+use sakuraone::benchmarks::hpl::{run_hpl, HplParams};
+use sakuraone::collectives::{CollectiveEngine, Rank};
+use sakuraone::config::ClusterConfig;
+use sakuraone::topology::builders::build;
+use sakuraone::util::bench::Bencher;
+
+fn main() {
+    let cfg = ClusterConfig::default();
+    Bencher::header("bench_hpl — Table 7 regeneration");
+    let mut b = Bencher::new();
+
+    b.bench("hpl_paper_stride8 (full T7 sim)", || {
+        run_hpl(&cfg, &HplParams::paper())
+    });
+
+    b.bench("hpl_paper_stride32", || {
+        run_hpl(&cfg, &HplParams { stride: 32, ..HplParams::paper() })
+    });
+
+    let small = HplParams {
+        n: 262_144,
+        nb: 1024,
+        p: 8,
+        q: 16,
+        stride: 8,
+        ..HplParams::paper()
+    };
+    let mut small_cfg = cfg.clone();
+    small_cfg.apply_override("nodes", "16").unwrap();
+    b.bench("hpl_small_16nodes", || run_hpl(&small_cfg, &small));
+
+    // hot-path pieces
+    let fabric = build(&cfg);
+    let engine = CollectiveEngine::new(&fabric, &cfg);
+    let row_ranks: Vec<Rank> = (0..49).map(|q| ((q * 16) / 8, (q * 16) % 8)).collect();
+    b.bench("panel_broadcast_49ranks_1.4GB", || {
+        engine.ring_broadcast(&row_ranks, 1.4e9)
+    });
+    let col_ranks: Vec<Rank> = (0..16).map(|p| (p / 8, p % 8)).collect();
+    b.bench("ring_step_16ranks_452MB", || {
+        engine.ring_step_time(&col_ranks, 4.52e8)
+    });
+
+    // headline check printed for the log
+    let r = run_hpl(&cfg, &HplParams::paper());
+    println!(
+        "\nT7 result: {:.2} PFLOP/s in {:.1} s (paper 33.95 PF / 389.23 s)",
+        r.rmax / 1e15,
+        r.time_s
+    );
+}

@@ -1,0 +1,55 @@
+//! Bench for Table 10 (IO500): the 10-vs-96-node sweep plus a client-count
+//! scan showing the bandwidth crossover and metadata scaling, and the
+//! degraded-switch ablation.
+//! Run: `cargo bench --bench bench_io500`
+
+use sakuraone::benchmarks::io500::{run_io500, run_io500_on, Io500Params};
+use sakuraone::config::ClusterConfig;
+use sakuraone::storage::LustreModel;
+use sakuraone::util::bench::Bencher;
+use sakuraone::util::table::Table;
+
+fn main() {
+    let cfg = ClusterConfig::default();
+    Bencher::header("bench_io500 — Table 10 regeneration");
+    let mut b = Bencher::new();
+
+    b.bench("io500_10node", || run_io500(&cfg, &Io500Params::paper_10node()));
+    b.bench("io500_96node", || run_io500(&cfg, &Io500Params::paper_96node()));
+
+    // node-count sweep: where does easy-write bandwidth cross over?
+    let mut t = Table::new(
+        "IO500 client-scaling sweep (ppn=128)",
+        &["nodes", "easy-write GiB/s", "easy-read GiB/s", "stat kIOPS", "total"],
+    );
+    for nodes in [2, 5, 10, 20, 48, 96, 100] {
+        let p = Io500Params {
+            client_nodes: nodes,
+            ..Io500Params::paper_10node()
+        };
+        let r = run_io500(&cfg, &p);
+        t.row(&[
+            nodes.to_string(),
+            format!("{:.1}", r.phase("ior-easy-write").score),
+            format!("{:.1}", r.phase("ior-easy-read").score),
+            format!("{:.1}", r.phase("mdtest-easy-stat").score),
+            format!("{:.1}", r.total_score),
+        ]);
+    }
+    println!("\n{}", t.render());
+
+    // failover ablation (paper §2.3: one switch down halves bandwidth but
+    // keeps the service up)
+    let degraded = LustreModel::sakuraone(&cfg.storage).with_switch_failure();
+    let r_ok = run_io500(&cfg, &Io500Params::paper_10node());
+    let r_deg = run_io500_on(&degraded, &Io500Params::paper_10node());
+    println!(
+        "switch-failure ablation: total {:.1} -> {:.1} (bw {:.1} -> {:.1} GiB/s)",
+        r_ok.total_score, r_deg.total_score, r_ok.bw_score_gib, r_deg.bw_score_gib
+    );
+    println!(
+        "\nT10 result: 10n total {:.2}, 96n total {:.2} (paper 181.91 / 214.09)",
+        r_ok.total_score,
+        run_io500(&cfg, &Io500Params::paper_96node()).total_score
+    );
+}

@@ -1,0 +1,52 @@
+//! Bench for Table 9 (HPL-MxP): simulator cost + the real mixed-precision
+//! solve artifact (bf16 LU + IR) through PJRT.
+//! Run: `cargo bench --bench bench_mxp`
+
+use sakuraone::benchmarks::hpl_mxp::{run_mxp, MxpParams};
+use sakuraone::config::ClusterConfig;
+use sakuraone::runtime::Runtime;
+use sakuraone::util::bench::Bencher;
+use sakuraone::util::rng::Rng;
+
+fn main() {
+    let cfg = ClusterConfig::default();
+    Bencher::header("bench_mxp — Table 9 regeneration");
+    let mut b = Bencher::new();
+
+    b.bench("mxp_paper (full T9 sim)", || run_mxp(&cfg, &MxpParams::paper()));
+    b.bench("mxp_paper_stride16", || {
+        run_mxp(&cfg, &MxpParams { stride: 16, ..MxpParams::paper() })
+    });
+
+    if let Ok(mut rt) = Runtime::load_default() {
+        let n = 256;
+        let mut rng = Rng::new(5);
+        let mut a = vec![0f32; n * n];
+        for (i, v) in a.iter_mut().enumerate() {
+            *v = rng.normal() as f32;
+            if i % (n + 1) == 0 {
+                *v += n as f32;
+            }
+        }
+        let bvec: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let la = Runtime::lit_f32(&a, &[n, n]).unwrap();
+        let lb = Runtime::lit_f32(&bvec, &[n]).unwrap();
+        rt.ensure_compiled("mxp_solve_256").unwrap();
+        b.bench("pjrt_mxp_solve_256 (bf16 LU + IR)", || {
+            rt.execute("mxp_solve_256", &[la.clone(), lb.clone()]).unwrap()
+        });
+        rt.ensure_compiled("gemm_bf16_256").unwrap();
+        b.bench("pjrt_gemm_bf16_256 (MXU-pipe Pallas)", || {
+            rt.execute("gemm_bf16_256", &[la.clone(), la.clone()]).unwrap()
+        });
+    } else {
+        println!("(PJRT benches skipped — run `make artifacts`)");
+    }
+
+    let r = run_mxp(&cfg, &MxpParams::paper());
+    println!(
+        "\nT9 result: {:.2} PFLOP/s overall, {:.2} PF LU-only (paper 339.86 / 539.19)",
+        r.rmax / 1e15,
+        r.lu_only / 1e15
+    );
+}

@@ -1,0 +1,73 @@
+//! Topology ablation bench (DESIGN.md §5): the paper's §2.2 design-choice
+//! argument, quantified — per-rail collectives on rail-optimized vs
+//! fat-tree vs dragonfly, ECMP routing cost, bisection analysis cost.
+//! Run: `cargo bench --bench bench_topology`
+
+use sakuraone::collectives::CollectiveEngine;
+use sakuraone::config::{ClusterConfig, TopologyKind};
+use sakuraone::topology::builders::build;
+use sakuraone::topology::{pod_of, Router};
+use sakuraone::util::bench::Bencher;
+use sakuraone::util::table::Table;
+
+fn main() {
+    Bencher::header("bench_topology — fabric ablations");
+    let mut b = Bencher::new();
+
+    for kind in [
+        TopologyKind::RailOptimized,
+        TopologyKind::RailOnly,
+        TopologyKind::FatTree,
+        TopologyKind::Dragonfly,
+    ] {
+        let mut cfg = ClusterConfig::default();
+        cfg.network.topology = kind;
+        b.bench(&format!("build_{}", kind.name()), || build(&cfg));
+    }
+
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    b.bench("ecmp_paths_cross_pod", || {
+        fabric.ecmp_paths(fabric.host(0, 0).unwrap(), fabric.host(99, 0).unwrap(), 16)
+    });
+    b.bench("router_1000_routes_cached", || {
+        let mut r = Router::new(&fabric);
+        let mut acc = 0usize;
+        for i in 0..1000u64 {
+            let a = fabric.host((i % 100) as usize, 0).unwrap();
+            let c = fabric.host(((i * 7 + 3) % 100) as usize, 0).unwrap();
+            if let Some(p) = r.route(a, c, i) {
+                acc += p.len();
+            }
+        }
+        acc
+    });
+    b.bench("bisection_maxflow_800hosts", || {
+        fabric.bisection_bandwidth(|n| pod_of(&cfg, n) == 0)
+    });
+
+    // the ablation table
+    let mut t = Table::new(
+        "hierarchical all-reduce, 100 nodes, 1 GiB gradients",
+        &["topology", "time (ms)", "inter (ms)", "eth flows"],
+    );
+    for kind in [
+        TopologyKind::RailOptimized,
+        TopologyKind::FatTree,
+        TopologyKind::Dragonfly,
+    ] {
+        let mut cfg = ClusterConfig::default();
+        cfg.network.topology = kind;
+        let f = build(&cfg);
+        let engine = CollectiveEngine::new(&f, &cfg);
+        let nodes: Vec<usize> = (0..cfg.nodes).collect();
+        let r = engine.hierarchical_allreduce(&nodes, 1024.0 * 1024.0 * 1024.0);
+        t.row(&[
+            kind.name().to_string(),
+            format!("{:.2}", r.total * 1e3),
+            format!("{:.2}", r.inter * 1e3),
+            r.flows.to_string(),
+        ]);
+    }
+    println!("\n{}", t.render());
+}

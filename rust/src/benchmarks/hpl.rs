@@ -1,0 +1,313 @@
+//! HPL (High Performance Linpack) on the simulated cluster — Table 7.
+//!
+//! The driver walks HPL's actual execution structure: for each of the
+//! N/NB block iterations over a P x Q process grid,
+//!   1. the owning process column factors the panel (memory-bound,
+//!      narrow rank-NB updates + pivot search),
+//!   2. the panel is broadcast along process rows (ring-pipelined),
+//!   3. pivot rows are swapped along process columns,
+//!   4. every rank applies the trailing-submatrix DGEMM update
+//!      (compute-bound — the FLOP carrier).
+//! With lookahead, panel work for iteration k+1 overlaps the update of
+//! iteration k, so per-iteration wall time is max(update, panel+bcast).
+//!
+//! Rank -> (node, GPU/rail) uses the same packing HPL-NVIDIA uses
+//! (8 consecutive ranks per node), which makes process *rows* rail-local —
+//! the traffic pattern SAKURAONE's rail-optimized fabric is built for.
+//!
+//! Numerics are validated separately through the AOT'd blocked-LU artifact
+//! (`hpl_solve_256`) with HPL's own scaled-residual PASS criterion.
+
+use crate::collectives::{CollectiveEngine, Rank};
+use crate::config::ClusterConfig;
+use crate::hardware::{GpuModel, Precision};
+use crate::topology::builders::build;
+use crate::util::table::kv_table;
+
+#[derive(Debug, Clone)]
+pub struct HplParams {
+    pub n: u64,
+    pub nb: u64,
+    pub p: usize,
+    pub q: usize,
+    /// Simulate every `stride`-th iteration and integrate (1 = exact).
+    pub stride: usize,
+    /// HBM contention between the trailing update and concurrent
+    /// NIC/NVLink DMA of the overlapped broadcasts (measured at 5-10% on
+    /// H100 when NCCL rings run under compute); slows the update leg.
+    pub interference: f64,
+    /// Fraction of the panel broadcast that lookahead fails to hide
+    /// (HPL-NVIDIA's 1-deep lookahead exposes the first row-ring hops).
+    pub bcast_exposed: f64,
+}
+
+impl HplParams {
+    /// The paper's Table 7 run: N=2,706,432, NB=1024, 16x49 grid.
+    pub fn paper() -> Self {
+        Self {
+            n: 2_706_432,
+            nb: 1024,
+            p: 16,
+            q: 49,
+            stride: 8,
+            interference: 0.06,
+            bcast_exposed: 0.30,
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.p * self.q
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HplResult {
+    pub params: HplParams,
+    pub time_s: f64,
+    pub flops: f64,
+    pub rmax: f64,
+    pub rmax_per_gpu: f64,
+    pub max_gemm_per_gpu: f64,
+    /// Fractions of wall time per phase.
+    pub update_frac: f64,
+    pub panel_frac: f64,
+    pub comm_frac: f64,
+}
+
+/// Map a grid rank to (node, gpu/rail): 8 consecutive ranks per node.
+pub fn rank_location(cfg: &ClusterConfig, rank: usize) -> (usize, usize) {
+    let g = cfg.node.gpus_per_node;
+    (rank / g, rank % g)
+}
+
+/// Grid coordinates: HPL default column-major rank order.
+pub fn grid_coords(params: &HplParams, rank: usize) -> (usize, usize) {
+    (rank % params.p, rank / params.p)
+}
+
+pub fn run_hpl(cfg: &ClusterConfig, params: &HplParams) -> HplResult {
+    let fabric = build(cfg);
+    let engine = CollectiveEngine::new(&fabric, cfg);
+    let gpu = GpuModel::h100_sxm();
+    let ranks = params.ranks();
+    assert!(
+        ranks <= cfg.total_gpus(),
+        "grid {}x{} needs {ranks} GPUs, cluster has {}",
+        params.p,
+        params.q,
+        cfg.total_gpus()
+    );
+
+    let n = params.n as f64;
+    let nb = params.nb as f64;
+    let steps = (params.n / params.nb) as usize;
+    let stride = params.stride.max(1);
+
+    // Pre-resolve the communication groups for a representative panel
+    // column (process column 0) and row (process row 0).
+    let col_ranks: Vec<Rank> = (0..params.p)
+        .map(|p| rank_location(cfg, p)) // ranks p + 0*P = p
+        .collect();
+    let row_ranks: Vec<Rank> = (0..params.q)
+        .map(|q| rank_location(cfg, q * params.p))
+        .collect();
+
+    let mut t_update = 0.0f64;
+    let mut t_panel = 0.0f64;
+    let mut t_comm = 0.0f64;
+    let mut total = 0.0f64;
+    let mut max_gemm_rate = 0.0f64;
+
+    let mut k_iter = 0usize;
+    while k_iter < steps {
+        let nk = n - (k_iter as f64) * nb; // trailing size incl. this panel
+        let weight = stride.min(steps - k_iter) as f64;
+
+        // --- panel factorization (process column): rows_local x NB panel,
+        // NB rank-1..rank-NB updates; memory-bound on the panel slab.
+        let rows_local = (nk / params.p as f64).max(nb);
+        let panel_flops = rows_local * nb * nb; // ~ nb^2 * rows updates
+        let panel_bytes = rows_local * nb * 8.0 * (nb / 64.0).max(1.0) * 0.25;
+        let t_pf = panel_flops / (gpu.fp64_vector_flops * 0.30)
+            + panel_bytes / gpu.hbm_bw_bytes_per_s
+            // pivot search/swap latency inside the column per sub-column
+            + nb * 2.0e-6 / 8.0;
+
+        // --- panel broadcast along the process row (rail-local ring)
+        let panel_buf = rows_local * nb * 8.0;
+        let t_bc = engine.ring_broadcast(&row_ranks, panel_buf).total;
+
+        // --- pivot row swaps along the process column: rows travel both
+        // directions (selected pivot rows out, replaced rows back)
+        let swap_buf = nb * (nk / params.q as f64) * 8.0;
+        let (t_swap_one, _) = engine.ring_step_time(&col_ranks, swap_buf);
+        let t_swap = 2.0 * t_swap_one;
+
+        // --- U broadcast down columns (the triangular solve result)
+        let u_buf = nb * (nk / params.q as f64) * 8.0;
+        let t_ubc = engine.ring_broadcast(&col_ranks, u_buf).total;
+
+        // --- trailing update: local (nk/P) x (nk/Q) x NB DGEMM, slowed by
+        // HBM interference from the overlapped communication DMA.
+        let m_loc = nk / params.p as f64;
+        let n_loc = nk / params.q as f64;
+        let t_up = gpu.gemm_time(m_loc, n_loc, nb, Precision::Fp64Tensor)
+            * (1.0 + params.interference);
+        let rate = gpu.gemm_flops(m_loc, n_loc, nb, Precision::Fp64Tensor);
+        if rate > max_gemm_rate {
+            max_gemm_rate = rate;
+        }
+
+        // --- lookahead overlap: comm+panel hide behind the update while
+        // the update is large; at the tail they dominate. A fraction of
+        // the broadcast is always exposed (lookahead depth 1).
+        let exposed_bc = params.bcast_exposed * t_bc;
+        let hidden_bc = (1.0 - params.bcast_exposed) * t_bc;
+        let critical = t_up.max(t_pf + hidden_bc) + exposed_bc + t_swap + t_ubc;
+        total += weight * critical;
+        t_update += weight * t_up;
+        t_panel += weight * t_pf;
+        t_comm += weight * (t_bc + t_swap + t_ubc);
+
+        k_iter += stride;
+    }
+
+    let flops = 2.0 / 3.0 * n * n * n + 1.5 * n * n;
+    let rmax = flops / total;
+    HplResult {
+        params: params.clone(),
+        time_s: total,
+        flops,
+        rmax,
+        rmax_per_gpu: rmax / ranks as f64,
+        max_gemm_per_gpu: max_gemm_rate,
+        update_frac: t_update / total,
+        panel_frac: t_panel / total,
+        comm_frac: t_comm / total,
+    }
+}
+
+impl HplResult {
+    /// Table 7 rendering.
+    pub fn table(&self) -> String {
+        let gpu = GpuModel::h100_sxm();
+        kv_table(
+            "Table 7 — HPL Benchmark Summary (simulated)",
+            &[
+                ("Matrix size (N)", format!("{}", self.params.n)),
+                ("Block size (NB)", format!("{}", self.params.nb)),
+                (
+                    "Process grid (PxQ)",
+                    format!("{} x {}", self.params.p, self.params.q),
+                ),
+                ("Total processes", format!("{}", self.params.ranks())),
+                ("Total GPUs", format!("{}", self.params.ranks())),
+                ("HPL version", "sakuraone-sim (HPL-NVIDIA 25.4.0 model)".into()),
+                ("Execution time (sec)", format!("{:.2}", self.time_s)),
+                ("FLOPS", format!("{:.2} PFLOPS", self.rmax / 1e15)),
+                (
+                    "FLOPS per GPU",
+                    format!("{:.2} TFLOPS", self.rmax_per_gpu / 1e12),
+                ),
+                (
+                    "Max GEMM performance (single GPU)",
+                    format!("{:.2} TFLOPS", self.max_gemm_per_gpu / 1e12),
+                ),
+                ("GPU SM count", format!("{}", gpu.sms)),
+                (
+                    "GPU peak clock frequency",
+                    format!("{} MHz", gpu.peak_clock_mhz),
+                ),
+                (
+                    "Phase split (update/panel/comm)",
+                    format!(
+                        "{:.0}% / {:.0}% / {:.0}%",
+                        100.0 * self.update_frac,
+                        100.0 * self.panel_frac,
+                        100.0 * self.comm_frac
+                    ),
+                ),
+            ],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_run_lands_near_published_rmax() {
+        let cfg = ClusterConfig::default();
+        let res = run_hpl(&cfg, &HplParams::paper());
+        let pf = res.rmax / 1e15;
+        // Paper: 33.95 PFLOP/s in 389.23 s. Allow 10% modelling error.
+        assert!((pf - 33.95).abs() / 33.95 < 0.10, "Rmax {pf} PF");
+        assert!(
+            (res.time_s - 389.23).abs() / 389.23 < 0.12,
+            "time {}",
+            res.time_s
+        );
+    }
+
+    #[test]
+    fn per_gpu_rate_matches_table7() {
+        let cfg = ClusterConfig::default();
+        let res = run_hpl(&cfg, &HplParams::paper());
+        let tf = res.rmax_per_gpu / 1e12;
+        assert!((tf - 43.31).abs() / 43.31 < 0.10, "{tf} TF/GPU");
+        let gm = res.max_gemm_per_gpu / 1e12;
+        assert!((gm - 55.34).abs() / 55.34 < 0.05, "{gm} TF max GEMM");
+    }
+
+    #[test]
+    fn update_phase_dominates() {
+        let cfg = ClusterConfig::default();
+        let res = run_hpl(&cfg, &HplParams::paper());
+        assert!(res.update_frac > 0.6, "update {}", res.update_frac);
+    }
+
+    #[test]
+    fn smaller_n_lower_efficiency() {
+        let cfg = ClusterConfig::default();
+        let mut small = HplParams::paper();
+        small.n = 262_144;
+        small.stride = 4;
+        let r_small = run_hpl(&cfg, &small);
+        let r_big = run_hpl(&cfg, &HplParams::paper());
+        assert!(r_small.rmax < r_big.rmax);
+    }
+
+    #[test]
+    fn stride_one_close_to_stride_eight() {
+        let mut cfg = ClusterConfig::default();
+        cfg.apply_override("nodes", "16").unwrap();
+        let mut p = HplParams { stride: 1, n: 131_072, nb: 1024, p: 8, q: 16, ..HplParams::paper() };
+        let exact = run_hpl(&cfg, &p);
+        p.stride = 8;
+        let approx = run_hpl(&cfg, &p);
+        let rel = (exact.time_s - approx.time_s).abs() / exact.time_s;
+        // left-endpoint integration over a decreasing-cost sweep: a few
+        // percent bias at this tiny N (128 block steps) is expected
+        assert!(rel < 0.05, "stride error {rel}");
+    }
+
+    #[test]
+    fn grid_mapping() {
+        let p = HplParams::paper();
+        assert_eq!(grid_coords(&p, 0), (0, 0));
+        assert_eq!(grid_coords(&p, 15), (15, 0));
+        assert_eq!(grid_coords(&p, 16), (0, 1));
+        let cfg = ClusterConfig::default();
+        assert_eq!(rank_location(&cfg, 0), (0, 0));
+        assert_eq!(rank_location(&cfg, 15), (1, 7));
+    }
+
+    #[test]
+    #[should_panic(expected = "needs")]
+    fn oversized_grid_panics() {
+        let mut cfg = ClusterConfig::default();
+        cfg.apply_override("nodes", "2").unwrap();
+        run_hpl(&cfg, &HplParams::paper());
+    }
+}

@@ -1,0 +1,276 @@
+//! HPL-MxP (mixed-precision LINPACK) on the simulated cluster — Table 9.
+//!
+//! HPL-MxP factors the matrix in low precision (the paper ran NVIDIA's
+//! 'Sloppy FP8' mode, sloppy-type=1) and recovers FP64 accuracy with
+//! GMRES-based iterative refinement. The benchmark is rated with the
+//! *FP64 flop count* (2/3 N^3) over the *total* time, which is why the
+//! paper reports both the overall Rmax (339.86 PF) and the much higher
+//! LU-only rate (539.19 PF): the IR phase is bandwidth-bound and eats
+//! ~40% of the wall clock while contributing almost no rated flops.
+//!
+//! Structure mirrors `hpl.rs` with the trailing update on the FP8 tensor
+//! pipe; the IR phase is modelled as GMRES iterations of matvec + two
+//! triangular solves, all HBM-bandwidth-bound, plus global reductions.
+//!
+//! Numerics: the AOT artifact `mxp_solve_256` executes the same algorithm
+//! (bf16 LU stand-in for FP8 + f32 IR) and must pass the identical
+//! scaled-residual check the paper quotes (5.01e-5 < 16).
+
+use crate::collectives::{CollectiveEngine, Rank};
+use crate::config::ClusterConfig;
+use crate::hardware::{GpuModel, Precision};
+use crate::topology::builders::build;
+use crate::util::table::kv_table;
+
+#[derive(Debug, Clone)]
+pub struct MxpParams {
+    pub n: u64,
+    pub nb: u64,
+    pub p: usize,
+    pub q: usize,
+    pub stride: usize,
+    /// GMRES-IR iterations to reach the FP64-accurate residual from a
+    /// sloppy-FP8 factorisation (restarted GMRES(50), ~4 restarts).
+    pub ir_iters: u32,
+    /// HBM efficiency of the IR matvec / triangular-solve sweeps.
+    pub ir_bw_eff: f64,
+    /// HBM interference + exposed-broadcast calibration (as in HPL).
+    pub interference: f64,
+    pub bcast_exposed: f64,
+}
+
+impl MxpParams {
+    /// The paper's Table 9 run: N=2,989,056, NB=4096, 24x32 grid, FP8.
+    pub fn paper() -> Self {
+        Self {
+            n: 2_989_056,
+            nb: 4096,
+            p: 24,
+            q: 32,
+            stride: 4,
+            ir_iters: 180,
+            ir_bw_eff: 0.80,
+            interference: 0.06,
+            bcast_exposed: 0.30,
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.p * self.q
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MxpResult {
+    pub params: MxpParams,
+    pub total_time_s: f64,
+    pub lu_time_s: f64,
+    pub ir_time_s: f64,
+    pub rmax: f64,
+    pub rmax_per_gpu: f64,
+    pub lu_only: f64,
+    pub lu_only_per_gpu: f64,
+}
+
+pub fn run_mxp(cfg: &ClusterConfig, params: &MxpParams) -> MxpResult {
+    let fabric = build(cfg);
+    let engine = CollectiveEngine::new(&fabric, cfg);
+    let gpu = GpuModel::h100_sxm();
+    let ranks = params.ranks();
+    assert!(
+        ranks <= cfg.total_gpus(),
+        "grid {}x{} needs {ranks} GPUs",
+        params.p,
+        params.q
+    );
+
+    let n = params.n as f64;
+    let nb = params.nb as f64;
+    let steps = (params.n / params.nb) as usize;
+    let stride = params.stride.max(1);
+
+    let col_ranks: Vec<Rank> = (0..params.p)
+        .map(|p| (p / cfg.node.gpus_per_node, p % cfg.node.gpus_per_node))
+        .collect();
+    let row_ranks: Vec<Rank> = (0..params.q)
+        .map(|q| {
+            let r = q * params.p;
+            (r / cfg.node.gpus_per_node, r % cfg.node.gpus_per_node)
+        })
+        .collect();
+
+    // ---------------- LU phase (FP8 trailing updates) ----------------------
+    let mut lu_time = 0.0f64;
+    let mut dbg = [0.0f64; 5]; // up, pf, bc, ubc, swap
+    let mut k_iter = 0usize;
+    while k_iter < steps {
+        let nk = n - (k_iter as f64) * nb;
+        let weight = stride.min(steps - k_iter) as f64;
+
+        // panel factorisation in FP16/BF16 on the owning column
+        let rows_local = (nk / params.p as f64).max(nb);
+        let t_pf = rows_local * nb * nb / (gpu.bf16_flops * 0.10)
+            + nb * 1.0e-6 / 8.0;
+        // panel broadcast (1-byte elements) along rows
+        let t_bc = engine
+            .ring_broadcast(&row_ranks, rows_local * nb * 1.0)
+            .total;
+        // U broadcast + swaps along columns
+        let u_buf = nb * (nk / params.q as f64) * 1.0;
+        let t_ubc = engine.ring_broadcast(&col_ranks, u_buf).total;
+        let (t_swap_one, _) = engine.ring_step_time(&col_ranks, u_buf);
+        let t_swap = 2.0 * t_swap_one;
+
+        // trailing update on the FP8 pipe
+        let m_loc = nk / params.p as f64;
+        let n_loc = nk / params.q as f64;
+        let t_up = gpu.gemm_time(m_loc, n_loc, nb, Precision::Fp8)
+            * (1.0 + params.interference);
+
+        // NB=4096 gives HPL-MxP ~6x more flops per panel than HPL's
+        // NB=1024, so its deeper lookahead hides swaps and the U-broadcast
+        // inside the update as well; only a fraction of the panel
+        // broadcast stays exposed.
+        let exposed = params.bcast_exposed * t_bc;
+        let hidden = t_bc - exposed;
+        lu_time += weight
+            * (t_up.max(t_pf + hidden + t_swap + t_ubc) + exposed);
+        dbg[0]+=weight*t_up; dbg[1]+=weight*t_pf; dbg[2]+=weight*t_bc; dbg[3]+=weight*t_ubc; dbg[4]+=weight*t_swap;
+        k_iter += stride;
+    }
+
+    // ---------------- IR phase (GMRES on the FP64 residual) ----------------
+    // per-rank slice of the dense matrix
+    let a_bytes_local_f64 = n * n / ranks as f64 * 8.0;
+    let bw = gpu.hbm_bw_bytes_per_s * params.ir_bw_eff;
+    let t_matvec = a_bytes_local_f64 / bw;
+    // two triangular solves stream half the matrix each at lower util
+    let t_trsv = 2.0 * (a_bytes_local_f64 / 2.0) / (bw * 0.5);
+    let all_ranks: Vec<Rank> = (0..ranks)
+        .map(|r| (r / cfg.node.gpus_per_node, r % cfg.node.gpus_per_node))
+        .collect();
+    let t_red = engine.small_allreduce_latency(&all_ranks, 64.0)
+        // pipelined row-sums of the distributed matvec
+        + engine.ring_allreduce(&col_ranks, n / params.p as f64 * 8.0).total;
+    let t_ir_iter = t_matvec + t_trsv + t_red;
+    // setup: FP8 cast of A (read f64, write fp8) + norm computations
+    let t_setup = (a_bytes_local_f64 * 1.125) / bw * 2.0;
+    let ir_time = params.ir_iters as f64 * t_ir_iter + t_setup;
+
+    if std::env::var("MXP_DEBUG").is_ok() {
+        eprintln!("lu={lu_time:.2} up={:.2} pf={:.2} bc={:.2} ubc={:.2} swap={:.2} ir={ir_time:.2}", dbg[0], dbg[1], dbg[2], dbg[3], dbg[4]);
+    }
+    let total = lu_time + ir_time;
+    let flops = 2.0 / 3.0 * n * n * n + 1.5 * n * n;
+    MxpResult {
+        params: params.clone(),
+        total_time_s: total,
+        lu_time_s: lu_time,
+        ir_time_s: ir_time,
+        rmax: flops / total,
+        rmax_per_gpu: flops / total / ranks as f64,
+        lu_only: flops / lu_time,
+        lu_only_per_gpu: flops / lu_time / ranks as f64,
+    }
+}
+
+impl MxpResult {
+    pub fn table(&self) -> String {
+        let gpu = GpuModel::h100_sxm();
+        kv_table(
+            "Table 9 — HPL-MxP Benchmark Summary (simulated)",
+            &[
+                (
+                    "Benchmark version",
+                    "sakuraone-sim (HPL-MxP-NVIDIA 25.4.0 model)".into(),
+                ),
+                ("Matrix size N", format!("{}", self.params.n)),
+                ("Block size NB", format!("{}", self.params.nb)),
+                (
+                    "Process grid (PxQ)",
+                    format!("{} x {}", self.params.p, self.params.q),
+                ),
+                ("Total processes", format!("{}", self.params.ranks())),
+                ("Peak clock frequency", format!("{} MHz", gpu.peak_clock_mhz)),
+                ("GPU SM version", "SM 90".into()),
+                ("GPU SM count", format!("{}", gpu.sms)),
+                (
+                    "Observed Rmax",
+                    format!("{:.4e} GFLOPS", self.rmax / 1e9),
+                ),
+                (
+                    "Rmax per GPU",
+                    format!("{:.2} GFLOPS", self.rmax_per_gpu / 1e9),
+                ),
+                ("LU-only", format!("{:.4e} GFLOPS", self.lu_only / 1e9)),
+                (
+                    "LU-only per GPU",
+                    format!("{:.2} GFLOPS", self.lu_only_per_gpu / 1e9),
+                ),
+                (
+                    "Precision mode",
+                    "Sloppy FP8 (bf16 numerics stand-in; see DESIGN.md)".into(),
+                ),
+                (
+                    "Time split (LU / IR)",
+                    format!("{:.1} s / {:.1} s", self.lu_time_s, self.ir_time_s),
+                ),
+            ],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overall_rmax_near_paper() {
+        let r = run_mxp(&ClusterConfig::default(), &MxpParams::paper());
+        let pf = r.rmax / 1e15;
+        // Paper: 339.86 PFLOP/s
+        assert!((pf - 339.86).abs() / 339.86 < 0.10, "Rmax {pf} PF");
+    }
+
+    #[test]
+    fn lu_only_near_paper() {
+        let r = run_mxp(&ClusterConfig::default(), &MxpParams::paper());
+        let pf = r.lu_only / 1e15;
+        // Paper: 539.19 PFLOP/s LU-only, 702.07 TF per GPU
+        assert!((pf - 539.19).abs() / 539.19 < 0.12, "LU-only {pf} PF");
+        let tf = r.lu_only_per_gpu / 1e12;
+        assert!((tf - 702.07).abs() / 702.07 < 0.12, "{tf} TF/GPU");
+    }
+
+    #[test]
+    fn mxp_speedup_over_hpl_is_order_ten() {
+        // paper discussion: FP8 HPL-MxP ~10x the FP64 HPL result
+        let cfg = ClusterConfig::default();
+        let mxp = run_mxp(&cfg, &MxpParams::paper());
+        let hpl = crate::benchmarks::hpl::run_hpl(
+            &cfg,
+            &crate::benchmarks::hpl::HplParams::paper(),
+        );
+        let speedup = mxp.rmax / hpl.rmax;
+        assert!(speedup > 8.0 && speedup < 12.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn ir_phase_is_substantial_but_minor_flops() {
+        let r = run_mxp(&ClusterConfig::default(), &MxpParams::paper());
+        let frac = r.ir_time_s / r.total_time_s;
+        // paper implies ~37% of wall clock in IR (442.5/702.1 per-GPU ratio)
+        assert!(frac > 0.25 && frac < 0.50, "IR frac {frac}");
+    }
+
+    #[test]
+    fn fewer_ir_iters_raise_rmax() {
+        let cfg = ClusterConfig::default();
+        let mut p = MxpParams::paper();
+        let base = run_mxp(&cfg, &p);
+        p.ir_iters = 50;
+        let fast = run_mxp(&cfg, &p);
+        assert!(fast.rmax > base.rmax);
+        assert!((fast.lu_only - base.lu_only).abs() / base.lu_only < 1e-9);
+    }
+}

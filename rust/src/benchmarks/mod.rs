@@ -1,0 +1,10 @@
+//! Benchmark drivers regenerating the paper's evaluation section:
+//! HPL (T7), HPCG (T8), HPL-MxP (T9), IO500 (T10), the TOP500
+//! interconnect census (T3), and paper-vs-measured comparison reports.
+
+pub mod hpcg;
+pub mod hpl;
+pub mod hpl_mxp;
+pub mod io500;
+pub mod report;
+pub mod top500;

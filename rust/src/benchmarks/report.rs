@@ -1,0 +1,142 @@
+//! Paper-vs-measured comparison reports: the EXPERIMENTS.md backbone.
+
+use super::hpcg::HpcgResult;
+use super::hpl::HplResult;
+use super::hpl_mxp::MxpResult;
+use super::io500::Io500Result;
+use crate::util::table::Table;
+
+/// Paper values for the four headline experiments.
+pub mod paper {
+    pub const HPL_RMAX_PF: f64 = 33.95;
+    pub const HPL_TIME_S: f64 = 389.23;
+    pub const HPL_PER_GPU_TF: f64 = 43.31;
+    pub const HPL_MAX_GEMM_TF: f64 = 55.34;
+
+    pub const HPCG_RAW_GF: f64 = 437_361.0;
+    pub const HPCG_CONV_GF: f64 = 404_964.0;
+    pub const HPCG_FINAL_GF: f64 = 396_295.0;
+    pub const HPCG_BW_TBS: f64 = 3.316;
+
+    pub const MXP_RMAX_PF: f64 = 339.86;
+    pub const MXP_PER_GPU_TF: f64 = 442.52;
+    pub const MXP_LU_PF: f64 = 539.19;
+    pub const MXP_LU_PER_GPU_TF: f64 = 702.07;
+
+    pub const IO500_10N_TOTAL: f64 = 181.91;
+    pub const IO500_96N_TOTAL: f64 = 214.09;
+    pub const IO500_10N_BW: f64 = 133.03;
+    pub const IO500_96N_BW: f64 = 139.80;
+    pub const IO500_10N_IOPS: f64 = 248.74;
+    pub const IO500_96N_IOPS: f64 = 327.84;
+}
+
+fn row(name: &str, paper: f64, measured: f64) -> (String, String, String, String) {
+    (
+        name.to_string(),
+        format!("{paper:.2}"),
+        format!("{measured:.2}"),
+        format!("{:+.1}%", 100.0 * (measured - paper) / paper),
+    )
+}
+
+fn table_from(title: &str, rows: Vec<(String, String, String, String)>) -> Table {
+    let mut t = Table::new(title, &["Metric", "Paper", "Measured", "Delta"]);
+    for (a, b, c, d) in rows {
+        t.row(&[a, b, c, d]);
+    }
+    t
+}
+
+pub fn hpl_compare(r: &HplResult) -> Table {
+    table_from(
+        "T7 HPL: paper vs simulated",
+        vec![
+            row("Rmax (PFLOP/s)", paper::HPL_RMAX_PF, r.rmax / 1e15),
+            row("Execution time (s)", paper::HPL_TIME_S, r.time_s),
+            row("Per-GPU (TFLOP/s)", paper::HPL_PER_GPU_TF, r.rmax_per_gpu / 1e12),
+            row(
+                "Max GEMM (TFLOP/s)",
+                paper::HPL_MAX_GEMM_TF,
+                r.max_gemm_per_gpu / 1e12,
+            ),
+        ],
+    )
+}
+
+pub fn hpcg_compare(r: &HpcgResult) -> Table {
+    table_from(
+        "T8 HPCG: paper vs simulated",
+        vec![
+            row("Raw (GFLOP/s)", paper::HPCG_RAW_GF, r.raw_gflops),
+            row(
+                "Convergence-adjusted (GFLOP/s)",
+                paper::HPCG_CONV_GF,
+                r.convergence_gflops,
+            ),
+            row("Final validated (GFLOP/s)", paper::HPCG_FINAL_GF, r.final_gflops),
+            row(
+                "Observed BW (TB/s per GPU)",
+                paper::HPCG_BW_TBS,
+                r.observed_bw_per_gpu / 1e12,
+            ),
+        ],
+    )
+}
+
+pub fn mxp_compare(r: &MxpResult) -> Table {
+    table_from(
+        "T9 HPL-MxP: paper vs simulated",
+        vec![
+            row("Rmax (PFLOP/s)", paper::MXP_RMAX_PF, r.rmax / 1e15),
+            row("Rmax per GPU (TFLOP/s)", paper::MXP_PER_GPU_TF, r.rmax_per_gpu / 1e12),
+            row("LU-only (PFLOP/s)", paper::MXP_LU_PF, r.lu_only / 1e15),
+            row(
+                "LU-only per GPU (TFLOP/s)",
+                paper::MXP_LU_PER_GPU_TF,
+                r.lu_only_per_gpu / 1e12,
+            ),
+        ],
+    )
+}
+
+pub fn io500_compare(r10: &Io500Result, r96: &Io500Result) -> Table {
+    table_from(
+        "T10 IO500: paper vs simulated",
+        vec![
+            row("10-node total", paper::IO500_10N_TOTAL, r10.total_score),
+            row("10-node BW (GiB/s)", paper::IO500_10N_BW, r10.bw_score_gib),
+            row("10-node IOPS (kIOPS)", paper::IO500_10N_IOPS, r10.iops_score_k),
+            row("96-node total", paper::IO500_96N_TOTAL, r96.total_score),
+            row("96-node BW (GiB/s)", paper::IO500_96N_BW, r96.bw_score_gib),
+            row("96-node IOPS (kIOPS)", paper::IO500_96N_IOPS, r96.iops_score_k),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::hpl::{run_hpl, HplParams};
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn compare_table_has_delta_column() {
+        let cfg = ClusterConfig::default();
+        let r = run_hpl(&cfg, &HplParams::paper());
+        let s = hpl_compare(&r).render();
+        assert!(s.contains("Delta"));
+        assert!(s.contains("Rmax (PFLOP/s)"));
+        assert!(s.contains('%'));
+    }
+
+    #[test]
+    fn paper_constants_internally_consistent() {
+        // per-GPU x 784 == Rmax for HPL
+        let total = paper::HPL_PER_GPU_TF * 784.0 / 1000.0;
+        assert!((total - paper::HPL_RMAX_PF).abs() / paper::HPL_RMAX_PF < 0.01);
+        // IO500 total = sqrt(bw * iops)
+        let t10 = (paper::IO500_10N_BW * paper::IO500_10N_IOPS).sqrt();
+        assert!((t10 - paper::IO500_10N_TOTAL).abs() < 0.5);
+    }
+}

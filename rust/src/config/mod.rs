@@ -1,0 +1,371 @@
+//! Typed cluster configuration. Defaults reproduce the paper's Tables 1
+//! (compute node), 4 (interconnect), 5 (storage) and 6 (system software).
+//!
+//! The config is plain Rust (builder-style mutation + JSON dump via
+//! `util::json`); CLI overrides arrive as `--key value` pairs.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Compute-node hardware (paper Table 1).
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    pub chassis: String,
+    pub cpu_model: String,
+    pub cpus_per_node: usize,
+    pub cores_per_cpu: usize,
+    pub gpus_per_node: usize,
+    pub dram_bytes: f64,
+    /// DDR5-5600, 8 channels per socket.
+    pub dram_bw_bytes_per_s: f64,
+    pub nvme_drives: usize,
+    pub nvme_bytes_each: f64,
+    /// 8 x ConnectX-7 400 GbE for compute + 2 x 400 GbE for storage.
+    pub compute_nics: usize,
+    pub compute_nic_gbps: f64,
+    pub storage_nics: usize,
+    pub storage_nic_gbps: f64,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        Self {
+            chassis: "Supermicro SYS-821GE-TNHR".into(),
+            cpu_model: "Intel Xeon Platinum 8580+".into(),
+            cpus_per_node: 2,
+            cores_per_cpu: 60,
+            gpus_per_node: 8,
+            dram_bytes: 1.5e12,
+            // 8ch DDR5-5600 x 2 sockets ~ 716.8 GB/s/node
+            dram_bw_bytes_per_s: 716.8e9,
+            nvme_drives: 4,
+            nvme_bytes_each: 7.68e12,
+            compute_nics: 8,
+            compute_nic_gbps: 400.0,
+            storage_nics: 2,
+            storage_nic_gbps: 400.0,
+        }
+    }
+}
+
+/// Interconnect fabric (paper Table 4 / Figure 2).
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    pub topology: TopologyKind,
+    pub pods: usize,
+    pub nodes_per_pod: usize,
+    pub rails: usize,
+    pub leaf_per_pod: usize,
+    pub spines: usize,
+    pub node_leaf_gbps: f64,
+    pub leaf_spine_gbps: f64,
+    /// 800GbE leaf-spine links per (leaf, spine) pair.
+    pub leaf_spine_parallel: usize,
+    /// Tomahawk 5: 51.2 Tb/s full duplex.
+    pub switch_capacity_tbps: f64,
+    pub switch_latency_ns: f64,
+    pub nic_latency_ns: f64,
+    /// RoCEv2 payload efficiency over jumbo frames.
+    pub ethernet_efficiency: f64,
+    pub software: String,
+    pub switch_chip: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    RailOptimized,
+    RailOnly,
+    FatTree,
+    Dragonfly,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "rail-optimized" | "rail_optimized" => Ok(Self::RailOptimized),
+            "rail-only" | "rail_only" => Ok(Self::RailOnly),
+            "fat-tree" | "fat_tree" => Ok(Self::FatTree),
+            "dragonfly" => Ok(Self::Dragonfly),
+            other => Err(format!("unknown topology {other:?}")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::RailOptimized => "rail-optimized",
+            Self::RailOnly => "rail-only",
+            Self::FatTree => "fat-tree",
+            Self::Dragonfly => "dragonfly",
+        }
+    }
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self {
+            topology: TopologyKind::RailOptimized,
+            pods: 2,
+            nodes_per_pod: 50,
+            rails: 8,
+            leaf_per_pod: 8,
+            spines: 8,
+            node_leaf_gbps: 400.0,
+            leaf_spine_gbps: 800.0,
+            leaf_spine_parallel: 1,
+            switch_capacity_tbps: 51.2,
+            switch_latency_ns: 800.0,
+            nic_latency_ns: 1_000.0,
+            ethernet_efficiency: 0.94,
+            software: "SONiC".into(),
+            switch_chip: "Broadcom Tomahawk 5".into(),
+        }
+    }
+}
+
+/// Storage subsystem (paper Table 5 + §2.3).
+#[derive(Debug, Clone)]
+pub struct StorageConfig {
+    pub chassis: String,
+    pub servers: usize,
+    pub controllers_per_server: usize,
+    pub nvme_per_server: usize,
+    pub nvme_bytes: f64,
+    /// Per-drive service rates (PCIe Gen4 TLC 30.72 TB class).
+    pub nvme_read_bps: f64,
+    pub nvme_write_bps: f64,
+    pub server_nics: usize,
+    pub server_nic_gbps: f64,
+    /// Two storage switches; one failure halves bandwidth but keeps service.
+    pub storage_switches: usize,
+    /// Vendor "theoretical maximum" for the shared filesystem.
+    pub theoretical_bw_bytes_per_s: f64,
+    /// MDS service capacities (ops/s) by operation class.
+    pub mds_create_ops: f64,
+    pub mds_stat_ops: f64,
+    pub mds_delete_ops: f64,
+    pub mds_readdir_ops: f64,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        Self {
+            chassis: "DDN ES400NVX2".into(),
+            servers: 4,
+            controllers_per_server: 2,
+            nvme_per_server: 24,
+            nvme_bytes: 30.72e12,
+            nvme_read_bps: 7.0e9,
+            nvme_write_bps: 3.6e9,
+            server_nics: 8,
+            server_nic_gbps: 200.0,
+            storage_switches: 2,
+            theoretical_bw_bytes_per_s: 200e9,
+            mds_create_ops: 290_000.0,
+            mds_stat_ops: 480_000.0,
+            mds_delete_ops: 215_000.0,
+            mds_readdir_ops: 2_750_000.0,
+        }
+    }
+}
+
+/// Software stack (paper Table 6) — informational inventory used by
+/// `sakuraone report --software` and the module-environment simulation.
+#[derive(Debug, Clone)]
+pub struct SoftwareConfig {
+    pub os: String,
+    pub container: String,
+    pub scheduler: String,
+    pub cuda_versions: Vec<String>,
+    pub cudnn_versions: Vec<String>,
+    pub hpcx_versions: Vec<String>,
+    pub nccl_versions: Vec<String>,
+    pub python_envs: Vec<String>,
+}
+
+impl Default for SoftwareConfig {
+    fn default() -> Self {
+        Self {
+            os: "Rocky Linux release 9.4 (Blue Onyx)".into(),
+            container: "singularity-ce 4.3.1-1.el9".into(),
+            scheduler: "slurm 22.05.9".into(),
+            cuda_versions: ["12.1", "12.2", "12.4", "12.5", "12.6", "12.8"]
+                .iter()
+                .map(|s| format!("cuda/{s}"))
+                .collect(),
+            cudnn_versions: ["8.9.7", "9.4.0", "9.6.0"]
+                .iter()
+                .map(|s| format!("cudnn/{s}"))
+                .collect(),
+            hpcx_versions: vec![
+                "hpcx/2.17.1-gcc-cuda12/hpcx".into(),
+                "hpcx/2.18.1-gcc-cuda12/hpcx".into(),
+            ],
+            nccl_versions: ["2.20.5", "2.21.5", "2.22.3", "2.23.4", "2.24.3"]
+                .iter()
+                .map(|s| format!("nccl/{s}"))
+                .collect(),
+            python_envs: vec![
+                "miniconda/24.7.1-py311".into(),
+                "miniconda/24.7.1-py311-pytorch".into(),
+                "miniconda/24.7.1-py312".into(),
+                "miniconda/24.7.1-py312-pytorch".into(),
+            ],
+        }
+    }
+}
+
+/// The whole SAKURAONE deployment.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub name: String,
+    pub nodes: usize,
+    pub node: NodeConfig,
+    pub network: NetworkConfig,
+    pub storage: StorageConfig,
+    pub software: SoftwareConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            name: "SAKURAONE".into(),
+            nodes: 100,
+            node: NodeConfig::default(),
+            network: NetworkConfig::default(),
+            storage: StorageConfig::default(),
+            software: SoftwareConfig::default(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.node.gpus_per_node
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.node.cpus_per_node * self.node.cores_per_cpu
+    }
+
+    /// Apply `--key value` overrides from the CLI. Supported keys are the
+    /// ones experiments sweep; unknown keys are an error (typo safety).
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let parse_usize = |v: &str| {
+            v.parse::<usize>().map_err(|_| format!("{key}: bad integer {v:?}"))
+        };
+        let parse_f64 = |v: &str| {
+            v.parse::<f64>().map_err(|_| format!("{key}: bad number {v:?}"))
+        };
+        match key {
+            "nodes" => {
+                self.nodes = parse_usize(value)?;
+                // keep pods consistent: split evenly across 2 pods
+                self.network.nodes_per_pod = self.nodes.div_ceil(self.network.pods);
+            }
+            "gpus-per-node" => self.node.gpus_per_node = parse_usize(value)?,
+            "topology" => self.network.topology = TopologyKind::parse(value)?,
+            "rails" => {
+                self.network.rails = parse_usize(value)?;
+                self.network.leaf_per_pod = self.network.rails;
+            }
+            "spines" => self.network.spines = parse_usize(value)?,
+            "node-leaf-gbps" => self.network.node_leaf_gbps = parse_f64(value)?,
+            "leaf-spine-gbps" => self.network.leaf_spine_gbps = parse_f64(value)?,
+            "ethernet-efficiency" => {
+                self.network.ethernet_efficiency = parse_f64(value)?
+            }
+            "storage-servers" => self.storage.servers = parse_usize(value)?,
+            other => return Err(format!("unknown config override {other:?}")),
+        }
+        Ok(())
+    }
+
+    /// Machine-readable dump (the `sakuraone config --dump` output).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("nodes".into(), Json::Num(self.nodes as f64));
+        m.insert(
+            "gpus_per_node".into(),
+            Json::Num(self.node.gpus_per_node as f64),
+        );
+        m.insert("total_gpus".into(), Json::Num(self.total_gpus() as f64));
+        m.insert(
+            "topology".into(),
+            Json::Str(self.network.topology.name().into()),
+        );
+        m.insert("pods".into(), Json::Num(self.network.pods as f64));
+        m.insert("rails".into(), Json::Num(self.network.rails as f64));
+        m.insert("spines".into(), Json::Num(self.network.spines as f64));
+        m.insert(
+            "leaf_spine_gbps".into(),
+            Json::Num(self.network.leaf_spine_gbps),
+        );
+        m.insert(
+            "storage_servers".into(),
+            Json::Num(self.storage.servers as f64),
+        );
+        m.insert(
+            "storage_theoretical_gbps".into(),
+            Json::Num(self.storage.theoretical_bw_bytes_per_s / 1e9),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.nodes, 100);
+        assert_eq!(c.total_gpus(), 800);
+        assert_eq!(c.total_cores(), 12_000);
+        assert_eq!(c.network.pods, 2);
+        assert_eq!(c.network.leaf_per_pod, 8);
+        assert_eq!(c.network.spines, 8);
+        assert_eq!(c.network.leaf_spine_gbps, 800.0);
+        assert_eq!(c.storage.servers, 4);
+    }
+
+    #[test]
+    fn override_nodes() {
+        let mut c = ClusterConfig::default();
+        c.apply_override("nodes", "10").unwrap();
+        assert_eq!(c.nodes, 10);
+        assert_eq!(c.total_gpus(), 80);
+    }
+
+    #[test]
+    fn override_topology() {
+        let mut c = ClusterConfig::default();
+        c.apply_override("topology", "fat-tree").unwrap();
+        assert_eq!(c.network.topology, TopologyKind::FatTree);
+    }
+
+    #[test]
+    fn unknown_override_rejected() {
+        let mut c = ClusterConfig::default();
+        assert!(c.apply_override("warp-drive", "11").is_err());
+    }
+
+    #[test]
+    fn json_dump_contains_headline_fields() {
+        let j = ClusterConfig::default().to_json();
+        assert_eq!(j.get("total_gpus").unwrap().as_usize().unwrap(), 800);
+        assert_eq!(
+            j.get("topology").unwrap().as_str().unwrap(),
+            "rail-optimized"
+        );
+    }
+
+    #[test]
+    fn topology_kind_roundtrip() {
+        for k in ["rail-optimized", "rail-only", "fat-tree", "dragonfly"] {
+            assert_eq!(TopologyKind::parse(k).unwrap().name(), k);
+        }
+        assert!(TopologyKind::parse("torus").is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Platform metrics registry: counters and gauges, dumpable as JSON —
+//! the observability surface a managed HPC service exposes (paper §3
+//! mentions Slurm-integrated performance monitoring).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        for (k, v) in &self.counters {
+            m.insert(format!("counter.{k}"), Json::Num(*v as f64));
+        }
+        for (k, v) in &self.gauges {
+            m.insert(format!("gauge.{k}"), Json::Num(*v));
+        }
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.inc("jobs.submitted");
+        m.inc("jobs.submitted");
+        m.add("jobs.submitted", 3);
+        assert_eq!(m.counter("jobs.submitted"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut m = Metrics::new();
+        m.set("hpl.rmax_pflops", 33.9);
+        m.set("hpl.rmax_pflops", 34.1);
+        assert_eq!(m.gauge("hpl.rmax_pflops"), Some(34.1));
+    }
+
+    #[test]
+    fn json_dump_prefixes() {
+        let mut m = Metrics::new();
+        m.inc("a");
+        m.set("b", 2.5);
+        let j = m.to_json();
+        assert!(j.get("counter.a").is_some());
+        assert_eq!(j.get("gauge.b").unwrap().as_f64(), Some(2.5));
+    }
+}

@@ -1,0 +1,9 @@
+//! Platform coordination layer: the leader-process API over config,
+//! fabric, scheduler, benchmark drivers and the PJRT runtime, plus the
+//! metrics registry.
+
+pub mod metrics;
+pub mod platform;
+
+pub use metrics::Metrics;
+pub use platform::{CgCheck, NumericsCheck, Platform};

@@ -1,0 +1,18 @@
+//! Hardware substrate models: GPU roofline, node inventory, PCIe/NUMA
+//! topology (Table 2), and the intra-node NVSwitch fabric.
+//!
+//! Substitution note (DESIGN.md §2): the paper measured real H100 systems;
+//! we model them analytically from public pipe/bandwidth specs so the
+//! simulated benchmarks derive their numbers instead of quoting them.
+
+pub mod gpu;
+pub mod node;
+pub mod nvswitch;
+pub mod pcie;
+pub mod power;
+
+pub use gpu::{GpuModel, Precision};
+pub use node::NodeModel;
+pub use nvswitch::NvSwitchFabric;
+pub use pcie::{NodePcieTopology, PathClass};
+pub use power::{energy_for, EnergyReport, PowerModel};

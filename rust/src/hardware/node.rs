@@ -1,0 +1,89 @@
+//! Whole-compute-node model: CPUs, DRAM, 8 GPUs, NVSwitch fabric, NICs.
+
+use super::gpu::{GpuModel, Precision};
+use super::nvswitch::NvSwitchFabric;
+use super::pcie::NodePcieTopology;
+use crate::config::NodeConfig;
+
+#[derive(Debug, Clone)]
+pub struct NodeModel {
+    pub config: NodeConfig,
+    pub gpu: GpuModel,
+    pub fabric: NvSwitchFabric,
+    pub pcie: NodePcieTopology,
+}
+
+impl NodeModel {
+    pub fn sakuraone(config: &NodeConfig) -> Self {
+        let gpu = GpuModel::h100_sxm();
+        let fabric = NvSwitchFabric::h100_baseboard(&gpu, config.gpus_per_node);
+        Self {
+            config: config.clone(),
+            gpu,
+            fabric,
+            pcie: NodePcieTopology::sakuraone(),
+        }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.config.cpus_per_node * self.config.cores_per_cpu
+    }
+
+    /// Node peak for a precision (all GPUs).
+    pub fn peak_flops(&self, p: Precision) -> f64 {
+        self.gpu.peak_flops(p) * self.config.gpus_per_node as f64
+    }
+
+    /// Aggregate HBM bandwidth.
+    pub fn hbm_bw(&self) -> f64 {
+        self.gpu.hbm_bw_bytes_per_s * self.config.gpus_per_node as f64
+    }
+
+    /// Aggregate compute-fabric injection bandwidth (bytes/s one direction).
+    pub fn injection_bw(&self) -> f64 {
+        self.config.compute_nics as f64 * self.config.compute_nic_gbps * 1e9
+            / 8.0
+    }
+
+    /// Local NVMe scratch capacity.
+    pub fn scratch_bytes(&self) -> f64 {
+        self.config.nvme_drives as f64 * self.config.nvme_bytes_each
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeConfig;
+
+    fn node() -> NodeModel {
+        NodeModel::sakuraone(&NodeConfig::default())
+    }
+
+    #[test]
+    fn table1_inventory() {
+        let n = node();
+        assert_eq!(n.cores(), 120);
+        assert_eq!(n.config.gpus_per_node, 8);
+        assert!((n.scratch_bytes() - 30.72e12).abs() < 1e9);
+    }
+
+    #[test]
+    fn node_fp64_peak_over_half_pflop() {
+        let n = node();
+        let p = n.peak_flops(Precision::Fp64Tensor);
+        assert!(p > 0.5e15 && p < 0.6e15, "{p}");
+    }
+
+    #[test]
+    fn injection_is_8x400gbe() {
+        let n = node();
+        assert!((n.injection_bw() - 400e9).abs() < 1.0); // 3200 Gb/s = 400 GB/s
+    }
+
+    #[test]
+    fn hbm_aggregate() {
+        let n = node();
+        assert!((n.hbm_bw() - 8.0 * 3.35e12).abs() < 1e9);
+    }
+}

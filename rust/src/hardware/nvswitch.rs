@@ -1,0 +1,105 @@
+//! Intra-node GPU fabric model: NVLink4 + NVSwitch (SXM baseboard).
+//!
+//! Used by the rail-aligned hierarchical collectives: the intra-node
+//! reduce-scatter/all-gather phases ride this fabric while the inter-node
+//! phase rides the Ethernet rails.
+
+use super::gpu::GpuModel;
+
+#[derive(Debug, Clone)]
+pub struct NvSwitchFabric {
+    pub gpus: usize,
+    /// Per-GPU one-direction NVLink bandwidth (bytes/s).
+    pub per_gpu_bw: f64,
+    /// Per-hop latency through NVSwitch.
+    pub latency: f64,
+    /// Achievable fraction of link rate (NCCL protocol efficiency).
+    pub efficiency: f64,
+}
+
+impl NvSwitchFabric {
+    pub fn h100_baseboard(gpu: &GpuModel, gpus: usize) -> Self {
+        Self {
+            gpus,
+            per_gpu_bw: gpu.nvlink_bw_bytes_per_s,
+            latency: 2.0e-6,
+            efficiency: 0.80,
+        }
+    }
+
+    fn effective_bw(&self) -> f64 {
+        self.per_gpu_bw * self.efficiency
+    }
+
+    /// Ring reduce-scatter of `bytes` per GPU across the node:
+    /// (g-1)/g of the buffer crosses each GPU's links.
+    pub fn reduce_scatter_time(&self, bytes: f64) -> f64 {
+        if self.gpus <= 1 {
+            return 0.0;
+        }
+        let g = self.gpus as f64;
+        self.latency * (g - 1.0) + bytes * (g - 1.0) / g / self.effective_bw()
+    }
+
+    /// Ring all-gather — symmetric cost to reduce-scatter.
+    pub fn all_gather_time(&self, bytes: f64) -> f64 {
+        self.reduce_scatter_time(bytes)
+    }
+
+    /// Full intra-node all-reduce (RS + AG).
+    pub fn all_reduce_time(&self, bytes: f64) -> f64 {
+        self.reduce_scatter_time(bytes) + self.all_gather_time(bytes)
+    }
+
+    /// Broadcast via NVSwitch multicast-ish pipeline.
+    pub fn broadcast_time(&self, bytes: f64) -> f64 {
+        if self.gpus <= 1 {
+            return 0.0;
+        }
+        self.latency + bytes / self.effective_bw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::gpu::GpuModel;
+
+    fn fabric() -> NvSwitchFabric {
+        NvSwitchFabric::h100_baseboard(&GpuModel::h100_sxm(), 8)
+    }
+
+    #[test]
+    fn allreduce_1gib_sub_10ms() {
+        let t = fabric().all_reduce_time(1e9);
+        assert!(t > 1e-3 && t < 10e-3, "t={t}");
+    }
+
+    #[test]
+    fn single_gpu_is_free() {
+        let mut f = fabric();
+        f.gpus = 1;
+        assert_eq!(f.all_reduce_time(1e9), 0.0);
+    }
+
+    #[test]
+    fn latency_floor_for_tiny_messages() {
+        let f = fabric();
+        let t = f.all_reduce_time(8.0);
+        assert!(t >= 2.0 * f.latency * 7.0, "t={t}");
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_large() {
+        let f = fabric();
+        let t1 = f.all_reduce_time(1e9);
+        let t2 = f.all_reduce_time(2e9);
+        assert!((t2 / t1 - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn broadcast_cheaper_than_allreduce() {
+        let f = fabric();
+        assert!(f.broadcast_time(1e9) < f.all_reduce_time(1e9));
+    }
+}

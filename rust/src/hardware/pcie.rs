@@ -1,0 +1,256 @@
+//! PCIe/NUMA topology inside a compute node — reproduces the paper's
+//! Table 2 classification of NIC usage derived from `nvidia-smi topo -mp`.
+//!
+//! The SYS-821GE-TNHR routes each compute NIC through the PCIe switch of
+//! its companion GPU (NODE paths), the two storage NICs through longer
+//! multi-bridge paths (PXB), and the management NIC across the NUMA
+//! boundary (SYS).
+
+use crate::util::table::Table;
+
+/// PCIe path classification, as printed by `nvidia-smi topo -mp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PathClass {
+    /// Same PCIe switch (GPU-companion slot): fastest host path.
+    Pix,
+    /// Same NUMA node, through the PCIe host bridge.
+    Node,
+    /// Multiple PCIe bridges, same socket.
+    Pxb,
+    /// Crosses the inter-socket (NUMA) boundary.
+    Sys,
+}
+
+impl PathClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PathClass::Pix => "PIX",
+            PathClass::Node => "NODE",
+            PathClass::Pxb => "PXB",
+            PathClass::Sys => "SYS",
+        }
+    }
+
+    /// Relative latency multiplier for host<->NIC DMA setup; NODE-local
+    /// paths are the baseline RoCEv2 doorbell/completion cost.
+    pub fn latency_factor(&self) -> f64 {
+        match self {
+            PathClass::Pix => 0.9,
+            PathClass::Node => 1.0,
+            PathClass::Pxb => 1.35,
+            PathClass::Sys => 1.9,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NicRole {
+    Compute,
+    Storage,
+    Management,
+}
+
+#[derive(Debug, Clone)]
+pub struct Nic {
+    pub index: usize,
+    pub device: String,
+    pub role: NicRole,
+    /// GPU whose PCIe domain hosts this NIC (compute NICs only).
+    pub companion_gpu: Option<usize>,
+    pub gbps: f64,
+}
+
+/// The node-internal device topology (8 GPUs + 11 logical NICs).
+#[derive(Debug, Clone)]
+pub struct NodePcieTopology {
+    pub gpus: usize,
+    pub nics: Vec<Nic>,
+}
+
+impl NodePcieTopology {
+    /// The SAKURAONE node layout (paper Table 2).
+    pub fn sakuraone() -> Self {
+        let mut nics = Vec::new();
+        for g in 0..8 {
+            nics.push(Nic {
+                index: g,
+                device: format!("mlx5_{g}"),
+                role: NicRole::Compute,
+                companion_gpu: Some(g),
+                gbps: 400.0,
+            });
+        }
+        nics.push(Nic {
+            index: 8,
+            device: "mlx5_8".into(),
+            role: NicRole::Storage,
+            companion_gpu: None,
+            gbps: 400.0,
+        });
+        nics.push(Nic {
+            index: 9,
+            device: "mlx5_11".into(),
+            role: NicRole::Management,
+            companion_gpu: None,
+            gbps: 4.0,
+        });
+        nics.push(Nic {
+            index: 10,
+            device: "mlx5_bond_0".into(),
+            role: NicRole::Storage,
+            companion_gpu: None,
+            gbps: 400.0,
+        });
+        Self { gpus: 8, nics }
+    }
+
+    /// Classify the PCIe path between a NIC and a GPU, mirroring the
+    /// `nvidia-smi topo -mp` output the paper analysed.
+    pub fn classify(&self, nic: &Nic, gpu: usize) -> PathClass {
+        match nic.role {
+            NicRole::Compute => {
+                if nic.companion_gpu == Some(gpu) {
+                    PathClass::Node
+                } else if nic.companion_gpu.map(|g| g / 4) == Some(gpu / 4) {
+                    // same socket, different PCIe domain
+                    PathClass::Pxb
+                } else {
+                    PathClass::Sys
+                }
+            }
+            NicRole::Storage => PathClass::Pxb,
+            NicRole::Management => PathClass::Sys,
+        }
+    }
+
+    /// Table 2 equivalent: one row per NIC with primary usage and the
+    /// connectivity class of its *best* GPU path.
+    pub fn usage_table(&self) -> Table {
+        let mut t = Table::new(
+            "Table 2 — NIC usage and GPU connectivity",
+            &["NIC", "Device", "Primary Usage", "GPU Connectivity"],
+        );
+        for nic in &self.nics {
+            let best = (0..self.gpus)
+                .map(|g| self.classify(nic, g))
+                .min()
+                .unwrap();
+            let usage = match nic.role {
+                NicRole::Compute => "High-speed inter-node communication",
+                NicRole::Storage => "Storage network",
+                NicRole::Management => "Management network (e.g., SSH)",
+            };
+            let conn = match nic.role {
+                NicRole::Compute => format!(
+                    "{} (via GPU{} PCIe domain)",
+                    best.label(),
+                    nic.companion_gpu.unwrap()
+                ),
+                _ => best.label().to_string(),
+            };
+            t.row(&[
+                format!("NIC{}", nic.index),
+                nic.device.clone(),
+                usage.to_string(),
+                conn,
+            ]);
+        }
+        t
+    }
+
+    /// Full `nvidia-smi topo -mp`-style matrix (NIC x GPU).
+    pub fn matrix(&self) -> Table {
+        let mut headers: Vec<String> = vec!["".into()];
+        headers.extend((0..self.gpus).map(|g| format!("GPU{g}")));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new("NIC/GPU PCIe path matrix", &hdr_refs);
+        for nic in &self.nics {
+            let mut row = vec![nic.device.clone()];
+            for g in 0..self.gpus {
+                row.push(self.classify(nic, g).label().to_string());
+            }
+            t.row(&row);
+        }
+        t
+    }
+
+    pub fn compute_nic_for_gpu(&self, gpu: usize) -> Option<&Nic> {
+        self.nics
+            .iter()
+            .find(|n| n.role == NicRole::Compute && n.companion_gpu == Some(gpu))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sakuraone_has_11_nics() {
+        let t = NodePcieTopology::sakuraone();
+        assert_eq!(t.nics.len(), 11);
+        assert_eq!(
+            t.nics.iter().filter(|n| n.role == NicRole::Compute).count(),
+            8
+        );
+        assert_eq!(
+            t.nics.iter().filter(|n| n.role == NicRole::Storage).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn compute_nics_are_node_local_to_their_gpu() {
+        let t = NodePcieTopology::sakuraone();
+        for g in 0..8 {
+            let nic = t.compute_nic_for_gpu(g).unwrap();
+            assert_eq!(t.classify(nic, g), PathClass::Node);
+        }
+    }
+
+    #[test]
+    fn cross_socket_is_sys() {
+        let t = NodePcieTopology::sakuraone();
+        let nic0 = t.compute_nic_for_gpu(0).unwrap();
+        assert_eq!(t.classify(nic0, 7), PathClass::Sys);
+        assert_eq!(t.classify(nic0, 2), PathClass::Pxb);
+    }
+
+    #[test]
+    fn storage_nics_are_pxb() {
+        let t = NodePcieTopology::sakuraone();
+        for nic in t.nics.iter().filter(|n| n.role == NicRole::Storage) {
+            for g in 0..8 {
+                assert_eq!(t.classify(nic, g), PathClass::Pxb);
+            }
+        }
+    }
+
+    #[test]
+    fn management_nic_is_sys_and_slow() {
+        let t = NodePcieTopology::sakuraone();
+        let m = t
+            .nics
+            .iter()
+            .find(|n| n.role == NicRole::Management)
+            .unwrap();
+        assert_eq!(m.device, "mlx5_11");
+        assert!(m.gbps < 10.0);
+        assert_eq!(t.classify(m, 0), PathClass::Sys);
+    }
+
+    #[test]
+    fn usage_table_matches_paper_rows() {
+        let t = NodePcieTopology::sakuraone();
+        let s = t.usage_table().render();
+        assert!(s.contains("mlx5_bond_0"));
+        assert!(s.contains("NODE (via GPU0 PCIe domain)"));
+        assert!(s.contains("Management network"));
+    }
+
+    #[test]
+    fn latency_factors_ordered() {
+        assert!(PathClass::Node.latency_factor() < PathClass::Pxb.latency_factor());
+        assert!(PathClass::Pxb.latency_factor() < PathClass::Sys.latency_factor());
+    }
+}

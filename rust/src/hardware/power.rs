@@ -1,0 +1,172 @@
+//! Power and energy model — the paper's stated future work (§6: "extend
+//! this evaluation to include power consumption and performance-per-watt
+//! analysis"). Implemented here as a first-class extension feature.
+//!
+//! Component powers come from vendor specs (H100 SXM 700 W TDP, Xeon
+//! 8580+ 350 W TDP, Tomahawk-5 switch ~550 W class, ConnectX-7 ~25 W,
+//! DDN NVMe shelf ~2 kW); per-benchmark draw scales idle->TDP with the
+//! utilisation each simulator reports. Energy = sum(component power x
+//! benchmark wall time); efficiency = Rmax / cluster power — the
+//! Green500 metric.
+
+use crate::config::ClusterConfig;
+
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// GPU draw at idle and at full tensor-pipe load (W).
+    pub gpu_idle_w: f64,
+    pub gpu_tdp_w: f64,
+    /// Per-socket CPU draw (W).
+    pub cpu_idle_w: f64,
+    pub cpu_tdp_w: f64,
+    /// DRAM per node (W), roughly constant.
+    pub dram_w: f64,
+    /// Per NIC (W).
+    pub nic_w: f64,
+    /// Per Ethernet switch chassis (W).
+    pub switch_w: f64,
+    /// Per storage server chassis (W).
+    pub storage_server_w: f64,
+    /// Facility overhead multiplier (cooling, PSU loss): PUE.
+    pub pue: f64,
+}
+
+impl PowerModel {
+    pub fn sakuraone() -> Self {
+        Self {
+            gpu_idle_w: 90.0,
+            gpu_tdp_w: 700.0,
+            cpu_idle_w: 70.0,
+            cpu_tdp_w: 350.0,
+            dram_w: 60.0,
+            nic_w: 25.0,
+            switch_w: 550.0,
+            storage_server_w: 2_000.0,
+            pue: 1.35,
+        }
+    }
+
+    /// Cluster IT power (W) at a given GPU utilisation in [0, 1] and CPU
+    /// utilisation (HPL keeps CPUs mostly feeding, ~30%).
+    pub fn cluster_power_w(
+        &self,
+        cfg: &ClusterConfig,
+        gpu_util: f64,
+        cpu_util: f64,
+    ) -> f64 {
+        let nodes = cfg.nodes as f64;
+        let gpus = cfg.total_gpus() as f64;
+        let gpu = gpus * (self.gpu_idle_w + gpu_util * (self.gpu_tdp_w - self.gpu_idle_w));
+        let cpu = nodes
+            * cfg.node.cpus_per_node as f64
+            * (self.cpu_idle_w + cpu_util * (self.cpu_tdp_w - self.cpu_idle_w));
+        let dram = nodes * self.dram_w;
+        let nics = nodes
+            * (cfg.node.compute_nics + cfg.node.storage_nics + 1) as f64
+            * self.nic_w;
+        let switches = (cfg.network.pods * cfg.network.leaf_per_pod
+            + cfg.network.spines
+            + cfg.storage.storage_switches) as f64
+            * self.switch_w;
+        let storage = cfg.storage.servers as f64 * self.storage_server_w;
+        gpu + cpu + dram + nics + switches + storage
+    }
+
+    /// Facility power including PUE.
+    pub fn facility_power_w(&self, cfg: &ClusterConfig, gpu_util: f64, cpu_util: f64) -> f64 {
+        self.cluster_power_w(cfg, gpu_util, cpu_util) * self.pue
+    }
+}
+
+/// A benchmark's energy/efficiency summary.
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    pub name: String,
+    pub wall_s: f64,
+    pub avg_power_w: f64,
+    pub energy_mj: f64,
+    /// FLOP/s per watt (Green500 uses GFLOPS/W on HPL).
+    pub gflops_per_w: f64,
+}
+
+pub fn energy_for(
+    model: &PowerModel,
+    cfg: &ClusterConfig,
+    name: &str,
+    wall_s: f64,
+    sustained_flops: f64,
+    gpu_util: f64,
+    cpu_util: f64,
+) -> EnergyReport {
+    let p = model.cluster_power_w(cfg, gpu_util, cpu_util);
+    EnergyReport {
+        name: name.to_string(),
+        wall_s,
+        avg_power_w: p,
+        energy_mj: p * wall_s / 1e6,
+        gflops_per_w: sustained_flops / 1e9 / p,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (PowerModel, ClusterConfig) {
+        (PowerModel::sakuraone(), ClusterConfig::default())
+    }
+
+    #[test]
+    fn idle_cluster_in_plausible_band() {
+        let (m, cfg) = setup();
+        let p = m.cluster_power_w(&cfg, 0.0, 0.0);
+        // 800 GPUs idle + base: a few hundred kW
+        assert!(p > 100e3 && p < 400e3, "{p} W");
+    }
+
+    #[test]
+    fn full_load_near_nameplate() {
+        let (m, cfg) = setup();
+        let p = m.cluster_power_w(&cfg, 1.0, 0.5);
+        // 800 x 700W = 560 kW GPUs alone; with hosts/fabric ~ 700-800 kW
+        assert!(p > 600e3 && p < 900e3, "{p} W");
+    }
+
+    #[test]
+    fn hpl_efficiency_in_green500_band() {
+        // H100 FP64 systems rate ~25-65 GFLOPS/W on Green500; our HPL at
+        // 33.95 PF should land in that band.
+        let (m, cfg) = setup();
+        let rep = energy_for(&m, &cfg, "hpl", 389.23, 33.95e15, 0.85, 0.3);
+        assert!(
+            rep.gflops_per_w > 25.0 && rep.gflops_per_w < 70.0,
+            "{} GF/W",
+            rep.gflops_per_w
+        );
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let (m, cfg) = setup();
+        let a = energy_for(&m, &cfg, "x", 100.0, 1e15, 0.5, 0.3);
+        let b = energy_for(&m, &cfg, "x", 200.0, 1e15, 0.5, 0.3);
+        assert!((b.energy_mj / a.energy_mj - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pue_multiplies() {
+        let (m, cfg) = setup();
+        let it = m.cluster_power_w(&cfg, 0.5, 0.3);
+        let fac = m.facility_power_w(&cfg, 0.5, 0.3);
+        assert!((fac / it - 1.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mxp_more_efficient_than_hpl() {
+        // FP8 work per joule dwarfs FP64 work per joule
+        let (m, cfg) = setup();
+        let hpl = energy_for(&m, &cfg, "hpl", 389.0, 33.95e15, 0.85, 0.3);
+        let mxp = energy_for(&m, &cfg, "mxp", 52.0, 339.86e15, 0.9, 0.3);
+        assert!(mxp.gflops_per_w > 5.0 * hpl.gflops_per_w);
+    }
+}

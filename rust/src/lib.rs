@@ -1,0 +1,15 @@
+//! SAKURAONE reproduction library (see DESIGN.md).
+pub mod benchmarks;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod llm;
+pub mod network;
+pub mod runtime;
+pub mod scheduler;
+pub mod storage;
+pub mod hardware;
+pub mod topology;
+pub mod util;
+
+pub fn version() -> &'static str { env!("CARGO_PKG_VERSION") }

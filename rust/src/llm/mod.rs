@@ -1,0 +1,9 @@
+//! LLM training on SAKURAONE: the distributed step-time model over the
+//! simulated fabric, and the *real* small-scale training loop through the
+//! PJRT runtime (Pallas attention kernel -> JAX train step -> Rust driver).
+
+pub mod parallelism;
+pub mod train;
+
+pub use parallelism::{step_time, LlmConfig, StepTime};
+pub use train::{train, Corpus, TrainReport};

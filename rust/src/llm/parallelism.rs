@@ -1,0 +1,208 @@
+//! Distributed LLM training step-time model over the simulated fabric.
+//!
+//! SAKURAONE's raison d'être (paper §1) is LLM training. This model
+//! composes data/tensor/pipeline parallelism costs from the same
+//! substrates the benchmarks use: GPU roofline for the local compute,
+//! NVSwitch for tensor-parallel collectives, the Ethernet rails (through
+//! the flow simulator) for data-parallel gradient reduction, and the
+//! classic 1F1B bubble for pipeline parallelism.
+
+use crate::collectives::CollectiveEngine;
+use crate::config::ClusterConfig;
+use crate::hardware::{GpuModel, NvSwitchFabric};
+use crate::topology::graph::Fabric;
+
+#[derive(Debug, Clone)]
+pub struct LlmConfig {
+    /// Model parameters (dense decoder).
+    pub params: f64,
+    /// Tokens per global batch.
+    pub batch_tokens: f64,
+    pub microbatches: usize,
+    /// Parallelism degrees: dp * tp * pp GPUs total.
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    /// bf16 training.
+    pub flops_per_token_factor: f64, // ~6 for fwd+bwd
+    /// Achievable fraction of the bf16 pipe in end-to-end training.
+    pub mfu_ceiling: f64,
+}
+
+impl LlmConfig {
+    /// A 70B-class run on the full machine: TP=8 (one node), PP=10, DP=10.
+    pub fn llama70b_on_sakuraone() -> Self {
+        Self {
+            params: 70e9,
+            batch_tokens: 4e6,
+            microbatches: 40,
+            dp: 10,
+            tp: 8,
+            pp: 10,
+            flops_per_token_factor: 6.0,
+            mfu_ceiling: 0.55,
+        }
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.dp * self.tp * self.pp
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StepTime {
+    pub total: f64,
+    pub compute: f64,
+    pub tp_comm: f64,
+    pub dp_comm: f64,
+    pub pp_bubble: f64,
+    /// Model FLOP/s utilisation across the allocation.
+    pub mfu: f64,
+    pub tokens_per_s: f64,
+}
+
+pub fn step_time(
+    cfg: &ClusterConfig,
+    fabric: &Fabric,
+    llm: &LlmConfig,
+) -> StepTime {
+    let gpu = GpuModel::h100_sxm();
+    let engine = CollectiveEngine::new(fabric, cfg);
+    let nv = NvSwitchFabric::h100_baseboard(&gpu, cfg.node.gpus_per_node);
+    let gpus = llm.gpus() as f64;
+    assert!(
+        llm.gpus() <= cfg.total_gpus(),
+        "llm config wants {} GPUs, cluster has {}",
+        llm.gpus(),
+        cfg.total_gpus()
+    );
+
+    // --- compute: 6 * params * tokens flops, split over all GPUs ----------
+    let step_flops = llm.flops_per_token_factor * llm.params * llm.batch_tokens;
+    let compute =
+        step_flops / (gpus * gpu.bf16_flops * llm.mfu_ceiling);
+
+    // --- tensor parallel: 4 all-reduces of (hidden activations) per layer
+    // per microbatch, all on NVSwitch. Aggregate activation traffic per
+    // microbatch ~ 8 bytes/param^(2/3)-ish is model-specific; use the
+    // standard estimate: TP all-reduce volume per step ~ 4 * activations,
+    // activations ~ batch_tokens/dp/microbatches * hidden * layers * 2B.
+    // For the step model we approximate activation volume as 2% of the
+    // parameter bytes per microbatch — the Megatron-LM planning rule.
+    let act_bytes = 0.02 * llm.params * 2.0;
+    let tp_comm = if llm.tp > 1 {
+        llm.microbatches as f64 * nv.all_reduce_time(act_bytes)
+    } else {
+        0.0
+    };
+
+    // --- data parallel: ring all-reduce of the gradient shard over the
+    // rails (bf16 grads, 2 bytes/param, sharded over tp*pp).
+    let grad_bytes = 2.0 * llm.params / (llm.tp * llm.pp) as f64;
+    let dp_nodes: Vec<usize> = (0..llm.dp).map(|d| d * llm.pp).collect();
+    let dp_comm = if llm.dp > 1 {
+        // bucketed overlap hides half behind the backward pass
+        0.5 * engine.hierarchical_allreduce(&dp_nodes, grad_bytes).total
+    } else {
+        0.0
+    };
+
+    // --- pipeline bubble: (pp-1)/microbatches of the compute time --------
+    let pp_bubble = if llm.pp > 1 {
+        compute * (llm.pp - 1) as f64 / llm.microbatches as f64
+    } else {
+        0.0
+    };
+
+    let total = compute + tp_comm + dp_comm + pp_bubble;
+    let mfu = step_flops / (total * gpus * gpu.bf16_flops);
+    StepTime {
+        total,
+        compute,
+        tp_comm,
+        dp_comm,
+        pp_bubble,
+        mfu,
+        tokens_per_s: llm.batch_tokens / total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::builders::build;
+
+    fn setup() -> (ClusterConfig, Fabric) {
+        let cfg = ClusterConfig::default();
+        let f = build(&cfg);
+        (cfg, f)
+    }
+
+    #[test]
+    fn seventy_b_run_has_sane_mfu() {
+        let (cfg, f) = setup();
+        let st = step_time(&cfg, &f, &LlmConfig::llama70b_on_sakuraone());
+        assert!(st.mfu > 0.30 && st.mfu < 0.55, "mfu {}", st.mfu);
+        assert!(st.tokens_per_s > 1e4, "{} tok/s", st.tokens_per_s);
+    }
+
+    #[test]
+    fn more_microbatches_shrink_bubble() {
+        let (cfg, f) = setup();
+        let mut llm = LlmConfig::llama70b_on_sakuraone();
+        let a = step_time(&cfg, &f, &llm);
+        llm.microbatches = 80;
+        let b = step_time(&cfg, &f, &llm);
+        assert!(b.pp_bubble < a.pp_bubble);
+    }
+
+    #[test]
+    fn dp_comm_grows_with_dp_degree() {
+        let (cfg, f) = setup();
+        let mut llm = LlmConfig::llama70b_on_sakuraone();
+        llm.pp = 2;
+        llm.dp = 25; // 25*8*2 = 400 GPUs
+        llm.tp = 8;
+        let wide = step_time(&cfg, &f, &llm);
+        llm.dp = 5;
+        let narrow = step_time(&cfg, &f, &llm);
+        assert!(wide.dp_comm > narrow.dp_comm);
+    }
+
+    #[test]
+    fn single_gpu_degenerate() {
+        let (cfg, f) = setup();
+        let llm = LlmConfig {
+            params: 1e8,
+            batch_tokens: 1e5,
+            microbatches: 1,
+            dp: 1,
+            tp: 1,
+            pp: 1,
+            flops_per_token_factor: 6.0,
+            mfu_ceiling: 0.5,
+        };
+        let st = step_time(&cfg, &f, &llm);
+        assert_eq!(st.tp_comm, 0.0);
+        assert_eq!(st.dp_comm, 0.0);
+        assert_eq!(st.pp_bubble, 0.0);
+        assert!(st.total > 0.0);
+    }
+
+    #[test]
+    fn rail_optimized_trains_faster_than_fat_tree() {
+        let mut cfg = ClusterConfig::default();
+        let f_rail = build(&cfg);
+        let llm = LlmConfig {
+            dp: 100,
+            tp: 8,
+            pp: 1,
+            ..LlmConfig::llama70b_on_sakuraone()
+        };
+        let rail = step_time(&cfg, &f_rail, &llm);
+        cfg.apply_override("topology", "fat-tree").unwrap();
+        let f_fat = build(&cfg);
+        let fat = step_time(&cfg, &f_fat, &llm);
+        assert!(rail.dp_comm <= fat.dp_comm * 1.001, "{} vs {}", rail.dp_comm, fat.dp_comm);
+    }
+}

@@ -1,0 +1,167 @@
+//! Real LLM training loop through the PJRT runtime — the end-to-end proof
+//! that all three layers compose: the Pallas attention kernel (L1) inside
+//! the JAX train step (L2) driven from the Rust platform (L3).
+//!
+//! The corpus is synthetic but structured (a deterministic order-k Markov
+//! chain over the byte vocabulary), so the model has real signal to learn
+//! and the loss curve must *drop* — a stronger check than noise-fitting.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+/// Mirrors python/compile/model.py (VOCAB, SEQ, BATCH, N_PARAMS).
+pub const VOCAB: usize = 256;
+pub const SEQ: usize = 64;
+pub const BATCH: usize = 8;
+pub const N_PARAMS: usize = 14;
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: u32,
+    pub initial_loss: f64,
+    pub final_loss: f64,
+    pub losses: Vec<f64>,
+    pub tokens_seen: u64,
+    pub wall_seconds: f64,
+}
+
+/// Deterministic synthetic corpus: order-1 Markov chain whose transition
+/// table is itself seeded; entropy is well below ln(256) so a learning
+/// model must beat the uniform baseline.
+pub struct Corpus {
+    transitions: Vec<[u8; 4]>,
+    rng: Rng,
+    state: u8,
+}
+
+impl Corpus {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let transitions = (0..VOCAB)
+            .map(|_| {
+                [
+                    rng.below(VOCAB as u64) as u8,
+                    rng.below(VOCAB as u64) as u8,
+                    rng.below(VOCAB as u64) as u8,
+                    rng.below(VOCAB as u64) as u8,
+                ]
+            })
+            .collect();
+        Self { transitions, rng: Rng::new(seed ^ 0xABCD), state: 0 }
+    }
+
+    pub fn next_token(&mut self) -> u8 {
+        let choices = self.transitions[self.state as usize];
+        self.state = *self.rng.choose(&choices);
+        self.state
+    }
+
+    /// (tokens, targets) for one batch: targets are next-token shifted.
+    pub fn batch(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::with_capacity(BATCH * SEQ);
+        let mut tgts = Vec::with_capacity(BATCH * SEQ);
+        for _ in 0..BATCH {
+            let mut seq = Vec::with_capacity(SEQ + 1);
+            for _ in 0..=SEQ {
+                seq.push(self.next_token() as i32);
+            }
+            toks.extend(&seq[..SEQ]);
+            tgts.extend(&seq[1..=SEQ]);
+        }
+        (toks, tgts)
+    }
+}
+
+/// Run `steps` SGD steps from a fresh initialisation; returns the loss log.
+pub fn train(rt: &mut Runtime, steps: u32, seed: i32) -> Result<TrainReport> {
+    let t0 = std::time::Instant::now();
+    // initialise parameters on-device
+    let init = rt.execute("train_init", &[Runtime::lit_scalar_i32(seed)])?;
+    if init.len() != N_PARAMS {
+        bail!("train_init returned {} params, expected {N_PARAMS}", init.len());
+    }
+    let mut params = init;
+
+    let mut corpus = Corpus::new(seed as u64 + 7);
+    let mut losses = Vec::with_capacity(steps as usize);
+    for _ in 0..steps {
+        let (toks, tgts) = corpus.batch();
+        let mut inputs = params;
+        inputs.push(Runtime::lit_i32(&toks, &[BATCH, SEQ])?);
+        inputs.push(Runtime::lit_i32(&tgts, &[BATCH, SEQ])?);
+        let mut out = rt.execute("train_step", &inputs)?;
+        let loss_lit = out.pop().unwrap();
+        losses.push(Runtime::scalar_f32(&loss_lit)? as f64);
+        params = out;
+    }
+    Ok(TrainReport {
+        steps,
+        initial_loss: *losses.first().unwrap_or(&f64::NAN),
+        final_loss: *losses.last().unwrap_or(&f64::NAN),
+        losses,
+        tokens_seen: steps as u64 * (BATCH * SEQ) as u64,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let mut a = Corpus::new(3);
+        let mut b = Corpus::new(3);
+        let (ta, _) = a.batch();
+        let (tb, _) = b.batch();
+        assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn corpus_targets_are_shifted_tokens() {
+        let mut c = Corpus::new(5);
+        let (toks, tgts) = c.batch();
+        // within each row, tgts[i] == toks[i+1]
+        for row in 0..BATCH {
+            for i in 0..SEQ - 1 {
+                assert_eq!(tgts[row * SEQ + i], toks[row * SEQ + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_has_low_entropy() {
+        // only 4 possible successors per state -> per-token entropy <= ln 4
+        let mut c = Corpus::new(9);
+        let mut seen = std::collections::HashMap::<u8, std::collections::HashSet<u8>>::new();
+        let mut prev = c.next_token();
+        for _ in 0..50_000 {
+            let t = c.next_token();
+            seen.entry(prev).or_default().insert(t);
+            prev = t;
+        }
+        for (_, succ) in seen {
+            assert!(succ.len() <= 4);
+        }
+    }
+
+    #[test]
+    fn short_training_run_decreases_loss() {
+        let Ok(mut rt) = Runtime::load_default() else {
+            return; // artifacts not built
+        };
+        let rep = train(&mut rt, 8, 0).expect("train");
+        assert_eq!(rep.losses.len(), 8);
+        // ~ln(256)=5.55 at init; must be dropping within a few steps on a
+        // 2-bit-entropy corpus
+        assert!(rep.initial_loss > 4.5 && rep.initial_loss < 6.5);
+        assert!(
+            rep.final_loss < rep.initial_loss,
+            "{} -> {}",
+            rep.initial_loss,
+            rep.final_loss
+        );
+    }
+}

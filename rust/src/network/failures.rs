@@ -1,0 +1,163 @@
+//! Failure injection on the fabric — exercises the resilience claims of
+//! the rail-optimized design (§2.2: "redundant paths, adaptive routing
+//! ... fault tolerance").
+//!
+//! A `FailurePlan` removes switches or individual cables from a built
+//! `Fabric`; routing and the flow simulator then operate on the degraded
+//! graph, so collective slowdowns and reachability loss *emerge* rather
+//! than being scripted.
+
+use crate::topology::graph::{Device, Fabric, SwitchTier};
+
+#[derive(Debug, Clone, Default)]
+pub struct FailurePlan {
+    /// Spine switches to fail (by ordinal among spines).
+    pub spines: Vec<usize>,
+    /// Leaf switches to fail (by ordinal among leaves).
+    pub leaves: Vec<usize>,
+    /// Fraction of leaf-spine cables to sever (deterministic by seed).
+    pub cable_fraction: f64,
+    pub seed: u64,
+}
+
+impl FailurePlan {
+    pub fn spine_down(n: usize) -> Self {
+        Self { spines: (0..n).collect(), ..Default::default() }
+    }
+
+    pub fn leaf_down(n: usize) -> Self {
+        Self { leaves: (0..n).collect(), ..Default::default() }
+    }
+}
+
+/// Apply a failure plan: returns a new fabric with the selected devices'
+/// links removed (devices stay in the vector so ids remain stable).
+pub fn apply(fabric: &Fabric, plan: &FailurePlan) -> Fabric {
+    let mut dead = vec![false; fabric.devices.len()];
+    let mut spine_i = 0;
+    let mut leaf_i = 0;
+    for (id, d) in fabric.devices.iter().enumerate() {
+        if let Device::Switch { tier, .. } = d {
+            match tier {
+                SwitchTier::Spine => {
+                    if plan.spines.contains(&spine_i) {
+                        dead[id] = true;
+                    }
+                    spine_i += 1;
+                }
+                SwitchTier::Leaf => {
+                    if plan.leaves.contains(&leaf_i) {
+                        dead[id] = true;
+                    }
+                    leaf_i += 1;
+                }
+            }
+        }
+    }
+    let mut rng = crate::util::rng::Rng::new(plan.seed);
+    let mut out = Fabric::new();
+    for d in &fabric.devices {
+        out.add_device(d.clone());
+    }
+    for l in &fabric.links {
+        if dead[l.from] || dead[l.to] {
+            continue;
+        }
+        let switch_to_switch = matches!(
+            fabric.devices[l.from],
+            Device::Switch { .. }
+        ) && matches!(fabric.devices[l.to], Device::Switch { .. });
+        if switch_to_switch
+            && plan.cable_fraction > 0.0
+            && rng.uniform() < plan.cable_fraction
+        {
+            continue;
+        }
+        out.add_link(l.from, l.to, l.bandwidth, l.latency);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CollectiveEngine;
+    use crate::config::ClusterConfig;
+    use crate::topology::builders::rail_optimized;
+
+    fn setup() -> (ClusterConfig, Fabric) {
+        let cfg = ClusterConfig::default();
+        let f = rail_optimized(&cfg);
+        (cfg, f)
+    }
+
+    #[test]
+    fn one_spine_down_keeps_full_reachability() {
+        let (_cfg, f) = setup();
+        let degraded = apply(&f, &FailurePlan::spine_down(1));
+        let a = degraded.host(0, 0).unwrap();
+        let b = degraded.host(99, 0).unwrap();
+        let paths = degraded.ecmp_paths(a, b, 64);
+        assert_eq!(paths.len(), 7, "7 of 8 spines remain");
+    }
+
+    #[test]
+    fn seven_spines_down_still_connected() {
+        let (_cfg, f) = setup();
+        let degraded = apply(&f, &FailurePlan::spine_down(7));
+        let a = degraded.host(0, 3).unwrap();
+        let b = degraded.host(99, 3).unwrap();
+        assert_eq!(degraded.ecmp_paths(a, b, 64).len(), 1);
+    }
+
+    #[test]
+    fn spine_failure_slows_cross_pod_collectives_gracefully() {
+        let (cfg, f) = setup();
+        let engine_ok = CollectiveEngine::new(&f, &cfg);
+        let nodes: Vec<usize> = (0..cfg.nodes).collect();
+        let t_ok = engine_ok.hierarchical_allreduce(&nodes, 1e9).total;
+
+        let degraded = apply(&f, &FailurePlan::spine_down(4));
+        let engine_deg = CollectiveEngine::new(&degraded, &cfg);
+        let t_deg = engine_deg.hierarchical_allreduce(&nodes, 1e9).total;
+        // half the spine capacity gone: slower, but far from 8x collapse
+        assert!(t_deg >= t_ok, "{t_deg} < {t_ok}");
+        assert!(t_deg < 4.0 * t_ok, "collapse: {t_deg} vs {t_ok}");
+    }
+
+    #[test]
+    fn leaf_failure_cuts_its_rail_in_that_pod() {
+        let (_cfg, f) = setup();
+        // leaf ordinal 0 = pod 0 rail 0
+        let degraded = apply(&f, &FailurePlan::leaf_down(1));
+        let a = degraded.host(0, 0).unwrap(); // pod 0 rail 0 — orphaned
+        let b = degraded.host(1, 0).unwrap();
+        assert!(degraded.ecmp_paths(a, b, 8).is_empty());
+        // other rails unaffected
+        let c = degraded.host(0, 1).unwrap();
+        let d = degraded.host(1, 1).unwrap();
+        assert!(!degraded.ecmp_paths(c, d, 8).is_empty());
+    }
+
+    #[test]
+    fn cable_cuts_reduce_ecmp_fanout() {
+        let (_cfg, f) = setup();
+        let plan = FailurePlan { cable_fraction: 0.3, seed: 5, ..Default::default() };
+        let degraded = apply(&f, &plan);
+        let a = degraded.host(0, 0).unwrap();
+        let b = degraded.host(99, 0).unwrap();
+        let before = f.ecmp_paths(a, b, 64).len();
+        let after = degraded.ecmp_paths(a, b, 64).len();
+        assert!(after < before, "{after} !< {before}");
+        assert!(after > 0, "must stay connected at 30% cuts");
+    }
+
+    #[test]
+    fn failure_is_deterministic_by_seed() {
+        let (_cfg, f) = setup();
+        let plan = FailurePlan { cable_fraction: 0.5, seed: 9, ..Default::default() };
+        let a = apply(&f, &plan);
+        let b = apply(&f, &plan);
+        assert_eq!(a.links.len(), b.links.len());
+    }
+}

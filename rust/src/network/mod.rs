@@ -1,0 +1,16 @@
+//! Flow-level network simulator with RoCEv2 semantics.
+//!
+//! Model: flows are routed over ECMP shortest paths; while active they
+//! share every traversed link max-min fairly (progressive filling), the
+//! steady-state a converged DCQCN keeps a lossless PFC fabric in. The
+//! simulator advances from flow event to flow event (start/finish),
+//! recomputing the fair-share allocation — the standard flow-level
+//! abstraction for Clos fabric studies.
+
+pub mod failures;
+pub mod roce;
+pub mod sim;
+
+pub use failures::{apply as apply_failures, FailurePlan};
+pub use roce::RoceParams;
+pub use sim::{Flow, FlowResult, FlowSim, SimReport};

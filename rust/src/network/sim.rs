@@ -1,0 +1,490 @@
+//! Progressive-filling flow simulator over a `Fabric`.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): the rate allocator and utilisation
+//! tracker use dense per-link vectors with a touched-list reset instead of
+//! hash maps — the allocator runs every flow event and dominated the
+//! simulator profile before this change.
+
+use std::collections::HashMap;
+
+use super::roce::RoceParams;
+use crate::topology::graph::{DeviceId, Fabric, LinkId};
+use crate::topology::routing::Router;
+
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub src: DeviceId,
+    pub dst: DeviceId,
+    pub bytes: f64,
+    pub start: f64,
+    /// Flow label for ECMP hashing (e.g. QP number).
+    pub label: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct FlowResult {
+    /// Time the last byte is delivered (includes path+transport latency).
+    pub finish: f64,
+    /// One-way path latency experienced by the flow.
+    pub latency: f64,
+    /// Average achieved throughput while active (bytes/s).
+    pub avg_rate: f64,
+    pub hops: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub results: Vec<FlowResult>,
+    /// Completion time of the whole batch.
+    pub makespan: f64,
+    /// Peak utilisation (0..1) per link id, sparse.
+    pub peak_link_util: HashMap<LinkId, f64>,
+    /// Number of rate recomputation rounds (perf counter).
+    pub rounds: usize,
+}
+
+impl SimReport {
+    pub fn max_util(&self) -> f64 {
+        self.peak_link_util.values().cloned().fold(0.0, f64::max)
+    }
+}
+
+pub struct FlowSim<'f> {
+    pub fabric: &'f Fabric,
+    pub roce: RoceParams,
+    router: Router<'f>,
+    // dense scratch, reused across runs (indexed by LinkId)
+    residual: Vec<f64>,
+    flows_on_link: Vec<u32>,
+    peak_util: Vec<f64>,
+    touched: Vec<LinkId>,
+}
+
+struct ActiveFlow {
+    idx: usize,
+    path: Vec<LinkId>,
+    remaining: f64,
+    rate: f64,
+    started_at: f64,
+}
+
+impl<'f> FlowSim<'f> {
+    pub fn new(fabric: &'f Fabric, roce: RoceParams) -> Self {
+        let n = fabric.links.len();
+        Self {
+            fabric,
+            roce,
+            router: Router::new(fabric),
+            residual: vec![0.0; n],
+            flows_on_link: vec![0; n],
+            peak_util: vec![0.0; n],
+            touched: Vec::new(),
+        }
+    }
+
+    /// Simulate a batch of flows to completion. Panics if any flow is
+    /// unroutable (callers must only schedule feasible transfers).
+    /// The simulator is reusable: route caches persist across `run` calls.
+    pub fn run(&mut self, flows: &[Flow]) -> SimReport {
+        let mut report = SimReport {
+            results: vec![
+                FlowResult { finish: 0.0, latency: 0.0, avg_rate: 0.0, hops: 0 };
+                flows.len()
+            ],
+            ..Default::default()
+        };
+        if flows.is_empty() {
+            return report;
+        }
+        for u in self.peak_util.iter_mut() {
+            *u = 0.0;
+        }
+
+        // Route everything up front.
+        let mut pending: Vec<(usize, &Flow, Vec<LinkId>)> = Vec::new();
+        for (i, fl) in flows.iter().enumerate() {
+            if fl.src == fl.dst || fl.bytes <= 0.0 {
+                report.results[i] = FlowResult {
+                    finish: fl.start,
+                    latency: 0.0,
+                    avg_rate: f64::INFINITY,
+                    hops: 0,
+                };
+                continue;
+            }
+            let path = self
+                .router
+                .route(fl.src, fl.dst, fl.label)
+                .unwrap_or_else(|| {
+                    panic!("no route {} -> {}", fl.src, fl.dst)
+                });
+            pending.push((i, fl, path));
+        }
+        pending.sort_by(|a, b| a.1.start.partial_cmp(&b.1.start).unwrap());
+
+        let mut active: Vec<ActiveFlow> = Vec::new();
+        let mut t = 0.0f64;
+        let mut next_pending = 0usize;
+        let eff = self.roce.dcqcn_efficiency;
+
+        while next_pending < pending.len() || !active.is_empty() {
+            // admit flows that have started
+            if active.is_empty() && next_pending < pending.len() {
+                t = t.max(pending[next_pending].1.start);
+            }
+            while next_pending < pending.len()
+                && pending[next_pending].1.start <= t + 1e-15
+            {
+                let (idx, fl, path) = &pending[next_pending];
+                active.push(ActiveFlow {
+                    idx: *idx,
+                    path: path.clone(),
+                    remaining: fl.bytes,
+                    rate: 0.0,
+                    started_at: fl.start,
+                });
+                next_pending += 1;
+            }
+
+            // max-min fair rates (water-filling) + peak-utilisation update
+            self.assign_rates(&mut active, eff);
+            report.rounds += 1;
+
+            // next event: earliest completion or next admission
+            let mut dt = f64::INFINITY;
+            for a in &active {
+                if a.rate > 0.0 {
+                    dt = dt.min(a.remaining / a.rate);
+                }
+            }
+            if next_pending < pending.len() {
+                dt = dt.min(pending[next_pending].1.start - t);
+            }
+            assert!(
+                dt.is_finite() && dt >= 0.0,
+                "simulator stuck at t={t} with {} active flows",
+                active.len()
+            );
+            t += dt;
+
+            // progress + retire
+            let mut i = 0;
+            while i < active.len() {
+                active[i].remaining -= active[i].rate * dt;
+                if active[i].remaining <= 1e-9 {
+                    let a = active.swap_remove(i);
+                    let fl = flows[a.idx].clone();
+                    let path_lat = self.fabric.path_latency(&a.path)
+                        + self.roce.transport_latency;
+                    let duration = (t - a.started_at).max(1e-12);
+                    report.results[a.idx] = FlowResult {
+                        finish: t + path_lat,
+                        latency: path_lat,
+                        avg_rate: fl.bytes / duration,
+                        hops: a.path.len(),
+                    };
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        report.makespan = report
+            .results
+            .iter()
+            .map(|r| r.finish)
+            .fold(0.0, f64::max);
+        report.peak_link_util = self
+            .peak_util
+            .iter()
+            .enumerate()
+            .filter(|(_, &u)| u > 0.0)
+            .map(|(l, &u)| (l, u))
+            .collect();
+        report
+    }
+
+    /// Water-filling max-min fair allocation among active flows, with the
+    /// optional per-flow DCQCN cap. Dense per-link scratch; O(rounds *
+    /// touched-links) instead of hashing.
+    fn assign_rates(&mut self, active: &mut [ActiveFlow], eff: f64) {
+        let n = active.len();
+        if n == 0 {
+            return;
+        }
+        // reset scratch for the touched set only
+        for &l in &self.touched {
+            self.residual[l] = 0.0;
+            self.flows_on_link[l] = 0;
+        }
+        self.touched.clear();
+        for a in active.iter() {
+            for &l in &a.path {
+                if self.flows_on_link[l] == 0 && self.residual[l] == 0.0 {
+                    self.residual[l] = self.fabric.links[l].bandwidth * eff;
+                    self.touched.push(l);
+                }
+                self.flows_on_link[l] += 1;
+            }
+        }
+        let mut frozen = vec![false; n];
+        let mut rates = vec![0.0f64; n];
+        let cap = if self.roce.per_flow_cap > 0.0 {
+            self.roce.per_flow_cap
+        } else {
+            f64::INFINITY
+        };
+        loop {
+            // bottleneck link: min fair share among links with unfrozen flows
+            let mut best_share = f64::INFINITY;
+            for &l in &self.touched {
+                let cnt = self.flows_on_link[l];
+                if cnt == 0 {
+                    continue;
+                }
+                let share = self.residual[l] / cnt as f64;
+                if share < best_share {
+                    best_share = share;
+                }
+            }
+            if !best_share.is_finite() {
+                break;
+            }
+            let share = best_share.min(cap);
+            let cap_binds = share >= cap - 1e-9 && cap.is_finite();
+            let mut froze_any = false;
+            for (i, a) in active.iter().enumerate() {
+                if frozen[i] {
+                    continue;
+                }
+                let on_bottleneck = cap_binds
+                    || a.path.iter().any(|&l| {
+                        let cnt = self.flows_on_link[l];
+                        cnt > 0
+                            && (self.residual[l] / cnt as f64).min(cap)
+                                <= share + 1e-9
+                    });
+                if on_bottleneck {
+                    frozen[i] = true;
+                    rates[i] = share;
+                    froze_any = true;
+                    for &l in &a.path {
+                        self.residual[l] -= share;
+                        self.flows_on_link[l] -= 1;
+                    }
+                }
+            }
+            if !froze_any || frozen.iter().all(|&f| f) {
+                break;
+            }
+        }
+        // peak utilisation: re-derive link loads from final rates
+        for (i, a) in active.iter_mut().enumerate() {
+            a.rate = rates[i];
+        }
+        for &l in &self.touched {
+            // residual now = capacity - sum(rates on l)
+            let capacity = self.fabric.links[l].bandwidth * eff;
+            let util = ((capacity - self.residual[l]) / capacity).clamp(0.0, 1.0);
+            if util > self.peak_util[l] {
+                self.peak_util[l] = util;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::topology::builders::rail_optimized;
+    use crate::util::units::ethernet_payload_bps;
+
+    fn sim_cfg() -> ClusterConfig {
+        ClusterConfig::default()
+    }
+
+    fn host_bw(cfg: &ClusterConfig) -> f64 {
+        ethernet_payload_bps(
+            cfg.network.node_leaf_gbps,
+            cfg.network.ethernet_efficiency,
+        )
+    }
+
+    #[test]
+    fn single_flow_runs_at_line_rate() {
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let mut sim = FlowSim::new(&f, RoceParams::default());
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(1, 0).unwrap();
+        let gb = 1e9;
+        let rep = sim.run(&[Flow { src: a, dst: b, bytes: gb, start: 0.0, label: 0 }]);
+        let expect = gb / (host_bw(&cfg) * sim.roce.dcqcn_efficiency);
+        let got = rep.results[0].finish;
+        assert!(
+            (got - expect).abs() / expect < 0.01,
+            "got {got}, expect ~{expect}"
+        );
+    }
+
+    #[test]
+    fn two_flows_into_one_nic_halve() {
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let mut sim = FlowSim::new(&f, RoceParams::default());
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(1, 0).unwrap();
+        let c = f.host(2, 0).unwrap();
+        let gb = 1e9;
+        let rep = sim.run(&[
+            Flow { src: a, dst: c, bytes: gb, start: 0.0, label: 0 },
+            Flow { src: b, dst: c, bytes: gb, start: 0.0, label: 1 },
+        ]);
+        let one = gb / (host_bw(&cfg) * sim.roce.dcqcn_efficiency);
+        assert!((rep.makespan - 2.0 * one).abs() / (2.0 * one) < 0.02);
+    }
+
+    #[test]
+    fn early_finisher_releases_bandwidth() {
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let mut sim = FlowSim::new(&f, RoceParams::default());
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(1, 0).unwrap();
+        let c = f.host(2, 0).unwrap();
+        let gb = 1e9;
+        let rep = sim.run(&[
+            Flow { src: a, dst: c, bytes: gb, start: 0.0, label: 0 },
+            Flow { src: b, dst: c, bytes: gb / 10.0, start: 0.0, label: 1 },
+        ]);
+        let one = gb / (host_bw(&cfg) * sim.roce.dcqcn_efficiency);
+        assert!((rep.makespan - 1.1 * one).abs() / one < 0.05);
+        assert!(rep.results[1].finish < rep.results[0].finish);
+    }
+
+    #[test]
+    fn staggered_starts_respected() {
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let mut sim = FlowSim::new(&f, RoceParams::default());
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(1, 0).unwrap();
+        let rep = sim.run(&[Flow {
+            src: a,
+            dst: b,
+            bytes: 1e6,
+            start: 5.0,
+            label: 0,
+        }]);
+        assert!(rep.results[0].finish > 5.0);
+    }
+
+    #[test]
+    fn rail_local_latency_is_two_hops() {
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let mut sim = FlowSim::new(&f, RoceParams::default());
+        let a = f.host(0, 4).unwrap();
+        let b = f.host(3, 4).unwrap();
+        let rep = sim.run(&[Flow { src: a, dst: b, bytes: 1.0, start: 0.0, label: 0 }]);
+        assert_eq!(rep.results[0].hops, 2);
+        assert!(rep.results[0].latency < 10e-6);
+    }
+
+    #[test]
+    fn cross_pod_uses_four_hops() {
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let mut sim = FlowSim::new(&f, RoceParams::default());
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(75, 0).unwrap();
+        let rep = sim.run(&[Flow { src: a, dst: b, bytes: 1.0, start: 0.0, label: 0 }]);
+        assert_eq!(rep.results[0].hops, 4);
+    }
+
+    #[test]
+    fn per_flow_cap_binds() {
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let roce = RoceParams { per_flow_cap: 1e9, ..RoceParams::default() };
+        let mut sim = FlowSim::new(&f, roce);
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(1, 0).unwrap();
+        let rep = sim.run(&[Flow { src: a, dst: b, bytes: 1e9, start: 0.0, label: 0 }]);
+        assert!((rep.results[0].finish - 1.0).abs() < 0.01, "{}", rep.results[0].finish);
+    }
+
+    #[test]
+    fn zero_byte_flow_finishes_instantly() {
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let mut sim = FlowSim::new(&f, RoceParams::default());
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(1, 0).unwrap();
+        let rep = sim.run(&[Flow { src: a, dst: b, bytes: 0.0, start: 3.0, label: 0 }]);
+        assert_eq!(rep.results[0].finish, 3.0);
+    }
+
+    #[test]
+    fn utilisation_bounded_by_one() {
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let mut sim = FlowSim::new(&f, RoceParams::default());
+        let flows: Vec<Flow> = (0..8)
+            .map(|n| Flow {
+                src: f.host(n, 0).unwrap(),
+                dst: f.host(9, 0).unwrap(),
+                bytes: 1e8,
+                start: 0.0,
+                label: n as u64,
+            })
+            .collect();
+        let rep = sim.run(&flows);
+        assert!(rep.max_util() <= 1.0 + 1e-9);
+        assert!(rep.max_util() > 0.99); // destination link saturated
+    }
+
+    #[test]
+    fn conservation_of_bytes() {
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let mut sim = FlowSim::new(&f, RoceParams::default());
+        let n_src = 5;
+        let bytes = 2e8;
+        let flows: Vec<Flow> = (0..n_src)
+            .map(|n| Flow {
+                src: f.host(n, 2).unwrap(),
+                dst: f.host(20, 2).unwrap(),
+                bytes,
+                start: 0.0,
+                label: n as u64,
+            })
+            .collect();
+        let rep = sim.run(&flows);
+        let bottleneck = host_bw(&cfg) * sim.roce.dcqcn_efficiency;
+        let lower = n_src as f64 * bytes / bottleneck;
+        assert!(rep.makespan >= lower * 0.999, "{} < {}", rep.makespan, lower);
+        assert!(rep.makespan <= lower * 1.05);
+    }
+
+    #[test]
+    fn simulator_is_reusable_across_runs() {
+        // route caches persist; results must be identical run-to-run
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let mut sim = FlowSim::new(&f, RoceParams::default());
+        let flows: Vec<Flow> = (0..16)
+            .map(|n| Flow {
+                src: f.host(n, 1).unwrap(),
+                dst: f.host((n + 7) % 16, 1).unwrap(),
+                bytes: 1e7,
+                start: 0.0,
+                label: n as u64,
+            })
+            .collect();
+        let a = sim.run(&flows).makespan;
+        let b = sim.run(&flows).makespan;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,166 @@
+//! Artifact manifest: typed view of `artifacts/manifest.json` produced by
+//! `python -m compile.aot` (the build-time half of the AOT bridge).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    Bf16,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "bf16" => Ok(DType::Bf16),
+            other => bail!("unknown dtype {other:?} in manifest"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactMeta>,
+}
+
+fn parse_specs(j: &Json, key: &str, name: &str) -> Result<Vec<TensorSpec>> {
+    let arr = j
+        .get(key)
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("{name}: missing {key}"))?;
+    arr.iter()
+        .map(|spec| {
+            let shape = spec
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("{name}: bad shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = DType::parse(
+                spec.get("dtype")
+                    .and_then(|d| d.as_str())
+                    .ok_or_else(|| anyhow!("{name}: bad dtype"))?,
+            )?;
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let obj = j.as_obj().ok_or_else(|| anyhow!("manifest must be an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, meta) in obj {
+            let file = meta
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("{name}: missing file"))?;
+            entries.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: parse_specs(meta, "inputs", name)?,
+                    outputs: parse_specs(meta, "outputs", name)?,
+                },
+            );
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Default artifact directory: $SAKURAONE_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SAKURAONE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f16").is_err());
+    }
+
+    #[test]
+    fn spec_elements() {
+        let s = TensorSpec { shape: vec![8, 64], dtype: DType::F32 };
+        assert_eq!(s.elements(), 512);
+        let scalar = TensorSpec { shape: vec![], dtype: DType::F32 };
+        assert_eq!(scalar.elements(), 1);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let g = m.get("gemm_f32_256").unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].shape, vec![256, 256]);
+        assert_eq!(g.outputs[0].shape, vec![256, 256]);
+        let t = m.get("train_step").unwrap();
+        assert_eq!(t.inputs.len(), 16); // 14 params + tokens + targets
+        assert_eq!(t.outputs.len(), 15);
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("nonexistent").is_err());
+    }
+}

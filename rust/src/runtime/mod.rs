@@ -1,0 +1,8 @@
+//! PJRT runtime (L3 <- L2 bridge): manifest-driven loading and execution
+//! of AOT-compiled HLO artifacts on the CPU PJRT client.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactMeta, DType, Manifest, TensorSpec};
+pub use pjrt::Runtime;

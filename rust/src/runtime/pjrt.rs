@@ -1,0 +1,221 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once on the CPU
+//! client, execute from the Rust hot path. Python is never involved here.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md: serialized protos from jax >= 0.5 carry
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{ArtifactMeta, DType, Manifest, TensorSpec};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions per artifact (metrics).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client. Executables are
+    /// compiled lazily on first use (see `ensure_compiled`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(Self {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.entries.keys().cloned().collect()
+    }
+
+    /// Compile (and cache) the executable for `name`.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .with_context(|| format!("parsing HLO text {:?}", meta.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn validate_inputs(meta: &ArtifactMeta, inputs: &[xla::Literal]) -> Result<()> {
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (lit, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            let have = lit.element_count();
+            let want = spec.elements();
+            if have != want {
+                bail!(
+                    "{} input {i}: expected {} elements {:?}, literal has {}",
+                    meta.name,
+                    want,
+                    spec.shape,
+                    have
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name`; returns the flattened output tuple.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let meta = self.manifest.get(name)?.clone();
+        Self::validate_inputs(&meta, inputs)?;
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: every artifact yields a tuple.
+        let outs = result.to_tuple()?;
+        if outs.len() != meta.outputs.len() {
+            bail!(
+                "{name}: manifest promises {} outputs, executable returned {}",
+                meta.outputs.len(),
+                outs.len()
+            );
+        }
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        Ok(outs)
+    }
+
+    // ---- literal helpers ------------------------------------------------
+
+    pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("lit_f32: {} elements for shape {shape:?}", data.len());
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("lit_i32: {} elements for shape {shape:?}", data.len());
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+        Ok(lit.get_first_element::<f32>()?)
+    }
+
+    /// Build a zero-filled input literal matching a spec (for smoke tests).
+    pub fn zeros_like(spec: &TensorSpec) -> Result<xla::Literal> {
+        match spec.dtype {
+            DType::F32 => Self::lit_f32(&vec![0.0; spec.elements()], &spec.shape),
+            DType::I32 => Self::lit_i32(&vec![0; spec.elements()], &spec.shape),
+            DType::Bf16 => bail!("bf16 host literals unsupported"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn gemm_artifact_matches_host_matmul() {
+        let Some(mut rt) = runtime() else { return };
+        let n = 256;
+        let mut a = vec![0f32; n * n];
+        let mut b = vec![0f32; n * n];
+        let mut rng = crate::util::rng::Rng::new(1);
+        for v in a.iter_mut().chain(b.iter_mut()) {
+            *v = rng.normal() as f32;
+        }
+        let la = Runtime::lit_f32(&a, &[n, n]).unwrap();
+        let lb = Runtime::lit_f32(&b, &[n, n]).unwrap();
+        let out = rt.execute("gemm_f32_256", &[la, lb]).unwrap();
+        let c = Runtime::to_vec_f32(&out[0]).unwrap();
+        // spot-check a few entries against host dot products
+        for &(i, j) in &[(0usize, 0usize), (7, 200), (255, 255), (100, 3)] {
+            let expect: f32 =
+                (0..n).map(|k| a[i * n + k] * b[k * n + j]).sum();
+            let got = c[i * n + j];
+            assert!(
+                (got - expect).abs() < 1e-2 * expect.abs().max(1.0),
+                "c[{i},{j}] = {got}, expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_arity_is_error() {
+        let Some(mut rt) = runtime() else { return };
+        let la = Runtime::lit_f32(&vec![0.0; 256 * 256], &[256, 256]).unwrap();
+        assert!(rt.execute("gemm_f32_256", &[la]).is_err());
+    }
+
+    #[test]
+    fn wrong_shape_is_error() {
+        let Some(mut rt) = runtime() else { return };
+        let la = Runtime::lit_f32(&vec![0.0; 4], &[2, 2]).unwrap();
+        let lb = Runtime::lit_f32(&vec![0.0; 4], &[2, 2]).unwrap();
+        assert!(rt.execute("gemm_f32_256", &[la, lb]).is_err());
+    }
+
+    #[test]
+    fn exec_counts_tracked() {
+        let Some(mut rt) = runtime() else { return };
+        let x = Runtime::lit_f32(&vec![1.0; 32 * 32 * 32], &[32, 32, 32]).unwrap();
+        rt.execute("spmv_32", &[x]).unwrap();
+        assert_eq!(rt.exec_counts["spmv_32"], 1);
+    }
+}

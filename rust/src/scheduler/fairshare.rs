@@ -1,0 +1,181 @@
+//! Multi-user fair-share accounting + partitions — the operational side
+//! of the paper's §3: "efficient and fair resource utilization across a
+//! multi-user, multi-project environment ... job prioritization, node
+//! reservation, resource limits".
+//!
+//! Slurm's multifactor plugin reduces, for our purposes, to: every
+//! account accrues usage (node-seconds, half-life-decayed); a job's
+//! effective priority = base priority + fairshare boost (under-served
+//! accounts float up) + age. Partitions cap how many nodes an account
+//! class may hold (the paper runs dedicated interactive front-ends next
+//! to the batch pool).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub name: String,
+    /// Node ids owned by this partition.
+    pub nodes: std::ops::Range<usize>,
+    /// Per-account concurrent-node cap (None = no cap).
+    pub max_nodes_per_account: Option<usize>,
+}
+
+impl Partition {
+    pub fn batch(nodes: usize) -> Self {
+        Self { name: "batch".into(), nodes: 0..nodes, max_nodes_per_account: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+/// Half-life-decayed usage accounting per account.
+#[derive(Debug, Clone)]
+pub struct FairShare {
+    half_life_s: f64,
+    /// account -> (decayed node-seconds, last update time)
+    usage: BTreeMap<String, (f64, f64)>,
+    /// account -> allocated share weight (default 1.0)
+    shares: BTreeMap<String, f64>,
+}
+
+impl FairShare {
+    pub fn new(half_life_s: f64) -> Self {
+        assert!(half_life_s > 0.0);
+        Self { half_life_s, usage: BTreeMap::new(), shares: BTreeMap::new() }
+    }
+
+    pub fn set_shares(&mut self, account: &str, weight: f64) {
+        assert!(weight > 0.0);
+        self.shares.insert(account.to_string(), weight);
+    }
+
+    fn decayed(&self, account: &str, now: f64) -> f64 {
+        match self.usage.get(account) {
+            None => 0.0,
+            Some(&(u, t)) => u * 0.5f64.powf((now - t) / self.half_life_s),
+        }
+    }
+
+    /// Record `node_seconds` of usage by `account` at time `now`.
+    pub fn charge(&mut self, account: &str, node_seconds: f64, now: f64) {
+        let u = self.decayed(account, now) + node_seconds;
+        self.usage.insert(account.to_string(), (u, now));
+    }
+
+    /// Slurm-like fairshare factor in [0, 1]: 2^(-usage_norm / share_norm).
+    pub fn factor(&self, account: &str, now: f64) -> f64 {
+        let total_usage: f64 = self
+            .usage
+            .keys()
+            .map(|a| self.decayed(a, now))
+            .sum::<f64>()
+            .max(1e-9);
+        let my_usage = self.decayed(account, now) / total_usage;
+        let total_shares: f64 =
+            self.shares.values().sum::<f64>().max(1.0);
+        let my_share =
+            self.shares.get(account).copied().unwrap_or(1.0) / total_shares;
+        2f64.powf(-my_usage / my_share.max(1e-9))
+    }
+
+    /// Priority boost to add to a job's base priority (scaled to ~1000s).
+    pub fn priority_boost(&self, account: &str, now: f64) -> i64 {
+        (self.factor(account, now) * 1000.0) as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unused_account_gets_full_factor() {
+        let mut fs = FairShare::new(3600.0);
+        fs.charge("hog", 100_000.0, 0.0);
+        // "newbie" has no usage at all
+        assert!(fs.factor("newbie", 0.0) > 0.99);
+        assert!(fs.factor("hog", 0.0) < 0.6);
+    }
+
+    #[test]
+    fn usage_decays_with_half_life() {
+        let mut fs = FairShare::new(100.0);
+        fs.charge("a", 1000.0, 0.0);
+        let f0 = fs.factor("a", 0.0);
+        let f1 = fs.factor("a", 100.0); // one half-life later
+        // decayed usage is still 100% of *total* usage (only account), so
+        // factor depends on normalized usage: equal. Add a second account
+        // to make decay observable.
+        fs.charge("b", 1000.0, 100.0);
+        let fa = fs.factor("a", 100.0);
+        let fb = fs.factor("b", 100.0);
+        assert!(fa > fb, "a decayed ({fa}) should beat b fresh ({fb})");
+        assert!(f0 <= f1 + 1e-9);
+    }
+
+    #[test]
+    fn heavier_user_ranks_below_lighter_user() {
+        let mut fs = FairShare::new(3600.0);
+        fs.charge("heavy", 50_000.0, 10.0);
+        fs.charge("light", 5_000.0, 10.0);
+        assert!(fs.priority_boost("light", 10.0) > fs.priority_boost("heavy", 10.0));
+    }
+
+    #[test]
+    fn shares_weight_the_factor() {
+        let mut fs = FairShare::new(3600.0);
+        fs.set_shares("vip", 9.0);
+        fs.set_shares("std", 1.0);
+        fs.charge("vip", 10_000.0, 0.0);
+        fs.charge("std", 10_000.0, 0.0);
+        // same usage, but vip owns 90% of shares -> higher factor
+        assert!(fs.factor("vip", 0.0) > fs.factor("std", 0.0));
+    }
+
+    #[test]
+    fn partition_inventory() {
+        let p = Partition::batch(100);
+        assert_eq!(p.len(), 100);
+        assert!(!p.is_empty());
+        let interactive = Partition {
+            name: "interactive".into(),
+            nodes: 96..100,
+            max_nodes_per_account: Some(1),
+        };
+        assert_eq!(interactive.len(), 4);
+    }
+
+    #[test]
+    fn fairshare_scheduler_integration() {
+        // run two accounts through the SlurmSim using fairshare-boosted
+        // priorities; the light user's job jumps the heavy user's queue
+        use crate::config::ClusterConfig;
+        use crate::scheduler::{Job, SlurmSim};
+        let cfg = ClusterConfig::default();
+        let mut fs = FairShare::new(3600.0);
+        fs.charge("heavy", 200_000.0, 0.0);
+        fs.charge("light", 1_000.0, 0.0);
+
+        let mut sim = SlurmSim::new(&cfg);
+        // both jobs need the whole machine; submitted together
+        sim.submit(
+            Job::new(1, "heavy-job", 100, 100.0, 50.0)
+                .with_priority(fs.priority_boost("heavy", 0.0)),
+        );
+        sim.submit(
+            Job::new(2, "light-job", 100, 100.0, 50.0)
+                .with_priority(fs.priority_boost("light", 0.0)),
+        );
+        sim.run();
+        let light = sim.history.iter().find(|a| a.job_id == 2).unwrap();
+        let heavy = sim.history.iter().find(|a| a.job_id == 1).unwrap();
+        assert!(light.start < heavy.start);
+    }
+}

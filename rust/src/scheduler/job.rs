@@ -1,0 +1,80 @@
+//! Job model for the Slurm-like workload manager (paper §3, Table 6:
+//! slurm 22.05.9).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Completed,
+    Cancelled,
+}
+
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u64,
+    pub name: String,
+    /// Whole nodes requested (SAKURAONE allocates by node: 8 GPUs each).
+    pub nodes: usize,
+    /// Requested wall limit (s).
+    pub time_limit: f64,
+    /// Actual runtime (s) — known to the simulator, not to the scheduler.
+    pub runtime: f64,
+    pub priority: i64,
+    pub submit_time: f64,
+    pub state: JobState,
+}
+
+impl Job {
+    pub fn new(id: u64, name: &str, nodes: usize, time_limit: f64, runtime: f64) -> Self {
+        Self {
+            id,
+            name: name.to_string(),
+            nodes,
+            time_limit,
+            runtime: runtime.min(time_limit),
+            priority: 0,
+            submit_time: 0.0,
+            state: JobState::Pending,
+        }
+    }
+
+    pub fn with_priority(mut self, p: i64) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_submit_time(mut self, t: f64) -> Self {
+        self.submit_time = t;
+        self
+    }
+}
+
+/// A granted allocation.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub job_id: u64,
+    pub nodes: Vec<usize>,
+    pub start: f64,
+    pub end: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_clamped_to_limit() {
+        let j = Job::new(1, "train", 4, 100.0, 500.0);
+        assert_eq!(j.runtime, 100.0);
+    }
+
+    #[test]
+    fn builder_chain() {
+        let j = Job::new(2, "hpl", 98, 3600.0, 400.0)
+            .with_priority(10)
+            .with_submit_time(5.0);
+        assert_eq!(j.priority, 10);
+        assert_eq!(j.submit_time, 5.0);
+        assert_eq!(j.state, JobState::Pending);
+    }
+}

@@ -1,0 +1,12 @@
+//! Slurm-like workload manager (paper §3): jobs, rail-aware placement,
+//! priority FIFO + conservative backfill.
+
+pub mod fairshare;
+pub mod job;
+pub mod placement;
+pub mod slurm;
+
+pub use fairshare::{FairShare, Partition};
+pub use job::{Allocation, Job, JobState};
+pub use placement::{place, Placement};
+pub use slurm::{SchedulerStats, SlurmSim};

@@ -1,0 +1,122 @@
+//! Rail/pod-aware node placement.
+//!
+//! On a rail-optimized fabric, a job whose nodes sit in one pod keeps all
+//! per-rail traffic on single leaf switches; spanning pods pushes every
+//! rail through the spine layer. The placer therefore prefers (a) a single
+//! pod, (b) contiguous node ranges (which also align with how HPL grids
+//! map ranks).
+
+use crate::config::ClusterConfig;
+use crate::topology::pod_of;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub nodes: Vec<usize>,
+    /// Number of pods the allocation spans (1 is ideal).
+    pub pods_spanned: usize,
+}
+
+/// Choose `want` nodes from `free` (sorted ascending).
+/// Strategy: try to fit entirely inside one pod (pick the pod with the
+/// most free nodes); otherwise take contiguous-ish nodes across pods.
+pub fn place(cfg: &ClusterConfig, free: &[usize], want: usize) -> Option<Placement> {
+    if want == 0 || free.len() < want {
+        return None;
+    }
+    let pods = cfg.network.pods;
+    let mut per_pod: Vec<Vec<usize>> = vec![Vec::new(); pods];
+    for &n in free {
+        per_pod[pod_of(cfg, n)].push(n);
+    }
+    // single-pod fit: choose the pod with the fewest free nodes that still
+    // fits (best-fit, keeps big pods open for big jobs)
+    let mut best: Option<usize> = None;
+    for (p, nodes) in per_pod.iter().enumerate() {
+        if nodes.len() >= want {
+            let better = match best {
+                None => true,
+                Some(b) => per_pod[b].len() > nodes.len(),
+            };
+            if better {
+                best = Some(p);
+            }
+        }
+    }
+    if let Some(p) = best {
+        return Some(Placement {
+            nodes: per_pod[p][..want].to_vec(),
+            pods_spanned: 1,
+        });
+    }
+    // spill across pods, preferring to exhaust one pod before the next
+    per_pod.sort_by_key(|v| std::cmp::Reverse(v.len()));
+    let mut chosen = Vec::with_capacity(want);
+    let mut spanned = 0;
+    for nodes in per_pod {
+        if nodes.is_empty() {
+            continue;
+        }
+        if chosen.len() >= want {
+            break;
+        }
+        spanned += 1;
+        for n in nodes {
+            if chosen.len() >= want {
+                break;
+            }
+            chosen.push(n);
+        }
+    }
+    chosen.sort_unstable();
+    Some(Placement { nodes: chosen, pods_spanned: spanned })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn cfg() -> ClusterConfig {
+        ClusterConfig::default()
+    }
+
+    #[test]
+    fn small_job_lands_in_one_pod() {
+        let free: Vec<usize> = (0..100).collect();
+        let p = place(&cfg(), &free, 10).unwrap();
+        assert_eq!(p.pods_spanned, 1);
+        assert_eq!(p.nodes.len(), 10);
+    }
+
+    #[test]
+    fn big_job_spans_pods() {
+        let free: Vec<usize> = (0..100).collect();
+        let p = place(&cfg(), &free, 98).unwrap();
+        assert_eq!(p.pods_spanned, 2);
+        assert_eq!(p.nodes.len(), 98);
+    }
+
+    #[test]
+    fn best_fit_prefers_smaller_pod_remainder() {
+        // pod0 has 30 free, pod1 has 12 free; a 10-node job should take
+        // pod1 (best fit), leaving pod0 intact for larger jobs.
+        let c = cfg();
+        let mut free: Vec<usize> = (0..30).collect();
+        free.extend(50..62);
+        let p = place(&c, &free, 10).unwrap();
+        assert_eq!(p.pods_spanned, 1);
+        assert!(p.nodes.iter().all(|&n| n >= 50));
+    }
+
+    #[test]
+    fn insufficient_nodes_is_none() {
+        let free: Vec<usize> = (0..5).collect();
+        assert!(place(&cfg(), &free, 6).is_none());
+    }
+
+    #[test]
+    fn zero_request_is_none() {
+        let free: Vec<usize> = (0..5).collect();
+        assert!(place(&cfg(), &free, 0).is_none());
+    }
+}

@@ -1,0 +1,145 @@
+//! LLM checkpoint I/O model — §2.3: the shared Lustre filesystem "is used
+//! to store checkpoint data and intermediate results during computational
+//! tasks such as training of large language models".
+//!
+//! Checkpoint volume for mixed-precision training with a distributed
+//! optimizer: bf16 weights (2 B/param) + fp32 master weights and two Adam
+//! moments (12 B/param) -> 14 B/param streamed from the DP-rank-0 shards,
+//! written through the Lustre model's sequential-write path.
+
+use super::lustre::LustreModel;
+
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    pub params: f64,
+    /// Bytes written per parameter (14 = bf16 weights + fp32 master+Adam).
+    pub bytes_per_param: f64,
+    /// Nodes participating in the write (DP-sharded writers).
+    pub writer_nodes: usize,
+    pub writer_procs: usize,
+    /// Steps between checkpoints.
+    pub interval_steps: u64,
+    /// Wall time of one training step (s).
+    pub step_time_s: f64,
+    /// Fraction of the write hidden behind training (async checkpoint).
+    pub overlap: f64,
+}
+
+impl CheckpointConfig {
+    /// 70B-parameter run on the full machine, 30-minute cadence-ish.
+    pub fn llama70b(step_time_s: f64) -> Self {
+        Self {
+            params: 70e9,
+            bytes_per_param: 14.0,
+            writer_nodes: 100,
+            writer_procs: 800,
+            interval_steps: 250,
+            step_time_s,
+            overlap: 0.5,
+        }
+    }
+
+    pub fn bytes(&self) -> f64 {
+        self.params * self.bytes_per_param
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CheckpointReport {
+    pub bytes: f64,
+    pub write_seconds: f64,
+    /// Training time lost per checkpoint after async overlap.
+    pub stall_seconds: f64,
+    /// Fraction of total runtime lost to checkpointing.
+    pub overhead_fraction: f64,
+    /// Achieved write bandwidth (bytes/s).
+    pub write_bps: f64,
+}
+
+pub fn checkpoint_cost(model: &LustreModel, cfg: &CheckpointConfig) -> CheckpointReport {
+    let bw = model.seq_write_bps(cfg.writer_nodes, cfg.writer_procs);
+    let write_seconds = cfg.bytes() / bw;
+    let stall = write_seconds * (1.0 - cfg.overlap);
+    let interval = cfg.interval_steps as f64 * cfg.step_time_s;
+    CheckpointReport {
+        bytes: cfg.bytes(),
+        write_seconds,
+        stall_seconds: stall,
+        overhead_fraction: stall / (interval + stall),
+        write_bps: bw,
+    }
+}
+
+/// Largest checkpoint interval (steps) that keeps overhead below `budget`.
+pub fn min_interval_for_overhead(
+    model: &LustreModel,
+    cfg: &CheckpointConfig,
+    budget: f64,
+) -> u64 {
+    assert!(budget > 0.0 && budget < 1.0);
+    let r = checkpoint_cost(model, cfg);
+    // stall / (k*step + stall) <= budget  =>  k >= stall*(1-budget)/(budget*step)
+    let k = r.stall_seconds * (1.0 - budget) / (budget * cfg.step_time_s);
+    k.ceil().max(1.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StorageConfig;
+
+    fn setup() -> (LustreModel, CheckpointConfig) {
+        (
+            LustreModel::sakuraone(&StorageConfig::default()),
+            CheckpointConfig::llama70b(5.3),
+        )
+    }
+
+    #[test]
+    fn seventy_b_checkpoint_is_about_a_terabyte() {
+        let (_, cfg) = setup();
+        assert!((cfg.bytes() - 980e9).abs() < 1e9);
+    }
+
+    #[test]
+    fn write_time_in_minutes_not_hours() {
+        let (m, cfg) = setup();
+        let r = checkpoint_cost(&m, &cfg);
+        // ~1 TB at ~200 GB/s-class -> a handful of seconds
+        assert!(r.write_seconds > 2.0 && r.write_seconds < 60.0, "{}", r.write_seconds);
+    }
+
+    #[test]
+    fn overhead_is_small_at_default_cadence() {
+        let (m, cfg) = setup();
+        let r = checkpoint_cost(&m, &cfg);
+        assert!(r.overhead_fraction < 0.01, "{}", r.overhead_fraction);
+    }
+
+    #[test]
+    fn tighter_cadence_raises_overhead() {
+        let (m, mut cfg) = setup();
+        cfg.interval_steps = 10;
+        let tight = checkpoint_cost(&m, &cfg);
+        cfg.interval_steps = 1000;
+        let loose = checkpoint_cost(&m, &cfg);
+        assert!(tight.overhead_fraction > loose.overhead_fraction);
+    }
+
+    #[test]
+    fn min_interval_meets_budget() {
+        let (m, mut cfg) = setup();
+        let k = min_interval_for_overhead(&m, &cfg, 0.01);
+        cfg.interval_steps = k;
+        let r = checkpoint_cost(&m, &cfg);
+        assert!(r.overhead_fraction <= 0.0101, "{}", r.overhead_fraction);
+    }
+
+    #[test]
+    fn degraded_storage_doubles_write_time() {
+        let (m, cfg) = setup();
+        let ok = checkpoint_cost(&m, &cfg);
+        let deg = checkpoint_cost(&m.clone().with_switch_failure(), &cfg);
+        assert!(deg.write_seconds >= ok.write_seconds);
+    }
+}

@@ -1,0 +1,11 @@
+//! Storage substrate: Lustre/EXAScaler performance model (paper §2.3,
+//! Table 5) and file striping. The IO500 benchmark driver
+//! (`benchmarks::io500`) runs its twelve phases against these models.
+
+pub mod checkpoint;
+pub mod lustre;
+pub mod stripe;
+
+pub use checkpoint::{checkpoint_cost, CheckpointConfig, CheckpointReport};
+pub use lustre::{LustreModel, MetaOp};
+pub use stripe::StripePlan;

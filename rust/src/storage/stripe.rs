@@ -1,0 +1,99 @@
+//! Lustre file striping: files are striped round-robin over OSTs starting
+//! at a hashed offset. Imbalance across OSTs turns into a bandwidth
+//! derating factor for the parallel phases.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct StripePlan {
+    /// OST index per stripe object of each file: file -> [ost, ...]
+    pub assignments: Vec<Vec<usize>>,
+    pub osts: usize,
+}
+
+impl StripePlan {
+    /// Place `files` files of `stripe_count` objects each across `osts`
+    /// OSTs (deterministic from `seed`, like Lustre's QOS allocator in
+    /// round-robin mode).
+    pub fn place(files: usize, stripe_count: usize, osts: usize, seed: u64) -> Self {
+        assert!(osts > 0 && stripe_count > 0);
+        let mut rng = Rng::new(seed);
+        let mut assignments = Vec::with_capacity(files);
+        for _ in 0..files {
+            let start = rng.below(osts as u64) as usize;
+            let objs: Vec<usize> =
+                (0..stripe_count.min(osts)).map(|i| (start + i) % osts).collect();
+            assignments.push(objs);
+        }
+        Self { assignments, osts }
+    }
+
+    /// Objects per OST.
+    pub fn load(&self) -> Vec<usize> {
+        let mut load = vec![0usize; self.osts];
+        for objs in &self.assignments {
+            for &o in objs {
+                load[o] += 1;
+            }
+        }
+        load
+    }
+
+    /// max/mean load ratio (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let load = self.load();
+        let total: usize = load.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.osts as f64;
+        let max = *load.iter().max().unwrap() as f64;
+        (max / mean).max(1.0)
+    }
+
+    /// Bandwidth efficiency implied by imbalance: the busiest OST gates
+    /// completion of a balanced parallel phase.
+    pub fn balance_efficiency(&self) -> f64 {
+        1.0 / self.imbalance()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_stripe_is_balanced() {
+        // every file striped over all OSTs -> perfect balance
+        let p = StripePlan::place(100, 96, 96, 1);
+        assert!((p.imbalance() - 1.0).abs() < 1e-9);
+        assert_eq!(p.load().iter().sum::<usize>(), 100 * 96);
+    }
+
+    #[test]
+    fn single_stripe_many_files_roughly_balanced() {
+        let p = StripePlan::place(96_000, 1, 96, 2);
+        let imb = p.imbalance();
+        assert!(imb < 1.1, "imbalance {imb}");
+    }
+
+    #[test]
+    fn few_files_imbalance() {
+        let p = StripePlan::place(10, 1, 96, 3);
+        // 10 objects on 96 OSTs: mean ~0.1, max >= 1 -> large imbalance
+        assert!(p.imbalance() > 5.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = StripePlan::place(50, 4, 96, 7).load();
+        let b = StripePlan::place(50, 4, 96, 7).load();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stripe_count_capped_at_osts() {
+        let p = StripePlan::place(1, 200, 8, 1);
+        assert_eq!(p.assignments[0].len(), 8);
+    }
+}

@@ -1,0 +1,326 @@
+//! Topology builders for the four fabrics the paper surveys (§2.2):
+//! rail-optimized (SAKURAONE's choice, Figure 2), rail-only (Wang et al.),
+//! fat-tree, and dragonfly. All builders speak the same `Fabric` graph.
+
+use super::graph::{Device, Fabric, SwitchTier};
+use crate::config::{ClusterConfig, TopologyKind};
+use crate::util::units::ethernet_payload_bps;
+
+/// Build the fabric selected by `cfg.network.topology`.
+pub fn build(cfg: &ClusterConfig) -> Fabric {
+    match cfg.network.topology {
+        TopologyKind::RailOptimized => rail_optimized(cfg),
+        TopologyKind::RailOnly => rail_only(cfg),
+        TopologyKind::FatTree => fat_tree(cfg),
+        TopologyKind::Dragonfly => dragonfly(cfg),
+    }
+}
+
+fn link_rates(cfg: &ClusterConfig) -> (f64, f64, f64, f64) {
+    let eff = cfg.network.ethernet_efficiency;
+    let host_bw = ethernet_payload_bps(cfg.network.node_leaf_gbps, eff);
+    let spine_bw = ethernet_payload_bps(cfg.network.leaf_spine_gbps, eff);
+    let sw_lat = cfg.network.switch_latency_ns * 1e-9;
+    let nic_lat = cfg.network.nic_latency_ns * 1e-9;
+    (host_bw, spine_bw, sw_lat, nic_lat)
+}
+
+/// SAKURAONE's rail-optimized Clos (paper Figure 2):
+/// * nodes are split into `pods` pods;
+/// * NIC r ("rail r") of every node in pod p connects to leaf (p, r);
+/// * every leaf connects to every spine with an 800 GbE link.
+///
+/// Rail-local traffic (same rail, same pod) is single-hop through one leaf;
+/// cross-pod traffic rides leaf->spine->leaf.
+pub fn rail_optimized(cfg: &ClusterConfig) -> Fabric {
+    let (host_bw, spine_bw, sw_lat, nic_lat) = link_rates(cfg);
+    let net = &cfg.network;
+    let mut f = Fabric::new();
+
+    // leaf switches indexed (pod, rail)
+    let mut leafs = vec![vec![0; net.rails]; net.pods];
+    for (p, row) in leafs.iter_mut().enumerate() {
+        for (r, slot) in row.iter_mut().enumerate() {
+            *slot = f.add_device(Device::Switch {
+                name: format!("leaf-p{p}r{r}"),
+                tier: SwitchTier::Leaf,
+            });
+        }
+    }
+    let spines: Vec<_> = (0..net.spines)
+        .map(|s| {
+            f.add_device(Device::Switch {
+                name: format!("spine-{s}"),
+                tier: SwitchTier::Spine,
+            })
+        })
+        .collect();
+
+    // hosts: one device per (node, rail)
+    for node in 0..cfg.nodes {
+        let pod = pod_of(cfg, node);
+        for rail in 0..net.rails.min(cfg.node.gpus_per_node) {
+            let h = f.add_device(Device::HostNic { node, rail });
+            f.add_cable(h, leafs[pod][rail], host_bw, nic_lat + sw_lat);
+        }
+    }
+
+    // leaf <-> spine full mesh
+    for row in &leafs {
+        for &leaf in row {
+            for &spine in &spines {
+                for _ in 0..net.leaf_spine_parallel {
+                    f.add_cable(leaf, spine, spine_bw, sw_lat);
+                }
+            }
+        }
+    }
+    f
+}
+
+/// Rail-only (Wang et al. 2024): one flat switch per rail, no spine layer.
+/// Cross-rail traffic must first hop GPUs intra-node (NVSwitch), which the
+/// collectives layer accounts for; the Ethernet fabric itself only joins
+/// same-rail NICs.
+pub fn rail_only(cfg: &ClusterConfig) -> Fabric {
+    let (host_bw, _spine_bw, sw_lat, nic_lat) = link_rates(cfg);
+    let net = &cfg.network;
+    let mut f = Fabric::new();
+    let rails: Vec<_> = (0..net.rails)
+        .map(|r| {
+            f.add_device(Device::Switch {
+                name: format!("rail-{r}"),
+                tier: SwitchTier::Leaf,
+            })
+        })
+        .collect();
+    for node in 0..cfg.nodes {
+        for rail in 0..net.rails.min(cfg.node.gpus_per_node) {
+            let h = f.add_device(Device::HostNic { node, rail });
+            f.add_cable(h, rails[rail], host_bw, nic_lat + sw_lat);
+        }
+    }
+    f
+}
+
+/// Two-level fat-tree: all 8 NICs of a node land on the node's leaf
+/// (locality within a leaf, but no rail alignment), leafs connect to all
+/// spines. Classic full-bisection Clos as deployed in general HPC.
+pub fn fat_tree(cfg: &ClusterConfig) -> Fabric {
+    let (host_bw, spine_bw, sw_lat, nic_lat) = link_rates(cfg);
+    let net = &cfg.network;
+    let n_leafs = net.pods * net.leaf_per_pod;
+    let mut f = Fabric::new();
+    let leafs: Vec<_> = (0..n_leafs)
+        .map(|l| {
+            f.add_device(Device::Switch {
+                name: format!("leaf-{l}"),
+                tier: SwitchTier::Leaf,
+            })
+        })
+        .collect();
+    let spines: Vec<_> = (0..net.spines)
+        .map(|s| {
+            f.add_device(Device::Switch {
+                name: format!("spine-{s}"),
+                tier: SwitchTier::Spine,
+            })
+        })
+        .collect();
+    for node in 0..cfg.nodes {
+        let leaf = leafs[node * n_leafs / cfg.nodes.max(1)];
+        for rail in 0..net.rails.min(cfg.node.gpus_per_node) {
+            let h = f.add_device(Device::HostNic { node, rail });
+            f.add_cable(h, leaf, host_bw, nic_lat + sw_lat);
+        }
+    }
+    // Same aggregate uplink capacity as the rail-optimized build so the
+    // comparison isolates *topology*, not switch count: each leaf connects
+    // to every spine.
+    for &leaf in &leafs {
+        for &spine in &spines {
+            for _ in 0..net.leaf_spine_parallel {
+                f.add_cable(leaf, spine, spine_bw, sw_lat);
+            }
+        }
+    }
+    f
+}
+
+/// Dragonfly: groups of fully-meshed leaf switches ("routers"), sparse
+/// global links between groups. Groups here correspond to racks.
+pub fn dragonfly(cfg: &ClusterConfig) -> Fabric {
+    let (host_bw, spine_bw, sw_lat, nic_lat) = link_rates(cfg);
+    let net = &cfg.network;
+    let groups = net.pods.max(2) * 2; // 4 groups by default
+    let routers_per_group = (net.leaf_per_pod * net.pods / groups).max(1);
+    let mut f = Fabric::new();
+    let mut routers = vec![vec![0; routers_per_group]; groups];
+    for (g, row) in routers.iter_mut().enumerate() {
+        for (r, slot) in row.iter_mut().enumerate() {
+            *slot = f.add_device(Device::Switch {
+                name: format!("dfly-g{g}r{r}"),
+                tier: SwitchTier::Leaf,
+            });
+        }
+    }
+    // intra-group full mesh
+    for row in &routers {
+        for i in 0..row.len() {
+            for j in (i + 1)..row.len() {
+                f.add_cable(row[i], row[j], spine_bw, sw_lat);
+            }
+        }
+    }
+    // global links: router r of group g connects to group (g + r + 1) % G,
+    // plus a second parallel set for bandwidth; every group pair ends up
+    // connected through at least one router pair.
+    for g in 0..groups {
+        for (r, &router) in routers[g].iter().enumerate() {
+            let tg = (g + r + 1) % groups;
+            if tg != g {
+                let peer = routers[tg][r % routers_per_group];
+                f.add_cable(router, peer, spine_bw, sw_lat);
+            }
+        }
+    }
+    // hosts: nodes striped over (group, router)
+    for node in 0..cfg.nodes {
+        let g = node % groups;
+        let r = (node / groups) % routers_per_group;
+        for rail in 0..net.rails.min(cfg.node.gpus_per_node) {
+            let h = f.add_device(Device::HostNic { node, rail });
+            f.add_cable(h, routers[g][r], host_bw, nic_lat + sw_lat);
+        }
+    }
+    f
+}
+
+/// Which pod a node belongs to (contiguous split, 50+50 in the paper).
+pub fn pod_of(cfg: &ClusterConfig, node: usize) -> usize {
+    (node / cfg.network.nodes_per_pod.max(1)).min(cfg.network.pods - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::topology::graph::SwitchTier;
+
+    fn paper_cfg() -> ClusterConfig {
+        ClusterConfig::default()
+    }
+
+    #[test]
+    fn rail_optimized_inventory_matches_figure2() {
+        let f = rail_optimized(&paper_cfg());
+        assert_eq!(f.switch_count(SwitchTier::Leaf), 16);
+        assert_eq!(f.switch_count(SwitchTier::Spine), 8);
+        assert_eq!(f.hosts().count(), 800);
+        // links: 800 host cables + 16*8 leaf-spine cables, x2 directions
+        assert_eq!(f.links.len(), (800 + 128) * 2);
+    }
+
+    #[test]
+    fn rail_local_is_single_switch_hop() {
+        let cfg = paper_cfg();
+        let f = rail_optimized(&cfg);
+        // node 0 and node 1 are both pod 0; rail 3 to rail 3
+        let a = f.host(0, 3).unwrap();
+        let b = f.host(1, 3).unwrap();
+        let paths = f.ecmp_paths(a, b, 16);
+        assert_eq!(paths[0].len(), 2, "host->leaf->host");
+    }
+
+    #[test]
+    fn cross_pod_goes_through_spine_with_8way_ecmp() {
+        let cfg = paper_cfg();
+        let f = rail_optimized(&cfg);
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(99, 0).unwrap(); // other pod
+        let paths = f.ecmp_paths(a, b, 64);
+        assert_eq!(paths[0].len(), 4, "host->leaf->spine->leaf->host");
+        assert_eq!(paths.len(), 8, "one route per spine");
+    }
+
+    #[test]
+    fn different_rails_never_share_leaf_in_rail_optimized() {
+        let cfg = paper_cfg();
+        let f = rail_optimized(&cfg);
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(1, 1).unwrap();
+        // cross-rail same pod: must go via spine (4 hops), rails are isolated at leaf level
+        let paths = f.ecmp_paths(a, b, 64);
+        assert_eq!(paths[0].len(), 4);
+    }
+
+    #[test]
+    fn rail_only_has_no_spines() {
+        let f = rail_only(&paper_cfg());
+        assert_eq!(f.switch_count(SwitchTier::Spine), 0);
+        assert_eq!(f.switch_count(SwitchTier::Leaf), 8);
+        // cross-rail unreachable on the Ethernet fabric
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(1, 1).unwrap();
+        assert!(f.ecmp_paths(a, b, 4).is_empty());
+    }
+
+    #[test]
+    fn fat_tree_keeps_node_locality() {
+        let cfg = paper_cfg();
+        let f = fat_tree(&cfg);
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(0, 5).unwrap();
+        // same node, different NIC -> same leaf, 2 hops
+        assert_eq!(f.ecmp_paths(a, b, 8)[0].len(), 2);
+        // but same-rail neighbours in other leaf groups go via spine
+        let c = f.host(99, 0).unwrap();
+        assert_eq!(f.ecmp_paths(a, c, 8)[0].len(), 4);
+    }
+
+    #[test]
+    fn dragonfly_connected() {
+        let cfg = paper_cfg();
+        let f = dragonfly(&cfg);
+        let a = f.host(0, 0).unwrap();
+        for node in [1, 2, 3, 50, 99] {
+            let b = f.host(node, 0).unwrap();
+            assert!(
+                !f.ecmp_paths(a, b, 4).is_empty(),
+                "no path to node {node}"
+            );
+        }
+    }
+
+    #[test]
+    fn rail_optimized_full_bisection() {
+        // Pod-vs-pod cut: 16 leaf-spine links per leaf totalling
+        // 8 leafs * 8 spines * 800G payload per pod side.
+        let cfg = paper_cfg();
+        let f = rail_optimized(&cfg);
+        let bw = f.bisection_bandwidth(|node| pod_of(&cfg, node) == 0);
+        let expect = 8.0 * 8.0 * 800e9 / 8.0 * cfg.network.ethernet_efficiency;
+        let rel = (bw - expect).abs() / expect;
+        assert!(rel < 0.01, "bw={bw:.3e} expect={expect:.3e}");
+    }
+
+    #[test]
+    fn pod_split_is_50_50() {
+        let cfg = paper_cfg();
+        assert_eq!(pod_of(&cfg, 0), 0);
+        assert_eq!(pod_of(&cfg, 49), 0);
+        assert_eq!(pod_of(&cfg, 50), 1);
+        assert_eq!(pod_of(&cfg, 99), 1);
+    }
+
+    #[test]
+    fn small_cluster_builders_work() {
+        let mut cfg = paper_cfg();
+        cfg.apply_override("nodes", "8").unwrap();
+        for kind in ["rail-optimized", "rail-only", "fat-tree", "dragonfly"] {
+            cfg.apply_override("topology", kind).unwrap();
+            let f = build(&cfg);
+            assert_eq!(f.hosts().count(), 8 * 8, "{kind}");
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! Generic fabric graph: hosts (node NICs) + switches + directed links.
+//!
+//! Every topology builder (rail-optimized, rail-only, fat-tree, dragonfly)
+//! produces one of these; the flow-level network simulator and the
+//! collective algorithms consume it. Links are directed (full-duplex
+//! Ethernet = two directed links per cable).
+
+use std::collections::{HashMap, VecDeque};
+
+pub type DeviceId = usize;
+pub type LinkId = usize;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Device {
+    /// One NIC of one compute node (SAKURAONE: 8 compute NICs per node).
+    HostNic { node: usize, rail: usize },
+    Switch { name: String, tier: SwitchTier },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwitchTier {
+    Leaf,
+    Spine,
+}
+
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub from: DeviceId,
+    pub to: DeviceId,
+    /// Usable payload bandwidth, bytes/s (line rate x protocol efficiency).
+    pub bandwidth: f64,
+    /// Serialization+forwarding latency contribution of this hop.
+    pub latency: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Fabric {
+    pub devices: Vec<Device>,
+    pub links: Vec<Link>,
+    /// Outgoing link ids per device.
+    pub adj: Vec<Vec<LinkId>>,
+    /// Incoming link ids per device (kept in sync by add_link; used by
+    /// the reverse BFS in ecmp_paths — perf pass, EXPERIMENTS.md §Perf).
+    pub radj: Vec<Vec<LinkId>>,
+    /// (node, rail) -> device index (hot lookup in the collectives layer).
+    host_index: HashMap<(usize, usize), DeviceId>,
+}
+
+impl Fabric {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_device(&mut self, d: Device) -> DeviceId {
+        let id = self.devices.len();
+        if let Device::HostNic { node, rail } = &d {
+            self.host_index.insert((*node, *rail), id);
+        }
+        self.devices.push(d);
+        self.adj.push(Vec::new());
+        self.radj.push(Vec::new());
+        id
+    }
+
+    /// Add a full-duplex cable (two directed links).
+    pub fn add_cable(
+        &mut self,
+        a: DeviceId,
+        b: DeviceId,
+        bandwidth: f64,
+        latency: f64,
+    ) -> (LinkId, LinkId) {
+        let ab = self.add_link(a, b, bandwidth, latency);
+        let ba = self.add_link(b, a, bandwidth, latency);
+        (ab, ba)
+    }
+
+    pub fn add_link(
+        &mut self,
+        from: DeviceId,
+        to: DeviceId,
+        bandwidth: f64,
+        latency: f64,
+    ) -> LinkId {
+        assert!(from < self.devices.len() && to < self.devices.len());
+        assert!(bandwidth > 0.0);
+        let id = self.links.len();
+        self.links.push(Link { from, to, bandwidth, latency });
+        self.adj[from].push(id);
+        self.radj[to].push(id);
+        id
+    }
+
+    pub fn host(&self, node: usize, rail: usize) -> Option<DeviceId> {
+        self.host_index.get(&(node, rail)).copied()
+    }
+
+    pub fn hosts(&self) -> impl Iterator<Item = (DeviceId, usize, usize)> + '_ {
+        self.devices.iter().enumerate().filter_map(|(i, d)| match d {
+            Device::HostNic { node, rail } => Some((i, *node, *rail)),
+            _ => None,
+        })
+    }
+
+    pub fn switch_count(&self, tier: SwitchTier) -> usize {
+        self.devices
+            .iter()
+            .filter(|d| matches!(d, Device::Switch { tier: t, .. } if *t == tier))
+            .count()
+    }
+
+    /// BFS hop distances from `src` (device granularity).
+    pub fn distances(&self, src: DeviceId) -> Vec<u32> {
+        let mut dist = vec![u32::MAX; self.devices.len()];
+        dist[src] = 0;
+        let mut q = VecDeque::from([src]);
+        while let Some(d) = q.pop_front() {
+            for &l in &self.adj[d] {
+                let to = self.links[l].to;
+                if dist[to] == u32::MAX {
+                    dist[to] = dist[d] + 1;
+                    q.push_back(to);
+                }
+            }
+        }
+        dist
+    }
+
+    /// All equal-cost shortest paths from `src` to `dst`, as link sequences.
+    /// Capped at `max_paths` to bound ECMP enumeration on dense fabrics.
+    pub fn ecmp_paths(
+        &self,
+        src: DeviceId,
+        dst: DeviceId,
+        max_paths: usize,
+    ) -> Vec<Vec<LinkId>> {
+        if src == dst {
+            return vec![Vec::new()];
+        }
+        // distances *to* dst: BFS on the precomputed reverse adjacency
+        let mut dist = vec![u32::MAX; self.devices.len()];
+        dist[dst] = 0;
+        let mut q = VecDeque::from([dst]);
+        while let Some(d) = q.pop_front() {
+            for &l in &self.radj[d] {
+                let from = self.links[l].from;
+                if dist[from] == u32::MAX {
+                    dist[from] = dist[d] + 1;
+                    q.push_back(from);
+                }
+            }
+        }
+        if dist[src] == u32::MAX {
+            return Vec::new();
+        }
+        // DFS along strictly-decreasing distance
+        let mut out: Vec<Vec<LinkId>> = Vec::new();
+        let mut stack: Vec<(DeviceId, Vec<LinkId>)> = vec![(src, Vec::new())];
+        while let Some((d, path)) = stack.pop() {
+            if out.len() >= max_paths {
+                break;
+            }
+            if d == dst {
+                out.push(path);
+                continue;
+            }
+            for &l in &self.adj[d] {
+                let to = self.links[l].to;
+                if dist[to] != u32::MAX && dist[to] + 1 == dist[d] {
+                    let mut p = path.clone();
+                    p.push(l);
+                    stack.push((to, p));
+                }
+            }
+        }
+        out
+    }
+
+    /// Path latency = sum of hop latencies.
+    pub fn path_latency(&self, path: &[LinkId]) -> f64 {
+        path.iter().map(|&l| self.links[l].latency).sum()
+    }
+
+    /// Bottleneck bandwidth along a path.
+    pub fn path_bandwidth(&self, path: &[LinkId]) -> f64 {
+        path.iter()
+            .map(|&l| self.links[l].bandwidth)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Exact bisection bandwidth between two host sets via Edmonds-Karp
+    /// max-flow (capacities in bytes/s). Host sets are given as node id
+    /// predicates; all NICs of a node join its side.
+    pub fn bisection_bandwidth(&self, in_left: impl Fn(usize) -> bool) -> f64 {
+        // Build capacity matrix on device graph + super source/sink.
+        let n = self.devices.len();
+        let src = n;
+        let dst = n + 1;
+        let total = n + 2;
+        let mut cap = vec![std::collections::HashMap::<usize, f64>::new(); total];
+        for l in &self.links {
+            *cap[l.from].entry(l.to).or_insert(0.0) += l.bandwidth;
+        }
+        const INF: f64 = f64::INFINITY;
+        for (dev, node, _rail) in self.hosts() {
+            if in_left(node) {
+                *cap[src].entry(dev).or_insert(0.0) = INF;
+            } else {
+                *cap[dev].entry(dst).or_insert(0.0) = INF;
+            }
+        }
+        // Edmonds-Karp
+        let mut flow = 0.0;
+        loop {
+            // BFS for augmenting path
+            let mut parent: Vec<Option<usize>> = vec![None; total];
+            parent[src] = Some(src);
+            let mut q = VecDeque::from([src]);
+            'bfs: while let Some(u) = q.pop_front() {
+                let nexts: Vec<(usize, f64)> =
+                    cap[u].iter().map(|(&v, &c)| (v, c)).collect();
+                for (v, c) in nexts {
+                    if c > 1e-6 && parent[v].is_none() {
+                        parent[v] = Some(u);
+                        if v == dst {
+                            break 'bfs;
+                        }
+                        q.push_back(v);
+                    }
+                }
+            }
+            if parent[dst].is_none() {
+                break;
+            }
+            // find bottleneck
+            let mut aug = INF;
+            let mut v = dst;
+            while v != src {
+                let u = parent[v].unwrap();
+                aug = aug.min(cap[u][&v]);
+                v = u;
+            }
+            if !aug.is_finite() {
+                // direct src->dst infinite path shouldn't happen
+                break;
+            }
+            let mut v = dst;
+            while v != src {
+                let u = parent[v].unwrap();
+                *cap[u].get_mut(&v).unwrap() -= aug;
+                *cap[v].entry(u).or_insert(0.0) += aug;
+                v = u;
+            }
+            flow += aug;
+        }
+        flow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2 hosts <-> 1 switch line topology.
+    fn line() -> (Fabric, DeviceId, DeviceId) {
+        let mut f = Fabric::new();
+        let h0 = f.add_device(Device::HostNic { node: 0, rail: 0 });
+        let h1 = f.add_device(Device::HostNic { node: 1, rail: 0 });
+        let s = f.add_device(Device::Switch {
+            name: "leaf0".into(),
+            tier: SwitchTier::Leaf,
+        });
+        f.add_cable(h0, s, 50e9, 1e-6);
+        f.add_cable(h1, s, 50e9, 1e-6);
+        (f, h0, h1)
+    }
+
+    #[test]
+    fn bfs_distances() {
+        let (f, h0, h1) = line();
+        let d = f.distances(h0);
+        assert_eq!(d[h0], 0);
+        assert_eq!(d[h1], 2);
+    }
+
+    #[test]
+    fn single_shortest_path() {
+        let (f, h0, h1) = line();
+        let paths = f.ecmp_paths(h0, h1, 8);
+        assert_eq!(paths.len(), 1);
+        assert_eq!(paths[0].len(), 2);
+        assert_eq!(f.path_bandwidth(&paths[0]), 50e9);
+        assert!((f.path_latency(&paths[0]) - 2e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecmp_enumerates_parallel_routes() {
+        // two hosts joined by two parallel 2-hop routes via two switches
+        let mut f = Fabric::new();
+        let h0 = f.add_device(Device::HostNic { node: 0, rail: 0 });
+        let h1 = f.add_device(Device::HostNic { node: 1, rail: 0 });
+        for i in 0..2 {
+            let s = f.add_device(Device::Switch {
+                name: format!("s{i}"),
+                tier: SwitchTier::Spine,
+            });
+            f.add_cable(h0, s, 10e9, 1e-6);
+            f.add_cable(s, h1, 10e9, 1e-6);
+        }
+        let paths = f.ecmp_paths(h0, h1, 8);
+        assert_eq!(paths.len(), 2);
+    }
+
+    #[test]
+    fn max_paths_caps_enumeration() {
+        let mut f = Fabric::new();
+        let h0 = f.add_device(Device::HostNic { node: 0, rail: 0 });
+        let h1 = f.add_device(Device::HostNic { node: 1, rail: 0 });
+        for i in 0..16 {
+            let s = f.add_device(Device::Switch {
+                name: format!("s{i}"),
+                tier: SwitchTier::Spine,
+            });
+            f.add_cable(h0, s, 10e9, 1e-6);
+            f.add_cable(s, h1, 10e9, 1e-6);
+        }
+        assert_eq!(f.ecmp_paths(h0, h1, 4).len(), 4);
+    }
+
+    #[test]
+    fn disconnected_hosts_have_no_path(){
+        let mut f = Fabric::new();
+        let h0 = f.add_device(Device::HostNic { node: 0, rail: 0 });
+        let h1 = f.add_device(Device::HostNic { node: 1, rail: 0 });
+        assert!(f.ecmp_paths(h0, h1, 8).is_empty());
+    }
+
+    #[test]
+    fn bisection_of_dumbbell() {
+        // two hosts - two switches - one 10G bottleneck between switches
+        let mut f = Fabric::new();
+        let h0 = f.add_device(Device::HostNic { node: 0, rail: 0 });
+        let h1 = f.add_device(Device::HostNic { node: 1, rail: 0 });
+        let s0 = f.add_device(Device::Switch {
+            name: "s0".into(),
+            tier: SwitchTier::Leaf,
+        });
+        let s1 = f.add_device(Device::Switch {
+            name: "s1".into(),
+            tier: SwitchTier::Leaf,
+        });
+        f.add_cable(h0, s0, 100e9, 1e-6);
+        f.add_cable(h1, s1, 100e9, 1e-6);
+        f.add_cable(s0, s1, 10e9, 1e-6);
+        let b = f.bisection_bandwidth(|node| node == 0);
+        assert!((b - 10e9).abs() < 1.0, "b={b}");
+    }
+
+    #[test]
+    fn bisection_sums_parallel_cut_links() {
+        let mut f = Fabric::new();
+        let h0 = f.add_device(Device::HostNic { node: 0, rail: 0 });
+        let h1 = f.add_device(Device::HostNic { node: 1, rail: 0 });
+        let s0 = f.add_device(Device::Switch {
+            name: "s0".into(),
+            tier: SwitchTier::Leaf,
+        });
+        let s1 = f.add_device(Device::Switch {
+            name: "s1".into(),
+            tier: SwitchTier::Leaf,
+        });
+        f.add_cable(h0, s0, 100e9, 1e-6);
+        f.add_cable(h1, s1, 100e9, 1e-6);
+        f.add_cable(s0, s1, 10e9, 1e-6);
+        f.add_cable(s0, s1, 10e9, 1e-6);
+        let b = f.bisection_bandwidth(|node| node == 0);
+        assert!((b - 20e9).abs() < 1.0, "b={b}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Fabric topologies (paper §2.2): graph substrate, the four builders the
+//! paper surveys, ECMP routing, bisection analysis and ASCII rendering.
+
+pub mod builders;
+pub mod graph;
+pub mod render;
+pub mod routing;
+
+pub use builders::{build, pod_of};
+pub use graph::{Device, DeviceId, Fabric, Link, LinkId, SwitchTier};
+pub use routing::{ecmp_hash, Router};

@@ -1,0 +1,111 @@
+//! ASCII rendering of the fabric (Figures 1 and 2 of the paper).
+
+use super::graph::{Device, Fabric, SwitchTier};
+use crate::config::ClusterConfig;
+
+/// Figure-2-style schematic of the rail-optimized fabric.
+pub fn render_network(cfg: &ClusterConfig, fabric: &Fabric) -> String {
+    let mut out = String::new();
+    let net = &cfg.network;
+    out.push_str(&format!(
+        "{} network — {} topology\n",
+        cfg.name,
+        net.topology.name()
+    ));
+    out.push_str(&format!(
+        "  {} nodes x {} NICs ({} GbE)  |  {} leafs, {} spines ({} GbE leaf-spine)\n\n",
+        cfg.nodes,
+        net.rails,
+        net.node_leaf_gbps,
+        fabric.switch_count(SwitchTier::Leaf),
+        fabric.switch_count(SwitchTier::Spine),
+        net.leaf_spine_gbps,
+    ));
+
+    let spines = fabric.switch_count(SwitchTier::Spine);
+    if spines > 0 {
+        out.push_str("  Spine:  ");
+        for s in 0..spines {
+            out.push_str(&format!("[SP{s}] "));
+        }
+        out.push('\n');
+        out.push_str("           ");
+        out.push_str(&"|  ".repeat(spines.min(16)));
+        out.push_str("   (each leaf connects to every spine)\n");
+    }
+    // leaf row grouped by pod
+    out.push_str("  Leaf:   ");
+    let mut pod_markers: Vec<(usize, String)> = Vec::new();
+    let mut leaf_i = 0usize;
+    for d in &fabric.devices {
+        if let Device::Switch { name, tier: SwitchTier::Leaf } = d {
+            if leaf_i % net.leaf_per_pod == 0 && leaf_i > 0 {
+                out.push_str("  |  ");
+            }
+            out.push_str(&format!("[{name}] "));
+            pod_markers.push((leaf_i, name.clone()));
+            leaf_i += 1;
+        }
+    }
+    out.push('\n');
+    out.push_str(&format!(
+        "  Hosts:  pod0: nodes 0..{}   pod1: nodes {}..{}  (NIC r -> leaf r of its pod)\n",
+        net.nodes_per_pod - 1,
+        net.nodes_per_pod,
+        cfg.nodes - 1,
+    ));
+    out
+}
+
+/// Figure-1-style system overview.
+pub fn render_system(cfg: &ClusterConfig) -> String {
+    format!(
+        r#"{name} system overview
++----------------------------------------------------------------+
+|  VPN gateway  -->  interactive front-end nodes                 |
+|                                                                |
+|  {nodes} compute nodes ({gpus} GPUs total)                          |
+|    each: 2x Xeon 8580+ (120c), 1.5TB DDR5, 8x H100 SXM        |
+|    NICs: 8x400GbE compute | 2x400GbE storage | mgmt            |
+|                                                                |
+|  Interconnect: {topo}, RoCEv2, SONiC/Tomahawk5            |
+|    {leafs} leaf + {spines} spine switches, 800GbE leaf-spine             |
+|                                                                |
+|  Storage: {srv}x DDN ES400NVX2 (Lustre/EXAScaler), 2 PB flash      |
+|    theoretical {bw:.0} GB/s read/write                            |
++----------------------------------------------------------------+
+"#,
+        name = cfg.name,
+        nodes = cfg.nodes,
+        gpus = cfg.total_gpus(),
+        topo = cfg.network.topology.name(),
+        leafs = cfg.network.pods * cfg.network.leaf_per_pod,
+        spines = cfg.network.spines,
+        srv = cfg.storage.servers,
+        bw = cfg.storage.theoretical_bw_bytes_per_s / 1e9,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::builders::build;
+
+    #[test]
+    fn network_render_mentions_all_tiers() {
+        let cfg = ClusterConfig::default();
+        let f = build(&cfg);
+        let s = render_network(&cfg, &f);
+        assert!(s.contains("Spine"));
+        assert!(s.contains("leaf-p0r0"));
+        assert!(s.contains("rail-optimized"));
+    }
+
+    #[test]
+    fn system_render_headline_numbers() {
+        let s = render_system(&ClusterConfig::default());
+        assert!(s.contains("100 compute nodes"));
+        assert!(s.contains("800 GPUs"));
+        assert!(s.contains("2 PB"));
+    }
+}

@@ -1,0 +1,154 @@
+//! In-repo micro-benchmark harness (criterion is not in the vendored crate
+//! set). `cargo bench` targets use this through `harness = false`.
+//!
+//! Methodology: warmup iterations, then timed batches until both a minimum
+//! wall budget and a minimum iteration count are met; reports mean, p50,
+//! p99 and derived throughput. Deterministic ordering, no threads.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    pub min_duration: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            min_duration: Duration::from_millis(300),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns * 1e-9
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iters
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self { config: BenchConfig::default(), results: Vec::new() }
+    }
+
+    pub fn with_config(config: BenchConfig) -> Self {
+        Self { config, results: Vec::new() }
+    }
+
+    /// Time `f`, preventing the closure's result from being optimised out.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
+        for _ in 0..self.config.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples_ns.len() < self.config.min_iters as usize
+            || start.elapsed() < self.config.min_duration
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 100_000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u32,
+            mean_ns: stats::mean(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p99_ns: stats::percentile(&samples_ns, 99.0),
+            min_ns: stats::min(&samples_ns),
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn header(title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "p50", "p99"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::with_config(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            min_duration: Duration::from_millis(1),
+        });
+        b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        let r = &b.results()[0];
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.min_ns <= r.mean_ns);
+    }
+}

@@ -1,0 +1,153 @@
+//! Tiny argument parser for the `sakuraone` CLI (clap is not vendored).
+//!
+//! Grammar: `sakuraone <subcommand> [--flag] [--key value]...`
+//! Unknown options are an error; every subcommand documents its options in
+//! `main.rs`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` ends option parsing
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        return Err(format!(
+                            "option --{name} requires a value"
+                        ));
+                    }
+                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    return Err(format!("option --{name} requires a value"));
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["hpl", "--nodes", "100", "--verbose"], &["verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("hpl"));
+        assert_eq!(a.get("nodes"), Some("100"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["io500", "--nodes=96"], &[]);
+        assert_eq!(a.get_usize("nodes", 10).unwrap(), 96);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse(
+            ["hpl".to_string(), "--nodes".to_string()],
+            &[],
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["hpcg"], &[]);
+        assert_eq!(a.get_usize("ranks", 784).unwrap(), 784);
+        assert_eq!(a.get_f64("eff", 0.5).unwrap(), 0.5);
+        assert_eq!(a.get_or("grid", "auto"), "auto");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["hpl", "--nodes", "many"], &[]);
+        assert!(a.get_usize("nodes", 1).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"], &["help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Dependency-light utility layer: deterministic RNG, statistics, units,
+//! ASCII tables, minimal JSON, micro-bench harness, CLI parsing and a small
+//! property-testing helper. Everything above this module builds on std only.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

@@ -1,0 +1,148 @@
+//! Minimal property-testing helper (the proptest crate is not vendored).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it performs a bounded greedy shrink using
+//! the user-provided `shrink` candidates, then panics with the minimal
+//! counterexample found. Coordinator invariants (routing, batching,
+//! scheduler state) are property-tested through this helper.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+    pub max_shrink_steps: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xC0FFEE, max_shrink_steps: 200 }
+    }
+}
+
+/// Run a property over random inputs. `gen` draws an input; `prop` returns
+/// `Err(reason)` on violation.
+pub fn check<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    T: Clone + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check_with_shrink(cfg, &mut gen, |_| Vec::new(), &mut prop)
+}
+
+/// Like `check`, with a shrink function producing smaller candidates.
+pub fn check_with_shrink<T, G, S, P>(
+    cfg: Config,
+    gen: &mut G,
+    shrink: S,
+    prop: &mut P,
+) where
+    T: Clone + Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            // Greedy shrink: keep any candidate that still fails.
+            let mut best = input.clone();
+            let mut best_reason = reason;
+            let mut steps = 0;
+            'outer: loop {
+                if steps >= cfg.max_shrink_steps {
+                    break;
+                }
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if let Err(r) = prop(&cand) {
+                        best = cand;
+                        best_reason = r;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input: {best:?}\n  reason: {best_reason}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Shrink helper: all single-element-removed copies of a vec.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+    }
+    for i in 0..v.len().min(16) {
+        let mut c = v.to_vec();
+        c.remove(i);
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check(
+            Config { cases: 50, ..Default::default() },
+            |r| r.below(100) as i64,
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(
+            Config { cases: 50, ..Default::default() },
+            |r| r.below(100) as i64,
+            |&x| {
+                if x < 90 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 90"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn shrinking_finds_smaller_case() {
+        let mut gen = |r: &mut crate::util::rng::Rng| {
+            (0..10).map(|_| r.below(100) as i64).collect::<Vec<_>>()
+        };
+        check_with_shrink(
+            Config::default(),
+            &mut gen,
+            |v: &Vec<i64>| shrink_vec(v),
+            &mut |v: &Vec<i64>| {
+                if v.iter().sum::<i64>() < 50 {
+                    Ok(())
+                } else {
+                    Err("sum too big".into())
+                }
+            },
+        );
+    }
+}

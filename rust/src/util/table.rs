@@ -1,0 +1,132 @@
+//! ASCII table rendering — every paper table (T1..T10) is emitted through
+//! this so `sakuraone report` output lines up with EXPERIMENTS.md.
+
+/// A simple left-aligned table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: &[S]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row arity must match headers"
+        );
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                w[i] = w[i].max(cell.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let sep: String = {
+            let mut s = String::from("+");
+            for wi in &w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+/// Two-column "Item | Value" table, the paper's summary-table style.
+pub fn kv_table(title: &str, pairs: &[(&str, String)]) -> String {
+    let mut t = Table::new(title, &["Item", "Value"]);
+    for (k, v) in pairs {
+        t.row(&[k.to_string(), v.clone()]);
+    }
+    t.render()
+}
+
+/// Three-way comparison row used by EXPERIMENTS.md: paper vs measured.
+pub fn compare_table(
+    title: &str,
+    rows: &[(&str, String, String)],
+) -> String {
+    let mut t = Table::new(title, &["Item", "Paper", "Measured"]);
+    for (k, p, m) in rows {
+        t.row(&[k.to_string(), p.clone(), m.clone()]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(&["xxx", "y"]);
+        let s = t.render();
+        assert!(s.contains("| xxx | y  |"), "{s}");
+        assert!(s.contains("| a   | bb |"), "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["only-one"]);
+    }
+
+    #[test]
+    fn kv_has_both_columns() {
+        let s = kv_table("HPL", &[("FLOPS", "33.95 PFLOP/s".into())]);
+        assert!(s.contains("FLOPS"));
+        assert!(s.contains("33.95"));
+    }
+
+    #[test]
+    fn empty_table_renders_header_only() {
+        let t = Table::new("", &["h"]);
+        let s = t.render();
+        assert!(s.contains("| h |"));
+    }
+}

@@ -1,0 +1,129 @@
+//! Unit constants and human-readable formatting for rates/sizes/times.
+//!
+//! Conventions (matching the paper's usage):
+//! * link rates are decimal bits/s (400 GbE = 400e9 bit/s),
+//! * storage bandwidth is binary GiB/s in IO500 tables, decimal GB/s in
+//!   vendor specs (DDN's "200 GB/s"),
+//! * FLOP rates are decimal (TFLOP/s, PFLOP/s).
+
+pub const KB: f64 = 1e3;
+pub const MB: f64 = 1e6;
+pub const GB: f64 = 1e9;
+pub const TB: f64 = 1e12;
+pub const PB: f64 = 1e15;
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+pub const TIB: f64 = 1024.0 * GIB;
+
+pub const GFLOP: f64 = 1e9;
+pub const TFLOP: f64 = 1e12;
+pub const PFLOP: f64 = 1e15;
+
+pub const USEC: f64 = 1e-6;
+pub const NSEC: f64 = 1e-9;
+pub const MSEC: f64 = 1e-3;
+
+/// bits/s for an N-gigabit Ethernet link.
+pub fn gbe(n: f64) -> f64 {
+    n * 1e9
+}
+
+/// bytes/s usable payload for an Ethernet link of `gbps` gigabit/s,
+/// derated by protocol efficiency (RoCEv2 over 9000-byte jumbo frames
+/// carries ~97% payload; headers + PFC pauses shave the rest).
+pub fn ethernet_payload_bps(gbps: f64, efficiency: f64) -> f64 {
+    gbps * 1e9 / 8.0 * efficiency
+}
+
+pub fn fmt_rate_flops(flops_per_s: f64) -> String {
+    if flops_per_s >= PFLOP {
+        format!("{:.2} PFLOP/s", flops_per_s / PFLOP)
+    } else if flops_per_s >= TFLOP {
+        format!("{:.2} TFLOP/s", flops_per_s / TFLOP)
+    } else {
+        format!("{:.2} GFLOP/s", flops_per_s / GFLOP)
+    }
+}
+
+pub fn fmt_bytes(bytes: f64) -> String {
+    if bytes >= TIB {
+        format!("{:.2} TiB", bytes / TIB)
+    } else if bytes >= GIB {
+        format!("{:.2} GiB", bytes / GIB)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", bytes / MIB)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", bytes / KIB)
+    } else {
+        format!("{bytes:.0} B")
+    }
+}
+
+pub fn fmt_bandwidth(bytes_per_s: f64) -> String {
+    format!("{}/s", fmt_bytes(bytes_per_s))
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= MSEC {
+        format!("{:.2} ms", secs / MSEC)
+    } else if secs >= USEC {
+        format!("{:.2} us", secs / USEC)
+    } else {
+        format!("{:.0} ns", secs / NSEC)
+    }
+}
+
+pub fn fmt_count(n: f64) -> String {
+    if n >= 1e12 {
+        format!("{:.2} trillion", n / 1e12)
+    } else if n >= 1e9 {
+        format!("{:.2} billion", n / 1e9)
+    } else if n >= 1e6 {
+        format!("{:.2} million", n / 1e6)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gbe_rates() {
+        assert_eq!(gbe(400.0), 400e9);
+        assert_eq!(gbe(800.0), 800e9);
+    }
+
+    #[test]
+    fn payload_below_line_rate() {
+        let p = ethernet_payload_bps(400.0, 0.97);
+        assert!(p < 400e9 / 8.0);
+        assert!(p > 0.9 * 400e9 / 8.0);
+    }
+
+    #[test]
+    fn fmt_flops_bands() {
+        assert_eq!(fmt_rate_flops(33.95e15), "33.95 PFLOP/s");
+        assert_eq!(fmt_rate_flops(43.31e12), "43.31 TFLOP/s");
+        assert_eq!(fmt_rate_flops(396.295e9), "396.30 GFLOP/s");
+    }
+
+    #[test]
+    fn fmt_bytes_bands() {
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_bytes(3.0 * GIB), "3.00 GiB");
+    }
+
+    #[test]
+    fn fmt_time_bands() {
+        assert_eq!(fmt_time(389.23), "389.23 s");
+        assert_eq!(fmt_time(1.5e-3), "1.50 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.50 us");
+        assert_eq!(fmt_time(800e-9), "800 ns");
+    }
+}

@@ -1,0 +1,144 @@
+//! Cross-module integration checks for the extension features: energy,
+//! checkpointing, failure drills, collective selection, and report
+//! rendering — the pieces `sakuraone power/checkpoint/resilience` expose.
+
+use sakuraone::benchmarks::hpl::{run_hpl, HplParams};
+use sakuraone::benchmarks::hpl_mxp::{run_mxp, MxpParams};
+use sakuraone::benchmarks::io500::{comparison_table, run_io500, Io500Params};
+use sakuraone::benchmarks::report;
+use sakuraone::collectives::CollectiveEngine;
+use sakuraone::config::ClusterConfig;
+use sakuraone::hardware::{energy_for, PowerModel};
+use sakuraone::llm::{step_time, LlmConfig};
+use sakuraone::network::{apply_failures, FailurePlan};
+use sakuraone::storage::{checkpoint_cost, CheckpointConfig, LustreModel};
+use sakuraone::topology::builders::build;
+
+#[test]
+fn energy_report_tracks_simulated_benchmarks() {
+    // the CLI `power` path: derive energy from the *simulated* results,
+    // not hard-coded wall times
+    let cfg = ClusterConfig::default();
+    let m = PowerModel::sakuraone();
+    let hpl = run_hpl(&cfg, &HplParams::paper());
+    let mxp = run_mxp(&cfg, &MxpParams::paper());
+    let e_hpl = energy_for(&m, &cfg, "hpl", hpl.time_s, hpl.rmax, 0.85, 0.3);
+    let e_mxp = energy_for(&m, &cfg, "mxp", mxp.total_time_s, mxp.rmax, 0.9, 0.3);
+    // HPL runs ~7x longer -> proportionally more energy
+    assert!(e_hpl.energy_mj > 4.0 * e_mxp.energy_mj);
+    // both draw similar average power (same machine, full tilt)
+    let ratio = e_hpl.avg_power_w / e_mxp.avg_power_w;
+    assert!(ratio > 0.8 && ratio < 1.2, "{ratio}");
+}
+
+#[test]
+fn checkpoint_cadence_composes_with_llm_step_model() {
+    // end-to-end: cluster-scale step time feeds the checkpoint planner
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let st = step_time(&cfg, &fabric, &LlmConfig::llama70b_on_sakuraone());
+    let lustre = LustreModel::sakuraone(&cfg.storage);
+    let ck = CheckpointConfig::llama70b(st.total);
+    let rep = checkpoint_cost(&lustre, &ck);
+    assert!(rep.overhead_fraction < 0.01, "{}", rep.overhead_fraction);
+    // the stall must be small relative to the checkpoint interval
+    assert!(rep.stall_seconds < 0.05 * ck.interval_steps as f64 * st.total);
+}
+
+#[test]
+fn failure_drill_composes_with_collectives_and_io() {
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let nodes: Vec<usize> = (0..cfg.nodes).collect();
+
+    // spine failures degrade gracefully (rail-local phase unaffected)
+    let healthy = CollectiveEngine::new(&fabric, &cfg)
+        .hierarchical_allreduce(&nodes, 1e9)
+        .total;
+    for n_fail in [1, 4, 7] {
+        let degraded_fabric =
+            apply_failures(&fabric, &FailurePlan::spine_down(n_fail));
+        let t = CollectiveEngine::new(&degraded_fabric, &cfg)
+            .hierarchical_allreduce(&nodes, 1e9)
+            .total;
+        assert!(t >= healthy * 0.999, "spines={n_fail}");
+        assert!(t < 10.0 * healthy, "spines={n_fail} collapsed: {t}");
+    }
+}
+
+#[test]
+fn table10_render_contains_all_phases_and_scores() {
+    let cfg = ClusterConfig::default();
+    let r10 = run_io500(&cfg, &Io500Params::paper_10node());
+    let r96 = run_io500(&cfg, &Io500Params::paper_96node());
+    let s = comparison_table(&r10, &r96).render();
+    for phase in [
+        "ior-easy-write",
+        "mdtest-easy-write",
+        "ior-hard-write",
+        "mdtest-hard-write",
+        "find",
+        "ior-easy-read",
+        "mdtest-easy-stat",
+        "ior-hard-read",
+        "mdtest-hard-stat",
+        "mdtest-easy-delete",
+        "mdtest-hard-read",
+        "mdtest-hard-delete",
+        "Total IO500 Score",
+    ] {
+        assert!(s.contains(phase), "missing {phase}");
+    }
+}
+
+#[test]
+fn all_report_tables_render_with_deltas() {
+    let cfg = ClusterConfig::default();
+    let hpl = run_hpl(&cfg, &HplParams::paper());
+    let mxp = run_mxp(&cfg, &MxpParams::paper());
+    let hpcg = sakuraone::benchmarks::hpcg::run_hpcg(
+        &cfg,
+        &sakuraone::benchmarks::hpcg::HpcgParams::paper(),
+    );
+    let r10 = run_io500(&cfg, &Io500Params::paper_10node());
+    let r96 = run_io500(&cfg, &Io500Params::paper_96node());
+    for s in [
+        report::hpl_compare(&hpl).render(),
+        report::hpcg_compare(&hpcg).render(),
+        report::mxp_compare(&mxp).render(),
+        report::io500_compare(&r10, &r96).render(),
+    ] {
+        assert!(s.contains("Paper") && s.contains("Measured"));
+        assert!(s.contains('%'));
+    }
+}
+
+#[test]
+fn benchmark_tables_quote_paper_parameters() {
+    let cfg = ClusterConfig::default();
+    let hpl = run_hpl(&cfg, &HplParams::paper());
+    let t = hpl.table();
+    assert!(t.contains("2706432"));
+    assert!(t.contains("16 x 49"));
+    assert!(t.contains("132")); // SM count
+    let mxp = run_mxp(&cfg, &MxpParams::paper());
+    let t9 = mxp.table();
+    assert!(t9.contains("2989056"));
+    assert!(t9.contains("24 x 32"));
+    assert!(t9.contains("Sloppy FP8"));
+}
+
+#[test]
+fn cable_cut_storm_degrades_io_path_but_not_correctness() {
+    // heavy cable loss: ECMP fans in, collectives slow down, but the
+    // simulation stays consistent (monotone in bytes)
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let plan = FailurePlan { cable_fraction: 0.4, seed: 77, ..Default::default() };
+    let degraded = apply_failures(&fabric, &plan);
+    let eng = CollectiveEngine::new(&degraded, &cfg);
+    let nodes: Vec<usize> = (0..cfg.nodes).collect();
+    let t1 = eng.hierarchical_allreduce(&nodes, 1e8).total;
+    let t2 = eng.hierarchical_allreduce(&nodes, 2e8).total;
+    assert!(t1 > 0.0 && t2 > t1);
+}

@@ -1,0 +1,193 @@
+//! Integration tests over the AOT -> PJRT bridge: every artifact in the
+//! manifest must compile and execute, and the numerics paths must agree
+//! with host-side oracles. Skipped wholesale if `make artifacts` has not
+//! run (manifest absent).
+
+use sakuraone::runtime::{Manifest, Runtime};
+use sakuraone::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        return None;
+    }
+    Some(Runtime::load_default().expect("runtime load"))
+}
+
+#[test]
+fn every_artifact_compiles() {
+    let Some(mut rt) = runtime() else { return };
+    for name in rt.artifact_names() {
+        rt.ensure_compiled(&name)
+            .unwrap_or_else(|e| panic!("{name} failed to compile: {e:#}"));
+    }
+}
+
+#[test]
+fn every_artifact_executes_on_zero_inputs() {
+    // zeros are in-domain for every entry except the LU solves (singular
+    // matrix) — those are exercised with real inputs in other tests.
+    let Some(mut rt) = runtime() else { return };
+    for name in rt.artifact_names() {
+        if name.contains("solve") {
+            continue;
+        }
+        let meta = rt.manifest.get(&name).unwrap().clone();
+        let inputs: Vec<xla::Literal> = meta
+            .inputs
+            .iter()
+            .map(|s| Runtime::zeros_like(s).unwrap())
+            .collect();
+        let out = rt
+            .execute(&name, &inputs)
+            .unwrap_or_else(|e| panic!("{name} failed to execute: {e:#}"));
+        assert_eq!(out.len(), meta.outputs.len(), "{name} output arity");
+    }
+}
+
+#[test]
+fn spmv_artifact_matches_host_stencil() {
+    let Some(mut rt) = runtime() else { return };
+    let n = 32usize;
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..n * n * n).map(|_| rng.normal() as f32).collect();
+    let out = rt
+        .execute("spmv_32", &[Runtime::lit_f32(&x, &[n, n, n]).unwrap()])
+        .unwrap();
+    let y = Runtime::to_vec_f32(&out[0]).unwrap();
+
+    // host oracle: 26*x - sum of 26 neighbours (zero halo)
+    let idx = |i: usize, j: usize, k: usize| (i * n + j) * n + k;
+    let mut checked = 0;
+    for &(i, j, k) in &[(0usize, 0usize, 0usize), (5, 7, 9), (31, 31, 31), (16, 0, 20)] {
+        let mut acc = 26.0f64 * x[idx(i, j, k)] as f64;
+        for di in -1i64..=1 {
+            for dj in -1i64..=1 {
+                for dk in -1i64..=1 {
+                    if di == 0 && dj == 0 && dk == 0 {
+                        continue;
+                    }
+                    let (ii, jj, kk) =
+                        (i as i64 + di, j as i64 + dj, k as i64 + dk);
+                    if (0..n as i64).contains(&ii)
+                        && (0..n as i64).contains(&jj)
+                        && (0..n as i64).contains(&kk)
+                    {
+                        acc -= x[idx(ii as usize, jj as usize, kk as usize)]
+                            as f64;
+                    }
+                }
+            }
+        }
+        let got = y[idx(i, j, k)] as f64;
+        assert!(
+            (got - acc).abs() < 1e-3,
+            "y[{i},{j},{k}] = {got}, expect {acc}"
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 4);
+}
+
+#[test]
+fn attention_artifact_first_row_is_v0() {
+    // causal mask property checked end-to-end through PJRT
+    let Some(mut rt) = runtime() else { return };
+    let s = 64usize;
+    let mut rng = Rng::new(13);
+    let q: Vec<f32> = (0..s * s).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f32> = (0..s * s).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..s * s).map(|_| rng.normal() as f32).collect();
+    let out = rt
+        .execute(
+            "attention_64",
+            &[
+                Runtime::lit_f32(&q, &[s, s]).unwrap(),
+                Runtime::lit_f32(&k, &[s, s]).unwrap(),
+                Runtime::lit_f32(&v, &[s, s]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let o = Runtime::to_vec_f32(&out[0]).unwrap();
+    for j in 0..s {
+        assert!(
+            (o[j] - v[j]).abs() < 1e-4,
+            "out[0][{j}] = {}, v[0][{j}] = {}",
+            o[j],
+            v[j]
+        );
+    }
+}
+
+#[test]
+fn gemm_bf16_close_to_f32() {
+    let Some(mut rt) = runtime() else { return };
+    let n = 256usize;
+    let mut rng = Rng::new(17);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+    let la = Runtime::lit_f32(&a, &[n, n]).unwrap();
+    let lb = Runtime::lit_f32(&b, &[n, n]).unwrap();
+    let c32 = Runtime::to_vec_f32(
+        &rt.execute("gemm_f32_256", &[la.clone(), lb.clone()]).unwrap()[0],
+    )
+    .unwrap();
+    let c16 = Runtime::to_vec_f32(
+        &rt.execute("gemm_bf16_256", &[la, lb]).unwrap()[0],
+    )
+    .unwrap();
+    let max_abs = c32.iter().fold(0f32, |m, x| m.max(x.abs()));
+    let max_err = c32
+        .iter()
+        .zip(&c16)
+        .fold(0f32, |m, (x, y)| m.max((x - y).abs()));
+    // bf16 inputs, f32 accumulate: relative error well under 2%
+    assert!(max_err / max_abs < 0.02, "rel err {}", max_err / max_abs);
+}
+
+#[test]
+fn train_init_is_deterministic_across_calls() {
+    let Some(mut rt) = runtime() else { return };
+    let p1 = rt.execute("train_init", &[Runtime::lit_scalar_i32(3)]).unwrap();
+    let p2 = rt.execute("train_init", &[Runtime::lit_scalar_i32(3)]).unwrap();
+    let a = Runtime::to_vec_f32(&p1[0]).unwrap();
+    let b = Runtime::to_vec_f32(&p2[0]).unwrap();
+    assert_eq!(a, b);
+    let p3 = rt.execute("train_init", &[Runtime::lit_scalar_i32(4)]).unwrap();
+    let c = Runtime::to_vec_f32(&p3[0]).unwrap();
+    assert_ne!(a, c);
+}
+
+#[test]
+fn hpl_solve_solves() {
+    let Some(mut rt) = runtime() else { return };
+    let n = 256usize;
+    let mut rng = Rng::new(23);
+    let mut a = vec![0f32; n * n];
+    for (i, v) in a.iter_mut().enumerate() {
+        *v = rng.normal() as f32;
+        if i % (n + 1) == 0 {
+            *v += n as f32;
+        }
+    }
+    let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let out = rt
+        .execute(
+            "hpl_solve_256",
+            &[
+                Runtime::lit_f32(&a, &[n, n]).unwrap(),
+                Runtime::lit_f32(&b, &[n]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let x = Runtime::to_vec_f32(&out[0]).unwrap();
+    // host residual check: ||Ax - b||_inf small relative to scales
+    let mut rmax = 0f64;
+    for i in 0..n {
+        let mut ax = 0f64;
+        for j in 0..n {
+            ax += a[i * n + j] as f64 * x[j] as f64;
+        }
+        rmax = rmax.max((ax - b[i] as f64).abs());
+    }
+    assert!(rmax < 1e-2, "residual {rmax}");
+}

@@ -1,0 +1,129 @@
+//! Integration tests over the whole simulator stack: the paper's headline
+//! *shape* claims must hold when the layers are composed through the
+//! Platform API (not just in per-module unit tests).
+
+use sakuraone::benchmarks::hpcg::HpcgParams;
+use sakuraone::benchmarks::hpl::HplParams;
+use sakuraone::benchmarks::hpl_mxp::MxpParams;
+use sakuraone::benchmarks::io500::Io500Params;
+use sakuraone::config::{ClusterConfig, TopologyKind};
+use sakuraone::coordinator::Platform;
+
+#[test]
+fn all_four_tables_reproduce_within_tolerance() {
+    let mut p = Platform::new(ClusterConfig::default());
+
+    let hpl = p.hpl(&HplParams::paper());
+    assert!((hpl.rmax / 1e15 - 33.95).abs() / 33.95 < 0.10);
+
+    let hpcg = p.hpcg(&HpcgParams::paper());
+    assert!((hpcg.final_gflops - 396_295.0).abs() / 396_295.0 < 0.10);
+
+    let mxp = p.mxp(&MxpParams::paper());
+    assert!((mxp.rmax / 1e15 - 339.86).abs() / 339.86 < 0.10);
+
+    let r10 = p.io500(&Io500Params::paper_10node());
+    let r96 = p.io500(&Io500Params::paper_96node());
+    assert!((r10.total_score - 181.91).abs() / 181.91 < 0.15);
+    assert!((r96.total_score - 214.09).abs() / 214.09 < 0.15);
+
+    // cross-benchmark shape: MxP ~10x HPL; HPCG ~1% of HPL
+    let speedup = mxp.rmax / hpl.rmax;
+    assert!(speedup > 8.0 && speedup < 12.0, "speedup {speedup}");
+    let frac = hpcg.final_gflops * 1e9 / hpl.rmax;
+    assert!(frac > 0.005 && frac < 0.02, "hpcg/hpl {frac}");
+
+    // metrics recorded for every run
+    assert_eq!(p.metrics.counter("jobs.completed"), 5);
+}
+
+#[test]
+fn io500_crossover_shape_holds() {
+    let mut p = Platform::new(ClusterConfig::default());
+    let r10 = p.io500(&Io500Params::paper_10node());
+    let r96 = p.io500(&Io500Params::paper_96node());
+    // 96 nodes win overall and on metadata, lose on easy bandwidth
+    assert!(r96.total_score > r10.total_score);
+    assert!(r96.iops_score_k > r10.iops_score_k);
+    assert!(
+        r96.phase("ior-easy-write").score < r10.phase("ior-easy-write").score
+    );
+    assert!(r96.phase("find").score > r10.phase("find").score);
+}
+
+#[test]
+fn rail_optimized_is_the_right_choice_for_this_workload() {
+    // The design argument of paper §2.2 as an executable claim: among the
+    // fabrics with a routable cross-rail path, rail-optimized minimizes
+    // the hierarchical all-reduce time at equal link budgets.
+    use sakuraone::collectives::CollectiveEngine;
+    use sakuraone::topology::builders::build;
+
+    let mut times = std::collections::HashMap::new();
+    for kind in [
+        TopologyKind::RailOptimized,
+        TopologyKind::FatTree,
+        TopologyKind::Dragonfly,
+    ] {
+        let mut cfg = ClusterConfig::default();
+        cfg.network.topology = kind;
+        let f = build(&cfg);
+        let engine = CollectiveEngine::new(&f, &cfg);
+        let nodes: Vec<usize> = (0..cfg.nodes).collect();
+        let t = engine.hierarchical_allreduce(&nodes, 1e9).total;
+        times.insert(kind.name(), t);
+    }
+    assert!(times["rail-optimized"] <= times["fat-tree"]);
+    assert!(times["rail-optimized"] < times["dragonfly"]);
+}
+
+#[test]
+fn hpl_scales_down_gracefully() {
+    // weak-ish scaling: smaller cluster, proportionally smaller N keeps
+    // per-GPU throughput in the same band
+    let mut cfg = ClusterConfig::default();
+    cfg.apply_override("nodes", "25").unwrap();
+    let mut p = Platform::new(cfg);
+    let params = HplParams {
+        n: 1_352_704, // ~N/2 for 1/4 the GPUs
+        p: 8,
+        q: 25,
+        ..HplParams::paper()
+    };
+    let r = p.hpl(&params);
+    let per_gpu = r.rmax_per_gpu / 1e12;
+    assert!(per_gpu > 35.0 && per_gpu < 55.0, "{per_gpu} TF/GPU");
+}
+
+#[test]
+fn degraded_storage_keeps_service() {
+    use sakuraone::benchmarks::io500::run_io500_on;
+    use sakuraone::storage::LustreModel;
+    let cfg = ClusterConfig::default();
+    let healthy = run_io500_on(
+        &LustreModel::sakuraone(&cfg.storage),
+        &Io500Params::paper_96node(),
+    );
+    let degraded = run_io500_on(
+        &LustreModel::sakuraone(&cfg.storage).with_switch_failure(),
+        &Io500Params::paper_96node(),
+    );
+    assert!(degraded.total_score > 0.0);
+    assert!(degraded.bw_score_gib <= healthy.bw_score_gib);
+    // paper §2.3: bandwidth halves at most, service continues
+    assert!(degraded.bw_score_gib >= 0.4 * healthy.bw_score_gib);
+}
+
+#[test]
+fn scheduler_feeds_rail_local_allocations() {
+    use sakuraone::scheduler::{Job, SlurmSim};
+    let cfg = ClusterConfig::default();
+    let mut sim = SlurmSim::new(&cfg);
+    for id in 0..20 {
+        sim.submit(Job::new(id, "w", 10, 100.0, 50.0));
+    }
+    let stats = sim.run();
+    assert_eq!(stats.completed, 20);
+    // 10-node jobs always fit one 50-node pod
+    assert!((stats.single_pod_fraction - 1.0).abs() < 1e-9);
+}

@@ -1,0 +1,285 @@
+//! Property-based tests on coordinator invariants (routing, scheduling,
+//! flow conservation, placement) using the in-repo helper
+//! (`util::proptest`; the proptest crate is not vendored — see Cargo.toml).
+
+use sakuraone::config::{ClusterConfig, TopologyKind};
+use sakuraone::network::{Flow, FlowSim, RoceParams};
+use sakuraone::scheduler::{place, Job, SlurmSim};
+use sakuraone::topology::builders::build;
+use sakuraone::topology::Router;
+use sakuraone::util::proptest::{check, Config};
+use sakuraone::util::rng::Rng;
+
+#[test]
+fn prop_routes_are_valid_walks() {
+    // every ECMP route is a connected walk from src to dst with no
+    // repeated device (loop-free), on every topology
+    for kind in [
+        TopologyKind::RailOptimized,
+        TopologyKind::FatTree,
+        TopologyKind::Dragonfly,
+    ] {
+        let mut cfg = ClusterConfig::default();
+        cfg.network.topology = kind;
+        cfg.apply_override("nodes", "24").unwrap();
+        let fabric = build(&cfg);
+        check(
+            Config { cases: 80, seed: 0xA11CE, ..Default::default() },
+            |r: &mut Rng| {
+                (
+                    r.below(24) as usize,
+                    r.below(8) as usize,
+                    r.below(24) as usize,
+                    r.below(8) as usize,
+                    r.next_u64(),
+                )
+            },
+            |&(n1, r1, n2, r2, label)| {
+                let src = fabric.host(n1, r1).unwrap();
+                let dst = fabric.host(n2, r2).unwrap();
+                if src == dst {
+                    return Ok(());
+                }
+                let mut router = Router::new(&fabric);
+                let Some(path) = router.route(src, dst, label) else {
+                    return Ok(()); // unroutable is allowed (rail-only)
+                };
+                let mut at = src;
+                let mut seen = std::collections::HashSet::from([src]);
+                for &l in &path {
+                    let link = &fabric.links[l];
+                    if link.from != at {
+                        return Err(format!("disconnected walk at link {l}"));
+                    }
+                    at = link.to;
+                    if !seen.insert(at) {
+                        return Err(format!("loop through device {at}"));
+                    }
+                }
+                if at != dst {
+                    return Err("walk does not reach dst".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_ecmp_is_deterministic_per_label() {
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    check(
+        Config { cases: 50, seed: 7, ..Default::default() },
+        |r: &mut Rng| (r.below(100) as usize, r.below(100) as usize, r.next_u64()),
+        |&(n1, n2, label)| {
+            let src = fabric.host(n1, 0).unwrap();
+            let dst = fabric.host(n2, 0).unwrap();
+            let mut ra = Router::new(&fabric);
+            let mut rb = Router::new(&fabric);
+            if ra.route(src, dst, label) != rb.route(src, dst, label) {
+                return Err("route not deterministic".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_flowsim_conserves_and_bounds() {
+    // makespan is at least the per-NIC serialization lower bound and at
+    // most the fully-serialized upper bound
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let host_bw = 400e9 / 8.0 * cfg.network.ethernet_efficiency * 0.95;
+    check(
+        Config { cases: 25, seed: 0xF10, ..Default::default() },
+        |r: &mut Rng| {
+            let n = 2 + r.below(12) as usize;
+            (0..n)
+                .map(|i| {
+                    (
+                        r.below(20) as usize,
+                        r.below(20) as usize,
+                        1e6 + r.uniform() * 5e7,
+                        i as u64,
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |flows| {
+            let fs: Vec<Flow> = flows
+                .iter()
+                .map(|&(a, b, bytes, label)| Flow {
+                    src: fabric.host(a, 1).unwrap(),
+                    dst: fabric.host(b, 1).unwrap(),
+                    bytes,
+                    start: 0.0,
+                    label,
+                })
+                .collect();
+            let mut sim = FlowSim::new(&fabric, RoceParams::default());
+            let rep = sim.run(&fs);
+            // lower bound: links are full duplex, so TX and RX serialize
+            // independently; the busiest direction of the busiest NIC
+            // bounds the makespan from below
+            let mut tx = std::collections::HashMap::<usize, f64>::new();
+            let mut rx = std::collections::HashMap::<usize, f64>::new();
+            for f in &fs {
+                if f.src != f.dst {
+                    *tx.entry(f.src).or_default() += f.bytes;
+                    *rx.entry(f.dst).or_default() += f.bytes;
+                }
+            }
+            let lower = tx
+                .values()
+                .chain(rx.values())
+                .cloned()
+                .fold(0.0, f64::max)
+                / host_bw;
+            let total: f64 =
+                fs.iter().filter(|f| f.src != f.dst).map(|f| f.bytes).sum();
+            let upper = total / host_bw + 1e-3;
+            if rep.makespan < lower * 0.999 {
+                return Err(format!(
+                    "makespan {} below NIC bound {lower}",
+                    rep.makespan
+                ));
+            }
+            if rep.makespan > upper {
+                return Err(format!(
+                    "makespan {} above serial bound {upper}",
+                    rep.makespan
+                ));
+            }
+            if rep.max_util() > 1.0 + 1e-9 {
+                return Err(format!("link util {} > 1", rep.max_util()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_never_oversubscribes() {
+    // at no time do concurrently-running allocations overlap or exceed the
+    // node count; every job runs exactly once
+    check(
+        Config { cases: 20, seed: 0x51u64, ..Default::default() },
+        |r: &mut Rng| {
+            let n = 5 + r.below(40) as usize;
+            (0..n)
+                .map(|_| {
+                    (
+                        1 + r.below(60) as usize,
+                        10.0 + r.uniform() * 500.0,
+                        r.uniform() * 1000.0,
+                        r.below(5) as i64,
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |jobs| {
+            let cfg = ClusterConfig::default();
+            let mut sim = SlurmSim::new(&cfg);
+            for (id, &(nodes, rt, submit, prio)) in jobs.iter().enumerate() {
+                sim.submit(
+                    Job::new(id as u64, "p", nodes, rt * 2.0, rt)
+                        .with_submit_time(submit)
+                        .with_priority(prio),
+                );
+            }
+            let stats = sim.run();
+            if stats.completed != jobs.len() {
+                return Err(format!(
+                    "{} of {} jobs completed",
+                    stats.completed,
+                    jobs.len()
+                ));
+            }
+            // overlap check on the recorded history
+            let hist = &sim.history;
+            for (i, a) in hist.iter().enumerate() {
+                for b in hist.iter().skip(i + 1) {
+                    let overlap_time =
+                        a.start < b.end - 1e-9 && b.start < a.end - 1e-9;
+                    if overlap_time {
+                        for n in &a.nodes {
+                            if b.nodes.contains(n) {
+                                return Err(format!(
+                                    "node {n} double-booked by jobs {} and {}",
+                                    a.job_id, b.job_id
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_placement_exact_count_and_no_duplicates() {
+    let cfg = ClusterConfig::default();
+    check(
+        Config { cases: 100, seed: 3, ..Default::default() },
+        |r: &mut Rng| {
+            let mut free: Vec<usize> = (0..100).filter(|_| r.uniform() < 0.6).collect();
+            r.shuffle(&mut free);
+            free.sort_unstable();
+            let want = 1 + r.below(50) as usize;
+            (free, want)
+        },
+        |(free, want)| {
+            match place(&cfg, free, *want) {
+                None => {
+                    if free.len() >= *want {
+                        return Err("placement refused despite capacity".into());
+                    }
+                }
+                Some(p) => {
+                    if p.nodes.len() != *want {
+                        return Err(format!(
+                            "granted {} nodes, wanted {want}",
+                            p.nodes.len()
+                        ));
+                    }
+                    let set: std::collections::HashSet<_> =
+                        p.nodes.iter().collect();
+                    if set.len() != p.nodes.len() {
+                        return Err("duplicate nodes in placement".into());
+                    }
+                    for n in &p.nodes {
+                        if !free.contains(n) {
+                            return Err(format!("granted busy node {n}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_collective_times_monotone_in_bytes() {
+    use sakuraone::collectives::CollectiveEngine;
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let engine = CollectiveEngine::new(&fabric, &cfg);
+    let nodes: Vec<usize> = (0..16).collect();
+    check(
+        Config { cases: 20, seed: 9, ..Default::default() },
+        |r: &mut Rng| 1e6 + r.uniform() * 1e9,
+        |&bytes| {
+            let t1 = engine.hierarchical_allreduce(&nodes, bytes).total;
+            let t2 = engine.hierarchical_allreduce(&nodes, bytes * 2.0).total;
+            if t2 <= t1 {
+                return Err(format!("not monotone: {t1} vs {t2}"));
+            }
+            Ok(())
+        },
+    );
+}
