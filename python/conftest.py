@@ -1,0 +1,7 @@
+"""Pytest anchor: puts ``python/`` on sys.path so ``from compile import …``
+works no matter where pytest is invoked from."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -24,7 +24,7 @@ use crate::hardware::{GpuModel, Precision};
 use crate::topology::builders::build;
 use crate::util::table::kv_table;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HplParams {
     pub n: u64,
     pub nb: u64,

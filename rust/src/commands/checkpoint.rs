@@ -1,0 +1,53 @@
+//! `sakuraone checkpoint` — LLM checkpointing cost over the Lustre model.
+
+use anyhow::Result;
+
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::storage::{checkpoint_cost, CheckpointConfig, LustreModel};
+use crate::util::cli::Args;
+use crate::util::table::kv_table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let step = args.get_f64("step-time", 5.3).map_err(anyhow::Error::msg)?;
+    let mut ck = CheckpointConfig::llama70b(step);
+    ck.params = args.get_f64("params", ck.params).map_err(anyhow::Error::msg)?;
+    ck.interval_steps = args
+        .get_u64("interval", ck.interval_steps)
+        .map_err(anyhow::Error::msg)?;
+    let model = LustreModel::sakuraone(&cfg.storage);
+    let r = checkpoint_cost(&model, &ck);
+    if !super::quiet(args) {
+        println!(
+            "{}",
+            kv_table(
+                &format!(
+                    "LLM checkpointing — {:.0}B params every {} steps",
+                    ck.params / 1e9,
+                    ck.interval_steps
+                ),
+                &[
+                    ("checkpoint size", crate::util::units::fmt_bytes(r.bytes)),
+                    (
+                        "write bandwidth",
+                        crate::util::units::fmt_bandwidth(r.write_bps),
+                    ),
+                    ("write time", format!("{:.1} s", r.write_seconds)),
+                    ("training stall", format!("{:.1} s", r.stall_seconds)),
+                    ("overhead", format!("{:.3}%", r.overhead_fraction * 100.0)),
+                ],
+            )
+        );
+    }
+    let mut m = RunManifest::new("checkpoint", 0, cfg.to_json());
+    m.push(
+        ScenarioRecord::new("checkpoint/llama70b", "checkpoint")
+            .param("params_b", ck.params / 1e9)
+            .param("interval_steps", ck.interval_steps)
+            .metric("bytes", r.bytes)
+            .metric("write_seconds", r.write_seconds)
+            .metric("stall_seconds", r.stall_seconds)
+            .metric("overhead_pct", r.overhead_fraction * 100.0),
+    );
+    Ok(m)
+}

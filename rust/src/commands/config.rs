@@ -1,0 +1,24 @@
+//! `sakuraone config` — inspect/dump the (possibly overridden) cluster.
+
+use anyhow::Result;
+
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::topology::render::render_system;
+use crate::util::cli::Args;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    if args.flag("dump") {
+        println!("{}", cfg.to_json().emit());
+    } else if !super::quiet(args) {
+        println!("{}", render_system(&cfg));
+    }
+    let mut m = RunManifest::new("config", 0, cfg.to_json());
+    m.push(
+        ScenarioRecord::new("config/cluster", "config")
+            .param("topology", cfg.network.topology.name())
+            .metric("nodes", cfg.nodes as f64)
+            .metric("total_gpus", cfg.total_gpus() as f64),
+    );
+    Ok(m)
+}

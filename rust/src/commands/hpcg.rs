@@ -1,0 +1,41 @@
+//! `sakuraone hpcg` — Table 8 (High Performance Conjugate Gradients).
+
+use anyhow::Result;
+
+use crate::benchmarks::hpcg::HpcgParams;
+use crate::benchmarks::report;
+use crate::coordinator::Platform;
+use crate::runtime::run_manifest::RunManifest;
+use crate::runtime::sweep::hpcg_record;
+use crate::util::cli::Args;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let mut params = HpcgParams::paper();
+    let mut custom = false;
+    if let Some(d) = args.get("dims") {
+        let (x, y, z) = super::parse_grid3(d, "--dims")?;
+        params.nx = x;
+        params.ny = y;
+        params.nz = z;
+        custom = true;
+    }
+    if let Some(g) = args.get("grid") {
+        let (p, q, r) = super::parse_grid3(g, "--grid")?;
+        params.px = p as usize;
+        params.py = q as usize;
+        params.pz = r as usize;
+        custom = true;
+    }
+    let mut platform = Platform::new(cfg.clone());
+    let r = platform.hpcg(&params);
+    if !super::quiet(args) {
+        println!("{}", r.table());
+        println!("{}", report::hpcg_compare(&r).render());
+    }
+    // Shared record builder: `hpcg` and `suite` emit the same shape.
+    let id = if custom { "hpcg/custom" } else { "hpcg/paper" };
+    let mut m = RunManifest::new("hpcg", 0, cfg.to_json());
+    m.push(hpcg_record(id, &r, !custom));
+    Ok(m)
+}

@@ -1,0 +1,40 @@
+//! `sakuraone hpl` — Table 7 (High Performance Linpack).
+
+use anyhow::Result;
+
+use crate::benchmarks::hpl::HplParams;
+use crate::benchmarks::report;
+use crate::coordinator::Platform;
+use crate::runtime::run_manifest::RunManifest;
+use crate::runtime::sweep::hpl_record;
+use crate::util::cli::Args;
+
+pub fn params_from(args: &Args) -> Result<HplParams> {
+    let mut params = HplParams::paper();
+    params.n = args.get_u64("n", params.n).map_err(anyhow::Error::msg)?;
+    params.nb = args.get_u64("nb", params.nb).map_err(anyhow::Error::msg)?;
+    params.stride =
+        args.get_usize("stride", params.stride).map_err(anyhow::Error::msg)?;
+    if let Some(g) = args.get("grid") {
+        let (p, q) = super::parse_grid2(g)?;
+        params.p = p;
+        params.q = q;
+    }
+    Ok(params)
+}
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let params = params_from(args)?;
+    let is_paper = params == HplParams::paper();
+    let mut platform = Platform::new(cfg.clone());
+    let r = platform.hpl(&params);
+    if !super::quiet(args) {
+        println!("{}", r.table());
+        println!("{}", report::hpl_compare(&r).render());
+    }
+    let mut m = RunManifest::new("hpl", 0, cfg.to_json());
+    let id = if is_paper { "hpl/paper" } else { "hpl/custom" };
+    m.push(hpl_record(id, &r, is_paper));
+    Ok(m)
+}

@@ -1,0 +1,59 @@
+//! `sakuraone io500` / `io500-sweep` — Table 10 (IO500 on the Lustre model).
+
+use anyhow::Result;
+
+use crate::benchmarks::io500::{comparison_table, run_io500_on, Io500Params};
+use crate::benchmarks::report;
+use crate::coordinator::Platform;
+use crate::runtime::run_manifest::RunManifest;
+use crate::runtime::sweep::io500_record;
+use crate::storage::LustreModel;
+use crate::util::cli::Args;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let nodes = args.get_usize("client-nodes", 10).map_err(anyhow::Error::msg)?;
+    let ppn = args.get_usize("ppn", 128).map_err(anyhow::Error::msg)?;
+    let params = Io500Params {
+        client_nodes: nodes,
+        procs_per_node: ppn,
+        ..Io500Params::paper_10node()
+    };
+    let degraded = args.flag("degraded");
+    let r = if degraded {
+        let model =
+            LustreModel::sakuraone(&cfg.storage).with_switch_failure();
+        if !super::quiet(args) {
+            println!("(degraded: one storage switch failed)");
+        }
+        run_io500_on(&model, &params)
+    } else {
+        Platform::new(cfg.clone()).io500(&params)
+    };
+    if !super::quiet(args) {
+        println!("{}", r.table().render());
+    }
+    let mut m = RunManifest::new("io500", 0, cfg.to_json());
+    let id = format!(
+        "io500/{nodes}node{}",
+        if degraded { "-degraded" } else { "" }
+    );
+    m.push(io500_record(&id, &r, degraded));
+    Ok(m)
+}
+
+/// `io500-sweep`: the paper's 10-node vs 96-node comparison.
+pub fn handle_sweep(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let mut platform = Platform::new(cfg.clone());
+    let r10 = platform.io500(&Io500Params::paper_10node());
+    let r96 = platform.io500(&Io500Params::paper_96node());
+    if !super::quiet(args) {
+        println!("{}", comparison_table(&r10, &r96).render());
+        println!("{}", report::io500_compare(&r10, &r96).render());
+    }
+    let mut m = RunManifest::new("io500-sweep", 0, cfg.to_json());
+    m.push(io500_record("io500/10node", &r10, false));
+    m.push(io500_record("io500/96node", &r96, false));
+    Ok(m)
+}

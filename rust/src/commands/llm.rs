@@ -1,0 +1,63 @@
+//! `sakuraone llm` — distributed LLM step-time model.
+
+use anyhow::Result;
+
+use crate::llm::{step_time, LlmConfig};
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::util::cli::Args;
+use crate::util::table::kv_table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let fabric = crate::topology::build(&cfg);
+    let mut llm = LlmConfig::llama70b_on_sakuraone();
+    llm.params = args.get_f64("params", llm.params).map_err(anyhow::Error::msg)?;
+    llm.dp = args.get_usize("dp", llm.dp).map_err(anyhow::Error::msg)?;
+    llm.tp = args.get_usize("tp", llm.tp).map_err(anyhow::Error::msg)?;
+    llm.pp = args.get_usize("pp", llm.pp).map_err(anyhow::Error::msg)?;
+    llm.batch_tokens = args
+        .get_f64("batch-tokens", llm.batch_tokens)
+        .map_err(anyhow::Error::msg)?;
+    let st = step_time(&cfg, &fabric, &llm);
+    if !super::quiet(args) {
+        println!(
+            "{}",
+            kv_table(
+                &format!(
+                    "LLM step-time model — {:.0}B params on {} GPUs (dp{} tp{} pp{})",
+                    llm.params / 1e9,
+                    llm.gpus(),
+                    llm.dp,
+                    llm.tp,
+                    llm.pp
+                ),
+                &[
+                    ("step time", format!("{:.2} s", st.total)),
+                    ("compute", format!("{:.2} s", st.compute)),
+                    ("tp comm (NVSwitch)", format!("{:.3} s", st.tp_comm)),
+                    ("dp comm (rails)", format!("{:.3} s", st.dp_comm)),
+                    ("pp bubble", format!("{:.3} s", st.pp_bubble)),
+                    ("MFU", format!("{:.1}%", st.mfu * 100.0)),
+                    ("throughput", format!("{:.0} tokens/s", st.tokens_per_s)),
+                ],
+            )
+        );
+    }
+    let mut m = RunManifest::new("llm", 0, cfg.to_json());
+    m.push(
+        ScenarioRecord::new("llm/step-time", "llm")
+            .param("topology", cfg.network.topology.name())
+            .param("gpus", llm.gpus())
+            .param("dp", llm.dp)
+            .param("tp", llm.tp)
+            .param("pp", llm.pp)
+            .metric("step_time_s", st.total)
+            .metric("compute_s", st.compute)
+            .metric("tp_comm_s", st.tp_comm)
+            .metric("dp_comm_s", st.dp_comm)
+            .metric("pp_bubble_s", st.pp_bubble)
+            .metric("mfu_pct", st.mfu * 100.0)
+            .metric("tokens_per_s", st.tokens_per_s),
+    );
+    Ok(m)
+}

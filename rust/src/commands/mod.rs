@@ -1,0 +1,150 @@
+//! CLI subcommands. `main.rs` only parses arguments and dispatches here;
+//! every handler exposes the uniform entry point
+//! `handle(&Args) -> Result<RunManifest>` so automation gets the same
+//! machine-readable artifact (`--json`, `--out FILE`) from every command,
+//! and human-readable tables are printed unless `--json` asks for quiet.
+
+pub mod checkpoint;
+pub mod config;
+pub mod hpcg;
+pub mod hpl;
+pub mod io500;
+pub mod llm;
+pub mod mxp;
+pub mod power;
+pub mod report;
+pub mod resilience;
+pub mod sched;
+pub mod suite;
+pub mod topo;
+pub mod train;
+pub mod validate;
+
+use anyhow::{bail, Result};
+
+use crate::config::ClusterConfig;
+use crate::util::cli::Args;
+
+/// Boolean flags across all subcommands (everything else is `--key value`).
+pub const FLAGS: &[&str] = &[
+    "help", "render", "nics", "bisection", "dump", "top500", "rankings",
+    "software", "json", "degraded", "quick", "serial",
+];
+
+/// Shared `--nodes/--topology/...` overrides on the paper's default cluster.
+pub(crate) fn cluster_config(args: &Args) -> Result<ClusterConfig> {
+    let mut cfg = ClusterConfig::default();
+    for key in ["nodes", "topology", "rails", "spines", "gpus-per-node"] {
+        if let Some(v) = args.get(key) {
+            cfg.apply_override(key, v).map_err(anyhow::Error::msg)?;
+        }
+    }
+    Ok(cfg)
+}
+
+pub(crate) fn parse_grid2(s: &str) -> Result<(usize, usize)> {
+    let parts: Vec<&str> = s.split('x').collect();
+    if parts.len() != 2 {
+        bail!("grid must be PxQ, got {s:?}");
+    }
+    Ok((parts[0].parse()?, parts[1].parse()?))
+}
+
+pub(crate) fn parse_grid3(s: &str, what: &str) -> Result<(u64, u64, u64)> {
+    let parts: Vec<&str> = s.split('x').collect();
+    if parts.len() != 3 {
+        bail!("{what} must be XxYxZ, got {s:?}");
+    }
+    Ok((parts[0].parse()?, parts[1].parse()?, parts[2].parse()?))
+}
+
+/// Human-readable output is suppressed when the caller asked for JSON on
+/// stdout (so the manifest can be piped without table noise).
+pub(crate) fn quiet(args: &Args) -> bool {
+    args.flag("json")
+}
+
+pub fn usage() -> String {
+    format!(
+        r#"sakuraone {} — SAKURAONE platform reproduction (see DESIGN.md)
+
+USAGE: sakuraone <subcommand> [options]
+
+  topo      [--render] [--nics] [--bisection] [--topology KIND]
+  hpl       [--n N] [--nb NB] [--grid PxQ] [--stride S]
+  hpcg      [--dims XxYxZ] [--grid PxQxR]
+  mxp       [--n N] [--nb NB] [--grid PxQ] [--ir-iters K]
+  io500     [--client-nodes N] [--ppn P] [--degraded] | io500-sweep
+  train     [--steps N] [--seed S]
+  llm       [--params P] [--dp D --tp T --pp P] [--batch-tokens B]
+  sched     [--jobs N] [--seed S]
+  power     [--pue X]                 (paper §6 future work: energy/W)
+  checkpoint [--params P] [--interval K] [--step-time S]
+  resilience [--fail-spines N] [--fail-leaves N] [--cable-cuts F]
+  validate
+  report    [--top500] [--rankings] [--software]
+  config    [--dump] [--nodes N] [--topology KIND] ...
+  suite     [--quick] [--serial] [--workers N] [--seed S]
+            [--baseline FILE] [--tolerance PCT]
+
+Every subcommand also accepts:
+  --json        emit the run manifest as JSON on stdout (quiet tables)
+  --out FILE    write the run manifest to FILE
+
+Topology kinds: rail-optimized | rail-only | fat-tree | dragonfly"#,
+        crate::version()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), FLAGS).unwrap()
+    }
+
+    #[test]
+    fn suite_flags_parse() {
+        let a = parse(&[
+            "suite", "--json", "--quick", "--workers", "4", "--seed", "7",
+            "--baseline", "baselines/suite.json", "--tolerance", "2.5",
+        ]);
+        assert_eq!(a.subcommand.as_deref(), Some("suite"));
+        assert!(a.flag("json") && a.flag("quick") && !a.flag("serial"));
+        assert_eq!(a.get_usize("workers", 1).unwrap(), 4);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.get("baseline"), Some("baselines/suite.json"));
+        assert_eq!(a.get_f64("tolerance", 5.0).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn out_and_json_flags_available_everywhere() {
+        let a = parse(&["hpl", "--json", "--out", "m.json", "--n", "1024"]);
+        assert!(quiet(&a));
+        assert_eq!(a.get("out"), Some("m.json"));
+        assert_eq!(a.get_u64("n", 0).unwrap(), 1024);
+    }
+
+    #[test]
+    fn cluster_config_overrides_apply() {
+        let a = parse(&["topo", "--nodes", "16", "--topology", "fat-tree"]);
+        let cfg = cluster_config(&a).unwrap();
+        assert_eq!(cfg.nodes, 16);
+        assert_eq!(cfg.network.topology.name(), "fat-tree");
+    }
+
+    #[test]
+    fn bad_override_is_error() {
+        let a = parse(&["topo", "--topology", "torus"]);
+        assert!(cluster_config(&a).is_err());
+    }
+
+    #[test]
+    fn grid_parsers() {
+        assert_eq!(parse_grid2("16x49").unwrap(), (16, 49));
+        assert!(parse_grid2("16").is_err());
+        assert_eq!(parse_grid3("8x7x14", "--grid").unwrap(), (8, 7, 14));
+        assert!(parse_grid3("8x7", "--grid").is_err());
+    }
+}

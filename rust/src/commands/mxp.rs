@@ -1,0 +1,36 @@
+//! `sakuraone mxp` — Table 9 (HPL-MxP mixed-precision Linpack).
+
+use anyhow::Result;
+
+use crate::benchmarks::hpl_mxp::MxpParams;
+use crate::benchmarks::report;
+use crate::coordinator::Platform;
+use crate::runtime::run_manifest::RunManifest;
+use crate::runtime::sweep::mxp_record;
+use crate::util::cli::Args;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let mut params = MxpParams::paper();
+    params.n = args.get_u64("n", params.n).map_err(anyhow::Error::msg)?;
+    params.nb = args.get_u64("nb", params.nb).map_err(anyhow::Error::msg)?;
+    params.ir_iters = args
+        .get_usize("ir-iters", params.ir_iters as usize)
+        .map_err(anyhow::Error::msg)? as u32;
+    if let Some(g) = args.get("grid") {
+        let (p, q) = super::parse_grid2(g)?;
+        params.p = p;
+        params.q = q;
+    }
+    let is_paper = params == MxpParams::paper();
+    let mut platform = Platform::new(cfg.clone());
+    let r = platform.mxp(&params);
+    if !super::quiet(args) {
+        println!("{}", r.table());
+        println!("{}", report::mxp_compare(&r).render());
+    }
+    let mut m = RunManifest::new("mxp", 0, cfg.to_json());
+    let id = if is_paper { "mxp/paper" } else { "mxp/custom" };
+    m.push(mxp_record(id, &r, is_paper));
+    Ok(m)
+}

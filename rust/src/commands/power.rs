@@ -1,0 +1,66 @@
+//! `sakuraone power` — energy extension (paper §6 future work).
+
+use anyhow::Result;
+
+use crate::benchmarks::hpcg::{run_hpcg, HpcgParams};
+use crate::benchmarks::hpl::{run_hpl, HplParams};
+use crate::benchmarks::hpl_mxp::{run_mxp, MxpParams};
+use crate::hardware::{energy_for, PowerModel};
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::util::cli::Args;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let mut model = PowerModel::sakuraone();
+    model.pue = args.get_f64("pue", model.pue).map_err(anyhow::Error::msg)?;
+
+    let hpl = run_hpl(&cfg, &HplParams::paper());
+    let hpcg = run_hpcg(&cfg, &HpcgParams::paper());
+    let mxp = run_mxp(&cfg, &MxpParams::paper());
+    let rows = [
+        energy_for(&model, &cfg, "HPL (FP64)", hpl.time_s, hpl.rmax, 0.85, 0.30),
+        energy_for(
+            &model,
+            &cfg,
+            "HPCG (memory-bound)",
+            1800.0,
+            hpcg.final_gflops * 1e9,
+            0.55,
+            0.25,
+        ),
+        energy_for(&model, &cfg, "HPL-MxP (FP8)", mxp.total_time_s, mxp.rmax, 0.90, 0.30),
+    ];
+    if !super::quiet(args) {
+        let mut t = crate::util::table::Table::new(
+            "Energy extension (paper §6 future work) — simulated",
+            &["Workload", "Wall (s)", "Avg power (kW)", "Energy (MJ)", "GFLOPS/W"],
+        );
+        for r in &rows {
+            t.row(&[
+                r.name.clone(),
+                format!("{:.1}", r.wall_s),
+                format!("{:.1}", r.avg_power_w / 1e3),
+                format!("{:.1}", r.energy_mj),
+                format!("{:.2}", r.gflops_per_w),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "facility power at HPL load (PUE {:.2}): {:.2} MW",
+            model.pue,
+            model.facility_power_w(&cfg, 0.85, 0.30) / 1e6
+        );
+    }
+    let mut m = RunManifest::new("power", 0, cfg.to_json());
+    for r in &rows {
+        m.push(
+            ScenarioRecord::new(&format!("power/{}", r.name), "power")
+                .param("pue", model.pue)
+                .metric("wall_s", r.wall_s)
+                .metric("avg_power_kw", r.avg_power_w / 1e3)
+                .metric("energy_mj", r.energy_mj)
+                .metric("gflops_per_w", r.gflops_per_w),
+        );
+    }
+    Ok(m)
+}

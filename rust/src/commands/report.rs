@@ -1,0 +1,47 @@
+//! `sakuraone report` — Table 3 census, rankings, software inventory.
+
+use anyhow::Result;
+
+use crate::benchmarks::top500;
+use crate::config::ClusterConfig;
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::util::cli::Args;
+use crate::util::table::kv_table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let quiet = super::quiet(args);
+    let census = args.flag("top500") || !args.flag("rankings") && !args.flag("software");
+    if census && !quiet {
+        println!("{}", top500::census_table().render());
+    }
+    if args.flag("rankings") && !quiet {
+        println!("{}", top500::rankings_table().render());
+    }
+    if args.flag("software") && !quiet {
+        let sw = ClusterConfig::default().software;
+        println!(
+            "{}",
+            kv_table(
+                "Table 6 — system software (inventory)",
+                &[
+                    ("OS", sw.os.clone()),
+                    ("Container", sw.container.clone()),
+                    ("Job scheduler", sw.scheduler.clone()),
+                    ("CUDA", sw.cuda_versions.join(", ")),
+                    ("cuDNN", sw.cudnn_versions.join(", ")),
+                    ("NCCL", sw.nccl_versions.join(", ")),
+                    ("Python envs", sw.python_envs.join(", ")),
+                ],
+            )
+        );
+    }
+    let cfg = ClusterConfig::default();
+    let entries = top500::interconnect_census();
+    let mut m = RunManifest::new("report", 0, cfg.to_json());
+    m.push(
+        ScenarioRecord::new("report/census", "report")
+            .param("sections", format!("{census}/{}/{}", args.flag("rankings"), args.flag("software")))
+            .metric("interconnect_families", entries.len() as f64),
+    );
+    Ok(m)
+}

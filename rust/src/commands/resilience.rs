@@ -1,0 +1,46 @@
+//! `sakuraone resilience` — failure drills on the fabric.
+
+use anyhow::Result;
+
+use crate::network::FailurePlan;
+use crate::runtime::run_manifest::RunManifest;
+use crate::runtime::sweep::{Scenario, ScenarioSpec};
+use crate::util::cli::Args;
+use crate::util::table::kv_table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let plan = FailurePlan {
+        spines: (0..args.get_usize("fail-spines", 0).map_err(anyhow::Error::msg)?)
+            .collect(),
+        leaves: (0..args.get_usize("fail-leaves", 0).map_err(anyhow::Error::msg)?)
+            .collect(),
+        cable_fraction: args
+            .get_f64("cable-cuts", 0.0)
+            .map_err(anyhow::Error::msg)?,
+        seed: args.get_u64("seed", 1).map_err(anyhow::Error::msg)?,
+    };
+    let scenario = Scenario::new(
+        "resilience/drill",
+        ScenarioSpec::Resilience { plan: plan.clone(), bytes: 1e9 },
+    );
+    let record = scenario.run(&cfg, plan.seed);
+    if !super::quiet(args) {
+        let get = |k: &str| record.metric_value(k).unwrap_or(f64::NAN);
+        println!(
+            "{}",
+            kv_table(
+                "Resilience drill — hierarchical all-reduce, 1 GiB gradients",
+                &[
+                    ("plan", format!("{plan:?}")),
+                    ("healthy", format!("{:.2} ms", get("healthy_ms"))),
+                    ("degraded", format!("{:.2} ms", get("degraded_ms"))),
+                    ("slowdown", format!("{:.2}x", get("slowdown_x"))),
+                ],
+            )
+        );
+    }
+    let mut m = RunManifest::new("resilience", plan.seed, cfg.to_json());
+    m.push(record);
+    Ok(m)
+}

@@ -1,0 +1,39 @@
+//! `sakuraone sched` — Slurm-like scheduler demo on a synthetic job mix.
+
+use anyhow::Result;
+
+use crate::runtime::run_manifest::RunManifest;
+use crate::runtime::sweep::{Scenario, ScenarioSpec};
+use crate::util::cli::Args;
+use crate::util::table::kv_table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let n_jobs = args.get_usize("jobs", 200).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let scenario =
+        Scenario::new(&format!("sched/{n_jobs}jobs"), ScenarioSpec::Sched { jobs: n_jobs });
+    let record = scenario.run(&cfg, seed);
+    if !super::quiet(args) {
+        let get = |k: &str| record.metric_value(k).unwrap_or(f64::NAN);
+        println!(
+            "{}",
+            kv_table(
+                &format!("Slurm-like scheduler — {n_jobs} jobs on {} nodes", cfg.nodes),
+                &[
+                    ("completed", format!("{}", get("completed") as u64)),
+                    ("backfilled", format!("{}", get("backfilled") as u64)),
+                    ("mean wait", format!("{:.1} s", get("mean_wait_s"))),
+                    ("utilization", format!("{:.1}%", get("utilization_pct"))),
+                    (
+                        "single-pod allocations",
+                        format!("{:.1}%", get("single_pod_pct")),
+                    ),
+                ],
+            )
+        );
+    }
+    let mut m = RunManifest::new("sched", seed, cfg.to_json());
+    m.push(record);
+    Ok(m)
+}

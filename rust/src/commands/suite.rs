@@ -1,0 +1,113 @@
+//! `sakuraone suite` — the full paper-vs-measured scenario sweep through
+//! the deterministic parallel engine (`runtime::sweep`), plus the CI
+//! regression gate against a committed baseline manifest.
+//!
+//! The manifest on stdout (`--json`) is byte-identical for any
+//! `--workers` value with the same seed; wall-clock timing goes to
+//! stderr only.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::run_manifest::{compare_to_baseline, RunManifest};
+use crate::runtime::sweep::{default_workers, run_sweep, standard_grid, SweepConfig};
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let quick = args.flag("quick");
+    let workers = if args.flag("serial") {
+        1
+    } else {
+        args.get_usize("workers", default_workers()).map_err(anyhow::Error::msg)?
+    };
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let scenarios = standard_grid(quick);
+
+    let t0 = std::time::Instant::now();
+    let manifest = run_sweep(&cfg, &scenarios, &SweepConfig { workers, seed });
+    let wall = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "suite: {} scenarios on {} worker(s) in {:.2}s (grid: {}, seed {})",
+        manifest.scenarios.len(),
+        workers,
+        wall,
+        if quick { "quick" } else { "full" },
+        seed,
+    );
+
+    if !super::quiet(args) {
+        println!("{}", summary_table(&manifest).render());
+        if let Some((id, metric, delta)) = manifest.worst_delta() {
+            println!("worst paper delta: {id}/{metric} at {delta:.2}%");
+        }
+    }
+
+    if let Some(path) = args.get("baseline") {
+        let tol = args.get_f64("tolerance", 5.0).map_err(anyhow::Error::msg)?;
+        if let Err(e) = gate(&manifest, path, tol) {
+            // On a regression we still emit the manifest wherever the
+            // caller asked (main.rs only emits on success), so CI can
+            // upload and diff the regressed run.
+            if args.flag("json") {
+                println!("{}", manifest.to_json().emit());
+            }
+            if let Some(out) = args.get("out") {
+                std::fs::write(out, manifest.to_json().emit())?;
+            }
+            return Err(e);
+        }
+    }
+    Ok(manifest)
+}
+
+/// Compare against the committed baseline; exits non-zero on regression.
+fn gate(manifest: &RunManifest, path: &str, tol_pct: f64) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading baseline {path}: {e}"))?;
+    let baseline = crate::util::json::Json::parse(&text)
+        .map_err(|e| anyhow!("parsing baseline {path}: {e}"))?;
+    let report = compare_to_baseline(manifest, &baseline, tol_pct)?;
+    if report.bootstrap {
+        eprintln!(
+            "baseline {path} is a bootstrap placeholder — gate skipped; \
+             refresh it from this run (see docs/ci.md)"
+        );
+        return Ok(());
+    }
+    if report.passed() {
+        eprintln!(
+            "baseline gate: {} metric(s) within {tol_pct}% of {path}",
+            report.compared
+        );
+        return Ok(());
+    }
+    for f in &report.failures {
+        eprintln!("baseline regression: {f}");
+    }
+    bail!("{} regression(s) vs baseline {path}", report.failures.len());
+}
+
+/// Human-readable digest of the sweep manifest.
+fn summary_table(manifest: &RunManifest) -> Table {
+    let mut t = Table::new(
+        "Suite sweep — paper vs measured",
+        &["Scenario", "Metric", "Paper", "Measured", "Delta"],
+    );
+    for s in &manifest.scenarios {
+        for m in &s.metrics {
+            let (paper, delta) = match (m.paper, m.delta_pct()) {
+                (Some(p), Some(d)) => (format!("{p:.2}"), format!("{d:+.1}%")),
+                _ => ("-".to_string(), "-".to_string()),
+            };
+            t.row(&[
+                s.id.clone(),
+                m.name.clone(),
+                paper,
+                format!("{:.2}", m.measured),
+                delta,
+            ]);
+        }
+    }
+    t
+}

@@ -1,0 +1,40 @@
+//! `sakuraone topo` — Figures 1/2, Table 2, bisection analysis.
+
+use anyhow::Result;
+
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::topology::render::{render_network, render_system};
+use crate::util::cli::Args;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let fabric = crate::topology::build(&cfg);
+    let quiet = super::quiet(args);
+    if !quiet {
+        println!("{}", render_system(&cfg));
+        if args.flag("render") {
+            println!("{}", render_network(&cfg, &fabric));
+        }
+        if args.flag("nics") {
+            let pcie = crate::hardware::NodePcieTopology::sakuraone();
+            println!("{}", pcie.usage_table().render());
+            println!("{}", pcie.matrix().render());
+        }
+    }
+    let bw = fabric.bisection_bandwidth(|n| crate::topology::pod_of(&cfg, n) == 0);
+    if !quiet && args.flag("bisection") {
+        println!(
+            "bisection bandwidth (pod split): {:.2} Tb/s payload",
+            bw * 8.0 / 1e12
+        );
+    }
+    let mut m = RunManifest::new("topo", 0, cfg.to_json());
+    m.push(
+        ScenarioRecord::new("topo/fabric", "topo")
+            .param("topology", cfg.network.topology.name())
+            .param("nodes", cfg.nodes)
+            .metric("bisection_tbs", bw * 8.0 / 1e12)
+            .metric("devices", fabric.devices.len() as f64),
+    );
+    Ok(m)
+}

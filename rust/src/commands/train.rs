@@ -1,0 +1,52 @@
+//! `sakuraone train` — real LLM training through the PJRT runtime.
+
+use anyhow::Result;
+
+use crate::coordinator::Platform;
+use crate::llm::train;
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::util::cli::Args;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let steps = args.get_usize("steps", 200).map_err(anyhow::Error::msg)? as u32;
+    let seed = args.get_usize("seed", 0).map_err(anyhow::Error::msg)? as i32;
+    let cfg = super::cluster_config(args)?;
+    let quiet = super::quiet(args);
+    let mut platform = Platform::new(cfg.clone());
+    let rt = platform.runtime()?;
+    if !quiet {
+        println!(
+            "training tiny-LM ({} steps, batch {}x{} tokens) on PJRT [{}] ...",
+            steps,
+            crate::llm::train::BATCH,
+            crate::llm::train::SEQ,
+            rt.platform()
+        );
+    }
+    let rep = train(rt, steps, seed)?;
+    if !quiet {
+        for (i, l) in rep.losses.iter().enumerate() {
+            if i % 10 == 0 || i + 1 == rep.losses.len() {
+                println!("step {i:>5}  loss {l:.4}");
+            }
+        }
+        println!(
+            "loss {:.4} -> {:.4} over {} tokens in {:.1}s ({:.0} tok/s)",
+            rep.initial_loss,
+            rep.final_loss,
+            rep.tokens_seen,
+            rep.wall_seconds,
+            rep.tokens_seen as f64 / rep.wall_seconds
+        );
+    }
+    let mut m = RunManifest::new("train", seed as u64, cfg.to_json());
+    m.push(
+        ScenarioRecord::new("train/tiny-lm", "train")
+            .param("steps", steps)
+            .param("seed", seed)
+            .metric("initial_loss", rep.initial_loss)
+            .metric("final_loss", rep.final_loss)
+            .metric("tokens_seen", rep.tokens_seen as f64),
+    );
+    Ok(m)
+}

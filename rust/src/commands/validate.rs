@@ -1,0 +1,51 @@
+//! `sakuraone validate` — numerics checks through the AOT/PJRT artifacts.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Platform;
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::util::cli::Args;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let quiet = super::quiet(args);
+    let mut platform = Platform::new(cfg.clone());
+    let hpl = platform.validate_hpl_numerics()?;
+    if !quiet {
+        println!(
+            "HPL    scaled residual {:.3e} < {}  => {}",
+            hpl.scaled_residual,
+            hpl.threshold,
+            if hpl.passed() { "PASSED" } else { "FAILED" }
+        );
+    }
+    let mxp = platform.validate_mxp_numerics()?;
+    if !quiet {
+        println!(
+            "HPL-MxP scaled residual {:.3e} < {}  => {}",
+            mxp.scaled_residual,
+            mxp.threshold,
+            if mxp.passed() { "PASSED" } else { "FAILED" }
+        );
+    }
+    let cg = platform.validate_hpcg_numerics()?;
+    if !quiet {
+        println!(
+            "HPCG   ||r||^2 {:.3e} -> {:.3e}        => {}",
+            cg.rr0,
+            cg.rr_final,
+            if cg.passed() { "PASSED" } else { "FAILED" }
+        );
+    }
+    if !(hpl.passed() && mxp.passed() && cg.passed()) {
+        bail!("numerics validation failed");
+    }
+    let mut m = RunManifest::new("validate", 0, cfg.to_json());
+    m.push(
+        ScenarioRecord::new("validate/numerics", "validate")
+            .metric("hpl_scaled_residual", hpl.scaled_residual)
+            .metric("mxp_scaled_residual", mxp.scaled_residual)
+            .metric("hpcg_rr_ratio", cg.rr_final / cg.rr0),
+    );
+    Ok(m)
+}

@@ -1,6 +1,7 @@
 //! SAKURAONE reproduction library (see DESIGN.md).
 pub mod benchmarks;
 pub mod collectives;
+pub mod commands;
 pub mod config;
 pub mod coordinator;
 pub mod llm;

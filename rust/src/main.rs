@@ -1,6 +1,9 @@
 //! `sakuraone` — the platform CLI (leader entrypoint).
 //!
-//! Subcommands map one-to-one to the paper's artifacts:
+//! This file is intentionally thin: parse `Args`, match the subcommand to
+//! its handler in `sakuraone::commands`, and emit the returned
+//! `RunManifest` wherever the caller asked (`--json` on stdout, `--out`
+//! to a file). Subcommands map one-to-one to the paper's artifacts:
 //!   topo    — Figures 1/2, Table 2, bisection analysis
 //!   hpl     — Table 7          hpcg  — Table 8
 //!   mxp     — Table 9          io500 — Table 10 (single run or sweep)
@@ -9,31 +12,15 @@
 //!   sched   — Slurm-like scheduler demo on a synthetic job mix
 //!   validate— numerics checks through the AOT artifacts
 //!   report  — Table 3 census, rankings, config inventory
-//!   suite   — everything above in sequence (paper-vs-measured)
+//!   suite   — everything above through the parallel sweep engine
 
 use anyhow::{bail, Result};
 
-use sakuraone::benchmarks::hpcg::HpcgParams;
-use sakuraone::benchmarks::hpl::HplParams;
-use sakuraone::benchmarks::hpl_mxp::MxpParams;
-use sakuraone::benchmarks::io500::{comparison_table, Io500Params};
-use sakuraone::benchmarks::{report, top500};
-use sakuraone::config::ClusterConfig;
-use sakuraone::coordinator::Platform;
-use sakuraone::llm::{step_time, train, LlmConfig};
-use sakuraone::scheduler::{Job, SlurmSim};
-use sakuraone::topology::render::{render_network, render_system};
+use sakuraone::commands;
 use sakuraone::util::cli::Args;
-use sakuraone::util::rng::Rng;
-use sakuraone::util::table::kv_table;
-
-const FLAGS: &[&str] = &[
-    "help", "render", "nics", "bisection", "dump", "top500", "rankings",
-    "software", "json", "degraded",
-];
 
 fn main() {
-    let args = match Args::from_env(FLAGS) {
+    let args = match Args::from_env(commands::FLAGS) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -46,525 +33,39 @@ fn main() {
     }
 }
 
-fn usage() {
-    println!(
-        r#"sakuraone {} — SAKURAONE platform reproduction (see DESIGN.md)
-
-USAGE: sakuraone <subcommand> [options]
-
-  topo      [--render] [--nics] [--bisection] [--topology KIND]
-  hpl       [--n N] [--nb NB] [--grid PxQ] [--stride S]
-  hpcg      [--dims XxYxZ] [--grid PxQxR]
-  mxp       [--n N] [--nb NB] [--grid PxQ] [--ir-iters K]
-  io500     [--nodes N] [--ppn P] [--degraded] | io500-sweep
-  train     [--steps N] [--seed S]
-  llm       [--params P] [--dp D --tp T --pp P] [--batch-tokens B]
-  sched     [--jobs N] [--seed S]
-  power     [--pue X]                 (paper §6 future work: energy/W)
-  checkpoint [--params P] [--interval K] [--step-time S]
-  resilience [--fail-spines N] [--fail-leaves N] [--cable-cuts F]
-  validate
-  report    [--top500] [--rankings] [--software]
-  config    [--dump] [--nodes N] [--topology KIND] ...
-  suite
-
-Topology kinds: rail-optimized | rail-only | fat-tree | dragonfly"#,
-        sakuraone::version()
-    );
-}
-
-fn cluster_config(args: &Args) -> Result<ClusterConfig> {
-    let mut cfg = ClusterConfig::default();
-    for key in ["nodes", "topology", "rails", "spines", "gpus-per-node"] {
-        if let Some(v) = args.get(key) {
-            cfg.apply_override(key, v).map_err(anyhow::Error::msg)?;
-        }
-    }
-    Ok(cfg)
-}
-
-fn parse_grid2(s: &str) -> Result<(usize, usize)> {
-    let parts: Vec<&str> = s.split('x').collect();
-    if parts.len() != 2 {
-        bail!("grid must be PxQ, got {s:?}");
-    }
-    Ok((parts[0].parse()?, parts[1].parse()?))
-}
-
 fn run(args: &Args) -> Result<()> {
     let sub = args.subcommand.clone().unwrap_or_default();
     if args.flag("help") || sub.is_empty() {
-        usage();
+        println!("{}", commands::usage());
         return Ok(());
     }
-    match sub.as_str() {
-        "topo" => cmd_topo(args),
-        "hpl" => cmd_hpl(args),
-        "hpcg" => cmd_hpcg(args),
-        "mxp" => cmd_mxp(args),
-        "io500" => cmd_io500(args),
-        "io500-sweep" => cmd_io500_sweep(args),
-        "train" => cmd_train(args),
-        "llm" => cmd_llm(args),
-        "sched" => cmd_sched(args),
-        "power" => cmd_power(args),
-        "checkpoint" => cmd_checkpoint(args),
-        "resilience" => cmd_resilience(args),
-        "validate" => cmd_validate(args),
-        "report" => cmd_report(args),
-        "config" => cmd_config(args),
-        "suite" => cmd_suite(args),
+    let manifest = match sub.as_str() {
+        "topo" => commands::topo::handle(args)?,
+        "hpl" => commands::hpl::handle(args)?,
+        "hpcg" => commands::hpcg::handle(args)?,
+        "mxp" => commands::mxp::handle(args)?,
+        "io500" => commands::io500::handle(args)?,
+        "io500-sweep" => commands::io500::handle_sweep(args)?,
+        "train" => commands::train::handle(args)?,
+        "llm" => commands::llm::handle(args)?,
+        "sched" => commands::sched::handle(args)?,
+        "power" => commands::power::handle(args)?,
+        "checkpoint" => commands::checkpoint::handle(args)?,
+        "resilience" => commands::resilience::handle(args)?,
+        "validate" => commands::validate::handle(args)?,
+        "report" => commands::report::handle(args)?,
+        "config" => commands::config::handle(args)?,
+        "suite" => commands::suite::handle(args)?,
         other => {
-            usage();
+            println!("{}", commands::usage());
             bail!("unknown subcommand {other:?}");
         }
-    }
-}
-
-fn cmd_topo(args: &Args) -> Result<()> {
-    let cfg = cluster_config(args)?;
-    let fabric = sakuraone::topology::build(&cfg);
-    println!("{}", render_system(&cfg));
-    if args.flag("render") {
-        println!("{}", render_network(&cfg, &fabric));
-    }
-    if args.flag("nics") {
-        let pcie = sakuraone::hardware::NodePcieTopology::sakuraone();
-        println!("{}", pcie.usage_table().render());
-        println!("{}", pcie.matrix().render());
-    }
-    if args.flag("bisection") {
-        let bw = fabric
-            .bisection_bandwidth(|n| sakuraone::topology::pod_of(&cfg, n) == 0);
-        println!(
-            "bisection bandwidth (pod split): {:.2} Tb/s payload",
-            bw * 8.0 / 1e12
-        );
-    }
-    Ok(())
-}
-
-fn cmd_hpl(args: &Args) -> Result<()> {
-    let cfg = cluster_config(args)?;
-    let mut params = HplParams::paper();
-    params.n = args.get_u64("n", params.n).map_err(anyhow::Error::msg)?;
-    params.nb = args.get_u64("nb", params.nb).map_err(anyhow::Error::msg)?;
-    params.stride =
-        args.get_usize("stride", params.stride).map_err(anyhow::Error::msg)?;
-    if let Some(g) = args.get("grid") {
-        let (p, q) = parse_grid2(g)?;
-        params.p = p;
-        params.q = q;
-    }
-    let mut platform = Platform::new(cfg);
-    let r = platform.hpl(&params);
-    println!("{}", r.table());
-    println!("{}", report::hpl_compare(&r).render());
-    Ok(())
-}
-
-fn cmd_hpcg(args: &Args) -> Result<()> {
-    let cfg = cluster_config(args)?;
-    let mut params = HpcgParams::paper();
-    if let Some(d) = args.get("dims") {
-        let parts: Vec<&str> = d.split('x').collect();
-        if parts.len() != 3 {
-            bail!("--dims must be XxYxZ");
-        }
-        params.nx = parts[0].parse()?;
-        params.ny = parts[1].parse()?;
-        params.nz = parts[2].parse()?;
-    }
-    if let Some(g) = args.get("grid") {
-        let parts: Vec<&str> = g.split('x').collect();
-        if parts.len() != 3 {
-            bail!("--grid must be PxQxR");
-        }
-        params.px = parts[0].parse()?;
-        params.py = parts[1].parse()?;
-        params.pz = parts[2].parse()?;
-    }
-    let mut platform = Platform::new(cfg);
-    let r = platform.hpcg(&params);
-    println!("{}", r.table());
-    println!("{}", report::hpcg_compare(&r).render());
-    Ok(())
-}
-
-fn cmd_mxp(args: &Args) -> Result<()> {
-    let cfg = cluster_config(args)?;
-    let mut params = MxpParams::paper();
-    params.n = args.get_u64("n", params.n).map_err(anyhow::Error::msg)?;
-    params.nb = args.get_u64("nb", params.nb).map_err(anyhow::Error::msg)?;
-    params.ir_iters = args
-        .get_usize("ir-iters", params.ir_iters as usize)
-        .map_err(anyhow::Error::msg)? as u32;
-    if let Some(g) = args.get("grid") {
-        let (p, q) = parse_grid2(g)?;
-        params.p = p;
-        params.q = q;
-    }
-    let mut platform = Platform::new(cfg);
-    let r = platform.mxp(&params);
-    println!("{}", r.table());
-    println!("{}", report::mxp_compare(&r).render());
-    Ok(())
-}
-
-fn cmd_io500(args: &Args) -> Result<()> {
-    let cfg = cluster_config(args)?;
-    let nodes = args.get_usize("nodes", 10).map_err(anyhow::Error::msg)?;
-    let ppn = args.get_usize("ppn", 128).map_err(anyhow::Error::msg)?;
-    let params = Io500Params {
-        client_nodes: nodes,
-        procs_per_node: ppn,
-        ..Io500Params::paper_10node()
     };
-    let r = if args.flag("degraded") {
-        let model = sakuraone::storage::LustreModel::sakuraone(&cfg.storage)
-            .with_switch_failure();
-        println!("(degraded: one storage switch failed)");
-        sakuraone::benchmarks::io500::run_io500_on(&model, &params)
-    } else {
-        Platform::new(cfg).io500(&params)
-    };
-    println!("{}", r.table().render());
-    Ok(())
-}
-
-fn cmd_io500_sweep(args: &Args) -> Result<()> {
-    let cfg = cluster_config(args)?;
-    let mut platform = Platform::new(cfg);
-    let r10 = platform.io500(&Io500Params::paper_10node());
-    let r96 = platform.io500(&Io500Params::paper_96node());
-    println!("{}", comparison_table(&r10, &r96).render());
-    println!("{}", report::io500_compare(&r10, &r96).render());
-    Ok(())
-}
-
-fn cmd_train(args: &Args) -> Result<()> {
-    let steps = args.get_usize("steps", 200).map_err(anyhow::Error::msg)? as u32;
-    let seed = args.get_usize("seed", 0).map_err(anyhow::Error::msg)? as i32;
-    let mut platform = Platform::new(cluster_config(args)?);
-    let rt = platform.runtime()?;
-    println!(
-        "training tiny-LM ({} steps, batch {}x{} tokens) on PJRT [{}] ...",
-        steps,
-        sakuraone::llm::train::BATCH,
-        sakuraone::llm::train::SEQ,
-        rt.platform()
-    );
-    let rep = train(rt, steps, seed)?;
-    for (i, l) in rep.losses.iter().enumerate() {
-        if i % 10 == 0 || i + 1 == rep.losses.len() {
-            println!("step {i:>5}  loss {l:.4}");
-        }
+    if args.flag("json") {
+        println!("{}", manifest.to_json().emit());
     }
-    println!(
-        "loss {:.4} -> {:.4} over {} tokens in {:.1}s ({:.0} tok/s)",
-        rep.initial_loss,
-        rep.final_loss,
-        rep.tokens_seen,
-        rep.wall_seconds,
-        rep.tokens_seen as f64 / rep.wall_seconds
-    );
-    Ok(())
-}
-
-fn cmd_llm(args: &Args) -> Result<()> {
-    let cfg = cluster_config(args)?;
-    let fabric = sakuraone::topology::build(&cfg);
-    let mut llm = LlmConfig::llama70b_on_sakuraone();
-    llm.params = args.get_f64("params", llm.params).map_err(anyhow::Error::msg)?;
-    llm.dp = args.get_usize("dp", llm.dp).map_err(anyhow::Error::msg)?;
-    llm.tp = args.get_usize("tp", llm.tp).map_err(anyhow::Error::msg)?;
-    llm.pp = args.get_usize("pp", llm.pp).map_err(anyhow::Error::msg)?;
-    llm.batch_tokens = args
-        .get_f64("batch-tokens", llm.batch_tokens)
-        .map_err(anyhow::Error::msg)?;
-    let st = step_time(&cfg, &fabric, &llm);
-    println!(
-        "{}",
-        kv_table(
-            &format!(
-                "LLM step-time model — {:.0}B params on {} GPUs (dp{} tp{} pp{})",
-                llm.params / 1e9,
-                llm.gpus(),
-                llm.dp,
-                llm.tp,
-                llm.pp
-            ),
-            &[
-                ("step time", format!("{:.2} s", st.total)),
-                ("compute", format!("{:.2} s", st.compute)),
-                ("tp comm (NVSwitch)", format!("{:.3} s", st.tp_comm)),
-                ("dp comm (rails)", format!("{:.3} s", st.dp_comm)),
-                ("pp bubble", format!("{:.3} s", st.pp_bubble)),
-                ("MFU", format!("{:.1}%", st.mfu * 100.0)),
-                ("throughput", format!("{:.0} tokens/s", st.tokens_per_s)),
-            ],
-        )
-    );
-    Ok(())
-}
-
-fn cmd_sched(args: &Args) -> Result<()> {
-    let cfg = cluster_config(args)?;
-    let n_jobs = args.get_usize("jobs", 200).map_err(anyhow::Error::msg)?;
-    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
-    let mut sim = SlurmSim::new(&cfg);
-    let mut rng = Rng::new(seed);
-    for id in 0..n_jobs as u64 {
-        let nodes = 1 + rng.below(48) as usize;
-        let rt = rng.lognormal(600.0, 1.0);
-        sim.submit(
-            Job::new(id, "user-job", nodes, rt * 2.0, rt)
-                .with_submit_time(rng.range(0.0, 4.0 * 3600.0))
-                .with_priority(rng.below(3) as i64),
-        );
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, manifest.to_json().emit())?;
     }
-    let stats = sim.run();
-    println!(
-        "{}",
-        kv_table(
-            &format!("Slurm-like scheduler — {n_jobs} jobs on {} nodes", sim.cfg.nodes),
-            &[
-                ("completed", format!("{}", stats.completed)),
-                ("backfilled", format!("{}", stats.backfilled)),
-                ("mean wait", format!("{:.1} s", stats.mean_wait)),
-                ("max wait", format!("{:.1} s", stats.max_wait)),
-                ("makespan", format!("{:.1} s", stats.makespan)),
-                ("utilization", format!("{:.1}%", stats.utilization * 100.0)),
-                (
-                    "single-pod allocations",
-                    format!("{:.1}%", stats.single_pod_fraction * 100.0),
-                ),
-            ],
-        )
-    );
-    Ok(())
-}
-
-fn cmd_power(args: &Args) -> Result<()> {
-    use sakuraone::benchmarks::{
-        hpcg::run_hpcg, hpl::run_hpl, hpl_mxp::run_mxp,
-    };
-    use sakuraone::hardware::{energy_for, PowerModel};
-    let cfg = cluster_config(args)?;
-    let mut model = PowerModel::sakuraone();
-    model.pue = args.get_f64("pue", model.pue).map_err(anyhow::Error::msg)?;
-
-    let hpl = run_hpl(&cfg, &HplParams::paper());
-    let hpcg = run_hpcg(&cfg, &HpcgParams::paper());
-    let mxp = run_mxp(&cfg, &MxpParams::paper());
-    let rows = [
-        energy_for(&model, &cfg, "HPL (FP64)", hpl.time_s, hpl.rmax, 0.85, 0.30),
-        energy_for(
-            &model,
-            &cfg,
-            "HPCG (memory-bound)",
-            1800.0,
-            hpcg.final_gflops * 1e9,
-            0.55,
-            0.25,
-        ),
-        energy_for(&model, &cfg, "HPL-MxP (FP8)", mxp.total_time_s, mxp.rmax, 0.90, 0.30),
-    ];
-    let mut t = sakuraone::util::table::Table::new(
-        "Energy extension (paper §6 future work) — simulated",
-        &["Workload", "Wall (s)", "Avg power (kW)", "Energy (MJ)", "GFLOPS/W"],
-    );
-    for r in &rows {
-        t.row(&[
-            r.name.clone(),
-            format!("{:.1}", r.wall_s),
-            format!("{:.1}", r.avg_power_w / 1e3),
-            format!("{:.1}", r.energy_mj),
-            format!("{:.2}", r.gflops_per_w),
-        ]);
-    }
-    println!("{}", t.render());
-    println!(
-        "facility power at HPL load (PUE {:.2}): {:.2} MW",
-        model.pue,
-        model.facility_power_w(&cfg, 0.85, 0.30) / 1e6
-    );
-    Ok(())
-}
-
-fn cmd_checkpoint(args: &Args) -> Result<()> {
-    use sakuraone::storage::{checkpoint_cost, CheckpointConfig, LustreModel};
-    let cfg = cluster_config(args)?;
-    let step = args.get_f64("step-time", 5.3).map_err(anyhow::Error::msg)?;
-    let mut ck = CheckpointConfig::llama70b(step);
-    ck.params = args.get_f64("params", ck.params).map_err(anyhow::Error::msg)?;
-    ck.interval_steps = args
-        .get_u64("interval", ck.interval_steps)
-        .map_err(anyhow::Error::msg)?;
-    let model = LustreModel::sakuraone(&cfg.storage);
-    let r = checkpoint_cost(&model, &ck);
-    println!(
-        "{}",
-        kv_table(
-            &format!(
-                "LLM checkpointing — {:.0}B params every {} steps",
-                ck.params / 1e9,
-                ck.interval_steps
-            ),
-            &[
-                ("checkpoint size", sakuraone::util::units::fmt_bytes(r.bytes)),
-                (
-                    "write bandwidth",
-                    sakuraone::util::units::fmt_bandwidth(r.write_bps),
-                ),
-                ("write time", format!("{:.1} s", r.write_seconds)),
-                ("training stall", format!("{:.1} s", r.stall_seconds)),
-                (
-                    "overhead",
-                    format!("{:.3}%", r.overhead_fraction * 100.0),
-                ),
-            ],
-        )
-    );
-    Ok(())
-}
-
-fn cmd_resilience(args: &Args) -> Result<()> {
-    use sakuraone::collectives::CollectiveEngine;
-    use sakuraone::network::{apply_failures, FailurePlan};
-    let cfg = cluster_config(args)?;
-    let fabric = sakuraone::topology::build(&cfg);
-    let plan = FailurePlan {
-        spines: (0..args.get_usize("fail-spines", 0).map_err(anyhow::Error::msg)?)
-            .collect(),
-        leaves: (0..args.get_usize("fail-leaves", 0).map_err(anyhow::Error::msg)?)
-            .collect(),
-        cable_fraction: args
-            .get_f64("cable-cuts", 0.0)
-            .map_err(anyhow::Error::msg)?,
-        seed: args.get_u64("seed", 1).map_err(anyhow::Error::msg)?,
-    };
-    let degraded = apply_failures(&fabric, &plan);
-    let nodes: Vec<usize> = (0..cfg.nodes).collect();
-    let t_ok = CollectiveEngine::new(&fabric, &cfg)
-        .hierarchical_allreduce(&nodes, 1e9);
-    let t_deg = CollectiveEngine::new(&degraded, &cfg)
-        .hierarchical_allreduce(&nodes, 1e9);
-    println!(
-        "{}",
-        kv_table(
-            "Resilience drill — hierarchical all-reduce, 1 GiB gradients",
-            &[
-                ("plan", format!("{plan:?}")),
-                ("healthy", format!("{:.2} ms", t_ok.total * 1e3)),
-                ("degraded", format!("{:.2} ms", t_deg.total * 1e3)),
-                (
-                    "slowdown",
-                    format!("{:.2}x", t_deg.total / t_ok.total.max(1e-12)),
-                ),
-            ],
-        )
-    );
-    Ok(())
-}
-
-fn cmd_validate(args: &Args) -> Result<()> {
-    let mut platform = Platform::new(cluster_config(args)?);
-    let hpl = platform.validate_hpl_numerics()?;
-    println!(
-        "HPL    scaled residual {:.3e} < {}  => {}",
-        hpl.scaled_residual,
-        hpl.threshold,
-        if hpl.passed() { "PASSED" } else { "FAILED" }
-    );
-    let mxp = platform.validate_mxp_numerics()?;
-    println!(
-        "HPL-MxP scaled residual {:.3e} < {}  => {}",
-        mxp.scaled_residual,
-        mxp.threshold,
-        if mxp.passed() { "PASSED" } else { "FAILED" }
-    );
-    let cg = platform.validate_hpcg_numerics()?;
-    println!(
-        "HPCG   ||r||^2 {:.3e} -> {:.3e}        => {}",
-        cg.rr0,
-        cg.rr_final,
-        if cg.passed() { "PASSED" } else { "FAILED" }
-    );
-    if !(hpl.passed() && mxp.passed() && cg.passed()) {
-        bail!("numerics validation failed");
-    }
-    Ok(())
-}
-
-fn cmd_report(args: &Args) -> Result<()> {
-    if args.flag("top500") || !args.flag("rankings") && !args.flag("software") {
-        println!("{}", top500::census_table().render());
-    }
-    if args.flag("rankings") {
-        println!("{}", top500::rankings_table().render());
-    }
-    if args.flag("software") {
-        let sw = ClusterConfig::default().software;
-        println!(
-            "{}",
-            kv_table(
-                "Table 6 — system software (inventory)",
-                &[
-                    ("OS", sw.os.clone()),
-                    ("Container", sw.container.clone()),
-                    ("Job scheduler", sw.scheduler.clone()),
-                    ("CUDA", sw.cuda_versions.join(", ")),
-                    ("cuDNN", sw.cudnn_versions.join(", ")),
-                    ("NCCL", sw.nccl_versions.join(", ")),
-                    ("Python envs", sw.python_envs.join(", ")),
-                ],
-            )
-        );
-    }
-    Ok(())
-}
-
-fn cmd_config(args: &Args) -> Result<()> {
-    let cfg = cluster_config(args)?;
-    if args.flag("dump") || args.flag("json") {
-        println!("{}", cfg.to_json().emit());
-    } else {
-        println!("{}", render_system(&cfg));
-    }
-    Ok(())
-}
-
-fn cmd_suite(args: &Args) -> Result<()> {
-    let cfg = cluster_config(args)?;
-    println!("{}", render_system(&cfg));
-    let mut platform = Platform::new(cfg);
-
-    println!("== T7 HPL ==");
-    let hpl = platform.hpl(&HplParams::paper());
-    println!("{}", report::hpl_compare(&hpl).render());
-
-    println!("== T8 HPCG ==");
-    let hpcg = platform.hpcg(&HpcgParams::paper());
-    println!("{}", report::hpcg_compare(&hpcg).render());
-
-    println!("== T9 HPL-MxP ==");
-    let mxp = platform.mxp(&MxpParams::paper());
-    println!("{}", report::mxp_compare(&mxp).render());
-
-    println!("== T10 IO500 ==");
-    let r10 = platform.io500(&Io500Params::paper_10node());
-    let r96 = platform.io500(&Io500Params::paper_96node());
-    println!("{}", report::io500_compare(&r10, &r96).render());
-
-    println!("== T3 interconnect census ==");
-    println!("{}", top500::census_table().render());
-
-    println!("== numerics validation (PJRT artifacts) ==");
-    match cmd_validate(args) {
-        Ok(()) => {}
-        Err(e) => println!("(skipped: {e})"),
-    }
-    println!("metrics: {}", platform.metrics.to_json().emit());
     Ok(())
 }

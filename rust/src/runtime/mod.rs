@@ -1,8 +1,28 @@
-//! PJRT runtime (L3 <- L2 bridge): manifest-driven loading and execution
-//! of AOT-compiled HLO artifacts on the CPU PJRT client.
+//! Runtime layer: the PJRT bridge (manifest-driven loading and execution
+//! of AOT-compiled HLO artifacts), the versioned run-manifest format every
+//! CLI command emits, and the deterministic parallel sweep engine.
 
 pub mod artifacts;
 pub mod pjrt;
+pub mod run_manifest;
+pub mod sweep;
+pub mod xla_stub;
+
+/// The `xla` name `runtime::pjrt` compiles against. Without the
+/// `xla-runtime` feature this is the in-tree stub; with it, an external
+/// crate must provide the real PJRT bindings.
+#[cfg(not(feature = "xla-runtime"))]
+pub use xla_stub as xla;
+
+#[cfg(feature = "xla-runtime")]
+compile_error!(
+    "the `xla-runtime` feature needs the real PJRT bindings: vendor an \
+     `xla` crate (xla_extension 0.5.1), add it as a dependency, replace \
+     the `xla_stub` aliases in runtime/{mod,pjrt}.rs with it, and remove \
+     this compile_error!"
+);
 
 pub use artifacts::{ArtifactMeta, DType, Manifest, TensorSpec};
 pub use pjrt::Runtime;
+pub use run_manifest::{RunManifest, ScenarioRecord};
+pub use sweep::{run_sweep, Scenario, SweepConfig};

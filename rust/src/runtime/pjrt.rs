@@ -12,6 +12,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::artifacts::{ArtifactMeta, DType, Manifest, TensorSpec};
+#[cfg(not(feature = "xla-runtime"))]
+use super::xla_stub as xla;
 
 pub struct Runtime {
     client: xla::PjRtClient,

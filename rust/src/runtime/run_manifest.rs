@@ -1,0 +1,436 @@
+//! Versioned, machine-readable run manifests — the artifact every CLI
+//! subcommand returns and the sweep engine merges, and the thing CI diffs
+//! against `baselines/suite.json` to gate regressions.
+//!
+//! Manifests are deliberately free of wall-clock timestamps and host
+//! details: the same seed and scenario grid must emit byte-identical JSON
+//! regardless of worker-thread count or machine, so the baseline diff is
+//! meaningful. All maps are `BTreeMap` (sorted keys) and scenario order is
+//! the grid order, which makes `to_json().emit()` deterministic.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Bump when the manifest shape changes; `from_json` rejects mismatches so
+/// CI fails loudly instead of silently comparing across schemas.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One measured metric, optionally anchored to a paper-reported value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricRow {
+    pub name: String,
+    pub measured: f64,
+    pub paper: Option<f64>,
+}
+
+impl MetricRow {
+    /// Signed paper-vs-measured delta in percent (None without an anchor).
+    pub fn delta_pct(&self) -> Option<f64> {
+        self.paper.map(|p| 100.0 * (self.measured - p) / p)
+    }
+}
+
+/// The outcome of one scenario (one benchmark configuration).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ScenarioRecord {
+    /// Stable unique id, e.g. `hpl/paper` or `io500/10node-degraded`.
+    pub id: String,
+    /// Scenario family: `hpl`, `hpcg`, `mxp`, `io500`, `llm`, ...
+    pub kind: String,
+    pub params: BTreeMap<String, String>,
+    pub metrics: Vec<MetricRow>,
+}
+
+impl ScenarioRecord {
+    pub fn new(id: &str, kind: &str) -> Self {
+        Self { id: id.to_string(), kind: kind.to_string(), ..Self::default() }
+    }
+
+    pub fn param(mut self, key: &str, value: impl ToString) -> Self {
+        self.params.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn metric(mut self, name: &str, measured: f64) -> Self {
+        self.metrics.push(MetricRow { name: name.to_string(), measured, paper: None });
+        self
+    }
+
+    pub fn metric_vs_paper(mut self, name: &str, measured: f64, paper: f64) -> Self {
+        self.metrics.push(MetricRow {
+            name: name.to_string(),
+            measured,
+            paper: Some(paper),
+        });
+        self
+    }
+
+    pub fn metric_value(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|m| m.name == name).map(|m| m.measured)
+    }
+
+    /// Largest absolute paper-vs-measured delta across anchored metrics.
+    pub fn worst_abs_delta_pct(&self) -> Option<f64> {
+        self.metrics
+            .iter()
+            .filter_map(|m| m.delta_pct())
+            .map(f64::abs)
+            .fold(None, |acc, d| Some(acc.map_or(d, |a: f64| a.max(d))))
+    }
+}
+
+/// The manifest a subcommand (or the sweep engine) returns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunManifest {
+    pub schema: u64,
+    pub command: String,
+    pub seed: u64,
+    /// Cluster summary (`ClusterConfig::to_json`).
+    pub config: Json,
+    pub scenarios: Vec<ScenarioRecord>,
+    pub notes: Vec<String>,
+}
+
+impl RunManifest {
+    pub fn new(command: &str, seed: u64, config: Json) -> Self {
+        Self {
+            schema: SCHEMA_VERSION,
+            command: command.to_string(),
+            seed,
+            config,
+            scenarios: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, record: ScenarioRecord) {
+        self.scenarios.push(record);
+    }
+
+    pub fn note(&mut self, msg: impl ToString) {
+        self.notes.push(msg.to_string());
+    }
+
+    pub fn scenario(&self, id: &str) -> Option<&ScenarioRecord> {
+        self.scenarios.iter().find(|s| s.id == id)
+    }
+
+    /// (scenario id, metric name, |delta %|) of the worst anchored metric.
+    pub fn worst_delta(&self) -> Option<(String, String, f64)> {
+        let mut worst: Option<(String, String, f64)> = None;
+        for s in &self.scenarios {
+            for m in &s.metrics {
+                if let Some(d) = m.delta_pct() {
+                    let d = d.abs();
+                    let better = match &worst {
+                        None => true,
+                        Some((_, _, w)) => d > *w,
+                    };
+                    if better {
+                        worst = Some((s.id.clone(), m.name.clone(), d));
+                    }
+                }
+            }
+        }
+        worst
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Num(self.schema as f64));
+        root.insert("command".into(), Json::Str(self.command.clone()));
+        root.insert("seed".into(), Json::Num(self.seed as f64));
+        root.insert("config".into(), self.config.clone());
+        root.insert(
+            "notes".into(),
+            Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+        let scenarios = self
+            .scenarios
+            .iter()
+            .map(|s| {
+                let mut o = BTreeMap::new();
+                o.insert("id".into(), Json::Str(s.id.clone()));
+                o.insert("kind".into(), Json::Str(s.kind.clone()));
+                o.insert(
+                    "params".into(),
+                    Json::Obj(
+                        s.params
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                            .collect(),
+                    ),
+                );
+                o.insert(
+                    "metrics".into(),
+                    Json::Arr(
+                        s.metrics
+                            .iter()
+                            .map(|m| {
+                                let mut mo = BTreeMap::new();
+                                mo.insert("name".into(), Json::Str(m.name.clone()));
+                                mo.insert("measured".into(), Json::Num(m.measured));
+                                mo.insert(
+                                    "paper".into(),
+                                    m.paper.map_or(Json::Null, Json::Num),
+                                );
+                                Json::Obj(mo)
+                            })
+                            .collect(),
+                    ),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("scenarios".into(), Json::Arr(scenarios));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let schema = j
+            .get("schema")
+            .and_then(|s| s.as_f64())
+            .ok_or_else(|| anyhow!("manifest: missing schema"))? as u64;
+        if schema != SCHEMA_VERSION {
+            bail!("manifest schema {schema} != supported {SCHEMA_VERSION}");
+        }
+        let command = j
+            .get("command")
+            .and_then(|c| c.as_str())
+            .ok_or_else(|| anyhow!("manifest: missing command"))?
+            .to_string();
+        let seed = j.get("seed").and_then(|s| s.as_f64()).unwrap_or(0.0) as u64;
+        let config = j.get("config").cloned().unwrap_or(Json::Null);
+        let notes = j
+            .get("notes")
+            .and_then(|n| n.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|n| n.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut scenarios = Vec::new();
+        for s in j
+            .get("scenarios")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("manifest: missing scenarios"))?
+        {
+            let id = s
+                .get("id")
+                .and_then(|i| i.as_str())
+                .ok_or_else(|| anyhow!("scenario: missing id"))?;
+            let kind = s.get("kind").and_then(|k| k.as_str()).unwrap_or("");
+            let mut rec = ScenarioRecord::new(id, kind);
+            if let Some(params) = s.get("params").and_then(|p| p.as_obj()) {
+                for (k, v) in params {
+                    if let Some(v) = v.as_str() {
+                        rec.params.insert(k.clone(), v.to_string());
+                    }
+                }
+            }
+            for m in s.get("metrics").and_then(|m| m.as_arr()).unwrap_or(&[]) {
+                let name = m
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| anyhow!("{id}: metric missing name"))?;
+                let measured = m
+                    .get("measured")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow!("{id}/{name}: missing measured"))?;
+                let paper = m.get("paper").and_then(|p| p.as_f64());
+                rec.metrics.push(MetricRow { name: name.to_string(), measured, paper });
+            }
+            scenarios.push(rec);
+        }
+        Ok(Self { schema, command, seed, config, scenarios, notes })
+    }
+}
+
+/// What the baseline gate concluded.
+#[derive(Debug, Clone, Default)]
+pub struct BaselineReport {
+    /// Metric comparisons performed.
+    pub compared: usize,
+    /// Human-readable regression descriptions; empty means the gate passed.
+    pub failures: Vec<String>,
+    /// The committed baseline is a bootstrap placeholder — nothing to gate
+    /// against yet; refresh it from a real run (see docs/ci.md).
+    pub bootstrap: bool,
+}
+
+impl BaselineReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Gate `current` against a committed baseline manifest.
+///
+/// Rules (tolerance in percentage points):
+/// - a scenario or metric present in the baseline but missing from the
+///   current run is a failure (coverage must not silently shrink);
+/// - for paper-anchored metrics, the |paper delta| may not grow by more
+///   than `tol_pct` versus the baseline's |paper delta|;
+/// - for unanchored metrics, the measured value may not drift from the
+///   baseline by more than `tol_pct` relative.
+///
+/// A baseline of `{"bootstrap": true}` short-circuits with
+/// `bootstrap = true` so a fresh repo can turn the gate on before the
+/// first real baseline is committed.
+pub fn compare_to_baseline(
+    current: &RunManifest,
+    baseline: &Json,
+    tol_pct: f64,
+) -> Result<BaselineReport> {
+    if baseline.get("bootstrap") == Some(&Json::Bool(true)) {
+        return Ok(BaselineReport { bootstrap: true, ..BaselineReport::default() });
+    }
+    let base = RunManifest::from_json(baseline)?;
+    let mut rep = BaselineReport::default();
+    for bs in &base.scenarios {
+        let Some(cs) = current.scenario(&bs.id) else {
+            rep.failures.push(format!("scenario {} missing from current run", bs.id));
+            continue;
+        };
+        for bm in &bs.metrics {
+            let Some(cm) = cs.metrics.iter().find(|m| m.name == bm.name) else {
+                rep.failures.push(format!("{}: metric {} disappeared", bs.id, bm.name));
+                continue;
+            };
+            rep.compared += 1;
+            match (bm.delta_pct(), cm.delta_pct()) {
+                (Some(bd), Some(cd)) => {
+                    if cd.abs() > bd.abs() + tol_pct {
+                        rep.failures.push(format!(
+                            "{}/{}: paper delta {:+.2}% regressed beyond \
+                             baseline {:+.2}% (+{tol_pct}pp tolerance)",
+                            bs.id, bm.name, cd, bd
+                        ));
+                    }
+                }
+                (Some(_), None) => {
+                    // Losing the paper anchor is itself a coverage
+                    // regression — the delta the gate protects vanished.
+                    rep.failures.push(format!(
+                        "{}/{}: lost its paper anchor (baseline had one)",
+                        bs.id, bm.name
+                    ));
+                }
+                (None, _) => {
+                    let denom = bm.measured.abs().max(1e-12);
+                    let drift = 100.0 * (cm.measured - bm.measured).abs() / denom;
+                    if drift > tol_pct {
+                        rep.failures.push(format!(
+                            "{}/{}: measured {} drifted {:.2}% from baseline {} \
+                             (> {tol_pct}%)",
+                            bs.id, bm.name, cm.measured, drift, bm.measured
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunManifest {
+        let mut m = RunManifest::new("suite", 42, Json::Obj(BTreeMap::new()));
+        m.push(
+            ScenarioRecord::new("hpl/paper", "hpl")
+                .param("n", 2_706_432u64)
+                .metric_vs_paper("rmax_pflops", 33.4, 33.95)
+                .metric("time_s", 391.0),
+        );
+        m.push(
+            ScenarioRecord::new("sched/200jobs", "sched")
+                .param("jobs", 200usize)
+                .metric("utilization", 0.83),
+        );
+        m.note("example");
+        m
+    }
+
+    #[test]
+    fn json_roundtrip_is_byte_identical() {
+        let m = sample();
+        let emitted = m.to_json().emit();
+        let parsed = RunManifest::from_json(&Json::parse(&emitted).unwrap()).unwrap();
+        assert_eq!(parsed, m);
+        assert_eq!(parsed.to_json().emit(), emitted);
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let m = sample();
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("schema".into(), Json::Num(99.0));
+        }
+        assert!(RunManifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn delta_and_worst() {
+        let m = sample();
+        let (id, name, d) = m.worst_delta().unwrap();
+        assert_eq!(id, "hpl/paper");
+        assert_eq!(name, "rmax_pflops");
+        assert!((d - 1.62).abs() < 0.02, "{d}");
+    }
+
+    #[test]
+    fn baseline_self_compare_passes() {
+        let m = sample();
+        let rep = compare_to_baseline(&m, &m.to_json(), 0.01).unwrap();
+        assert!(rep.passed());
+        assert!(!rep.bootstrap);
+        assert_eq!(rep.compared, 3);
+    }
+
+    #[test]
+    fn baseline_detects_paper_delta_regression() {
+        let base = sample();
+        let mut cur = sample();
+        cur.scenarios[0].metrics[0].measured = 30.0; // delta -11.6% vs -1.6%
+        let rep = compare_to_baseline(&cur, &base.to_json(), 5.0).unwrap();
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("rmax_pflops"));
+    }
+
+    #[test]
+    fn baseline_detects_unanchored_drift_and_missing() {
+        let base = sample();
+        let mut cur = sample();
+        cur.scenarios[1].metrics[0].measured = 0.5; // ~40% drift
+        cur.scenarios[0].metrics.remove(1); // time_s gone
+        let rep = compare_to_baseline(&cur, &base.to_json(), 5.0).unwrap();
+        assert_eq!(rep.failures.len(), 2);
+    }
+
+    #[test]
+    fn losing_a_paper_anchor_fails_the_gate() {
+        let base = sample();
+        let mut cur = sample();
+        cur.scenarios[0].metrics[0].paper = None; // rmax_pflops unanchored
+        let rep = compare_to_baseline(&cur, &base.to_json(), 50.0).unwrap();
+        assert_eq!(rep.failures.len(), 1);
+        assert!(rep.failures[0].contains("lost its paper anchor"));
+    }
+
+    #[test]
+    fn bootstrap_baseline_short_circuits() {
+        let mut o = BTreeMap::new();
+        o.insert("bootstrap".into(), Json::Bool(true));
+        let rep = compare_to_baseline(&sample(), &Json::Obj(o), 1.0).unwrap();
+        assert!(rep.bootstrap);
+        assert!(rep.passed());
+    }
+}

@@ -1,0 +1,226 @@
+//! API-compatible stand-in for the `xla` PJRT bindings.
+//!
+//! The real bindings (xla_extension 0.5.1 behind the `xla` crate) are not
+//! vendored in this tree, so `runtime::pjrt` compiles against this stub by
+//! default (see the `xla-runtime` feature in Cargo.toml). Literal
+//! construction and host-side inspection work; everything that would need
+//! the PJRT client (`PjRtClient::cpu`, compilation, execution) returns a
+//! clean "backend unavailable" error, which the callers already treat as
+//! "artifacts not built" and skip gracefully.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the bindings' error enum closely enough for the
+/// `?`-into-`anyhow::Error` conversions in `runtime::pjrt`.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>(what: &str) -> Result<T, XlaError> {
+    Err(XlaError(format!(
+        "{what}: PJRT backend not vendored in this build \
+         (the `xla-runtime` feature is off; numerics validation is skipped)"
+    )))
+}
+
+/// Element types the literal helpers in `runtime::pjrt` traffic in.
+#[derive(Debug, Clone, PartialEq)]
+enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Buf {
+    fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Marker trait for host element types accepted by [`Literal`].
+pub trait NativeType: Copy {
+    fn to_buf(data: &[Self]) -> Buf;
+    fn from_buf(buf: &Buf) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn to_buf(data: &[Self]) -> Buf {
+        Buf::F32(data.to_vec())
+    }
+    fn from_buf(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::F32(v) => Some(v.clone()),
+            Buf::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn to_buf(data: &[Self]) -> Buf {
+        Buf::I32(data.to_vec())
+    }
+    fn from_buf(buf: &Buf) -> Option<Vec<Self>> {
+        match buf {
+            Buf::I32(v) => Some(v.clone()),
+            Buf::F32(_) => None,
+        }
+    }
+}
+
+/// Host tensor literal: typed buffer + dimensions.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    buf: Buf,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { buf: T::to_buf(data), dims: vec![data.len() as i64] }
+    }
+
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { buf: T::to_buf(&[v]), dims: vec![] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.buf.len() {
+            return Err(XlaError(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.buf.len()
+            )));
+        }
+        Ok(Literal { buf: self.buf.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        T::from_buf(&self.buf)
+            .ok_or_else(|| XlaError("to_vec: element type mismatch".into()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, XlaError> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| XlaError("get_first_element: empty literal".into()))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// HLO module handle. Parsing needs the backend, so this always errors.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self, XlaError> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.element_count(), 4);
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn literal_type_mismatch_is_error() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bad_reshape_is_error() {
+        let l = Literal::vec1(&[1.0f32; 6]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("not vendored"));
+    }
+
+    #[test]
+    fn scalar_literal_shape() {
+        let l = Literal::scalar(7i32);
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(l.get_first_element::<i32>().unwrap(), 7);
+    }
+}

@@ -3,7 +3,7 @@
 //! with host-side oracles. Skipped wholesale if `make artifacts` has not
 //! run (manifest absent).
 
-use sakuraone::runtime::{Manifest, Runtime};
+use sakuraone::runtime::{xla, Manifest, Runtime};
 use sakuraone::util::rng::Rng;
 
 fn runtime() -> Option<Runtime> {

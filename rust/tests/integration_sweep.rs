@@ -1,0 +1,136 @@
+//! Integration tests for the deterministic sweep engine, the run-manifest
+//! schema, and the modular command layer.
+
+use sakuraone::commands;
+use sakuraone::config::ClusterConfig;
+use sakuraone::runtime::run_manifest::{compare_to_baseline, RunManifest};
+use sakuraone::runtime::sweep::{run_sweep, standard_grid, SweepConfig};
+use sakuraone::util::cli::Args;
+use sakuraone::util::json::Json;
+
+fn args(v: &[&str]) -> Args {
+    Args::parse(v.iter().map(|s| s.to_string()), commands::FLAGS).unwrap()
+}
+
+#[test]
+fn sweep_manifest_is_byte_identical_across_worker_counts() {
+    let cfg = ClusterConfig::default();
+    let grid = standard_grid(true);
+    let serial = run_sweep(&cfg, &grid, &SweepConfig { workers: 1, seed: 42 });
+    let parallel = run_sweep(&cfg, &grid, &SweepConfig { workers: 4, seed: 42 });
+    let many = run_sweep(&cfg, &grid, &SweepConfig { workers: 16, seed: 42 });
+    let a = serial.to_json().emit();
+    assert_eq!(a, parallel.to_json().emit());
+    assert_eq!(a, many.to_json().emit());
+    assert_eq!(serial.scenarios.len(), grid.len());
+}
+
+#[test]
+fn sweep_seed_reaches_stochastic_scenarios() {
+    let cfg = ClusterConfig::default();
+    let grid = standard_grid(true);
+    let a = run_sweep(&cfg, &grid, &SweepConfig { workers: 2, seed: 1 });
+    let b = run_sweep(&cfg, &grid, &SweepConfig { workers: 2, seed: 2 });
+    // the scheduler scenario draws its job mix from the sweep seed
+    let wait = |m: &RunManifest| {
+        m.scenario("sched/200jobs").unwrap().metric_value("mean_wait_s").unwrap()
+    };
+    assert_ne!(wait(&a), wait(&b));
+    // pure-model scenarios are seed-independent
+    assert_eq!(
+        a.scenario("hpl/paper").unwrap(),
+        b.scenario("hpl/paper").unwrap()
+    );
+}
+
+#[test]
+fn sweep_manifest_roundtrips_through_util_json() {
+    let cfg = ClusterConfig::default();
+    let grid = standard_grid(true);
+    let m = run_sweep(&cfg, &grid, &SweepConfig { workers: 4, seed: 42 });
+    let emitted = m.to_json().emit();
+    let parsed = RunManifest::from_json(&Json::parse(&emitted).unwrap()).unwrap();
+    assert_eq!(parsed, m);
+    assert_eq!(parsed.to_json().emit(), emitted);
+}
+
+#[test]
+fn sweep_manifest_gates_against_itself() {
+    let cfg = ClusterConfig::default();
+    let grid = standard_grid(true);
+    let m = run_sweep(&cfg, &grid, &SweepConfig { workers: 4, seed: 42 });
+    let rep = compare_to_baseline(&m, &m.to_json(), 0.01).unwrap();
+    assert!(rep.passed(), "{:?}", rep.failures);
+    assert!(rep.compared > 20);
+}
+
+#[test]
+fn command_handlers_return_manifests() {
+    let m = commands::hpl::handle(&args(&["hpl", "--json"])).unwrap();
+    assert_eq!(m.command, "hpl");
+    let rec = m.scenario("hpl/paper").expect("paper-anchored scenario");
+    assert!(rec.metric_value("rmax_pflops").unwrap() > 25.0);
+
+    let m = commands::sched::handle(&args(&["sched", "--json", "--jobs", "50"]))
+        .unwrap();
+    assert_eq!(m.command, "sched");
+    assert_eq!(
+        m.scenario("sched/50jobs").unwrap().metric_value("completed"),
+        Some(50.0)
+    );
+}
+
+#[test]
+fn custom_hpl_params_are_not_paper_anchored() {
+    let m = commands::hpl::handle(&args(&[
+        "hpl", "--json", "--n", "1353216", "--grid", "16x49",
+    ]))
+    .unwrap();
+    let rec = m.scenario("hpl/custom").unwrap();
+    assert!(rec.metrics.iter().all(|mm| mm.paper.is_none()));
+    assert_eq!(rec.params.get("n").map(String::as_str), Some("1353216"));
+}
+
+#[test]
+fn suite_handler_runs_quick_grid_and_bootstrap_gate() {
+    // run through the real CLI path, including a bootstrap baseline file
+    let dir = std::env::temp_dir().join("sakuraone-test-baseline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bootstrap.json");
+    std::fs::write(&path, "{\"bootstrap\": true}").unwrap();
+    let m = commands::suite::handle(&args(&[
+        "suite",
+        "--json",
+        "--quick",
+        "--workers",
+        "2",
+        "--baseline",
+        path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    assert_eq!(m.command, "suite");
+    assert!(m.scenarios.len() >= 8);
+
+    // a real baseline whose scheduler utilization is far from what the
+    // sweep reproduces must fail the gate (unanchored drift rule)
+    let mut regressed = m.clone();
+    let sched = regressed
+        .scenarios
+        .iter_mut()
+        .find(|s| s.id == "sched/200jobs")
+        .unwrap();
+    let util = sched.metrics.iter_mut().find(|mm| mm.name == "utilization_pct").unwrap();
+    assert!(util.measured > 0.0);
+    util.measured *= 2.0;
+    std::fs::write(&path, regressed.to_json().emit()).unwrap();
+    let err = commands::suite::handle(&args(&[
+        "suite",
+        "--json",
+        "--quick",
+        "--workers",
+        "2",
+        "--baseline",
+        path.to_str().unwrap(),
+    ]));
+    assert!(err.is_err(), "fabricated baseline regression must gate");
+}
