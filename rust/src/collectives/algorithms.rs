@@ -1,42 +1,129 @@
 //! Alternative all-reduce algorithms and the NCCL-style selector.
 //!
 //! Ring is bandwidth-optimal (2(p-1)/p * bytes) but pays (2p-2) latency
-//! hops; a binary tree halves the latency exponent for small buffers;
-//! recursive doubling (halving-doubling) pays log2(p) rounds of bytes/2^k
-//! exchanges — the best choice in the mid range on high-radix fabrics.
+//! hops; the double binary tree halves the latency exponent for small
+//! buffers; recursive halving-doubling pays log2(p) rounds of bytes/2^k
+//! exchanges — the best choice in the mid range on high-radix fabrics;
+//! the hierarchical rail-aligned decomposition (see `CollectiveEngine::
+//! hierarchical_allreduce`) is the production shape for whole-node groups.
 //! `select_allreduce` picks per message size the way NCCL's tuner does.
+//!
+//! Every inter-node round submits its **full batch of concurrent flows**
+//! to the flow simulator — no algorithm times a "representative pair" —
+//! so fabric contention (shared leaf uplinks, ECMP hash collisions,
+//! degraded links) shapes the result per round.
 
-use super::{CollectiveEngine, CollectiveTime, Rank};
+use super::{CollectiveEngine, CollectiveTime, PhaseOut, Rank};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AllReduceAlgo {
     Ring,
     Tree,
     RecursiveDoubling,
+    /// Intra-node reduce-scatter → 8 concurrent per-rail rings →
+    /// intra-node all-gather (NCCL's multi-NIC rail decomposition).
+    Hierarchical,
+}
+
+impl AllReduceAlgo {
+    /// Every selectable algorithm, in selector preference order.
+    pub const ALL: [AllReduceAlgo; 4] = [
+        AllReduceAlgo::Ring,
+        AllReduceAlgo::Tree,
+        AllReduceAlgo::RecursiveDoubling,
+        AllReduceAlgo::Hierarchical,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Ring => "ring",
+            Self::Tree => "tree",
+            Self::RecursiveDoubling => "recursive-doubling",
+            Self::Hierarchical => "hierarchical",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "ring" => Ok(Self::Ring),
+            "tree" => Ok(Self::Tree),
+            "recursive-doubling" | "rd" => Ok(Self::RecursiveDoubling),
+            "hierarchical" | "hier" => Ok(Self::Hierarchical),
+            other => Err(format!("unknown all-reduce algorithm {other:?}")),
+        }
+    }
+}
+
+/// Fold one simulated phase (repeated `times` times back-to-back, e.g. a
+/// reduce round plus its mirrored gather round) into the running total.
+fn absorb(out: &mut CollectiveTime, phase: &PhaseOut, times: usize) {
+    let t = times as f64 * phase.time;
+    out.total += t;
+    if phase.eth_time >= phase.nv_time {
+        out.inter += t;
+    } else {
+        out.intra += t;
+    }
+    out.flows += times * phase.eth_flows;
+    out.max_util = out.max_util.max(phase.max_util);
+}
+
+/// Child→parent pairs of round `k` of a binomial tree over indices
+/// `0..p` (each parent absorbs exactly one child per round).
+fn binomial_round(p: usize, k: u32) -> Vec<(usize, usize)> {
+    let stride = 1usize << k;
+    let mut pairs = Vec::new();
+    let mut parent = 0usize;
+    while parent + stride < p {
+        pairs.push((parent + stride, parent));
+        match parent.checked_add(stride << 1) {
+            Some(next) => parent = next,
+            None => break,
+        }
+    }
+    pairs
 }
 
 impl CollectiveEngine<'_> {
-    /// Double binary-tree all-reduce: reduce up + broadcast down,
-    /// 2*ceil(log2 p) rounds; each round moves the full buffer once.
+    /// Double binary-tree all-reduce (NCCL's construction): two
+    /// complementary binomial trees each reduce **half** the buffer, so
+    /// every rank's send and receive links stay busy. Each of the
+    /// `ceil(log2 p)` reduce rounds — and each mirrored broadcast round —
+    /// submits the full set of concurrent child↔parent transfers, intra-
+    /// node pairs on NVSwitch and inter-node pairs through the flow
+    /// simulator.
     pub fn tree_allreduce(&self, ranks: &[Rank], bytes: f64) -> CollectiveTime {
         let p = ranks.len();
         if p < 2 || bytes <= 0.0 {
             return CollectiveTime::default();
         }
-        let rounds = 2.0 * (p as f64).log2().ceil();
-        // a round = every internal node exchanges `bytes` with its parent;
-        // model the round as a representative neighbour transfer
-        let (hop, flows) = self.ring_step_time(&ranks[0..2.min(p)], bytes);
-        CollectiveTime {
-            total: rounds * hop,
-            intra: 0.0,
-            inter: rounds * hop,
-            flows: flows * rounds as usize,
+        let rounds = usize::BITS - (p - 1).leading_zeros(); // ceil(log2 p)
+        let half = bytes / 2.0;
+        let mut out = CollectiveTime::default();
+        for k in 0..rounds {
+            // tree 1 over rank order, tree 2 over the mirrored order: the
+            // sender sets are disjoint, which is what keeps both halves of
+            // the buffer moving at once.
+            let mut reduce_pairs: Vec<(Rank, Rank)> = Vec::new();
+            for (child, parent) in binomial_round(p, k) {
+                reduce_pairs.push((ranks[child], ranks[parent]));
+                reduce_pairs.push((ranks[p - 1 - child], ranks[p - 1 - parent]));
+            }
+            let bcast_pairs: Vec<(Rank, Rank)> =
+                reduce_pairs.iter().map(|&(c, par)| (par, c)).collect();
+            for pairs in [&reduce_pairs, &bcast_pairs] {
+                let phase = self.phase_time(pairs, half);
+                absorb(&mut out, &phase, 1);
+            }
         }
+        out
     }
 
-    /// Recursive halving-doubling: log2(p) reduce-scatter rounds with
-    /// bytes/2^k, then log2(p) all-gather rounds mirrored.
+    /// Recursive halving-doubling: fold non-power-of-two remainders into
+    /// the nearest power of two (the MPI pre/post phase), then log2(p')
+    /// reduce-scatter rounds of bytes/2^(k+1) with partner `idx ^ 2^k`,
+    /// mirrored for the all-gather. Every round submits all p' exchanging
+    /// flows at once.
     pub fn recursive_doubling_allreduce(
         &self,
         ranks: &[Rank],
@@ -46,24 +133,48 @@ impl CollectiveEngine<'_> {
         if p < 2 || bytes <= 0.0 {
             return CollectiveTime::default();
         }
-        let rounds = (p as f64).log2().ceil() as usize;
-        let mut total = 0.0;
-        let mut flows = 0;
-        for k in 0..rounds {
-            let chunk = bytes / 2f64.powi(k as i32 + 1);
-            // partner distance 2^k in rank order; sample one pair per round
-            let stride = 1usize << k;
-            let a = ranks[0];
-            let b = ranks[stride.min(p - 1)];
-            let (hop, f) = self.ring_step_time(&[a, b], chunk);
-            total += 2.0 * hop; // RS round + mirrored AG round
-            flows += 2 * f;
+        let p2 = if p.is_power_of_two() { p } else { p.next_power_of_two() / 2 };
+        let r = p - p2;
+        let mut out = CollectiveTime::default();
+        // pre-fold: ranks 2i+1 (i < r) hand their buffer to 2i and sit out
+        if r > 0 {
+            let pre: Vec<(Rank, Rank)> =
+                (0..r).map(|i| (ranks[2 * i + 1], ranks[2 * i])).collect();
+            let phase = self.phase_time(&pre, bytes);
+            absorb(&mut out, &phase, 1);
         }
-        CollectiveTime { total, intra: 0.0, inter: total, flows }
+        let active: Vec<Rank> = (0..r)
+            .map(|i| ranks[2 * i])
+            .chain(ranks[2 * r..].iter().copied())
+            .collect();
+        debug_assert_eq!(active.len(), p2);
+        let rounds = p2.trailing_zeros();
+        for k in 0..rounds {
+            let stride = 1usize << k;
+            let chunk = bytes / 2f64.powi(k as i32 + 1);
+            // every active rank exchanges `chunk` with its XOR partner —
+            // p2 concurrent flows, distinct partners at every stride
+            let pairs: Vec<(Rank, Rank)> = (0..p2)
+                .map(|idx| (active[idx], active[idx ^ stride]))
+                .collect();
+            let phase = self.phase_time(&pairs, chunk);
+            // reduce-scatter round + its mirrored all-gather round
+            absorb(&mut out, &phase, 2);
+        }
+        // post-fold: return the full result to the parked ranks
+        if r > 0 {
+            let post: Vec<(Rank, Rank)> =
+                (0..r).map(|i| (ranks[2 * i], ranks[2 * i + 1])).collect();
+            let phase = self.phase_time(&post, bytes);
+            absorb(&mut out, &phase, 1);
+        }
+        out
     }
 
     /// NCCL-tuner-style selection: latency-optimal tree for small
-    /// messages, halving-doubling in the middle, ring for bandwidth.
+    /// messages, halving-doubling in the middle, ring for bandwidth —
+    /// plus the hierarchical rail decomposition whenever `ranks` cover
+    /// whole nodes (it is the only candidate that drives all 8 NICs).
     pub fn select_allreduce(&self, ranks: &[Rank], bytes: f64) -> (AllReduceAlgo, CollectiveTime) {
         let ring = self.ring_allreduce(ranks, bytes);
         let tree = self.tree_allreduce(ranks, bytes);
@@ -74,6 +185,14 @@ impl CollectiveEngine<'_> {
         }
         if rd.total < best.1.total {
             best = (AllReduceAlgo::RecursiveDoubling, rd);
+        }
+        if let Some(nodes) = self.full_nodes(ranks) {
+            if nodes.len() > 1 {
+                let hier = self.hierarchical_allreduce(&nodes, bytes);
+                if hier.total < best.1.total {
+                    best = (AllReduceAlgo::Hierarchical, hier);
+                }
+            }
         }
         best
     }
@@ -94,8 +213,28 @@ mod tests {
     }
 
     #[test]
+    fn binomial_rounds_cover_every_rank_once() {
+        for p in [2usize, 3, 5, 8, 13, 100] {
+            let rounds = usize::BITS - (p - 1).leading_zeros();
+            let mut absorbed = vec![false; p];
+            for k in 0..rounds {
+                for (child, parent) in binomial_round(p, k) {
+                    assert!(child < p && parent < p && child != parent);
+                    assert!(!absorbed[child], "rank {child} reduced twice (p={p})");
+                    absorbed[child] = true;
+                    assert!(!absorbed[parent], "parent {parent} already gone");
+                }
+            }
+            // everyone but the root folded in
+            assert_eq!(absorbed.iter().filter(|&&a| a).count(), p - 1, "p={p}");
+        }
+    }
+
+    #[test]
     fn tree_wins_for_tiny_messages() {
-        let (cfg, f, ranks) = engine_ranks(32);
+        // log-round algorithms (tree / halving-doubling) beat the ring's
+        // 2(p-1) latency hops at 1 KiB on the machine's 100-node DP group
+        let (cfg, f, ranks) = engine_ranks(100);
         let eng = CollectiveEngine::new(&f, &cfg);
         let (algo, _) = eng.select_allreduce(&ranks, 1024.0);
         assert_ne!(algo, AllReduceAlgo::Ring, "ring should lose at 1 KiB");
@@ -103,13 +242,13 @@ mod tests {
 
     #[test]
     fn bandwidth_optimal_algo_wins_for_large_messages() {
-        // ring and halving-doubling both move ~2*bytes*(p-1)/p per NIC;
-        // either may win by a hair, but the tree (2*log2(p)*bytes) must
-        // lose badly at 4 GB.
-        let (cfg, f, ranks) = engine_ranks(32);
+        // at 4 GB on 100 ranks the ring's 2(p-1)/p volume wins: the tree
+        // moves log2(p) full buffers per NIC, and halving-doubling pays
+        // its non-power-of-two fold (a full-buffer transfer each way)
+        let (cfg, f, ranks) = engine_ranks(100);
         let eng = CollectiveEngine::new(&f, &cfg);
         let (algo, best) = eng.select_allreduce(&ranks, 4e9);
-        assert_ne!(algo, AllReduceAlgo::Tree);
+        assert_eq!(algo, AllReduceAlgo::Ring);
         let tree = eng.tree_allreduce(&ranks, 4e9);
         assert!(tree.total > 2.0 * best.total, "{} vs {}", tree.total, best.total);
     }
@@ -138,10 +277,83 @@ mod tests {
     fn crossover_exists_between_tree_and_ring() {
         // somewhere between 1 KiB and 4 GB the winner flips: verifies the
         // selector actually discriminates
-        let (cfg, f, ranks) = engine_ranks(32);
+        let (cfg, f, ranks) = engine_ranks(100);
         let eng = CollectiveEngine::new(&f, &cfg);
         let small = eng.select_allreduce(&ranks, 1024.0).0;
         let large = eng.select_allreduce(&ranks, 4e9).0;
         assert_ne!(small, large);
+    }
+
+    #[test]
+    fn algorithms_agree_at_two_ranks() {
+        // At p=2 every flat algorithm degenerates to "exchange the buffer
+        // over full-duplex links": ring, halving-doubling and the double
+        // binary tree (two half-buffers, one per tree direction) must all
+        // cost ~bytes/link_rate.
+        let (cfg, f, ranks) = engine_ranks(2);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let bytes = 1e9;
+        let ring = eng.ring_allreduce(&ranks, bytes).total;
+        let tree = eng.tree_allreduce(&ranks, bytes).total;
+        let rd = eng.recursive_doubling_allreduce(&ranks, bytes).total;
+        for (name, t) in [("tree", tree), ("rd", rd)] {
+            assert!(
+                (t - ring).abs() / ring < 0.05,
+                "{name} {t} disagrees with ring {ring} at p=2"
+            );
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_partners_are_distinct() {
+        // the old sampled-pair code collapsed every partner onto the last
+        // rank for p not a power of two; the fold construction must cost
+        // strictly more than the power-of-two core alone
+        let (cfg, f, _) = engine_ranks(100);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let ranks100: Vec<Rank> = (0..100).map(|i| (i, 0)).collect();
+        let ranks64: Vec<Rank> = (0..64).map(|i| (i, 0)).collect();
+        let t100 = eng.recursive_doubling_allreduce(&ranks100, 1e8);
+        let t64 = eng.recursive_doubling_allreduce(&ranks64, 1e8);
+        assert!(t100.total > t64.total, "{} <= {}", t100.total, t64.total);
+        // 36 pre-fold + 36 post-fold + 6 rounds * 64 * 2 phases
+        assert_eq!(t100.flows, 36 + 36 + 6 * 64 * 2);
+    }
+
+    #[test]
+    fn tree_flow_accounting_is_exact() {
+        let (cfg, f, ranks) = engine_ranks(8);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let t = eng.tree_allreduce(&ranks, 1e7);
+        // two trees * (p-1) reduce edges + mirrored broadcast edges, all
+        // inter-node here (one rank per node)
+        assert_eq!(t.flows, 2 * 7 * 2);
+        assert!(t.max_util > 0.0);
+    }
+
+    #[test]
+    fn selector_prefers_hierarchical_on_the_full_machine() {
+        // 100 nodes is not a power of two: halving-doubling pays its fold
+        // phases and loses rail alignment, flat ring/tree use one NIC's
+        // worth of bandwidth per hop — the rail decomposition must win
+        // for large whole-node gradients (the paper's production case).
+        let cfg = ClusterConfig::default();
+        let f = build(&cfg);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let ranks: Vec<Rank> =
+            (0..cfg.nodes).flat_map(|n| (0..8).map(move |g| (n, g))).collect();
+        let (algo, t) = eng.select_allreduce(&ranks, 1e9);
+        assert_eq!(algo, AllReduceAlgo::Hierarchical);
+        let nodes: Vec<usize> = (0..cfg.nodes).collect();
+        let direct = eng.hierarchical_allreduce(&nodes, 1e9);
+        assert!((t.total - direct.total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for algo in AllReduceAlgo::ALL {
+            assert_eq!(AllReduceAlgo::parse(algo.name()).unwrap(), algo);
+        }
+        assert!(AllReduceAlgo::parse("bruck").is_err());
     }
 }

@@ -27,12 +27,33 @@ pub type Rank = (usize, usize);
 #[derive(Debug, Clone, Default)]
 pub struct CollectiveTime {
     pub total: f64,
-    /// Time spent in intra-node (NVSwitch) phases.
+    /// Time booked to intra-node (NVSwitch) phases. A phase that runs
+    /// NVSwitch hops and Ethernet flows concurrently is booked whole to
+    /// its dominant medium, so `intra + inter == total` for every
+    /// collective.
     pub intra: f64,
-    /// Time spent in inter-node (Ethernet) phases.
+    /// Time booked to inter-node (Ethernet) phases.
     pub inter: f64,
-    /// Number of Ethernet flows simulated.
+    /// Number of Ethernet flow-transfers simulated, summed over every
+    /// round/step of the collective (pipelined broadcasts count one per
+    /// chunk per hop).
     pub flows: usize,
+    /// Peak link utilisation (0..1) observed across all simulated rounds —
+    /// 1.0 on some link means the collective saturated the fabric there.
+    pub max_util: f64,
+}
+
+/// Outcome of one simulated phase: a batch of concurrent point-to-point
+/// transfers. Every contention-true collective round reduces to this.
+struct PhaseOut {
+    /// Phase makespan: max of the Ethernet batch and the slowest NVSwitch hop.
+    time: f64,
+    /// Ethernet-side makespan alone (0 when the phase was NVSwitch-only).
+    eth_time: f64,
+    /// Slowest intra-node (NVSwitch) hop in the phase.
+    nv_time: f64,
+    eth_flows: usize,
+    max_util: f64,
 }
 
 pub struct CollectiveEngine<'f> {
@@ -61,24 +82,17 @@ impl<'f> CollectiveEngine<'f> {
         }
     }
 
-    /// One ring step: every rank sends `bytes` to its ring successor.
-    /// Same-node hops ride NVSwitch; inter-node hops are simulated as
-    /// concurrent Ethernet flows. Returns the step makespan.
-    pub fn ring_step_time(&self, ring: &[Rank], bytes: f64) -> (f64, usize) {
-        if ring.len() < 2 || bytes <= 0.0 {
-            return (0.0, 0);
-        }
+    /// Simulate one phase: every `(from, to)` pair sends `bytes`
+    /// concurrently. Same-node pairs ride NVSwitch; inter-node pairs are
+    /// submitted to `FlowSim` as one batch so max-min fair sharing and
+    /// ECMP collisions emerge instead of being assumed away.
+    fn phase_time(&self, pairs: &[(Rank, Rank)], bytes: f64) -> PhaseOut {
         let mut eth_flows = Vec::new();
         let mut nvlink_max: f64 = 0.0;
-        for (i, &(node, rail)) in ring.iter().enumerate() {
-            let (nnode, nrail) = ring[(i + 1) % ring.len()];
+        for (i, &((node, rail), (nnode, nrail))) in pairs.iter().enumerate() {
             if node == nnode {
                 // intra-node hop
-                nvlink_max = nvlink_max.max(
-                    self.nvswitch.latency
-                        + bytes
-                            / (self.nvswitch.per_gpu_bw * self.nvswitch.efficiency),
-                );
+                nvlink_max = nvlink_max.max(self.nvswitch.p2p_time(bytes));
             } else {
                 let src = self
                     .fabric
@@ -92,12 +106,7 @@ impl<'f> CollectiveEngine<'f> {
                     // hops to the destination rail's GPU over NVSwitch,
                     // then crosses the (same-rail) Ethernet — the
                     // forwarding pattern Wang et al. describe.
-                    nvlink_max = nvlink_max.max(
-                        self.nvswitch.latency
-                            + bytes
-                                / (self.nvswitch.per_gpu_bw
-                                    * self.nvswitch.efficiency),
-                    );
+                    nvlink_max = nvlink_max.max(self.nvswitch.p2p_time(bytes));
                     let relay =
                         self.fabric.host(node, nrail).unwrap_or(src);
                     eth_flows.push(Flow {
@@ -119,29 +128,116 @@ impl<'f> CollectiveEngine<'f> {
             }
         }
         let n_flows = eth_flows.len();
-        let eth_time = if eth_flows.is_empty() {
-            0.0
+        let (eth_time, max_util) = if eth_flows.is_empty() {
+            (0.0, 0.0)
         } else {
-            self.sim.borrow_mut().run(&eth_flows).makespan
+            let report = self.sim.borrow_mut().run(&eth_flows);
+            (report.makespan, report.max_util())
         };
-        (eth_time.max(nvlink_max), n_flows)
+        PhaseOut {
+            time: eth_time.max(nvlink_max),
+            eth_time,
+            nv_time: nvlink_max,
+            eth_flows: n_flows,
+            max_util,
+        }
     }
 
-    /// Ring all-reduce among `ranks` of a `bytes` buffer:
-    /// reduce-scatter (p-1 steps) + all-gather (p-1 steps), chunk = bytes/p.
+    /// One ring step: every rank sends `bytes` to its ring successor.
+    /// Same-node hops ride NVSwitch; inter-node hops are simulated as
+    /// concurrent Ethernet flows. Returns the step makespan.
+    pub fn ring_step_time(&self, ring: &[Rank], bytes: f64) -> (f64, usize) {
+        if ring.len() < 2 || bytes <= 0.0 {
+            return (0.0, 0);
+        }
+        let pairs: Vec<(Rank, Rank)> = ring
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (r, ring[(i + 1) % ring.len()]))
+            .collect();
+        let out = self.phase_time(&pairs, bytes);
+        (out.time, out.eth_flows)
+    }
+
+    /// A batch of concurrent point-to-point transfers of `bytes` each
+    /// (pipeline-parallel activation exchange, halo exchange, ...).
+    pub fn p2p_batch(&self, pairs: &[(Rank, Rank)], bytes: f64) -> CollectiveTime {
+        if pairs.is_empty() || bytes <= 0.0 {
+            return CollectiveTime::default();
+        }
+        let out = self.phase_time(pairs, bytes);
+        let eth_bound = out.eth_time >= out.nv_time;
+        CollectiveTime {
+            total: out.time,
+            intra: if eth_bound { 0.0 } else { out.time },
+            inter: if eth_bound { out.time } else { 0.0 },
+            flows: out.eth_flows,
+            max_util: out.max_util,
+        }
+    }
+
+    /// Ring all-reduce among `ranks` of a `bytes` buffer: a ring
+    /// reduce-scatter followed by its mirrored all-gather — exactly twice
+    /// the [`Self::reduce_scatter`] cost.
     pub fn ring_allreduce(&self, ranks: &[Rank], bytes: f64) -> CollectiveTime {
+        let rs = self.reduce_scatter(ranks, bytes);
+        CollectiveTime {
+            total: 2.0 * rs.total,
+            intra: 2.0 * rs.intra,
+            inter: 2.0 * rs.inter,
+            flows: 2 * rs.flows,
+            max_util: rs.max_util,
+        }
+    }
+
+    /// Ring reduce-scatter: after p-1 steps each rank owns the reduced
+    /// chunk `bytes/p`. The NCCL building block DP gradient buckets use.
+    pub fn reduce_scatter(&self, ranks: &[Rank], bytes: f64) -> CollectiveTime {
         let p = ranks.len();
         if p < 2 || bytes <= 0.0 {
             return CollectiveTime::default();
         }
         let chunk = bytes / p as f64;
-        let (step, flows) = self.ring_step_time(ranks, chunk);
+        let pairs: Vec<(Rank, Rank)> = ranks
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (r, ranks[(i + 1) % p]))
+            .collect();
+        let step = self.phase_time(&pairs, chunk);
+        let total = (p - 1) as f64 * step.time;
+        let eth_bound = step.eth_time >= step.nv_time;
         CollectiveTime {
-            total: 2.0 * (p - 1) as f64 * step,
-            intra: 0.0,
-            inter: 2.0 * (p - 1) as f64 * step,
-            flows: flows * 2 * (p - 1),
+            total,
+            intra: if eth_bound { 0.0 } else { total },
+            inter: if eth_bound { total } else { 0.0 },
+            flows: step.eth_flows * (p - 1),
+            max_util: step.max_util,
         }
+    }
+
+    /// Ring all-gather — the mirrored cost of [`Self::reduce_scatter`].
+    pub fn all_gather(&self, ranks: &[Rank], bytes: f64) -> CollectiveTime {
+        self.reduce_scatter(ranks, bytes)
+    }
+
+    /// Tensor-parallel all-reduce for a TP group starting at `base_node`:
+    /// NVSwitch ring when the group fits in one node, a simulated
+    /// cross-node ring (NVSwitch + Ethernet flows) when it spans nodes.
+    pub fn tp_allreduce(&self, base_node: usize, tp: usize, bytes: f64) -> CollectiveTime {
+        if tp < 2 || bytes <= 0.0 {
+            return CollectiveTime::default();
+        }
+        let g = self.cfg.node.gpus_per_node.max(1);
+        if tp <= g {
+            let mut nv = self.nvswitch.clone();
+            nv.gpus = tp;
+            let t = nv.all_reduce_time(bytes);
+            return CollectiveTime { total: t, intra: t, ..CollectiveTime::default() };
+        }
+        let rails = self.cfg.network.rails.min(g).max(1);
+        let ranks: Vec<Rank> =
+            (0..tp).map(|i| (base_node + i / g, (i % g) % rails)).collect();
+        self.ring_allreduce(&ranks, bytes)
     }
 
     /// Hierarchical (rail-aligned) all-reduce over whole nodes:
@@ -164,7 +260,7 @@ impl<'f> CollectiveEngine<'f> {
         let intra =
             self.nvswitch.reduce_scatter_time(bytes) + self.nvswitch.all_gather_time(bytes);
         if n == 1 {
-            return CollectiveTime { total: intra, intra, inter: 0.0, flows: 0 };
+            return CollectiveTime { total: intra, intra, ..CollectiveTime::default() };
         }
         let rail_bytes = bytes / g as f64;
         let chunk = rail_bytes / n as f64;
@@ -184,18 +280,44 @@ impl<'f> CollectiveEngine<'f> {
                 });
             }
         }
-        let step = self.sim.borrow_mut().run(&flows).makespan;
+        let report = self.sim.borrow_mut().run(&flows);
+        let step = report.makespan;
         let inter = 2.0 * (n - 1) as f64 * step;
         CollectiveTime {
             total: intra + inter,
             intra,
             inter,
             flows: flows.len() * 2 * (n - 1),
+            max_util: report.max_util(),
         }
     }
 
+    /// If `ranks` cover whole nodes (every distinct node contributes all
+    /// of its rail-attached GPUs), return the sorted node list — the rank
+    /// shape the hierarchical rail-aligned algorithm requires.
+    pub fn full_nodes(&self, ranks: &[Rank]) -> Option<Vec<usize>> {
+        let g = self.cfg.node.gpus_per_node.min(self.cfg.network.rails);
+        if g == 0 || ranks.is_empty() || ranks.len() % g != 0 {
+            return None;
+        }
+        let mut by_node: std::collections::BTreeMap<usize, std::collections::BTreeSet<usize>> =
+            std::collections::BTreeMap::new();
+        for &(node, rail) in ranks {
+            if !by_node.entry(node).or_default().insert(rail) {
+                return None; // duplicate rank
+            }
+        }
+        let complete = by_node
+            .values()
+            .all(|rails| rails.len() == g && rails.iter().all(|&r| r < g));
+        complete.then(|| by_node.keys().copied().collect())
+    }
+
     /// Pipelined ring broadcast (HPL panel broadcast pattern) among ranks
-    /// on one rail. Root is ranks[0].
+    /// on one rail. Root is ranks[0]. In steady state every hop of the
+    /// chain forwards a chunk while receiving the next one, so the
+    /// per-chunk time is the makespan of the **whole chain's** concurrent
+    /// transfers, not a sampled neighbour hop.
     pub fn ring_broadcast(&self, ranks: &[Rank], bytes: f64) -> CollectiveTime {
         let p = ranks.len();
         if p < 2 || bytes <= 0.0 {
@@ -203,39 +325,27 @@ impl<'f> CollectiveEngine<'f> {
         }
         let chunk = self.bcast_chunk.min(bytes);
         let n_chunks = (bytes / chunk).ceil();
-        // per-chunk neighbour transfer time: simulate a single hop
-        let (hop, _) = self.ring_step_time(&ranks[0..2.min(p)], chunk);
+        let chain: Vec<(Rank, Rank)> =
+            (0..p - 1).map(|i| (ranks[i], ranks[i + 1])).collect();
+        let step = self.phase_time(&chain, chunk);
         // pipeline: last chunk arrives after (n_chunks + p - 2) hops
-        let total = (n_chunks + p as f64 - 2.0) * hop;
-        CollectiveTime { total, intra: 0.0, inter: total, flows: p - 1 }
+        let total = (n_chunks + p as f64 - 2.0) * step.time;
+        CollectiveTime {
+            total,
+            inter: total,
+            // every chunk crosses every Ethernet hop of the chain once
+            flows: step.eth_flows * n_chunks as usize,
+            max_util: step.max_util,
+            ..CollectiveTime::default()
+        }
     }
 
-    /// Latency-bound small all-reduce (HPCG dot products): binary-tree
-    /// reduce + broadcast. Dominated by hop latencies, not bandwidth.
+    /// Latency-bound small all-reduce (HPCG dot products, MxP residual
+    /// norms): the double binary tree at tiny payloads, where the
+    /// simulated per-round makespan collapses to hop latencies. Kept as a
+    /// scalar-returning helper for the benchmark models.
     pub fn small_allreduce_latency(&self, ranks: &[Rank], bytes: f64) -> f64 {
-        let p = ranks.len();
-        if p < 2 {
-            return 0.0;
-        }
-        // representative inter-node one-way latency from the fabric
-        let (a_node, a_rail) = ranks[0];
-        let far = ranks
-            .iter()
-            .find(|(n, _)| *n != a_node)
-            .cloned()
-            .unwrap_or(ranks[p - 1]);
-        let lat = if far.0 == a_node {
-            self.nvswitch.latency
-        } else {
-            let src = self.fabric.host(a_node, a_rail).unwrap();
-            let dst = self.fabric.host(far.0, far.1).unwrap();
-            let paths = self.fabric.ecmp_paths(src, dst, 1);
-            self.fabric.path_latency(&paths[0]) + self.roce.transport_latency
-        };
-        let hops = (p as f64).log2().ceil();
-        // reduce + broadcast, plus serialization of the payload per hop
-        let ser = bytes / (self.nvswitch.per_gpu_bw.min(50e9));
-        2.0 * hops * (lat + ser)
+        self.tree_allreduce(ranks, bytes.max(1.0)).total
     }
 
     /// All-to-all among ranks (bytes per src-dst pair) — simulated directly.
@@ -269,16 +379,19 @@ impl<'f> CollectiveEngine<'f> {
         let nv = nvlink_bytes_max
             / (self.nvswitch.per_gpu_bw * self.nvswitch.efficiency);
         let n_flows = flows.len();
-        let eth = if flows.is_empty() {
-            0.0
+        let (eth, max_util) = if flows.is_empty() {
+            (0.0, 0.0)
         } else {
-            self.sim.borrow_mut().run(&flows).makespan
+            let report = self.sim.borrow_mut().run(&flows);
+            (report.makespan, report.max_util())
         };
+        let total = eth.max(nv);
         CollectiveTime {
-            total: eth.max(nv),
-            intra: nv,
-            inter: eth,
+            total,
+            intra: if eth >= nv { 0.0 } else { total },
+            inter: if eth >= nv { total } else { 0.0 },
             flows: n_flows,
+            max_util,
         }
     }
 }
@@ -405,5 +518,107 @@ mod tests {
         assert_eq!(eng.ring_allreduce(&[], 1e9).total, 0.0);
         assert_eq!(eng.ring_allreduce(&[(0, 0)], 1e9).total, 0.0);
         assert_eq!(eng.hierarchical_allreduce(&[0, 1], 0.0).total, 0.0);
+        assert_eq!(eng.reduce_scatter(&[(0, 0)], 1e9).total, 0.0);
+        assert_eq!(eng.p2p_batch(&[], 1e9).total, 0.0);
+        assert_eq!(eng.tp_allreduce(0, 1, 1e9).total, 0.0);
+    }
+
+    #[test]
+    fn allreduce_is_reduce_scatter_plus_all_gather() {
+        let (cfg, f) = engine_for(TopologyKind::RailOptimized, 8);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let ranks: Vec<Rank> = (0..8).map(|n| (n, 0)).collect();
+        let bytes = 1e9;
+        let ar = eng.ring_allreduce(&ranks, bytes);
+        let rs = eng.reduce_scatter(&ranks, bytes);
+        let ag = eng.all_gather(&ranks, bytes);
+        assert!((ar.total - (rs.total + ag.total)).abs() / ar.total < 1e-9);
+        assert_eq!(ar.flows, rs.flows + ag.flows);
+    }
+
+    #[test]
+    fn p2p_batch_contends_on_a_shared_destination() {
+        let (cfg, f) = engine_for(TopologyKind::RailOptimized, 8);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let one = eng.p2p_batch(&[((0, 0), (7, 0))], 1e8);
+        let fan_in = eng.p2p_batch(
+            &[((0, 0), (7, 0)), ((1, 0), (7, 0)), ((2, 0), (7, 0))],
+            1e8,
+        );
+        // three flows into one NIC: the destination link serializes them
+        assert!(
+            fan_in.total > 2.5 * one.total,
+            "no contention: {} vs {}",
+            fan_in.total,
+            one.total
+        );
+        assert!(fan_in.max_util > 0.99, "dst link not saturated: {}", fan_in.max_util);
+    }
+
+    #[test]
+    fn tp_allreduce_intra_matches_nvswitch_and_spans_nodes() {
+        let (cfg, f) = engine_for(TopologyKind::RailOptimized, 4);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let intra = eng.tp_allreduce(0, 8, 1e9);
+        assert_eq!(intra.flows, 0);
+        assert!((intra.total - eng.nvswitch.all_reduce_time(1e9)).abs() < 1e-12);
+        let spanning = eng.tp_allreduce(0, 16, 1e9);
+        assert!(spanning.flows > 0, "16-way TP must cross the Ethernet");
+        assert!(spanning.total > intra.total);
+    }
+
+    #[test]
+    fn full_nodes_detects_whole_node_rank_sets() {
+        let (cfg, f) = engine_for(TopologyKind::RailOptimized, 4);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let whole: Vec<Rank> =
+            (0..3).flat_map(|n| (0..8).map(move |g| (n, g))).collect();
+        assert_eq!(eng.full_nodes(&whole), Some(vec![0, 1, 2]));
+        let partial: Vec<Rank> = (0..3).map(|n| (n, 0)).collect();
+        assert_eq!(eng.full_nodes(&partial), None);
+        let dup: Vec<Rank> = whole.iter().copied().chain([(0, 0)]).collect();
+        assert_eq!(eng.full_nodes(&dup), None);
+    }
+
+    #[test]
+    fn intra_plus_inter_decomposes_total() {
+        // dominant-medium booking: intra + inter == total for every
+        // collective (the manifest's inter_ms/intra_ms are a decomposition)
+        let (cfg, f) = engine_for(TopologyKind::RailOptimized, 16);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let ranks: Vec<Rank> = (0..16).map(|n| (n, 0)).collect();
+        let nodes: Vec<usize> = (0..16).collect();
+        let times = [
+            eng.ring_allreduce(&ranks, 1e8),
+            eng.reduce_scatter(&ranks, 1e8),
+            eng.tree_allreduce(&ranks, 1e8),
+            eng.recursive_doubling_allreduce(&ranks, 1e8),
+            eng.hierarchical_allreduce(&nodes, 1e8),
+            eng.alltoall(&ranks, 1e6),
+            eng.p2p_batch(&[((0, 0), (1, 0))], 1e8),
+            eng.tp_allreduce(0, 8, 1e8),
+        ];
+        for t in times {
+            assert!(
+                (t.total - (t.intra + t.inter)).abs() <= 1e-9 * t.total.max(1.0),
+                "intra {} + inter {} != total {}",
+                t.intra,
+                t.inter,
+                t.total
+            );
+        }
+    }
+
+    #[test]
+    fn collectives_report_peak_link_util() {
+        let (cfg, f) = engine_for(TopologyKind::RailOptimized, 16);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let ranks: Vec<Rank> = (0..16).map(|n| (n, 0)).collect();
+        let t = eng.ring_allreduce(&ranks, 1e9);
+        // every host link carries exactly its one ring flow at line rate
+        assert!(t.max_util > 0.9 && t.max_util <= 1.0 + 1e-9, "{}", t.max_util);
+        let nodes: Vec<usize> = (0..16).collect();
+        let h = eng.hierarchical_allreduce(&nodes, 1e9);
+        assert!(h.max_util > 0.9 && h.max_util <= 1.0 + 1e-9, "{}", h.max_util);
     }
 }

@@ -1,0 +1,65 @@
+//! `sakuraone collectives` — the collective-engine grid (algorithm ×
+//! message size × topology × failure plan) through the deterministic
+//! parallel sweep engine. The manifest is byte-identical for any
+//! `--workers` value with the same seed, which `tests/golden/
+//! collectives.json` pins down (see docs/collectives.md).
+
+use anyhow::Result;
+
+use crate::runtime::run_manifest::RunManifest;
+use crate::runtime::sweep::{
+    collectives_grid, default_workers, run_sweep_named, SweepConfig,
+};
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let quick = args.flag("quick");
+    let workers = if args.flag("serial") {
+        1
+    } else {
+        args.get_usize("workers", default_workers()).map_err(anyhow::Error::msg)?
+    };
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let scenarios = collectives_grid(quick);
+
+    let t0 = std::time::Instant::now();
+    let manifest =
+        run_sweep_named(&cfg, &scenarios, &SweepConfig { workers, seed }, "collectives");
+    eprintln!(
+        "collectives: {} scenarios on {} worker(s) in {:.2}s (grid: {}, seed {})",
+        manifest.scenarios.len(),
+        workers,
+        t0.elapsed().as_secs_f64(),
+        if quick { "quick" } else { "full" },
+        seed,
+    );
+
+    if !super::quiet(args) {
+        println!("{}", summary_table(&manifest).render());
+    }
+    Ok(manifest)
+}
+
+/// Human-readable digest: one row per grid point.
+fn summary_table(manifest: &RunManifest) -> Table {
+    let mut t = Table::new(
+        "Collective sweep — contention-true engine",
+        &["Scenario", "Algo", "Topology", "Total ms", "AlgBW GB/s", "Peak util", "Flows"],
+    );
+    for s in &manifest.scenarios {
+        let get = |k: &str| s.metric_value(k).unwrap_or(f64::NAN);
+        let param = |k: &str| s.params.get(k).cloned().unwrap_or_else(|| "-".into());
+        t.row(&[
+            s.id.clone(),
+            param("algo"),
+            param("topology"),
+            format!("{:.3}", get("total_ms")),
+            format!("{:.2}", get("algbw_gbps")),
+            format!("{:.2}", get("peak_link_util")),
+            format!("{:.0}", get("eth_flows")),
+        ]);
+    }
+    t
+}

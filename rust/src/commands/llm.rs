@@ -36,6 +36,7 @@ pub fn handle(args: &Args) -> Result<RunManifest> {
                     ("compute", format!("{:.2} s", st.compute)),
                     ("tp comm (NVSwitch)", format!("{:.3} s", st.tp_comm)),
                     ("dp comm (rails)", format!("{:.3} s", st.dp_comm)),
+                    ("pp comm (p2p flows)", format!("{:.3} s", st.pp_comm)),
                     ("pp bubble", format!("{:.3} s", st.pp_bubble)),
                     ("MFU", format!("{:.1}%", st.mfu * 100.0)),
                     ("throughput", format!("{:.0} tokens/s", st.tokens_per_s)),
@@ -55,6 +56,7 @@ pub fn handle(args: &Args) -> Result<RunManifest> {
             .metric("compute_s", st.compute)
             .metric("tp_comm_s", st.tp_comm)
             .metric("dp_comm_s", st.dp_comm)
+            .metric("pp_comm_s", st.pp_comm)
             .metric("pp_bubble_s", st.pp_bubble)
             .metric("mfu_pct", st.mfu * 100.0)
             .metric("tokens_per_s", st.tokens_per_s),

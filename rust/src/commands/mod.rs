@@ -5,6 +5,7 @@
 //! and human-readable tables are printed unless `--json` asks for quiet.
 
 pub mod checkpoint;
+pub mod collectives;
 pub mod config;
 pub mod hpcg;
 pub mod hpl;
@@ -34,7 +35,7 @@ pub const FLAGS: &[&str] = &[
 /// Shared `--nodes/--topology/...` overrides on the paper's default cluster.
 pub(crate) fn cluster_config(args: &Args) -> Result<ClusterConfig> {
     let mut cfg = ClusterConfig::default();
-    for key in ["nodes", "topology", "rails", "spines", "gpus-per-node"] {
+    for key in ["nodes", "pods", "topology", "rails", "spines", "gpus-per-node"] {
         if let Some(v) = args.get(key) {
             cfg.apply_override(key, v).map_err(anyhow::Error::msg)?;
         }
@@ -78,6 +79,7 @@ USAGE: sakuraone <subcommand> [options]
   train     [--steps N] [--seed S]
   llm       [--params P] [--dp D --tp T --pp P] [--batch-tokens B]
   sched     [--jobs N] [--seed S]
+  collectives [--quick] [--serial] [--workers N] [--seed S]
   power     [--pue X]                 (paper §6 future work: energy/W)
   checkpoint [--params P] [--interval K] [--step-time S]
   resilience [--fail-spines N] [--fail-leaves N] [--cable-cuts F]

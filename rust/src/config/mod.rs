@@ -264,6 +264,14 @@ impl ClusterConfig {
             }
             "gpus-per-node" => self.node.gpus_per_node = parse_usize(value)?,
             "topology" => self.network.topology = TopologyKind::parse(value)?,
+            "pods" => {
+                let pods = parse_usize(value)?;
+                if pods == 0 {
+                    return Err("pods: must be at least 1".into());
+                }
+                self.network.pods = pods;
+                self.network.nodes_per_pod = self.nodes.div_ceil(pods);
+            }
             "rails" => {
                 self.network.rails = parse_usize(value)?;
                 self.network.leaf_per_pod = self.network.rails;
@@ -349,6 +357,15 @@ mod tests {
     fn unknown_override_rejected() {
         let mut c = ClusterConfig::default();
         assert!(c.apply_override("warp-drive", "11").is_err());
+    }
+
+    #[test]
+    fn override_pods_rebalances_nodes_per_pod() {
+        let mut c = ClusterConfig::default();
+        c.apply_override("pods", "4").unwrap();
+        assert_eq!(c.network.pods, 4);
+        assert_eq!(c.network.nodes_per_pod, 25);
+        assert!(c.apply_override("pods", "0").is_err());
     }
 
     #[test]

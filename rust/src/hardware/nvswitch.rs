@@ -51,6 +51,13 @@ impl NvSwitchFabric {
         self.reduce_scatter_time(bytes) + self.all_gather_time(bytes)
     }
 
+    /// One point-to-point GPU→GPU copy through NVSwitch (the intra-node
+    /// hop the collectives layer charges for same-node exchanges and
+    /// cross-rail relays).
+    pub fn p2p_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / (self.per_gpu_bw * self.efficiency)
+    }
+
     /// Broadcast via NVSwitch multicast-ish pipeline.
     pub fn broadcast_time(&self, bytes: f64) -> f64 {
         if self.gpus <= 1 {
@@ -101,5 +108,13 @@ mod tests {
     fn broadcast_cheaper_than_allreduce() {
         let f = fabric();
         assert!(f.broadcast_time(1e9) < f.all_reduce_time(1e9));
+    }
+
+    #[test]
+    fn p2p_is_latency_plus_serialization() {
+        let f = fabric();
+        assert!((f.p2p_time(0.0) - f.latency).abs() < 1e-15);
+        let t = f.p2p_time(1e9);
+        assert!(t > f.latency && t < f.all_reduce_time(1e9));
     }
 }

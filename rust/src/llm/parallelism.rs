@@ -3,13 +3,16 @@
 //! SAKURAONE's raison d'être (paper §1) is LLM training. This model
 //! composes data/tensor/pipeline parallelism costs from the same
 //! substrates the benchmarks use: GPU roofline for the local compute,
-//! NVSwitch for tensor-parallel collectives, the Ethernet rails (through
-//! the flow simulator) for data-parallel gradient reduction, and the
-//! classic 1F1B bubble for pipeline parallelism.
+//! and **simulated collectives** for every communication term — the
+//! tensor-parallel all-reduce (NVSwitch, or cross-node rings when TP
+//! spans nodes), the data-parallel gradient sync (hierarchical
+//! rail-aligned all-reduce through the flow simulator), and the
+//! pipeline-parallel activation exchange (concurrent point-to-point
+//! flows), plus the classic 1F1B bubble.
 
-use crate::collectives::CollectiveEngine;
+use crate::collectives::{CollectiveEngine, Rank};
 use crate::config::ClusterConfig;
-use crate::hardware::{GpuModel, NvSwitchFabric};
+use crate::hardware::GpuModel;
 use crate::topology::graph::Fabric;
 
 #[derive(Debug, Clone)]
@@ -55,10 +58,21 @@ pub struct StepTime {
     pub compute: f64,
     pub tp_comm: f64,
     pub dp_comm: f64,
+    /// Pipeline-parallel activation / activation-gradient exchange time
+    /// (simulated point-to-point flows, all replicas concurrent).
+    pub pp_comm: f64,
     pub pp_bubble: f64,
     /// Model FLOP/s utilisation across the allocation.
     pub mfu: f64,
     pub tokens_per_s: f64,
+}
+
+/// Linear GPU index → its (node, NIC rail) placement: `g` GPUs per node,
+/// GPU r of a node rides NIC `r % rails`. Every parallelism dimension
+/// (TP rings, DP home nodes, PP stage boundaries) uses this one mapping
+/// so their traffic lands on consistent node assignments.
+fn gpu_placement(idx: usize, g: usize, rails: usize) -> Rank {
+    (idx / g, (idx % g) % rails)
 }
 
 pub fn step_time(
@@ -68,7 +82,6 @@ pub fn step_time(
 ) -> StepTime {
     let gpu = GpuModel::h100_sxm();
     let engine = CollectiveEngine::new(fabric, cfg);
-    let nv = NvSwitchFabric::h100_baseboard(&gpu, cfg.node.gpus_per_node);
     let gpus = llm.gpus() as f64;
     assert!(
         llm.gpus() <= cfg.total_gpus(),
@@ -83,26 +96,77 @@ pub fn step_time(
         step_flops / (gpus * gpu.bf16_flops * llm.mfu_ceiling);
 
     // --- tensor parallel: 4 all-reduces of (hidden activations) per layer
-    // per microbatch, all on NVSwitch. Aggregate activation traffic per
-    // microbatch ~ 8 bytes/param^(2/3)-ish is model-specific; use the
-    // standard estimate: TP all-reduce volume per step ~ 4 * activations,
-    // activations ~ batch_tokens/dp/microbatches * hidden * layers * 2B.
-    // For the step model we approximate activation volume as 2% of the
-    // parameter bytes per microbatch — the Megatron-LM planning rule.
+    // per microbatch. Aggregate activation traffic per microbatch ~ 8
+    // bytes/param^(2/3)-ish is model-specific; use the standard estimate:
+    // TP all-reduce volume per step ~ 4 * activations, activations ~
+    // batch_tokens/dp/microbatches * hidden * layers * 2B. For the step
+    // model we approximate activation volume as 2% of the parameter bytes
+    // per microbatch — the Megatron-LM planning rule. The collective is
+    // simulated: NVSwitch ring when TP fits one node, NVSwitch + Ethernet
+    // flows when it spans nodes.
     let act_bytes = 0.02 * llm.params * 2.0;
-    let tp_comm = if llm.tp > 1 {
-        llm.microbatches as f64 * nv.all_reduce_time(act_bytes)
+    let g = cfg.node.gpus_per_node.max(1);
+    let rails = cfg.network.rails.min(g).max(1);
+    let tp_comm = if llm.tp <= 1 {
+        0.0
+    } else if llm.tp <= g {
+        llm.microbatches as f64 * engine.tp_allreduce(0, llm.tp, act_bytes).total
+    } else {
+        // TP spans nodes: every one of the dp*pp TP groups runs its
+        // cross-node ring at the same time, so one simulated step carries
+        // the full batch of every group's concurrent flows.
+        let chunk = act_bytes / llm.tp as f64;
+        let mut pairs: Vec<(Rank, Rank)> = Vec::new();
+        for grp in 0..llm.dp * llm.pp {
+            let base = grp * llm.tp;
+            for i in 0..llm.tp {
+                let a = base + i;
+                let b = base + (i + 1) % llm.tp;
+                pairs.push((gpu_placement(a, g, rails), gpu_placement(b, g, rails)));
+            }
+        }
+        let step = engine.p2p_batch(&pairs, chunk).total;
+        llm.microbatches as f64 * 2.0 * (llm.tp - 1) as f64 * step
+    };
+
+    // --- data parallel: hierarchical all-reduce of the gradient shard
+    // over the rails (bf16 grads, 2 bytes/param, sharded over tp*pp).
+    // Replicas are placed by linear GPU index, so a replica's home node is
+    // its first GPU divided by the node width; with small tp several
+    // replicas share a node and their reduction rides the intra-node
+    // phases of the same collective.
+    let grad_bytes = 2.0 * llm.params / (llm.tp * llm.pp) as f64;
+    let mut dp_nodes: Vec<usize> = (0..llm.dp)
+        .map(|d| gpu_placement(d * llm.pp * llm.tp, g, rails).0)
+        .collect();
+    dp_nodes.dedup();
+    let dp_comm = if llm.dp > 1 {
+        // bucketed overlap hides half behind the backward pass
+        0.5 * engine.hierarchical_allreduce(&dp_nodes, grad_bytes).total
     } else {
         0.0
     };
 
-    // --- data parallel: ring all-reduce of the gradient shard over the
-    // rails (bf16 grads, 2 bytes/param, sharded over tp*pp).
-    let grad_bytes = 2.0 * llm.params / (llm.tp * llm.pp) as f64;
-    let dp_nodes: Vec<usize> = (0..llm.dp).map(|d| d * llm.pp).collect();
-    let dp_comm = if llm.dp > 1 {
-        // bucketed overlap hides half behind the backward pass
-        0.5 * engine.hierarchical_allreduce(&dp_nodes, grad_bytes).total
+    // --- pipeline parallel: per-microbatch activation tensors cross each
+    // stage boundary (forward) and their gradients cross back (backward).
+    // In 1F1B steady state every replica's boundaries are in flight at
+    // once, so the whole batch of point-to-point transfers is simulated
+    // together and fabric sharing emerges.
+    let pp_comm = if llm.pp > 1 {
+        // decoder width from the parameter count (≈8k for a 70B dense model)
+        let hidden = 2048.0 * (llm.params / 1e9).cbrt();
+        let tokens_per_micro =
+            llm.batch_tokens / (llm.dp as f64 * llm.microbatches as f64);
+        let boundary_bytes = 2.0 * tokens_per_micro * hidden; // bf16
+        let mut pairs: Vec<(Rank, Rank)> = Vec::new();
+        for d in 0..llm.dp {
+            for s in 0..llm.pp - 1 {
+                let a = (d * llm.pp + s) * llm.tp; // first GPU of the stage
+                let b = (d * llm.pp + s + 1) * llm.tp;
+                pairs.push((gpu_placement(a, g, rails), gpu_placement(b, g, rails)));
+            }
+        }
+        2.0 * llm.microbatches as f64 * engine.p2p_batch(&pairs, boundary_bytes).total
     } else {
         0.0
     };
@@ -114,13 +178,14 @@ pub fn step_time(
         0.0
     };
 
-    let total = compute + tp_comm + dp_comm + pp_bubble;
+    let total = compute + tp_comm + dp_comm + pp_comm + pp_bubble;
     let mfu = step_flops / (total * gpus * gpu.bf16_flops);
     StepTime {
         total,
         compute,
         tp_comm,
         dp_comm,
+        pp_comm,
         pp_bubble,
         mfu,
         tokens_per_s: llm.batch_tokens / total,
@@ -185,8 +250,69 @@ mod tests {
         let st = step_time(&cfg, &f, &llm);
         assert_eq!(st.tp_comm, 0.0);
         assert_eq!(st.dp_comm, 0.0);
+        assert_eq!(st.pp_comm, 0.0);
         assert_eq!(st.pp_bubble, 0.0);
         assert!(st.total > 0.0);
+    }
+
+    #[test]
+    fn pipeline_traffic_is_simulated_and_charged() {
+        let (cfg, f) = setup();
+        let llm = LlmConfig::llama70b_on_sakuraone();
+        let st = step_time(&cfg, &f, &llm);
+        assert!(st.pp_comm > 0.0, "pp>1 must pay activation exchange");
+        // p2p activations are a small tax next to compute, not a new
+        // dominant term
+        assert!(st.pp_comm < 0.2 * st.compute, "{} vs {}", st.pp_comm, st.compute);
+        assert!((st.total
+            - (st.compute + st.tp_comm + st.dp_comm + st.pp_comm + st.pp_bubble))
+            .abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn small_tp_dp_groups_stay_in_bounds() {
+        // 128 pure-DP replicas live on 16 nodes, not 128: the replica →
+        // node mapping must go through the node width or fabric.host()
+        // panics past node 99
+        let (cfg, f) = setup();
+        let llm = LlmConfig {
+            params: 1e9,
+            batch_tokens: 1e6,
+            microbatches: 4,
+            dp: 128,
+            tp: 1,
+            pp: 1,
+            flops_per_token_factor: 6.0,
+            mfu_ceiling: 0.5,
+        };
+        let st = step_time(&cfg, &f, &llm);
+        assert!(st.dp_comm > 0.0);
+        assert!(st.total.is_finite());
+    }
+
+    #[test]
+    fn cross_node_tensor_parallel_costs_more_than_nvswitch_tp() {
+        let (cfg, f) = setup();
+        let base = LlmConfig {
+            params: 70e9,
+            batch_tokens: 4e6,
+            microbatches: 40,
+            dp: 2,
+            tp: 8,
+            pp: 1,
+            flops_per_token_factor: 6.0,
+            mfu_ceiling: 0.55,
+        };
+        let intra = step_time(&cfg, &f, &base);
+        let spanning = step_time(&cfg, &f, &LlmConfig { tp: 16, dp: 1, ..base });
+        // same GPU count, but a 16-way TP group crosses the Ethernet
+        assert!(
+            spanning.tp_comm > intra.tp_comm,
+            "{} vs {}",
+            spanning.tp_comm,
+            intra.tp_comm
+        );
     }
 
     #[test]

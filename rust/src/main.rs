@@ -10,6 +10,7 @@
 //!   train   — real LLM training through the PJRT runtime
 //!   llm     — distributed LLM step-time model
 //!   sched   — Slurm-like scheduler demo on a synthetic job mix
+//!   collectives — algorithm × size × topology × failure grid (§2.2)
 //!   validate— numerics checks through the AOT artifacts
 //!   report  — Table 3 census, rankings, config inventory
 //!   suite   — everything above through the parallel sweep engine
@@ -49,6 +50,7 @@ fn run(args: &Args) -> Result<()> {
         "train" => commands::train::handle(args)?,
         "llm" => commands::llm::handle(args)?,
         "sched" => commands::sched::handle(args)?,
+        "collectives" => commands::collectives::handle(args)?,
         "power" => commands::power::handle(args)?,
         "checkpoint" => commands::checkpoint::handle(args)?,
         "resilience" => commands::resilience::handle(args)?,

@@ -28,6 +28,11 @@ impl FailurePlan {
     pub fn leaf_down(n: usize) -> Self {
         Self { leaves: (0..n).collect(), ..Default::default() }
     }
+
+    /// Sever a deterministic `fraction` of the leaf↔spine cables.
+    pub fn cable_cuts(fraction: f64, seed: u64) -> Self {
+        Self { cable_fraction: fraction, seed, ..Default::default() }
+    }
 }
 
 /// Apply a failure plan: returns a new fabric with the selected devices'

@@ -20,7 +20,7 @@ use crate::benchmarks::hpl::{run_hpl, HplParams, HplResult};
 use crate::benchmarks::hpl_mxp::{run_mxp, MxpParams, MxpResult};
 use crate::benchmarks::io500::{run_io500_on, Io500Params, Io500Result};
 use crate::benchmarks::report::paper;
-use crate::collectives::CollectiveEngine;
+use crate::collectives::{AllReduceAlgo, CollectiveEngine, Rank};
 use crate::config::{ClusterConfig, TopologyKind};
 use crate::llm::{step_time, LlmConfig};
 use crate::network::{apply_failures, FailurePlan};
@@ -74,6 +74,14 @@ pub enum ScenarioSpec {
     Llm { llm: LlmConfig, topology: TopologyKind },
     /// Degraded-network drill: hierarchical all-reduce under failures.
     Resilience { plan: FailurePlan, bytes: f64 },
+    /// One collective (algorithm × message size × topology × optional
+    /// failure plan) through the contention-true engine.
+    Collective {
+        algo: AllReduceAlgo,
+        bytes: f64,
+        topology: TopologyKind,
+        plan: Option<FailurePlan>,
+    },
     /// Synthetic job mix through the Slurm-like scheduler (seeded).
     Sched { jobs: usize },
     /// Scaled-down cluster running a proportionally scaled HPL.
@@ -93,6 +101,7 @@ impl Scenario {
             ScenarioSpec::Io500 { .. } => "io500",
             ScenarioSpec::Llm { .. } => "llm",
             ScenarioSpec::Resilience { .. } => "resilience",
+            ScenarioSpec::Collective { .. } => "collective",
             ScenarioSpec::Sched { .. } => "sched",
             ScenarioSpec::Cluster { .. } => "cluster",
         }
@@ -132,7 +141,9 @@ impl Scenario {
                     .param("pp", llm.pp)
                     .metric("step_time_s", st.total)
                     .metric("compute_s", st.compute)
+                    .metric("tp_comm_s", st.tp_comm)
                     .metric("dp_comm_s", st.dp_comm)
+                    .metric("pp_comm_s", st.pp_comm)
                     .metric("mfu_pct", st.mfu * 100.0)
                     .metric("tokens_per_s", st.tokens_per_s)
             }
@@ -153,6 +164,58 @@ impl Scenario {
                     .metric("healthy_ms", healthy * 1e3)
                     .metric("degraded_ms", degraded * 1e3)
                     .metric("slowdown_x", degraded / healthy.max(1e-12))
+            }
+            ScenarioSpec::Collective { algo, bytes, topology, plan } => {
+                let mut c = cfg.clone();
+                c.network.topology = *topology;
+                let healthy = build(&c);
+                let fabric = match plan {
+                    Some(p) => apply_failures(&healthy, p),
+                    None => healthy,
+                };
+                let engine = CollectiveEngine::new(&fabric, &c);
+                let nodes: Vec<usize> = (0..c.nodes).collect();
+                // the DP-group shape: hierarchical drives whole nodes,
+                // the flat algorithms run one rank per node on rail 0
+                let t = match algo {
+                    AllReduceAlgo::Hierarchical => {
+                        engine.hierarchical_allreduce(&nodes, *bytes)
+                    }
+                    flat => {
+                        let ranks: Vec<Rank> =
+                            nodes.iter().map(|&n| (n, 0)).collect();
+                        match flat {
+                            AllReduceAlgo::Ring => {
+                                engine.ring_allreduce(&ranks, *bytes)
+                            }
+                            AllReduceAlgo::Tree => {
+                                engine.tree_allreduce(&ranks, *bytes)
+                            }
+                            _ => engine
+                                .recursive_doubling_allreduce(&ranks, *bytes),
+                        }
+                    }
+                };
+                let mut rec = ScenarioRecord::new(&self.id, self.kind())
+                    .param("algo", algo.name())
+                    .param("topology", topology.name())
+                    .param("bytes", *bytes as u64)
+                    .param("nodes", c.nodes)
+                    .param("degraded", plan.is_some())
+                    .metric("total_ms", t.total * 1e3)
+                    .metric("inter_ms", t.inter * 1e3)
+                    .metric("intra_ms", t.intra * 1e3)
+                    .metric("eth_flows", t.flows as f64)
+                    .metric("peak_link_util", t.max_util);
+                if t.total > 0.0 {
+                    rec = rec.metric("algbw_gbps", *bytes / t.total / 1e9);
+                }
+                if let Some(p) = plan {
+                    rec = rec
+                        .param("spines_down", p.spines.len())
+                        .param("cable_fraction", p.cable_fraction);
+                }
+                rec
             }
             ScenarioSpec::Sched { jobs } => {
                 let mut sim = SlurmSim::new(cfg);
@@ -296,6 +359,56 @@ pub(crate) fn io500_record(id: &str, r: &Io500Result, degraded: bool) -> Scenari
     }
 }
 
+/// Stable scenario id for a collective grid point, e.g.
+/// `collective/tree-fat-tree-100m` or `collective/hierarchical-rail-optimized-1g-degraded`.
+fn collective_scenario(
+    algo: AllReduceAlgo,
+    topology: TopologyKind,
+    bytes: f64,
+    plan: Option<FailurePlan>,
+) -> Scenario {
+    let size = if bytes >= 1e9 {
+        format!("{:.0}g", bytes / 1e9)
+    } else if bytes >= 1e6 {
+        format!("{:.0}m", bytes / 1e6)
+    } else {
+        format!("{:.0}k", bytes / 1e3)
+    };
+    let suffix = if plan.is_some() { "-degraded" } else { "" };
+    let id = format!("collective/{}-{}-{size}{suffix}", algo.name(), topology.name());
+    Scenario::new(&id, ScenarioSpec::Collective { algo, bytes, topology, plan })
+}
+
+/// The `sakuraone collectives` grid: every algorithm × message size ×
+/// topology, plus degraded-fabric points on the production shapes. The
+/// quick subset trims the message-size axis for CI.
+pub fn collectives_grid(quick: bool) -> Vec<Scenario> {
+    let sizes: &[f64] = if quick { &[1e6, 1e8] } else { &[1e6, 1e8, 1e9] };
+    let mut g = Vec::new();
+    for topology in [TopologyKind::RailOptimized, TopologyKind::FatTree] {
+        for algo in AllReduceAlgo::ALL {
+            for &bytes in sizes {
+                g.push(collective_scenario(algo, topology, bytes, None));
+            }
+        }
+    }
+    // degraded fabrics: the paper's resilience claim on the production
+    // algorithm, and cable attrition under the latency-optimal tree
+    g.push(collective_scenario(
+        AllReduceAlgo::Hierarchical,
+        TopologyKind::RailOptimized,
+        1e8,
+        Some(FailurePlan::spine_down(2)),
+    ));
+    g.push(collective_scenario(
+        AllReduceAlgo::Tree,
+        TopologyKind::RailOptimized,
+        1e8,
+        Some(FailurePlan::cable_cuts(0.1, 7)),
+    ));
+    g
+}
+
 /// The standard scenario grid. `quick` is the CI smoke subset; the full
 /// grid adds problem-size sweeps and more failure/scale ablations.
 pub fn standard_grid(quick: bool) -> Vec<Scenario> {
@@ -337,6 +450,21 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
                 nodes: 25,
                 params: HplParams { n: 1_352_704, p: 8, q: 25, ..HplParams::paper() },
             },
+        ),
+        // Collective engine coverage (the `collectives` subcommand runs
+        // the full grid; the suite gates one point per family).
+        collective_scenario(
+            AllReduceAlgo::Hierarchical,
+            TopologyKind::RailOptimized,
+            1e9,
+            None,
+        ),
+        collective_scenario(AllReduceAlgo::Tree, TopologyKind::FatTree, 1e8, None),
+        collective_scenario(
+            AllReduceAlgo::RecursiveDoubling,
+            TopologyKind::RailOptimized,
+            1e8,
+            None,
         ),
     ];
     if quick {
@@ -432,6 +560,16 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
             },
         ),
         Scenario::new("sched/400jobs", S::Sched { jobs: 400 }),
+        // Collective algorithm × topology ablations beyond the quick picks.
+        collective_scenario(AllReduceAlgo::Ring, TopologyKind::RailOptimized, 1e9, None),
+        collective_scenario(AllReduceAlgo::Tree, TopologyKind::RailOptimized, 1e8, None),
+        collective_scenario(AllReduceAlgo::Hierarchical, TopologyKind::FatTree, 1e9, None),
+        collective_scenario(
+            AllReduceAlgo::Hierarchical,
+            TopologyKind::RailOptimized,
+            1e8,
+            Some(FailurePlan::spine_down(2)),
+        ),
     ]);
     g
 }
@@ -443,6 +581,17 @@ pub fn run_sweep(
     cfg: &ClusterConfig,
     scenarios: &[Scenario],
     sweep: &SweepConfig,
+) -> RunManifest {
+    run_sweep_named(cfg, scenarios, sweep, "suite")
+}
+
+/// [`run_sweep`] with an explicit manifest command name, for subcommands
+/// (e.g. `collectives`) that reuse the deterministic engine.
+pub fn run_sweep_named(
+    cfg: &ClusterConfig,
+    scenarios: &[Scenario],
+    sweep: &SweepConfig,
+    command: &str,
 ) -> RunManifest {
     let workers = sweep.workers.clamp(1, scenarios.len().max(1));
     let queue: Mutex<VecDeque<usize>> = Mutex::new((0..scenarios.len()).collect());
@@ -460,7 +609,7 @@ pub fn run_sweep(
         }
     });
 
-    let mut manifest = RunManifest::new("suite", sweep.seed, cfg.to_json());
+    let mut manifest = RunManifest::new(command, sweep.seed, cfg.to_json());
     for record in slots.into_inner().unwrap().into_iter().flatten() {
         manifest.push(record);
     }
@@ -492,6 +641,61 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), full.len());
+    }
+
+    #[test]
+    fn collectives_grid_ids_are_unique_and_quick_is_subset() {
+        let quick = collectives_grid(true);
+        let full = collectives_grid(false);
+        assert!(quick.len() >= 16);
+        assert!(full.len() > quick.len());
+        let full_ids: std::collections::HashSet<&str> =
+            full.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(full_ids.len(), full.len(), "duplicate ids in full grid");
+        for s in &quick {
+            assert!(full_ids.contains(s.id.as_str()), "{} not in full grid", s.id);
+        }
+        // every algorithm and both topologies are covered
+        for algo in crate::collectives::AllReduceAlgo::ALL {
+            assert!(quick.iter().any(|s| s.id.contains(algo.name())));
+        }
+        for topo in ["rail-optimized", "fat-tree"] {
+            assert!(quick.iter().any(|s| s.id.contains(topo)));
+        }
+    }
+
+    #[test]
+    fn collective_scenarios_run_and_record() {
+        let mut cfg = ClusterConfig::default();
+        cfg.apply_override("nodes", "16").unwrap();
+        let s = collective_scenario(
+            AllReduceAlgo::Hierarchical,
+            TopologyKind::RailOptimized,
+            1e8,
+            None,
+        );
+        assert_eq!(s.id, "collective/hierarchical-rail-optimized-100m");
+        let rec = s.run(&cfg, 1);
+        assert_eq!(rec.kind, "collective");
+        assert!(rec.metric_value("total_ms").unwrap() > 0.0);
+        assert!(rec.metric_value("algbw_gbps").unwrap() > 0.0);
+        assert!(rec.metric_value("eth_flows").unwrap() > 0.0);
+
+        let degraded = collective_scenario(
+            AllReduceAlgo::Hierarchical,
+            TopologyKind::RailOptimized,
+            1e8,
+            Some(FailurePlan::spine_down(2)),
+        );
+        assert_eq!(
+            degraded.id,
+            "collective/hierarchical-rail-optimized-100m-degraded"
+        );
+        let drec = degraded.run(&cfg, 1);
+        assert!(
+            drec.metric_value("total_ms").unwrap()
+                >= rec.metric_value("total_ms").unwrap() - 1e-9
+        );
     }
 
     #[test]

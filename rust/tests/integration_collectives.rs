@@ -1,0 +1,150 @@
+//! Integration tests for the contention-true collective engine and the
+//! `sakuraone collectives` subcommand: the golden-manifest determinism
+//! contract (byte-identical across worker counts, pinned to a committed
+//! snapshot) and the rail-vs-fat-tree contention demonstration the paper's
+//! §2.2 design argument rests on.
+
+use sakuraone::collectives::CollectiveEngine;
+use sakuraone::commands;
+use sakuraone::config::{ClusterConfig, TopologyKind};
+use sakuraone::topology::builders::build;
+use sakuraone::util::cli::Args;
+use sakuraone::util::json::Json;
+
+/// Committed snapshot of `collectives --json --quick --seed 42`.
+const GOLDEN: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/collectives.json");
+
+fn args(v: &[&str]) -> Args {
+    Args::parse(v.iter().map(|s| s.to_string()), commands::FLAGS).unwrap()
+}
+
+fn quick_manifest(workers: &str) -> String {
+    commands::collectives::handle(&args(&[
+        "collectives", "--json", "--quick", "--seed", "42", "--workers", workers,
+    ]))
+    .unwrap()
+    .to_json()
+    .emit()
+}
+
+#[test]
+fn golden_manifest_reproduces_byte_for_byte_at_1_and_4_workers() {
+    let one = quick_manifest("1");
+    let four = quick_manifest("4");
+    assert_eq!(one, four, "worker count leaked into the collectives manifest");
+
+    let committed = std::fs::read_to_string(GOLDEN).expect("golden snapshot");
+    let parsed = Json::parse(&committed).expect("golden snapshot parses");
+    if parsed.get("bootstrap") == Some(&Json::Bool(true)) {
+        // First run after a model change: bless the snapshot. Commit the
+        // blessed file so later runs compare byte-for-byte (docs/ci.md).
+        std::fs::write(GOLDEN, &one).expect("bless golden snapshot");
+        return;
+    }
+    assert_eq!(
+        committed, one,
+        "collectives manifest drifted from tests/golden/collectives.json; if \
+         the model change is intentional, restore the bootstrap marker and \
+         rerun to re-bless (docs/ci.md)"
+    );
+}
+
+#[test]
+fn collectives_subcommand_covers_the_grid() {
+    let m = commands::collectives::handle(&args(&[
+        "collectives", "--json", "--workers", "2", "--seed", "42",
+    ]))
+    .unwrap();
+    assert_eq!(m.command, "collectives");
+    // full grid: 4 algorithms x 3 sizes x 2 topologies + 2 degraded points
+    assert_eq!(m.scenarios.len(), 26);
+
+    // the paper's design claim shows up in the grid itself: the
+    // hierarchical production collective is no slower on rails than on an
+    // equal-budget fat-tree
+    let rail = m
+        .scenario("collective/hierarchical-rail-optimized-1g")
+        .expect("rail point");
+    let fat = m.scenario("collective/hierarchical-fat-tree-1g").expect("fat point");
+    assert!(
+        rail.metric_value("total_ms").unwrap()
+            <= fat.metric_value("total_ms").unwrap() * 1.001,
+        "rail {} vs fat {}",
+        rail.metric_value("total_ms").unwrap(),
+        fat.metric_value("total_ms").unwrap()
+    );
+
+    // a degraded fabric is never faster than the healthy one
+    let healthy = m
+        .scenario("collective/hierarchical-rail-optimized-100m")
+        .expect("healthy point");
+    let degraded = m
+        .scenario("collective/hierarchical-rail-optimized-100m-degraded")
+        .expect("degraded point");
+    assert!(
+        degraded.metric_value("total_ms").unwrap()
+            >= healthy.metric_value("total_ms").unwrap() - 1e-9
+    );
+
+    // every scenario simulated real flows and reports utilisation
+    for s in &m.scenarios {
+        assert!(s.metric_value("eth_flows").unwrap() > 0.0, "{} has no flows", s.id);
+        let util = s.metric_value("peak_link_util").unwrap();
+        assert!((0.0..=1.0 + 1e-9).contains(&util), "{}: util {util}", s.id);
+    }
+}
+
+#[test]
+fn tree_allreduce_contends_on_fat_tree_but_not_on_rails() {
+    // Both builders instantiate the same switch and link inventory (16
+    // leaves, 8 spines, identical bandwidths — see
+    // `topology::builders::fat_tree`), so bisection bandwidth is equal and
+    // only the wiring differs. Ranks are one pod's 25 nodes x all 8 rails
+    // in a stride-13 node permutation — the realistic case where NCCL rank
+    // order ignores rack locality. On the rail-optimized fabric every
+    // same-rail exchange stays on its own leaf at full NIC rate; on the
+    // fat-tree the same exchanges leave their (node-local) leaf, and the
+    // first tree round pushes ~56 concurrent 400G host flows through each
+    // leaf's 8x800G uplinks — a structural >3x oversubscription that no
+    // lucky ECMP hash can route around.
+    let bytes = 1e8;
+    let mut totals = std::collections::HashMap::new();
+    let mut flows = std::collections::HashMap::new();
+    for kind in [TopologyKind::RailOptimized, TopologyKind::FatTree] {
+        let mut cfg = ClusterConfig::default();
+        cfg.network.topology = kind;
+        let fabric = build(&cfg);
+        let engine = CollectiveEngine::new(&fabric, &cfg);
+        let ranks: Vec<(usize, usize)> = (0..8)
+            .flat_map(|rail| (0..25).map(move |j| ((13 * j) % 25, rail)))
+            .collect();
+        let t = engine.tree_allreduce(&ranks, bytes);
+        totals.insert(kind.name(), t.total);
+        flows.insert(kind.name(), t.flows);
+    }
+    // identical algorithm shape on both fabrics: same flow count
+    assert_eq!(flows["rail-optimized"], flows["fat-tree"]);
+    assert!(
+        totals["fat-tree"] > totals["rail-optimized"] * 1.10,
+        "no contention gap: fat-tree {} vs rail-optimized {}",
+        totals["fat-tree"],
+        totals["rail-optimized"]
+    );
+}
+
+#[test]
+fn suite_quick_grid_gates_the_collective_scenarios() {
+    // the suite path (what CI's baseline gate runs) now carries the
+    // collective grid, and stays byte-deterministic across worker counts
+    use sakuraone::runtime::sweep::{run_sweep, standard_grid, SweepConfig};
+    let cfg = ClusterConfig::default();
+    let grid = standard_grid(true);
+    let ids: Vec<&str> = grid.iter().map(|s| s.id.as_str()).collect();
+    assert!(ids.contains(&"collective/hierarchical-rail-optimized-1g"));
+    assert!(ids.contains(&"collective/tree-fat-tree-100m"));
+    assert!(ids.contains(&"collective/recursive-doubling-rail-optimized-100m"));
+    let a = run_sweep(&cfg, &grid, &SweepConfig { workers: 1, seed: 7 });
+    let b = run_sweep(&cfg, &grid, &SweepConfig { workers: 3, seed: 7 });
+    assert_eq!(a.to_json().emit(), b.to_json().emit());
+}

@@ -265,19 +265,161 @@ fn prop_placement_exact_count_and_no_duplicates() {
 
 #[test]
 fn prop_collective_times_monotone_in_bytes() {
-    use sakuraone::collectives::CollectiveEngine;
+    // doubling the buffer never gets cheaper, for EVERY algorithm the
+    // engine implements (ring, double binary tree, halving-doubling with
+    // its non-power-of-two fold, hierarchical, reduce-scatter)
+    use sakuraone::collectives::{CollectiveEngine, Rank};
     let cfg = ClusterConfig::default();
     let fabric = build(&cfg);
     let engine = CollectiveEngine::new(&fabric, &cfg);
     let nodes: Vec<usize> = (0..16).collect();
+    let ranks: Vec<Rank> = (0..13).map(|n| (n, 0)).collect(); // non-pow2
     check(
-        Config { cases: 20, seed: 9, ..Default::default() },
+        Config { cases: 15, seed: 9, ..Default::default() },
         |r: &mut Rng| 1e6 + r.uniform() * 1e9,
         |&bytes| {
-            let t1 = engine.hierarchical_allreduce(&nodes, bytes).total;
-            let t2 = engine.hierarchical_allreduce(&nodes, bytes * 2.0).total;
-            if t2 <= t1 {
-                return Err(format!("not monotone: {t1} vs {t2}"));
+            let times: [(&str, f64, f64); 5] = [
+                (
+                    "hierarchical",
+                    engine.hierarchical_allreduce(&nodes, bytes).total,
+                    engine.hierarchical_allreduce(&nodes, bytes * 2.0).total,
+                ),
+                (
+                    "ring",
+                    engine.ring_allreduce(&ranks, bytes).total,
+                    engine.ring_allreduce(&ranks, bytes * 2.0).total,
+                ),
+                (
+                    "tree",
+                    engine.tree_allreduce(&ranks, bytes).total,
+                    engine.tree_allreduce(&ranks, bytes * 2.0).total,
+                ),
+                (
+                    "recursive-doubling",
+                    engine.recursive_doubling_allreduce(&ranks, bytes).total,
+                    engine.recursive_doubling_allreduce(&ranks, bytes * 2.0).total,
+                ),
+                (
+                    "reduce-scatter",
+                    engine.reduce_scatter(&ranks, bytes).total,
+                    engine.reduce_scatter(&ranks, bytes * 2.0).total,
+                ),
+            ];
+            for (name, t1, t2) in times {
+                if t2 <= t1 {
+                    return Err(format!("{name} not monotone: {t1} vs {t2}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_degraded_fabric_never_faster() {
+    // removing spines or cutting cables can only slow a collective down
+    // (or leave it unchanged when the surviving paths suffice)
+    use sakuraone::collectives::{CollectiveEngine, Rank};
+    use sakuraone::network::{apply_failures, FailurePlan};
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    check(
+        Config { cases: 12, seed: 0xDE6, ..Default::default() },
+        |r: &mut Rng| {
+            let spines = r.below(4) as usize; // 0..=3 spines down
+            let cables = if r.uniform() < 0.5 { 0.0 } else { 0.25 * r.uniform() };
+            (1e7 + r.uniform() * 5e8, spines, cables, r.next_u64())
+        },
+        |&(bytes, spines, cables, seed)| {
+            let plan = FailurePlan {
+                spines: (0..spines).collect(),
+                cable_fraction: cables,
+                seed,
+                ..FailurePlan::default()
+            };
+            let degraded_fabric = apply_failures(&fabric, &plan);
+            let healthy_eng = CollectiveEngine::new(&fabric, &cfg);
+            let degraded_eng = CollectiveEngine::new(&degraded_fabric, &cfg);
+
+            // the production collective over the whole machine
+            let nodes: Vec<usize> = (0..cfg.nodes).collect();
+            let h = healthy_eng.hierarchical_allreduce(&nodes, bytes).total;
+            let d = degraded_eng.hierarchical_allreduce(&nodes, bytes).total;
+            if d < h * (1.0 - 1e-9) {
+                return Err(format!("hierarchical faster degraded: {d} < {h}"));
+            }
+            // a cross-pod all-to-all, which actually loads the spine layer
+            let ranks: Vec<Rank> =
+                (0..8).map(|n| (n, 2)).chain((50..58).map(|n| (n, 2))).collect();
+            let h = healthy_eng.alltoall(&ranks, bytes / 64.0).total;
+            let d = degraded_eng.alltoall(&ranks, bytes / 64.0).total;
+            if d < h * (1.0 - 1e-9) {
+                return Err(format!("alltoall faster degraded: {d} < {h}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hierarchical_on_rails_never_exceeds_fat_tree() {
+    // the paper's §2.2 design claim as a property: at equal switch/link
+    // budgets the rail-aligned fabric is never slower than the fat-tree
+    // for the production hierarchical all-reduce, across sizes and scales
+    use sakuraone::collectives::CollectiveEngine;
+    check(
+        Config { cases: 10, seed: 0x8A1, ..Default::default() },
+        |r: &mut Rng| (8 + r.below(41) as usize, 1e7 + r.uniform() * 1e9),
+        |&(n_nodes, bytes)| {
+            let time_for = |kind: TopologyKind| {
+                let mut cfg = ClusterConfig::default();
+                cfg.network.topology = kind;
+                cfg.apply_override("nodes", &n_nodes.to_string()).unwrap();
+                let f = build(&cfg);
+                let nodes: Vec<usize> = (0..n_nodes).collect();
+                CollectiveEngine::new(&f, &cfg)
+                    .hierarchical_allreduce(&nodes, bytes)
+                    .total
+            };
+            let rail = time_for(TopologyKind::RailOptimized);
+            let fat = time_for(TopologyKind::FatTree);
+            if rail > fat * (1.0 + 1e-9) {
+                return Err(format!(
+                    "rails slower than fat-tree at {n_nodes} nodes / {bytes:.3e} B: \
+                     {rail} vs {fat}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_flat_allreduce_algorithms_agree_at_two_ranks() {
+    // at p=2 ring, tree and halving-doubling all degenerate to "exchange
+    // the buffer over full-duplex links" and must agree within tolerance
+    use sakuraone::collectives::{CollectiveEngine, Rank};
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let engine = CollectiveEngine::new(&fabric, &cfg);
+    check(
+        Config { cases: 15, seed: 0x2A, ..Default::default() },
+        |r: &mut Rng| {
+            let a = r.below(100) as usize;
+            let b = (a + 1 + r.below(99) as usize) % 100;
+            (a, b, 1e5 + r.uniform() * 1e9)
+        },
+        |&(a, b, bytes)| {
+            let ranks: Vec<Rank> = vec![(a, 0), (b, 0)];
+            let ring = engine.ring_allreduce(&ranks, bytes).total;
+            let tree = engine.tree_allreduce(&ranks, bytes).total;
+            let rd = engine.recursive_doubling_allreduce(&ranks, bytes).total;
+            for (name, t) in [("tree", tree), ("rd", rd)] {
+                if (t - ring).abs() / ring > 0.05 {
+                    return Err(format!(
+                        "{name}={t} vs ring={ring} at p=2, bytes={bytes:.3e}"
+                    ));
+                }
             }
             Ok(())
         },
