@@ -1,0 +1,128 @@
+//! `sakuraone campaign` — the goodput-true training-campaign grid
+//! (failures × checkpoint/restart × Lustre I/O over the step-time model)
+//! through the deterministic parallel sweep engine. The manifest is
+//! byte-identical for any `--workers` value with the same seed, which
+//! `tests/golden/campaign.json` pins down (see docs/campaign.md).
+//!
+//! Knob overrides (`--days`, `--node-mtbf`, `--fabric-mtbf`,
+//! `--interval`) apply to every scenario in the grid, so a one-off
+//! what-if run keeps the same ids and table shape.
+
+use anyhow::Result;
+
+use crate::llm::campaign::CampaignConfig;
+use crate::runtime::run_manifest::RunManifest;
+use crate::runtime::sweep::{
+    campaign_grid, default_workers, run_sweep_named, Scenario, ScenarioSpec,
+    SweepConfig,
+};
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let quick = args.flag("quick");
+    let workers = if args.flag("serial") {
+        1
+    } else {
+        args.get_usize("workers", default_workers()).map_err(anyhow::Error::msg)?
+    };
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let mut scenarios = campaign_grid(quick);
+    apply_overrides(args, &mut scenarios)?;
+
+    let t0 = std::time::Instant::now();
+    let manifest =
+        run_sweep_named(&cfg, &scenarios, &SweepConfig { workers, seed }, "campaign");
+    eprintln!(
+        "campaign: {} scenarios on {} worker(s) in {:.2}s (grid: {}, seed {})",
+        manifest.scenarios.len(),
+        workers,
+        t0.elapsed().as_secs_f64(),
+        if quick { "quick" } else { "full" },
+        seed,
+    );
+
+    if !super::quiet(args) {
+        println!("{}", summary_table(&manifest).render());
+    }
+    Ok(manifest)
+}
+
+/// A `--key value` knob that must be a finite number when present.
+fn finite_knob(args: &Args, key: &str) -> Result<Option<f64>> {
+    let Some(raw) = args.get(key) else { return Ok(None) };
+    let v: f64 = raw
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {raw:?}"))?;
+    if !v.is_finite() {
+        anyhow::bail!("--{key} must be finite, got {raw:?}");
+    }
+    Ok(Some(v))
+}
+
+/// Mutate every grid point with the CLI what-if knobs.
+fn apply_overrides(args: &Args, scenarios: &mut [Scenario]) -> Result<()> {
+    let days = finite_knob(args, "days")?;
+    if let Some(d) = days {
+        if d <= 0.0 {
+            anyhow::bail!("--days must be positive, got {d}");
+        }
+    }
+    let node_mtbf = finite_knob(args, "node-mtbf")?;
+    let fabric_mtbf = finite_knob(args, "fabric-mtbf")?;
+    let interval = args.get("interval").map(str::parse::<u64>).transpose()?;
+    for s in scenarios.iter_mut() {
+        let ScenarioSpec::Campaign { campaign, .. } = &mut s.spec else {
+            continue;
+        };
+        let cc: &mut CampaignConfig = campaign;
+        if let Some(d) = days {
+            cc.duration_days = d;
+        }
+        if let Some(m) = node_mtbf {
+            cc.node_mtbf_hours = m;
+        }
+        if let Some(m) = fabric_mtbf {
+            cc.fabric_mtbf_hours = m;
+        }
+        if let Some(k) = interval {
+            cc.interval_override = Some(k);
+        }
+    }
+    Ok(())
+}
+
+/// Human-readable digest: one row per campaign.
+fn summary_table(manifest: &RunManifest) -> Table {
+    let mut t = Table::new(
+        "Training campaigns — goodput under failures, checkpoints and restarts",
+        &[
+            "Scenario",
+            "Goodput tok/s",
+            "Fault-free",
+            "Goodput %",
+            "Avail %",
+            "Failures n/f",
+            "Ckpt every",
+            "Lost h",
+        ],
+    );
+    for s in &manifest.scenarios {
+        let get = |k: &str| s.metric_value(k).unwrap_or(f64::NAN);
+        t.row(&[
+            s.id.clone(),
+            format!("{:.0}", get("goodput_tokens_per_s")),
+            format!("{:.0}", get("fault_free_tokens_per_s")),
+            format!("{:.2}", get("goodput_frac_pct")),
+            format!("{:.2}", get("availability_pct")),
+            format!("{:.0}/{:.0}", get("node_failures"), get("fabric_failures")),
+            format!("{:.0} steps", get("interval_steps")),
+            format!(
+                "{:.2}",
+                (get("lost_work_s") + get("queue_s") + get("restart_s")) / 3_600.0
+            ),
+        ]);
+    }
+    t
+}

@@ -35,6 +35,7 @@ pub fn handle(args: &Args) -> Result<RunManifest> {
                     ("write time", format!("{:.1} s", r.write_seconds)),
                     ("training stall", format!("{:.1} s", r.stall_seconds)),
                     ("overhead", format!("{:.3}%", r.overhead_fraction * 100.0)),
+                    ("fits backend", r.fits_backend.to_string()),
                 ],
             )
         );

@@ -4,6 +4,7 @@
 //! machine-readable artifact (`--json`, `--out FILE`) from every command,
 //! and human-readable tables are printed unless `--json` asks for quiet.
 
+pub mod campaign;
 pub mod checkpoint;
 pub mod collectives;
 pub mod config;
@@ -80,6 +81,8 @@ USAGE: sakuraone <subcommand> [options]
   llm       [--params P] [--dp D --tp T --pp P] [--batch-tokens B]
   sched     [--jobs N] [--seed S]
   collectives [--quick] [--serial] [--workers N] [--seed S]
+  campaign  [--quick] [--serial] [--workers N] [--seed S] [--days D]
+            [--node-mtbf H] [--fabric-mtbf H] [--interval K]
   power     [--pue X]                 (paper §6 future work: energy/W)
   checkpoint [--params P] [--interval K] [--step-time S]
   resilience [--fail-spines N] [--fail-leaves N] [--cable-cuts F]

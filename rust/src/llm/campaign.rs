@@ -1,0 +1,608 @@
+//! Goodput-true training-campaign simulator.
+//!
+//! The SAKURAONE paper's headline claim is that the open 800 GbE fabric
+//! sustains large-scale LLM training; its workload-dynamics companion
+//! shows that what a multi-week run actually delivers is *goodput* — the
+//! tokens that survive node failures, checkpoint stalls, requeue waits
+//! and lost-work replay. This module composes the repo's existing
+//! substrates into one deterministic, time-stepped campaign:
+//!
+//! - per-step wall time from the contention-true [`step_time`] model
+//!   (healthy fabric, plus degraded fabrics under [`FailurePlan`]s);
+//! - checkpoint writes as striped flows through
+//!   `storage::{lustre, stripe, checkpoint}` with the Young/Daly-optimal
+//!   interval (floored by the `min_interval_for_overhead` budget rule
+//!   applied to the striped stall, or an explicit override);
+//! - failures from a seeded MTBF process — node failures kill the job,
+//!   fabric failures (cable cuts / a spine down) degrade step time until
+//!   repaired, reusing `network::failures::FailurePlan`;
+//! - restart = requeue through `scheduler::slurm` (the job waits behind a
+//!   seeded background mix), checkpoint read-back over the Lustre read
+//!   path, and lost-work replay from the last completed checkpoint.
+//!
+//! Determinism: the whole campaign is a pure function of
+//! `(ClusterConfig, CampaignConfig, seed)`. Failure arrivals use *nested
+//! thinning* — candidates are drawn from a fixed-rate base process and
+//! accepted with probability `rate/base` — so raising a failure rate only
+//! ever **adds** failure events at identical times; goodput is therefore
+//! (statistically) monotone non-increasing in the rate, which the
+//! property tier pins down. Per-event draws (queue mixes, severities) are
+//! keyed by candidate index, never by how many events were accepted.
+
+use crate::config::ClusterConfig;
+use crate::llm::parallelism::{step_time, LlmConfig};
+use crate::network::{apply_failures, FailurePlan};
+use crate::scheduler::{Job, SlurmSim};
+use crate::storage::checkpoint::{
+    daly_interval_steps, min_interval_for_stall, striped_checkpoint_cost,
+    CheckpointConfig, MIN_BANDWIDTH_BPS,
+};
+use crate::storage::LustreModel;
+use crate::topology::builders::build;
+use crate::topology::graph::Fabric;
+use crate::util::rng::Rng;
+
+/// Bump when [`CampaignReport`] changes shape; surfaces in every manifest
+/// record so golden snapshots fail loudly across schema changes.
+pub const CAMPAIGN_SCHEMA_VERSION: u64 = 1;
+
+/// How the checkpoint interval was chosen (reported verbatim).
+pub const INTERVAL_SOURCE_DALY: &str = "daly";
+pub const INTERVAL_SOURCE_FLOOR: &str = "overhead-floor";
+pub const INTERVAL_SOURCE_OVERRIDE: &str = "override";
+
+/// One simulated training campaign: an N-day allocation of the LLM job on
+/// the cluster, with failure, checkpoint and restart processes.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub llm: LlmConfig,
+    pub duration_days: f64,
+    /// Per-node MTBF (hours); `<= 0` disables node failures.
+    pub node_mtbf_hours: f64,
+    /// Cluster-level fabric MTBF (hours); `<= 0` disables fabric failures.
+    pub fabric_mtbf_hours: f64,
+    /// Explicit checkpoint interval (steps); `None` = Young/Daly optimal
+    /// floored by the overhead budget.
+    pub interval_override: Option<u64>,
+    /// Checkpoint-overhead budget flooring the interval
+    /// (`min_interval_for_stall` on the striped stall).
+    pub overhead_budget: f64,
+    /// Fraction of each checkpoint write hidden behind training.
+    pub ckpt_overlap: f64,
+    /// Fixed relaunch cost per restart (scheduler prolog, NCCL init).
+    pub restart_fixed_s: f64,
+    /// Repair time for a fabric failure (hours); the step time is degraded
+    /// for this window, the job keeps running (§2.2 resilience claim).
+    pub fabric_repair_hours: f64,
+    /// Competing jobs in the requeue queue on each restart (the
+    /// single-tenant LLM environment keeps this small).
+    pub requeue_bg_jobs: usize,
+    /// Base rate (per hour) of the thinned failure-candidate processes.
+    /// Auto-raised when a configured rate exceeds it (so extreme MTBF
+    /// knobs never abort), but the nested-failure-set coupling — and with
+    /// it rate monotonicity — is only guaranteed between rates that both
+    /// fit under the *same* base.
+    pub hazard_base_per_hour: f64,
+    /// Fabric damage applied on a cable-class fabric failure.
+    pub cable_plan: FailurePlan,
+    /// Fabric damage applied on a spine-class fabric failure.
+    pub spine_plan: FailurePlan,
+}
+
+impl CampaignConfig {
+    /// The paper's flagship workload: the 70B run on the full machine for
+    /// a 30-day campaign with field-typical failure rates (~8 node
+    /// interruptions and ~1 fabric event a month at this scale).
+    pub fn llama70b_30d() -> Self {
+        Self {
+            llm: LlmConfig::llama70b_on_sakuraone(),
+            duration_days: 30.0,
+            node_mtbf_hours: 8_760.0,
+            fabric_mtbf_hours: 720.0,
+            interval_override: None,
+            overhead_budget: 0.10,
+            ckpt_overlap: 0.5,
+            restart_fixed_s: 600.0,
+            fabric_repair_hours: 4.0,
+            requeue_bg_jobs: 8,
+            hazard_base_per_hour: 1.0,
+            cable_plan: FailurePlan::cable_cuts(0.05, 11),
+            spine_plan: FailurePlan::spine_down(1),
+        }
+    }
+
+    /// Whole nodes the job occupies (node-granular allocation).
+    pub fn nodes_needed(&self, cfg: &ClusterConfig) -> usize {
+        self.llm
+            .gpus()
+            .div_ceil(cfg.node.gpus_per_node.max(1))
+            .clamp(1, cfg.nodes)
+    }
+}
+
+/// Wall-time ledger; the buckets partition the campaign duration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimeBreakdown {
+    /// Step time of work that ended up committed.
+    pub compute_s: f64,
+    /// Checkpoint stalls (the non-overlapped part of each write).
+    pub checkpoint_s: f64,
+    /// Work rolled back at failures: steps since the last good checkpoint,
+    /// partial steps/writes cut short, and the end-of-allocation remnant.
+    pub lost_work_s: f64,
+    /// Checkpoint read-back plus fixed relaunch cost.
+    pub restart_s: f64,
+    /// Requeue wait behind the seeded background mix.
+    pub queue_s: f64,
+}
+
+impl TimeBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.checkpoint_s + self.lost_work_s + self.restart_s + self.queue_s
+    }
+}
+
+/// The versioned campaign outcome (schema [`CAMPAIGN_SCHEMA_VERSION`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignReport {
+    pub schema: u64,
+    pub duration_s: f64,
+    /// Healthy-fabric step time (s) from the contention-true model.
+    pub step_time_s: f64,
+    /// Worst step time a step actually executed at (= healthy when no
+    /// step ran inside a fabric-failure repair window).
+    pub degraded_step_time_s: f64,
+    pub interval_steps: u64,
+    pub interval_source: &'static str,
+    /// Non-overlapped stall per checkpoint write (striped Lustre flow).
+    pub checkpoint_stall_s: f64,
+    /// Checkpoint read-back time charged per restart.
+    pub readback_s: f64,
+    /// Whether the checkpoint payload fits the Lustre backend's raw
+    /// capacity; `false` means the I/O numbers are extrapolations.
+    pub checkpoint_fits_backend: bool,
+    pub checkpoint_writes: u64,
+    pub committed_steps: u64,
+    pub committed_tokens: f64,
+    /// Committed tokens over the whole allocation — the headline metric.
+    pub goodput_tokens_per_s: f64,
+    /// `batch_tokens / step_time` — what the fault-free model promises.
+    pub fault_free_tokens_per_s: f64,
+    /// goodput / fault-free (≤ 1).
+    pub goodput_fraction: f64,
+    /// Step-time MFU derated by the goodput fraction.
+    pub mfu_goodput: f64,
+    /// Fraction of the allocation the job held nodes (not queued or
+    /// restarting).
+    pub availability: f64,
+    pub node_failures: u32,
+    pub fabric_failures: u32,
+    pub time: TimeBreakdown,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FabricSeverity {
+    Cable,
+    Spine,
+}
+
+/// Accepted failure events from one thinned candidate stream:
+/// `(time, candidate index, severity uniform)`.
+fn thinned_events(
+    rng: &mut Rng,
+    base_per_s: f64,
+    rate_per_s: f64,
+    duration_s: f64,
+) -> Vec<(f64, u64, f64)> {
+    if rate_per_s <= 0.0 {
+        return Vec::new();
+    }
+    assert!(
+        rate_per_s <= base_per_s * (1.0 + 1e-12),
+        "failure rate {rate_per_s}/s exceeds hazard base {base_per_s}/s — \
+         raise hazard_base_per_hour"
+    );
+    let accept = rate_per_s / base_per_s;
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut candidate = 0u64;
+    loop {
+        // fixed draw pattern per candidate keeps streams aligned for any
+        // rate: arrival, acceptance, severity
+        t += rng.exponential(base_per_s);
+        let u_accept = rng.uniform();
+        let u_sev = rng.uniform();
+        if t >= duration_s {
+            return out;
+        }
+        if u_accept < accept {
+            out.push((t, candidate, u_sev));
+        }
+        candidate += 1;
+    }
+}
+
+/// Seed for the requeue background mix of one node failure, keyed by the
+/// candidate index so coupled runs at different rates agree on it.
+fn queue_seed(seed: u64, candidate: u64) -> u64 {
+    Rng::new(seed ^ (candidate + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+/// Requeue the restarted job through the Slurm simulator: a seeded
+/// background mix occupies the cluster at t=0, the restart enters the
+/// queue a minute later at top priority, and conservative backfill
+/// decides when its node count frees up. Returns the queue wait (s).
+pub fn requeue_wait(cfg: &ClusterConfig, nodes: usize, bg_jobs: usize, seed: u64) -> f64 {
+    if bg_jobs == 0 {
+        return 0.0;
+    }
+    let mut sim = SlurmSim::new(cfg);
+    let mut rng = Rng::new(seed);
+    for id in 0..bg_jobs as u64 {
+        let n = 1 + rng.below((cfg.nodes / 2).max(1) as u64) as usize;
+        let rt = rng.lognormal(900.0, 0.8);
+        sim.submit(Job::new(id, "bg", n, rt * 1.5, rt).with_priority(1));
+    }
+    let rid = bg_jobs as u64;
+    let want = nodes.clamp(1, cfg.nodes);
+    sim.submit(
+        Job::new(rid, "restart", want, 7.0 * 86_400.0, 60.0)
+            .with_submit_time(60.0)
+            .with_priority(10),
+    );
+    sim.run();
+    let alloc = sim
+        .history
+        .iter()
+        .find(|a| a.job_id == rid)
+        .expect("restart job completed");
+    (alloc.start - 60.0).max(0.0)
+}
+
+fn degraded_step_time(
+    cfg: &ClusterConfig,
+    fabric: &Fabric,
+    plan: &FailurePlan,
+    llm: &LlmConfig,
+    healthy: f64,
+) -> f64 {
+    let degraded = apply_failures(fabric, plan);
+    // degraded-never-faster holds by construction; the max is belt and
+    // braces so goodput ≤ fault-free stays structural
+    step_time(cfg, &degraded, llm).total.max(healthy)
+}
+
+fn choose_interval(
+    cc: &CampaignConfig,
+    stall_s: f64,
+    step_s: f64,
+    node_rate_per_s: f64,
+) -> (u64, &'static str) {
+    if let Some(k) = cc.interval_override {
+        return (k.max(1), INTERVAL_SOURCE_OVERRIDE);
+    }
+    // the floor uses the same (striped) stall the campaign pays, so the
+    // realized checkpoint tax honours the budget
+    let floor = min_interval_for_stall(stall_s, step_s, cc.overhead_budget);
+    let mtbf_s = if node_rate_per_s > 0.0 { 1.0 / node_rate_per_s } else { f64::INFINITY };
+    let daly = daly_interval_steps(stall_s, step_s, mtbf_s);
+    if daly < floor {
+        (floor, INTERVAL_SOURCE_FLOOR)
+    } else {
+        (daly, INTERVAL_SOURCE_DALY)
+    }
+}
+
+/// Simulate a campaign on the configured cluster's own fabric.
+pub fn run_campaign(cfg: &ClusterConfig, cc: &CampaignConfig, seed: u64) -> CampaignReport {
+    let fabric = build(cfg);
+    run_campaign_on(cfg, &fabric, cc, seed)
+}
+
+/// Simulate a campaign on an already-built fabric. Deterministic: the
+/// report is a pure function of `(cfg, fabric, cc, seed)`.
+pub fn run_campaign_on(
+    cfg: &ClusterConfig,
+    fabric: &Fabric,
+    cc: &CampaignConfig,
+    seed: u64,
+) -> CampaignReport {
+    let duration = cc.duration_days * 86_400.0;
+    assert!(duration > 0.0, "campaign duration must be positive");
+    let st = step_time(cfg, fabric, &cc.llm);
+    let step_healthy = st.total;
+    assert!(step_healthy > 0.0 && step_healthy.is_finite());
+    assert!(
+        duration / step_healthy < 2e9,
+        "campaign would simulate {} steps — shorten it or grow the model",
+        duration / step_healthy
+    );
+
+    let nodes_needed = cc.nodes_needed(cfg);
+
+    // --- failure processes (nested thinning; see module docs) ------------
+    let node_rate = if cc.node_mtbf_hours > 0.0 {
+        nodes_needed as f64 / (cc.node_mtbf_hours * 3_600.0)
+    } else {
+        0.0
+    };
+    let fabric_rate = if cc.fabric_mtbf_hours > 0.0 {
+        1.0 / (cc.fabric_mtbf_hours * 3_600.0)
+    } else {
+        0.0
+    };
+    // auto-raise the base past extreme MTBF knobs; the coupling guarantee
+    // only spans rates under the configured base (see field docs)
+    let base = (cc.hazard_base_per_hour / 3_600.0).max(node_rate).max(fabric_rate);
+    let mut root = Rng::new(seed);
+    let node_events = thinned_events(&mut root.fork(1), base, node_rate, duration);
+    let fabric_events: Vec<(f64, FabricSeverity)> =
+        thinned_events(&mut root.fork(2), base, fabric_rate, duration)
+            .into_iter()
+            .map(|(t, _, u_sev)| {
+                let sev =
+                    if u_sev < 0.5 { FabricSeverity::Cable } else { FabricSeverity::Spine };
+                (t, sev)
+            })
+            .collect();
+
+    // --- degraded step times, only for severities that actually fire -----
+    let step_for = |sev: FabricSeverity| {
+        let plan = match sev {
+            FabricSeverity::Cable => &cc.cable_plan,
+            FabricSeverity::Spine => &cc.spine_plan,
+        };
+        degraded_step_time(cfg, fabric, plan, &cc.llm, step_healthy)
+    };
+    let step_cable = fabric_events
+        .iter()
+        .any(|(_, s)| *s == FabricSeverity::Cable)
+        .then(|| step_for(FabricSeverity::Cable));
+    let step_spine = fabric_events
+        .iter()
+        .any(|(_, s)| *s == FabricSeverity::Spine)
+        .then(|| step_for(FabricSeverity::Spine));
+
+    // --- checkpoint model: striped shard files on the Lustre write path --
+    let model = LustreModel::sakuraone(&cfg.storage);
+    let ck = CheckpointConfig {
+        params: cc.llm.params,
+        bytes_per_param: 14.0,
+        writer_nodes: nodes_needed,
+        writer_procs: cc.llm.gpus(),
+        interval_steps: 1, // chosen below
+        step_time_s: step_healthy,
+        overlap: cc.ckpt_overlap,
+    };
+    let (ckpt, stripe_eff) = striped_checkpoint_cost(&model, &ck, seed ^ 0x5712);
+    let stall_s = ckpt.stall_seconds;
+    let (interval, interval_source) = choose_interval(cc, stall_s, step_healthy, node_rate);
+    let read_bw =
+        (model.seq_read_bps(ck.writer_nodes, ck.writer_procs) * stripe_eff).max(MIN_BANDWIDTH_BPS);
+    let readback_s = ckpt.bytes / read_bw;
+    let restart_cost_s = readback_s + cc.restart_fixed_s.max(0.0);
+    let repair_s = cc.fabric_repair_hours.max(0.0) * 3_600.0;
+
+    // --- the campaign loop -----------------------------------------------
+    let mut now = 0.0f64;
+    let mut tb = TimeBreakdown::default();
+    let mut committed_steps = 0u64;
+    let mut since_ckpt = 0u64;
+    let mut pending_work_s = 0.0f64;
+    let mut checkpoint_writes = 0u64;
+    let mut node_failures = 0u32;
+    let mut fabric_failures = 0u32;
+    let mut degraded_until = f64::NEG_INFINITY;
+    let mut degraded_step_cur = step_healthy;
+    let mut worst_degraded = step_healthy;
+    let mut ni = 0usize;
+    let mut fi = 0usize;
+
+    while now < duration {
+        // (a) node failures that have struck (including during downtime:
+        // the replacement allocation dies on arrival and requeues again)
+        if ni < node_events.len() && node_events[ni].0 <= now {
+            let (_, candidate, _) = node_events[ni];
+            ni += 1;
+            node_failures += 1;
+            tb.lost_work_s += pending_work_s;
+            pending_work_s = 0.0;
+            since_ckpt = 0;
+            let q = requeue_wait(cfg, nodes_needed, cc.requeue_bg_jobs, queue_seed(seed, candidate));
+            let take = q.min(duration - now);
+            tb.queue_s += take;
+            now += take;
+            if now >= duration {
+                break;
+            }
+            let take = restart_cost_s.min(duration - now);
+            tb.restart_s += take;
+            now += take;
+            continue;
+        }
+        // (b) fabric failures degrade the step until repaired; overlapping
+        // windows keep the worst severity until the latest repair
+        while fi < fabric_events.len() && fabric_events[fi].0 <= now {
+            let (t, sev) = fabric_events[fi];
+            fi += 1;
+            fabric_failures += 1;
+            let until = t + repair_s;
+            if until <= now {
+                continue; // repaired while the job was queued/restarting
+            }
+            let sev_step = match sev {
+                FabricSeverity::Cable => step_cable.unwrap_or(step_healthy),
+                FabricSeverity::Spine => step_spine.unwrap_or(step_healthy),
+            };
+            degraded_step_cur =
+                if now < degraded_until { degraded_step_cur.max(sev_step) } else { sev_step };
+            degraded_until = degraded_until.max(until);
+        }
+        let dur = if now < degraded_until { degraded_step_cur } else { step_healthy };
+        let next_node_t = node_events.get(ni).map(|e| e.0).unwrap_or(f64::INFINITY);
+        // (c) a node dies mid-step: the partial step burns, (a) handles it
+        if next_node_t < now + dur && next_node_t < duration {
+            tb.lost_work_s += next_node_t - now;
+            now = next_node_t;
+            continue;
+        }
+        // (d) the allocation ends mid-step
+        if now + dur > duration {
+            tb.lost_work_s += duration - now;
+            now = duration;
+            break;
+        }
+        // (e) the step completes
+        now += dur;
+        pending_work_s += dur;
+        since_ckpt += 1;
+        worst_degraded = worst_degraded.max(dur);
+        // (f) checkpoint at the interval; a node death during the stall
+        // kills the write, so everything since the last good one is lost
+        if since_ckpt >= interval {
+            if next_node_t < now + stall_s && next_node_t < duration {
+                tb.lost_work_s += next_node_t - now;
+                now = next_node_t;
+                continue;
+            }
+            if now + stall_s > duration {
+                tb.checkpoint_s += duration - now;
+                now = duration;
+                break;
+            }
+            now += stall_s;
+            tb.checkpoint_s += stall_s;
+            committed_steps += since_ckpt;
+            tb.compute_s += pending_work_s;
+            pending_work_s = 0.0;
+            since_ckpt = 0;
+            checkpoint_writes += 1;
+        }
+    }
+    // the allocation drains with a final checkpoint (written as the job
+    // exits, not charged against the campaign)
+    committed_steps += since_ckpt;
+    tb.compute_s += pending_work_s;
+
+    let committed_tokens = committed_steps as f64 * cc.llm.batch_tokens;
+    let goodput = committed_tokens / duration;
+    let fault_free = cc.llm.batch_tokens / step_healthy;
+    let goodput_fraction = goodput / fault_free;
+    CampaignReport {
+        schema: CAMPAIGN_SCHEMA_VERSION,
+        duration_s: duration,
+        step_time_s: step_healthy,
+        degraded_step_time_s: worst_degraded,
+        interval_steps: interval,
+        interval_source,
+        checkpoint_stall_s: stall_s,
+        readback_s,
+        checkpoint_fits_backend: ckpt.fits_backend,
+        checkpoint_writes,
+        committed_steps,
+        committed_tokens,
+        goodput_tokens_per_s: goodput,
+        fault_free_tokens_per_s: fault_free,
+        goodput_fraction,
+        mfu_goodput: st.mfu * goodput_fraction,
+        availability: 1.0 - (tb.queue_s + tb.restart_s) / duration,
+        node_failures,
+        fabric_failures,
+        time: tb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 128-GPU job on a 16-node cluster: cheap enough for unit tests.
+    pub(crate) fn small() -> (ClusterConfig, CampaignConfig) {
+        let mut cfg = ClusterConfig::default();
+        cfg.apply_override("nodes", "16").unwrap();
+        let mut cc = CampaignConfig::llama70b_30d();
+        cc.llm = LlmConfig::midsize_8b();
+        cc.duration_days = 2.0;
+        cc.node_mtbf_hours = 50.0; // 16/50 per hour: ~15 failures in 2 days
+        cc.fabric_mtbf_hours = 100.0;
+        (cfg, cc)
+    }
+
+    #[test]
+    fn campaign_is_deterministic() {
+        let (cfg, cc) = small();
+        let a = run_campaign(&cfg, &cc, 7);
+        let b = run_campaign(&cfg, &cc, 7);
+        assert_eq!(a, b);
+        let c = run_campaign(&cfg, &cc, 8);
+        assert_ne!(a, c, "different seeds should move the failure draw");
+    }
+
+    #[test]
+    fn ledger_partitions_the_allocation() {
+        let (cfg, cc) = small();
+        let r = run_campaign(&cfg, &cc, 3);
+        assert!(
+            (r.time.total() - r.duration_s).abs() < 1e-6 * r.duration_s,
+            "ledger {} vs duration {}",
+            r.time.total(),
+            r.duration_s
+        );
+        assert!(r.goodput_tokens_per_s <= r.fault_free_tokens_per_s * (1.0 + 1e-9));
+        assert!((0.0..=1.0).contains(&r.availability));
+        assert_eq!(r.schema, CAMPAIGN_SCHEMA_VERSION);
+    }
+
+    #[test]
+    fn failures_actually_fire_and_cost_time() {
+        let (cfg, cc) = small();
+        let r = run_campaign(&cfg, &cc, 5);
+        assert!(r.node_failures > 0, "~15 expected failures in 2 days");
+        assert!(r.time.queue_s + r.time.restart_s > 0.0);
+        assert!(r.time.lost_work_s > 0.0);
+        assert!(r.goodput_fraction < 1.0);
+    }
+
+    #[test]
+    fn zero_failure_campaign_recovers_the_step_time_model() {
+        let (cfg, mut cc) = small();
+        cc.node_mtbf_hours = 0.0;
+        cc.fabric_mtbf_hours = 0.0;
+        let r = run_campaign(&cfg, &cc, 1);
+        assert_eq!(r.node_failures + r.fabric_failures, 0);
+        assert!(r.goodput_fraction > 0.99, "fraction {}", r.goodput_fraction);
+        assert!(r.goodput_fraction <= 1.0 + 1e-9);
+        assert_eq!(r.availability, 1.0);
+    }
+
+    #[test]
+    fn interval_override_is_respected() {
+        let (cfg, mut cc) = small();
+        cc.interval_override = Some(123);
+        let r = run_campaign(&cfg, &cc, 2);
+        assert_eq!(r.interval_steps, 123);
+        assert_eq!(r.interval_source, INTERVAL_SOURCE_OVERRIDE);
+    }
+
+    #[test]
+    fn fabric_failures_degrade_but_do_not_kill() {
+        let (cfg, mut cc) = small();
+        cc.node_mtbf_hours = 0.0; // isolate the fabric process
+        cc.fabric_mtbf_hours = 2.0; // ~24 expected events in 2 days
+        let r = run_campaign(&cfg, &cc, 4);
+        assert!(r.fabric_failures > 0);
+        assert_eq!(r.node_failures, 0);
+        assert_eq!(r.availability, 1.0, "fabric events never requeue");
+        assert!(r.degraded_step_time_s >= r.step_time_s);
+    }
+
+    #[test]
+    fn requeue_wait_is_deterministic_and_scales_with_load() {
+        let cfg = ClusterConfig::default();
+        let a = requeue_wait(&cfg, 100, 8, 42);
+        let b = requeue_wait(&cfg, 100, 8, 42);
+        assert_eq!(a, b);
+        assert!(a > 0.0, "a full-machine restart waits behind the mix");
+        assert_eq!(requeue_wait(&cfg, 100, 0, 42), 0.0);
+    }
+}

@@ -1,9 +1,16 @@
 //! LLM training on SAKURAONE: the distributed step-time model over the
-//! simulated fabric, and the *real* small-scale training loop through the
-//! PJRT runtime (Pallas attention kernel -> JAX train step -> Rust driver).
+//! simulated fabric, the goodput-true multi-week campaign simulator that
+//! composes it with failures, checkpoints and restarts, and the *real*
+//! small-scale training loop through the PJRT runtime (Pallas attention
+//! kernel -> JAX train step -> Rust driver).
 
+pub mod campaign;
 pub mod parallelism;
 pub mod train;
 
+pub use campaign::{
+    run_campaign, run_campaign_on, CampaignConfig, CampaignReport,
+    TimeBreakdown, CAMPAIGN_SCHEMA_VERSION,
+};
 pub use parallelism::{step_time, LlmConfig, StepTime};
 pub use train::{train, Corpus, TrainReport};

@@ -47,6 +47,21 @@ impl LlmConfig {
         }
     }
 
+    /// A mid-size 8B run on 128 GPUs (dp=16 × tp=8, 16 nodes): the cheap
+    /// shape shared by the campaign grid and the test tiers.
+    pub fn midsize_8b() -> Self {
+        Self {
+            params: 8e9,
+            batch_tokens: 1e6,
+            microbatches: 8,
+            dp: 16,
+            tp: 8,
+            pp: 1,
+            flops_per_token_factor: 6.0,
+            mfu_ceiling: 0.5,
+        }
+    }
+
     pub fn gpus(&self) -> usize {
         self.dp * self.tp * self.pp
     }

@@ -11,6 +11,8 @@
 //!   llm     — distributed LLM step-time model
 //!   sched   — Slurm-like scheduler demo on a synthetic job mix
 //!   collectives — algorithm × size × topology × failure grid (§2.2)
+//!   campaign — goodput-true N-day training campaigns (failures ×
+//!              checkpoint/restart × Lustre I/O over the step-time model)
 //!   validate— numerics checks through the AOT artifacts
 //!   report  — Table 3 census, rankings, config inventory
 //!   suite   — everything above through the parallel sweep engine
@@ -51,6 +53,7 @@ fn run(args: &Args) -> Result<()> {
         "llm" => commands::llm::handle(args)?,
         "sched" => commands::sched::handle(args)?,
         "collectives" => commands::collectives::handle(args)?,
+        "campaign" => commands::campaign::handle(args)?,
         "power" => commands::power::handle(args)?,
         "checkpoint" => commands::checkpoint::handle(args)?,
         "resilience" => commands::resilience::handle(args)?,

@@ -2,8 +2,8 @@
 //!
 //! Fans benchmark scenarios — HPL/HPCG/MxP problem-size grids, IO500
 //! client sweeps, degraded-network drills, scaled-down cluster configs,
-//! LLM step-time ablations, scheduler mixes — across a scoped worker pool
-//! and merges the results into one [`RunManifest`].
+//! LLM step-time ablations, goodput campaigns, scheduler mixes — across a
+//! scoped worker pool and merges the results into one [`RunManifest`].
 //!
 //! Determinism contract: the manifest is **byte-identical for any worker
 //! count**. Results are written into a slot indexed by scenario position
@@ -22,6 +22,7 @@ use crate::benchmarks::io500::{run_io500_on, Io500Params, Io500Result};
 use crate::benchmarks::report::paper;
 use crate::collectives::{AllReduceAlgo, CollectiveEngine, Rank};
 use crate::config::{ClusterConfig, TopologyKind};
+use crate::llm::campaign::{run_campaign, CampaignConfig, CampaignReport};
 use crate::llm::{step_time, LlmConfig};
 use crate::network::{apply_failures, FailurePlan};
 use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
@@ -82,6 +83,9 @@ pub enum ScenarioSpec {
         topology: TopologyKind,
         plan: Option<FailurePlan>,
     },
+    /// Goodput-true training campaign: failures × checkpoint/restart ×
+    /// Lustre I/O composed over the step-time model (seeded).
+    Campaign { campaign: Box<CampaignConfig>, topology: TopologyKind },
     /// Synthetic job mix through the Slurm-like scheduler (seeded).
     Sched { jobs: usize },
     /// Scaled-down cluster running a proportionally scaled HPL.
@@ -102,6 +106,7 @@ impl Scenario {
             ScenarioSpec::Llm { .. } => "llm",
             ScenarioSpec::Resilience { .. } => "resilience",
             ScenarioSpec::Collective { .. } => "collective",
+            ScenarioSpec::Campaign { .. } => "campaign",
             ScenarioSpec::Sched { .. } => "sched",
             ScenarioSpec::Cluster { .. } => "cluster",
         }
@@ -217,6 +222,12 @@ impl Scenario {
                 }
                 rec
             }
+            ScenarioSpec::Campaign { campaign, topology } => {
+                let mut c = cfg.clone();
+                c.network.topology = *topology;
+                let report = run_campaign(&c, campaign, seed);
+                campaign_record(&self.id, &report, campaign, *topology)
+            }
             ScenarioSpec::Sched { jobs } => {
                 let mut sim = SlurmSim::new(cfg);
                 let mut rng = Rng::new(seed);
@@ -325,6 +336,44 @@ pub(crate) fn mxp_record(id: &str, r: &MxpResult, anchored: bool) -> ScenarioRec
     }
 }
 
+pub(crate) fn campaign_record(
+    id: &str,
+    r: &CampaignReport,
+    cc: &CampaignConfig,
+    topology: TopologyKind,
+) -> ScenarioRecord {
+    ScenarioRecord::new(id, "campaign")
+        .param("campaign_schema", r.schema)
+        .param("topology", topology.name())
+        .param("gpus", cc.llm.gpus())
+        .param("dp", cc.llm.dp)
+        .param("tp", cc.llm.tp)
+        .param("pp", cc.llm.pp)
+        .param("days", cc.duration_days)
+        .param("node_mtbf_h", cc.node_mtbf_hours)
+        .param("fabric_mtbf_h", cc.fabric_mtbf_hours)
+        .param("interval_source", r.interval_source)
+        .param("ckpt_fits_backend", r.checkpoint_fits_backend)
+        .metric("goodput_tokens_per_s", r.goodput_tokens_per_s)
+        .metric("fault_free_tokens_per_s", r.fault_free_tokens_per_s)
+        .metric("goodput_frac_pct", r.goodput_fraction * 100.0)
+        .metric("mfu_goodput_pct", r.mfu_goodput * 100.0)
+        .metric("availability_pct", r.availability * 100.0)
+        .metric("committed_tokens", r.committed_tokens)
+        .metric("step_time_s", r.step_time_s)
+        .metric("degraded_step_time_s", r.degraded_step_time_s)
+        .metric("interval_steps", r.interval_steps as f64)
+        .metric("checkpoint_stall_s", r.checkpoint_stall_s)
+        .metric("checkpoint_writes", r.checkpoint_writes as f64)
+        .metric("node_failures", r.node_failures as f64)
+        .metric("fabric_failures", r.fabric_failures as f64)
+        .metric("compute_s", r.time.compute_s)
+        .metric("checkpoint_s", r.time.checkpoint_s)
+        .metric("lost_work_s", r.time.lost_work_s)
+        .metric("restart_s", r.time.restart_s)
+        .metric("queue_s", r.time.queue_s)
+}
+
 pub(crate) fn io500_record(id: &str, r: &Io500Result, degraded: bool) -> ScenarioRecord {
     let rec = ScenarioRecord::new(id, "io500")
         .param("client_nodes", r.params.client_nodes)
@@ -409,6 +458,66 @@ pub fn collectives_grid(quick: bool) -> Vec<Scenario> {
     g
 }
 
+fn campaign_scenario(id: &str, campaign: CampaignConfig, topology: TopologyKind) -> Scenario {
+    Scenario::new(
+        &format!("campaign/{id}"),
+        ScenarioSpec::Campaign { campaign: Box::new(campaign), topology },
+    )
+}
+
+/// A 128-GPU mid-size job (the cluster is mostly idle around it) — the
+/// cheap point on the campaign grid.
+fn midsize_campaign() -> CampaignConfig {
+    let mut cc = CampaignConfig::llama70b_30d();
+    cc.llm = LlmConfig::midsize_8b();
+    cc.duration_days = 7.0;
+    cc.node_mtbf_hours = 2_190.0;
+    cc
+}
+
+/// Scenarios in the quick campaign grid (the CI determinism cmp pair);
+/// the quick grid is always this prefix of the full grid.
+pub const CAMPAIGN_QUICK_LEN: usize = 2;
+
+/// The `sakuraone campaign` grid. The quick subset is the 2-scenario CI
+/// determinism pair (flagship + flaky); the full grid adds the
+/// no-failure reference, an interval override, a fabric ablation and the
+/// mid-size job.
+pub fn campaign_grid(quick: bool) -> Vec<Scenario> {
+    let flagship = CampaignConfig::llama70b_30d;
+    let mut g = vec![
+        campaign_scenario("llama70b-30d", flagship(), TopologyKind::RailOptimized),
+        campaign_scenario(
+            "llama70b-30d-flaky",
+            CampaignConfig { node_mtbf_hours: 2_190.0, ..flagship() },
+            TopologyKind::RailOptimized,
+        ),
+    ];
+    debug_assert_eq!(g.len(), CAMPAIGN_QUICK_LEN);
+    if quick {
+        return g;
+    }
+    g.extend([
+        campaign_scenario(
+            "llama70b-30d-no-failures",
+            CampaignConfig {
+                node_mtbf_hours: 0.0,
+                fabric_mtbf_hours: 0.0,
+                ..flagship()
+            },
+            TopologyKind::RailOptimized,
+        ),
+        campaign_scenario(
+            "llama70b-30d-interval500",
+            CampaignConfig { interval_override: Some(500), ..flagship() },
+            TopologyKind::RailOptimized,
+        ),
+        campaign_scenario("llama70b-30d-fat-tree", flagship(), TopologyKind::FatTree),
+        campaign_scenario("midsize-7d", midsize_campaign(), TopologyKind::RailOptimized),
+    ]);
+    g
+}
+
 /// The standard scenario grid. `quick` is the CI smoke subset; the full
 /// grid adds problem-size sweeps and more failure/scale ablations.
 pub fn standard_grid(quick: bool) -> Vec<Scenario> {
@@ -467,6 +576,9 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
             None,
         ),
     ];
+    // Goodput campaigns (the `campaign` subcommand runs the full grid;
+    // the suite gates the quick pair).
+    g.extend(campaign_grid(true));
     if quick {
         return g;
     }
@@ -571,6 +683,8 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
             Some(FailurePlan::spine_down(2)),
         ),
     ]);
+    // Campaign ablations beyond the gated quick pair.
+    g.extend(campaign_grid(false).into_iter().skip(CAMPAIGN_QUICK_LEN));
     g
 }
 
@@ -696,6 +810,57 @@ mod tests {
             drec.metric_value("total_ms").unwrap()
                 >= rec.metric_value("total_ms").unwrap() - 1e-9
         );
+    }
+
+    #[test]
+    fn campaign_grid_quick_is_the_ci_pair_and_a_prefix_of_full() {
+        let quick = campaign_grid(true);
+        let full = campaign_grid(false);
+        assert_eq!(
+            quick.len(),
+            CAMPAIGN_QUICK_LEN,
+            "CI cmp relies on the 2-scenario quick grid"
+        );
+        assert!(full.len() > quick.len());
+        for (q, f) in quick.iter().zip(&full) {
+            assert_eq!(q.id, f.id);
+        }
+        let mut ids: Vec<&str> = full.iter().map(|s| s.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), full.len(), "duplicate campaign ids");
+        // the quick pair rides in the gated suite grid
+        let suite_ids: Vec<String> =
+            standard_grid(true).iter().map(|s| s.id.clone()).collect();
+        for s in &quick {
+            assert!(suite_ids.contains(&s.id), "{} not gated by the suite", s.id);
+        }
+    }
+
+    #[test]
+    fn campaign_scenario_runs_and_records() {
+        let cfg = ClusterConfig::default();
+        let s = campaign_grid(false)
+            .into_iter()
+            .find(|s| s.id == "campaign/midsize-7d")
+            .expect("midsize point");
+        let rec = s.run(&cfg, 9);
+        assert_eq!(rec.kind, "campaign");
+        assert_eq!(
+            rec.params.get("campaign_schema").map(String::as_str),
+            Some("1")
+        );
+        let goodput = rec.metric_value("goodput_tokens_per_s").unwrap();
+        let fault_free = rec.metric_value("fault_free_tokens_per_s").unwrap();
+        assert!(goodput > 0.0 && goodput <= fault_free * (1.0 + 1e-9));
+        let avail = rec.metric_value("availability_pct").unwrap();
+        assert!((0.0..=100.0 + 1e-9).contains(&avail));
+        // the wall-time ledger partitions the allocation
+        let ledger: f64 = ["compute_s", "checkpoint_s", "lost_work_s", "restart_s", "queue_s"]
+            .iter()
+            .map(|k| rec.metric_value(k).unwrap())
+            .sum();
+        assert!((ledger - 7.0 * 86_400.0).abs() < 1.0, "ledger {ledger}");
     }
 
     #[test]

@@ -6,8 +6,36 @@
 //! optimizer: bf16 weights (2 B/param) + fp32 master weights and two Adam
 //! moments (12 B/param) -> 14 B/param streamed from the DP-rank-0 shards,
 //! written through the Lustre model's sequential-write path.
+//!
+//! Degenerate inputs are clamped rather than allowed to poison downstream
+//! math with NaN/inf (the campaign simulator feeds this model from user
+//! knobs): step times are floored at [`MIN_STEP_TIME_S`], bandwidths at
+//! [`MIN_BANDWIDTH_BPS`], and checkpoint intervals are confined to
+//! `[1, MAX_INTERVAL_STEPS]`. A payload that exceeds the backend's raw
+//! capacity keeps a finite (huge) write time through the bandwidth floor
+//! and reports `fits_backend = false` so callers can surface it.
 
 use super::lustre::LustreModel;
+use super::stripe::StripePlan;
+
+/// Floor for per-step wall time: zero or negative step times (a user
+/// passing `--step-time 0`, or a degenerate LLM config) would otherwise
+/// turn the interval math into inf/NaN.
+pub const MIN_STEP_TIME_S: f64 = 1e-6;
+
+/// Floor for effective storage bandwidth: a fully-degraded backend
+/// (e.g. `network_fraction = 0`) yields huge-but-finite write times
+/// instead of `inf`.
+pub const MIN_BANDWIDTH_BPS: f64 = 1.0;
+
+/// Ceiling for checkpoint intervals: `min_interval_for_overhead` and
+/// `daly_interval_steps` clamp here instead of returning a saturated
+/// `u64::MAX` cast from a non-finite f64.
+pub const MAX_INTERVAL_STEPS: u64 = 1 << 40;
+
+/// Stripe objects per checkpoint shard file (Lustre default-class layout
+/// for large sequential files).
+pub const CHECKPOINT_STRIPE_COUNT: usize = 4;
 
 #[derive(Debug, Clone)]
 pub struct CheckpointConfig {
@@ -27,6 +55,7 @@ pub struct CheckpointConfig {
 
 impl CheckpointConfig {
     /// 70B-parameter run on the full machine, 30-minute cadence-ish.
+    /// `step_time_s` is floored at [`MIN_STEP_TIME_S`].
     pub fn llama70b(step_time_s: f64) -> Self {
         Self {
             params: 70e9,
@@ -34,13 +63,22 @@ impl CheckpointConfig {
             writer_nodes: 100,
             writer_procs: 800,
             interval_steps: 250,
-            step_time_s,
+            step_time_s: step_time_s.max(MIN_STEP_TIME_S),
             overlap: 0.5,
         }
     }
 
     pub fn bytes(&self) -> f64 {
         self.params * self.bytes_per_param
+    }
+
+    /// Step time with the documented floor applied.
+    pub fn step_time_clamped(&self) -> f64 {
+        if self.step_time_s.is_finite() {
+            self.step_time_s.max(MIN_STEP_TIME_S)
+        } else {
+            MIN_STEP_TIME_S
+        }
     }
 }
 
@@ -54,33 +92,115 @@ pub struct CheckpointReport {
     pub overhead_fraction: f64,
     /// Achieved write bandwidth (bytes/s).
     pub write_bps: f64,
+    /// Whether the payload fits the backend's raw NVMe capacity. A
+    /// checkpoint larger than the filesystem still gets a finite (huge)
+    /// write time via the bandwidth floor, but callers should surface
+    /// this flag instead of trusting the numbers.
+    pub fits_backend: bool,
 }
 
-pub fn checkpoint_cost(model: &LustreModel, cfg: &CheckpointConfig) -> CheckpointReport {
-    let bw = model.seq_write_bps(cfg.writer_nodes, cfg.writer_procs);
-    let write_seconds = cfg.bytes() / bw;
-    let stall = write_seconds * (1.0 - cfg.overlap);
-    let interval = cfg.interval_steps as f64 * cfg.step_time_s;
+fn cost_with_bw(model: &LustreModel, cfg: &CheckpointConfig, bw: f64) -> CheckpointReport {
+    let bw = if bw.is_finite() { bw.max(MIN_BANDWIDTH_BPS) } else { MIN_BANDWIDTH_BPS };
+    let bytes = cfg.bytes().max(0.0);
+    let write_seconds = if bytes.is_finite() { bytes / bw } else { f64::MAX };
+    let stall = write_seconds * (1.0 - cfg.overlap).clamp(0.0, 1.0);
+    let interval = cfg.interval_steps.max(1) as f64 * cfg.step_time_clamped();
+    let overhead_fraction =
+        if stall > 0.0 { stall / (interval + stall) } else { 0.0 };
     CheckpointReport {
-        bytes: cfg.bytes(),
+        bytes,
         write_seconds,
         stall_seconds: stall,
-        overhead_fraction: stall / (interval + stall),
+        overhead_fraction,
         write_bps: bw,
+        fits_backend: bytes <= model.capacity_bytes(),
     }
 }
 
-/// Largest checkpoint interval (steps) that keeps overhead below `budget`.
+pub fn checkpoint_cost(model: &LustreModel, cfg: &CheckpointConfig) -> CheckpointReport {
+    cost_with_bw(model, cfg, model.seq_write_bps(cfg.writer_nodes, cfg.writer_procs))
+}
+
+/// [`checkpoint_cost`] with the file-per-writer stripe layout made
+/// explicit: each writer process streams one shard file striped over
+/// [`CHECKPOINT_STRIPE_COUNT`] OSTs, and the busiest OST gates the
+/// parallel phase ([`StripePlan::balance_efficiency`]). Returns the
+/// derated report plus the stripe efficiency so read-back can reuse the
+/// same layout penalty.
+pub fn striped_checkpoint_cost(
+    model: &LustreModel,
+    cfg: &CheckpointConfig,
+    stripe_seed: u64,
+) -> (CheckpointReport, f64) {
+    let osts = (model.cfg.servers * model.cfg.nvme_per_server).max(1);
+    let plan = StripePlan::place(
+        cfg.writer_procs.max(1),
+        CHECKPOINT_STRIPE_COUNT,
+        osts,
+        stripe_seed,
+    );
+    let eff = plan.balance_efficiency();
+    let bw = model.seq_write_bps(cfg.writer_nodes, cfg.writer_procs) * eff;
+    (cost_with_bw(model, cfg, bw), eff)
+}
+
+/// Smallest checkpoint interval (steps) that keeps overhead below `budget`.
+/// Clamped to `[1, MAX_INTERVAL_STEPS]`; degenerate inputs (zero step time,
+/// zero bandwidth, oversized payload) come back clamped, never non-finite.
 pub fn min_interval_for_overhead(
     model: &LustreModel,
     cfg: &CheckpointConfig,
     budget: f64,
 ) -> u64 {
-    assert!(budget > 0.0 && budget < 1.0);
     let r = checkpoint_cost(model, cfg);
+    min_interval_for_stall(r.stall_seconds, cfg.step_time_clamped(), budget)
+}
+
+/// [`min_interval_for_overhead`] for an already-computed per-checkpoint
+/// stall — use this when the stall came from a derated path (e.g. the
+/// striped layout) so the budget floor matches the stall actually paid.
+pub fn min_interval_for_stall(stall_s: f64, step_time_s: f64, budget: f64) -> u64 {
+    assert!(budget > 0.0 && budget < 1.0);
     // stall / (k*step + stall) <= budget  =>  k >= stall*(1-budget)/(budget*step)
-    let k = r.stall_seconds * (1.0 - budget) / (budget * cfg.step_time_s);
-    k.ceil().max(1.0) as u64
+    let k = stall_s.max(0.0) * (1.0 - budget)
+        / (budget * step_time_s.max(MIN_STEP_TIME_S));
+    clamp_interval(k.ceil())
+}
+
+/// Young/Daly checkpoint interval for a given failure process: the
+/// optimum of `stall/τ + τ/(2·MTBF)` at `τ = sqrt(2·stall·MTBF)`,
+/// converted to whole steps and clamped to `[1, MAX_INTERVAL_STEPS]`.
+pub fn daly_interval_steps(stall_s: f64, step_time_s: f64, mtbf_s: f64) -> u64 {
+    let step = step_time_s.max(MIN_STEP_TIME_S);
+    if stall_s <= 0.0 || !mtbf_s.is_finite() || mtbf_s <= 0.0 {
+        return MAX_INTERVAL_STEPS;
+    }
+    clamp_interval(((2.0 * stall_s * mtbf_s).sqrt() / step).round())
+}
+
+/// First-order expected time-overhead fraction of checkpointing every
+/// `interval_steps` under an exponential failure process: checkpoint tax
+/// `stall/τ` plus expected lost work `τ/(2·MTBF)`. Convex in τ with its
+/// minimum at the Young/Daly interval — the property tier pins this.
+pub fn expected_overhead_fraction(
+    interval_steps: u64,
+    stall_s: f64,
+    step_time_s: f64,
+    mtbf_s: f64,
+) -> f64 {
+    let tau = interval_steps.max(1) as f64 * step_time_s.max(MIN_STEP_TIME_S);
+    let lost = if mtbf_s.is_finite() && mtbf_s > 0.0 { tau / (2.0 * mtbf_s) } else { 0.0 };
+    stall_s.max(0.0) / tau + lost
+}
+
+fn clamp_interval(k: f64) -> u64 {
+    if !k.is_finite() || k >= MAX_INTERVAL_STEPS as f64 {
+        MAX_INTERVAL_STEPS
+    } else if k < 1.0 {
+        1
+    } else {
+        k as u64
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +227,7 @@ mod tests {
         let r = checkpoint_cost(&m, &cfg);
         // ~1 TB at ~200 GB/s-class -> a handful of seconds
         assert!(r.write_seconds > 2.0 && r.write_seconds < 60.0, "{}", r.write_seconds);
+        assert!(r.fits_backend);
     }
 
     #[test]
@@ -141,5 +262,78 @@ mod tests {
         let ok = checkpoint_cost(&m, &cfg);
         let deg = checkpoint_cost(&m.clone().with_switch_failure(), &cfg);
         assert!(deg.write_seconds >= ok.write_seconds);
+    }
+
+    #[test]
+    fn zero_and_negative_step_times_stay_finite() {
+        let (m, _) = setup();
+        for bad in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let cfg = CheckpointConfig::llama70b(bad);
+            assert!(cfg.step_time_s >= MIN_STEP_TIME_S, "llama70b({bad})");
+            let r = checkpoint_cost(&m, &cfg);
+            assert!(r.overhead_fraction.is_finite());
+            let k = min_interval_for_overhead(&m, &cfg, 0.01);
+            assert!((1..=MAX_INTERVAL_STEPS).contains(&k), "k={k} for {bad}");
+        }
+    }
+
+    #[test]
+    fn oversized_payload_is_finite_and_flagged() {
+        let (m, mut cfg) = setup();
+        cfg.params = 1e30; // 1.4e31 bytes >> 2.9 PB backend
+        let r = checkpoint_cost(&m, &cfg);
+        assert!(!r.fits_backend);
+        assert!(r.write_seconds.is_finite() && r.write_seconds > 0.0);
+        let k = min_interval_for_overhead(&m, &cfg, 0.5);
+        assert!(k <= MAX_INTERVAL_STEPS && k >= 1);
+        cfg.params = f64::INFINITY;
+        let r = checkpoint_cost(&m, &cfg);
+        assert!(r.write_seconds.is_finite());
+        assert!(min_interval_for_overhead(&m, &cfg, 0.5) == MAX_INTERVAL_STEPS);
+    }
+
+    #[test]
+    fn zero_bandwidth_backend_clamps_not_infs() {
+        let (m, cfg) = setup();
+        let mut dead = m.clone();
+        dead.network_fraction = 0.0;
+        let r = checkpoint_cost(&dead, &cfg);
+        assert!(r.write_seconds.is_finite());
+        assert!(r.write_bps >= MIN_BANDWIDTH_BPS);
+    }
+
+    #[test]
+    fn striped_cost_derates_by_layout_balance() {
+        let (m, cfg) = setup();
+        let flat = checkpoint_cost(&m, &cfg);
+        let (striped, eff) = striped_checkpoint_cost(&m, &cfg, 42);
+        assert!((0.0..=1.0).contains(&eff), "eff={eff}");
+        assert!(striped.write_seconds >= flat.write_seconds * 0.999);
+        // 800 shard files over 96 OSTs is nearly balanced
+        assert!(eff > 0.5, "eff={eff}");
+        // same seed, same layout
+        let (again, eff2) = striped_checkpoint_cost(&m, &cfg, 42);
+        assert_eq!(striped.write_seconds, again.write_seconds);
+        assert_eq!(eff, eff2);
+    }
+
+    #[test]
+    fn daly_interval_is_the_overhead_minimum() {
+        let stall = 2.0;
+        let step = 5.3;
+        let mtbf = 90.0 * 3600.0;
+        let k = daly_interval_steps(stall, step, mtbf);
+        let at = |kk: u64| expected_overhead_fraction(kk, stall, step, mtbf);
+        assert!(at(k) <= at(k * 2) + 1e-12);
+        assert!(at(k) <= at((k / 2).max(1)) + 1e-12);
+    }
+
+    #[test]
+    fn daly_interval_degenerate_inputs() {
+        assert_eq!(daly_interval_steps(0.0, 5.3, 1e5), MAX_INTERVAL_STEPS);
+        assert_eq!(daly_interval_steps(2.0, 5.3, f64::INFINITY), MAX_INTERVAL_STEPS);
+        assert_eq!(daly_interval_steps(2.0, 5.3, 0.0), MAX_INTERVAL_STEPS);
+        let k = daly_interval_steps(2.0, 0.0, 1e5); // step floored
+        assert!((1..=MAX_INTERVAL_STEPS).contains(&k));
     }
 }

@@ -88,6 +88,11 @@ impl LustreModel {
         (self.cfg.servers * self.cfg.nvme_per_server) as f64
     }
 
+    /// Raw backend capacity (all OST drives).
+    pub fn capacity_bytes(&self) -> f64 {
+        self.osts() * self.cfg.nvme_bytes
+    }
+
     /// Raw backend bandwidth (all drives streaming).
     pub fn backend_write_bps(&self) -> f64 {
         self.osts() * self.cfg.nvme_write_bps

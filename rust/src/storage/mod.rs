@@ -6,6 +6,11 @@ pub mod checkpoint;
 pub mod lustre;
 pub mod stripe;
 
-pub use checkpoint::{checkpoint_cost, CheckpointConfig, CheckpointReport};
+pub use checkpoint::{
+    checkpoint_cost, daly_interval_steps, expected_overhead_fraction,
+    min_interval_for_overhead, min_interval_for_stall, striped_checkpoint_cost,
+    CheckpointConfig,
+    CheckpointReport,
+};
 pub use lustre::{LustreModel, MetaOp};
 pub use stripe::StripePlan;

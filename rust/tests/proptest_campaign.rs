@@ -1,0 +1,186 @@
+//! Property tier for the goodput-true campaign simulator (`llm::campaign`):
+//! the invariants that make a multi-week simulated run trustworthy.
+//!
+//! - goodput never exceeds the fault-free step-time throughput;
+//! - goodput is monotone non-increasing in the node-failure rate (the
+//!   engine's nested-thinning coupling makes higher rates strict
+//!   *supersets* of failure events, so this is testable pointwise on
+//!   seed-battery means, not just in expectation);
+//! - the Young/Daly interval minimises the analytic expected overhead
+//!   (checked against 2× and ½× that interval);
+//! - a zero-failure campaign recovers the `step_time` throughput within
+//!   tolerance;
+//! - same-seed campaigns are byte-identical across `--workers 1` vs `4`.
+
+use sakuraone::config::ClusterConfig;
+use sakuraone::llm::campaign::{run_campaign, CampaignConfig};
+use sakuraone::llm::LlmConfig;
+use sakuraone::runtime::sweep::{run_sweep_named, Scenario, ScenarioSpec, SweepConfig};
+use sakuraone::storage::{daly_interval_steps, expected_overhead_fraction};
+use sakuraone::util::proptest::{check, Config};
+use sakuraone::util::rng::Rng;
+
+/// A 128-GPU job on a 16-node cluster: the cheap shape for property runs.
+fn small() -> (ClusterConfig, CampaignConfig) {
+    let mut cfg = ClusterConfig::default();
+    cfg.apply_override("nodes", "16").unwrap();
+    let mut cc = CampaignConfig::llama70b_30d();
+    cc.llm = LlmConfig::midsize_8b();
+    cc.duration_days = 1.0;
+    cc.node_mtbf_hours = 200.0;
+    cc.fabric_mtbf_hours = 50.0;
+    (cfg, cc)
+}
+
+#[test]
+fn prop_goodput_never_exceeds_fault_free_throughput() {
+    let (cfg, base) = small();
+    check(
+        Config { cases: 6, seed: 0xCA31, ..Default::default() },
+        |r: &mut Rng| {
+            (
+                20.0 + r.uniform() * 500.0, // node mtbf (h); rate stays < base
+                5.0 + r.uniform() * 100.0,  // fabric mtbf (h)
+                if r.uniform() < 0.5 { Some(1 + r.below(400)) } else { None },
+                r.next_u64(),
+            )
+        },
+        |&(node_mtbf, fabric_mtbf, interval, seed)| {
+            let mut cc = base.clone();
+            cc.node_mtbf_hours = node_mtbf;
+            cc.fabric_mtbf_hours = fabric_mtbf;
+            cc.interval_override = interval;
+            let r = run_campaign(&cfg, &cc, seed);
+            if r.goodput_tokens_per_s > r.fault_free_tokens_per_s * (1.0 + 1e-9) {
+                return Err(format!(
+                    "goodput {} > fault-free {}",
+                    r.goodput_tokens_per_s, r.fault_free_tokens_per_s
+                ));
+            }
+            if !(0.0..=1.0 + 1e-9).contains(&r.availability) {
+                return Err(format!("availability {} out of range", r.availability));
+            }
+            let ledger = r.time.total();
+            if (ledger - r.duration_s).abs() > 1e-6 * r.duration_s {
+                return Err(format!(
+                    "time ledger {ledger} does not partition duration {}",
+                    r.duration_s
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn goodput_is_monotone_non_increasing_in_failure_rate() {
+    // nested thinning: a higher rate replays the lower rate's failures at
+    // identical times and adds more. The checkpoint interval is pinned
+    // across the ladder — otherwise Daly re-optimizes per rate and the
+    // superset coupling no longer implies pointwise monotonicity — and
+    // seed-battery means remove the residual checkpoint-phase jitter.
+    let (cfg, base) = small();
+    // node MTBF ladder, descending = failure rate ascending; 0 disables
+    let ladder = [0.0, 800.0, 200.0, 50.0];
+    let mean_goodput = |mtbf: f64| {
+        let mut cc = base.clone();
+        cc.node_mtbf_hours = mtbf;
+        cc.fabric_mtbf_hours = 0.0; // isolate the node-failure axis
+        cc.interval_override = Some(100); // same checkpoint schedule ladder-wide
+        let g: f64 = (1..=8u64)
+            .map(|seed| run_campaign(&cfg, &cc, seed).goodput_tokens_per_s)
+            .sum();
+        g / 8.0
+    };
+    let goodputs: Vec<f64> = ladder.iter().map(|&m| mean_goodput(m)).collect();
+    for pair in goodputs.windows(2) {
+        assert!(
+            pair[1] <= pair[0] * (1.0 + 1e-9),
+            "goodput rose with the failure rate: {goodputs:?} over mtbf ladder {ladder:?}"
+        );
+    }
+    // and the ladder actually bites: the flakiest point clearly loses
+    assert!(
+        goodputs[ladder.len() - 1] < goodputs[0] * 0.995,
+        "failure rate had no effect: {goodputs:?}"
+    );
+}
+
+#[test]
+fn prop_daly_interval_minimises_expected_overhead() {
+    // overhead(τ) = stall/τ + τ/(2·MTBF) is convex with its minimum at
+    // the Young/Daly interval; 2× and ½× must both cost at least as much.
+    check(
+        Config { cases: 64, seed: 0xDA17, ..Default::default() },
+        |r: &mut Rng| {
+            (
+                1.0 + r.uniform() * 9.0,   // stall (s)
+                1.0 + r.uniform() * 9.0,   // step (s)
+                1e4 + r.uniform() * 1e6,   // mtbf (s) — keeps k well above 1
+            )
+        },
+        |&(stall, step, mtbf)| {
+            let k = daly_interval_steps(stall, step, mtbf);
+            let at = |kk: u64| expected_overhead_fraction(kk, stall, step, mtbf);
+            if at(k) > at(k * 2) + 1e-12 {
+                return Err(format!("daly k={k} beats 2k: {} vs {}", at(k), at(k * 2)));
+            }
+            let half = (k / 2).max(1);
+            if at(k) > at(half) + 1e-12 {
+                return Err(format!("daly k={k} beats k/2: {} vs {}", at(k), at(half)));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zero_failure_campaign_matches_step_time_throughput() {
+    let (cfg, mut cc) = small();
+    cc.node_mtbf_hours = 0.0;
+    cc.fabric_mtbf_hours = 0.0;
+    let r = run_campaign(&cfg, &cc, 42);
+    assert_eq!(r.node_failures + r.fabric_failures, 0);
+    // no failures -> Daly pushes checkpoints out of the horizon, so the
+    // only loss is the sub-step remnant at the end of the allocation
+    let rel = (r.fault_free_tokens_per_s - r.goodput_tokens_per_s)
+        / r.fault_free_tokens_per_s;
+    assert!(
+        (0.0..0.01).contains(&rel),
+        "goodput {} vs fault-free {} (rel {rel})",
+        r.goodput_tokens_per_s,
+        r.fault_free_tokens_per_s
+    );
+}
+
+#[test]
+fn same_seed_campaigns_are_byte_identical_across_worker_counts() {
+    // the sweep-engine contract, exercised on a 3-scenario campaign grid
+    let cfg = {
+        let mut c = ClusterConfig::default();
+        c.apply_override("nodes", "16").unwrap();
+        c
+    };
+    let (_, base) = small();
+    let grid: Vec<Scenario> = [("a", 200.0), ("b", 50.0), ("c", 0.0)]
+        .into_iter()
+        .map(|(tag, mtbf)| {
+            let mut cc = base.clone();
+            cc.node_mtbf_hours = mtbf;
+            Scenario::new(
+                &format!("campaign/prop-{tag}"),
+                ScenarioSpec::Campaign {
+                    campaign: Box::new(cc),
+                    topology: sakuraone::config::TopologyKind::RailOptimized,
+                },
+            )
+        })
+        .collect();
+    let one = run_sweep_named(&cfg, &grid, &SweepConfig { workers: 1, seed: 42 }, "campaign");
+    let four = run_sweep_named(&cfg, &grid, &SweepConfig { workers: 4, seed: 42 }, "campaign");
+    assert_eq!(
+        one.to_json().emit(),
+        four.to_json().emit(),
+        "worker count leaked into the campaign manifest"
+    );
+}
