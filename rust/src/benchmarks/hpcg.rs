@@ -20,7 +20,7 @@ use crate::hardware::GpuModel;
 use crate::topology::builders::build;
 use crate::util::table::kv_table;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HpcgParams {
     /// Global problem dimensions.
     pub nx: u64,

@@ -18,7 +18,7 @@ pub const IOR_HARD_RECORD: f64 = 47_008.0;
 /// Write-phase stonewall (seconds).
 pub const STONEWALL_S: f64 = 300.0;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Io500Params {
     pub client_nodes: usize,
     pub procs_per_node: usize,

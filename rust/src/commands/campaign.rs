@@ -13,8 +13,7 @@ use anyhow::Result;
 use crate::llm::campaign::CampaignConfig;
 use crate::runtime::run_manifest::RunManifest;
 use crate::runtime::sweep::{
-    campaign_grid, default_workers, run_sweep_named, Scenario, ScenarioSpec,
-    SweepConfig,
+    campaign_grid, run_sweep_named, Scenario, ScenarioSpec, SweepConfig,
 };
 use crate::util::cli::Args;
 use crate::util::table::Table;
@@ -22,11 +21,7 @@ use crate::util::table::Table;
 pub fn handle(args: &Args) -> Result<RunManifest> {
     let cfg = super::cluster_config(args)?;
     let quick = args.flag("quick");
-    let workers = if args.flag("serial") {
-        1
-    } else {
-        args.get_usize("workers", default_workers()).map_err(anyhow::Error::msg)?
-    };
+    let workers = super::worker_count(args)?;
     let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
     let mut scenarios = campaign_grid(quick);
     apply_overrides(args, &mut scenarios)?;

@@ -7,20 +7,14 @@
 use anyhow::Result;
 
 use crate::runtime::run_manifest::RunManifest;
-use crate::runtime::sweep::{
-    collectives_grid, default_workers, run_sweep_named, SweepConfig,
-};
+use crate::runtime::sweep::{collectives_grid, run_sweep_named, SweepConfig};
 use crate::util::cli::Args;
 use crate::util::table::Table;
 
 pub fn handle(args: &Args) -> Result<RunManifest> {
     let cfg = super::cluster_config(args)?;
     let quick = args.flag("quick");
-    let workers = if args.flag("serial") {
-        1
-    } else {
-        args.get_usize("workers", default_workers()).map_err(anyhow::Error::msg)?
-    };
+    let workers = super::worker_count(args)?;
     let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
     let scenarios = collectives_grid(quick);
 

@@ -6,22 +6,22 @@ use crate::benchmarks::hpcg::HpcgParams;
 use crate::benchmarks::report;
 use crate::coordinator::Platform;
 use crate::runtime::run_manifest::RunManifest;
-use crate::runtime::sweep::hpcg_record;
-use crate::util::cli::Args;
+use crate::runtime::scenario::hpcg_record;
+use crate::util::cli::{parse_dims, Args};
 
 pub fn handle(args: &Args) -> Result<RunManifest> {
     let cfg = super::cluster_config(args)?;
     let mut params = HpcgParams::paper();
     let mut custom = false;
     if let Some(d) = args.get("dims") {
-        let (x, y, z) = super::parse_grid3(d, "--dims")?;
+        let [x, y, z] = parse_dims::<3>(d, "--dims").map_err(anyhow::Error::msg)?;
         params.nx = x;
         params.ny = y;
         params.nz = z;
         custom = true;
     }
     if let Some(g) = args.get("grid") {
-        let (p, q, r) = super::parse_grid3(g, "--grid")?;
+        let [p, q, r] = parse_dims::<3>(g, "--grid").map_err(anyhow::Error::msg)?;
         params.px = p as usize;
         params.py = q as usize;
         params.pz = r as usize;

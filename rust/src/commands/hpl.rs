@@ -6,8 +6,8 @@ use crate::benchmarks::hpl::HplParams;
 use crate::benchmarks::report;
 use crate::coordinator::Platform;
 use crate::runtime::run_manifest::RunManifest;
-use crate::runtime::sweep::hpl_record;
-use crate::util::cli::Args;
+use crate::runtime::scenario::hpl_record;
+use crate::util::cli::{parse_dims, Args};
 
 pub fn params_from(args: &Args) -> Result<HplParams> {
     let mut params = HplParams::paper();
@@ -16,9 +16,9 @@ pub fn params_from(args: &Args) -> Result<HplParams> {
     params.stride =
         args.get_usize("stride", params.stride).map_err(anyhow::Error::msg)?;
     if let Some(g) = args.get("grid") {
-        let (p, q) = super::parse_grid2(g)?;
-        params.p = p;
-        params.q = q;
+        let [p, q] = parse_dims::<2>(g, "--grid").map_err(anyhow::Error::msg)?;
+        params.p = p as usize;
+        params.q = q as usize;
     }
     Ok(params)
 }

@@ -6,7 +6,7 @@ use crate::benchmarks::io500::{comparison_table, run_io500_on, Io500Params};
 use crate::benchmarks::report;
 use crate::coordinator::Platform;
 use crate::runtime::run_manifest::RunManifest;
-use crate::runtime::sweep::io500_record;
+use crate::runtime::scenario::io500_record;
 use crate::storage::LustreModel;
 use crate::util::cli::Args;
 

@@ -13,6 +13,7 @@ pub mod hpl;
 pub mod io500;
 pub mod llm;
 pub mod mxp;
+pub mod plan;
 pub mod power;
 pub mod report;
 pub mod resilience;
@@ -22,7 +23,7 @@ pub mod topo;
 pub mod train;
 pub mod validate;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::config::ClusterConfig;
 use crate::util::cli::Args;
@@ -33,31 +34,40 @@ pub const FLAGS: &[&str] = &[
     "software", "json", "degraded", "quick", "serial",
 ];
 
-/// Shared `--nodes/--topology/...` overrides on the paper's default cluster.
-pub(crate) fn cluster_config(args: &Args) -> Result<ClusterConfig> {
-    let mut cfg = ClusterConfig::default();
-    for key in ["nodes", "pods", "topology", "rails", "spines", "gpus-per-node"] {
+/// The `--key value` cluster overrides every subcommand accepts.
+pub(crate) const CLUSTER_OVERRIDE_KEYS: &[&str] =
+    &["nodes", "pods", "topology", "rails", "spines", "gpus-per-node"];
+
+/// Apply the CLI's `--nodes/--topology/...` overrides onto `cfg` (on top
+/// of whatever base the caller built — defaults, or a plan's `config`).
+pub(crate) fn apply_cluster_overrides(
+    cfg: &mut ClusterConfig,
+    args: &Args,
+) -> Result<()> {
+    for &key in CLUSTER_OVERRIDE_KEYS {
         if let Some(v) = args.get(key) {
             cfg.apply_override(key, v).map_err(anyhow::Error::msg)?;
         }
     }
+    Ok(())
+}
+
+/// Shared `--nodes/--topology/...` overrides on the paper's default cluster.
+pub(crate) fn cluster_config(args: &Args) -> Result<ClusterConfig> {
+    let mut cfg = ClusterConfig::default();
+    apply_cluster_overrides(&mut cfg, args)?;
     Ok(cfg)
 }
 
-pub(crate) fn parse_grid2(s: &str) -> Result<(usize, usize)> {
-    let parts: Vec<&str> = s.split('x').collect();
-    if parts.len() != 2 {
-        bail!("grid must be PxQ, got {s:?}");
+/// Worker count for the sweep-engine subcommands: `--serial` pins one
+/// thread, otherwise `--workers N` (default: available cores, capped).
+pub(crate) fn worker_count(args: &Args) -> Result<usize> {
+    if args.flag("serial") {
+        Ok(1)
+    } else {
+        args.get_usize("workers", crate::runtime::sweep::default_workers())
+            .map_err(anyhow::Error::msg)
     }
-    Ok((parts[0].parse()?, parts[1].parse()?))
-}
-
-pub(crate) fn parse_grid3(s: &str, what: &str) -> Result<(u64, u64, u64)> {
-    let parts: Vec<&str> = s.split('x').collect();
-    if parts.len() != 3 {
-        bail!("{what} must be XxYxZ, got {s:?}");
-    }
-    Ok((parts[0].parse()?, parts[1].parse()?, parts[2].parse()?))
 }
 
 /// Human-readable output is suppressed when the caller asked for JSON on
@@ -90,7 +100,9 @@ USAGE: sakuraone <subcommand> [options]
   report    [--top500] [--rankings] [--software]
   config    [--dump] [--nodes N] [--topology KIND] ...
   suite     [--quick] [--serial] [--workers N] [--seed S]
-            [--baseline FILE] [--tolerance PCT]
+            [--baseline FILE] [--tolerance PCT] [--plan FILE]
+  plan      run FILE [--workers N] [--seed S]     (user-authored sweeps,
+            | validate FILE... | list              see docs/plans.md)
 
 Every subcommand also accepts:
   --json        emit the run manifest as JSON on stdout (quiet tables)
@@ -146,10 +158,11 @@ mod tests {
     }
 
     #[test]
-    fn grid_parsers() {
-        assert_eq!(parse_grid2("16x49").unwrap(), (16, 49));
-        assert!(parse_grid2("16").is_err());
-        assert_eq!(parse_grid3("8x7x14", "--grid").unwrap(), (8, 7, 14));
-        assert!(parse_grid3("8x7", "--grid").is_err());
+    fn plan_subcommand_positionals_parse() {
+        let a = parse(&["plan", "run", "examples/plans/mixed.json", "--json"]);
+        assert_eq!(a.subcommand.as_deref(), Some("plan"));
+        assert_eq!(a.positional[0], "run");
+        assert_eq!(a.positional[1], "examples/plans/mixed.json");
+        assert!(a.flag("json"));
     }
 }

@@ -6,8 +6,8 @@ use crate::benchmarks::hpl_mxp::MxpParams;
 use crate::benchmarks::report;
 use crate::coordinator::Platform;
 use crate::runtime::run_manifest::RunManifest;
-use crate::runtime::sweep::mxp_record;
-use crate::util::cli::Args;
+use crate::runtime::scenario::mxp_record;
+use crate::util::cli::{parse_dims, Args};
 
 pub fn handle(args: &Args) -> Result<RunManifest> {
     let cfg = super::cluster_config(args)?;
@@ -18,9 +18,9 @@ pub fn handle(args: &Args) -> Result<RunManifest> {
         .get_usize("ir-iters", params.ir_iters as usize)
         .map_err(anyhow::Error::msg)? as u32;
     if let Some(g) = args.get("grid") {
-        let (p, q) = super::parse_grid2(g)?;
-        params.p = p;
-        params.q = q;
+        let [p, q] = parse_dims::<2>(g, "--grid").map_err(anyhow::Error::msg)?;
+        params.p = p as usize;
+        params.q = q as usize;
     }
     let is_paper = params == MxpParams::paper();
     let mut platform = Platform::new(cfg.clone());

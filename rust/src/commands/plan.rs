@@ -1,0 +1,181 @@
+//! `sakuraone plan` — run, validate and introspect user-authored sweep
+//! plans (see docs/plans.md).
+//!
+//!   plan run FILE       execute the plan through the deterministic engine
+//!   plan validate FILE… structural + resolution check, no execution
+//!   plan list           scenario kinds (registry) and built-in grids
+//!
+//! `plan run` manifests are byte-identical for any `--workers` value with
+//! the same seed — the same contract as `suite`/`collectives`/`campaign`,
+//! because plans execute through the same `run_sweep_named` engine with
+//! per-scenario seeds derived from `(seed, index)`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ClusterConfig;
+use crate::runtime::plan::{grid_len, SweepPlan, GRID_NAMES, PLAN_SCHEMA_VERSION};
+use crate::runtime::run_manifest::RunManifest;
+use crate::runtime::scenario::{Scenario, REGISTRY};
+use crate::runtime::sweep::{run_sweep_named, SweepConfig};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    match args.positional.first().map(String::as_str) {
+        Some("run") => run(args),
+        Some("validate") => validate(args),
+        Some("list") => list(args),
+        Some(other) => bail!("unknown plan action {other:?} (run | validate | list)"),
+        None => bail!("plan needs an action: plan run FILE | plan validate FILE... | plan list"),
+    }
+}
+
+/// Load and structurally validate a plan document from disk.
+pub fn load(path: &str) -> Result<SweepPlan> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading plan {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parsing plan {path}: {e}"))?;
+    SweepPlan::from_json(&j).map_err(|e| anyhow!("{path}: {e}"))
+}
+
+/// Load a plan and fully resolve it against the CLI: the plan's `config`
+/// overrides apply first, CLI cluster overrides win on top, and the seed
+/// is CLI `--seed` > plan seed > default. Shared by `plan run` and
+/// `suite --plan` so the two entry points cannot drift. Returns
+/// `(cfg, scenarios, seed, plan name)`.
+pub(crate) fn load_resolved(
+    path: &str,
+    args: &Args,
+) -> Result<(ClusterConfig, Vec<Scenario>, u64, String)> {
+    if args.flag("quick") {
+        // A plan chooses its own grid subsets (`"quick"` on its grid
+        // entries); silently ignoring the flag would change what a
+        // determinism or baseline run covers without a trace.
+        bail!(
+            "--quick has no effect with a plan; set \"quick\" on the \
+             plan's grid entries instead"
+        );
+    }
+    let plan = load(path)?;
+    let (mut cfg, scenarios) = plan
+        .resolve(&ClusterConfig::default())
+        .map_err(|e| anyhow!("{path}: {e}"))?;
+    super::apply_cluster_overrides(&mut cfg, args)?;
+    let cli_seed = args.get_opt_u64("seed").map_err(anyhow::Error::msg)?;
+    let seed = plan.seed_or(cli_seed, 42);
+    Ok((cfg, scenarios, seed, plan.name))
+}
+
+fn run(args: &Args) -> Result<RunManifest> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("plan run needs a plan file: plan run FILE"))?;
+    let (cfg, scenarios, seed, name) = load_resolved(path, args)?;
+    let workers = super::worker_count(args)?;
+
+    let t0 = std::time::Instant::now();
+    let manifest = run_sweep_named(
+        &cfg,
+        &scenarios,
+        &SweepConfig { workers, seed },
+        &format!("plan/{name}"),
+    );
+    eprintln!(
+        "plan {}: {} scenarios on {} worker(s) in {:.2}s (seed {})",
+        name,
+        manifest.scenarios.len(),
+        workers,
+        t0.elapsed().as_secs_f64(),
+        seed,
+    );
+
+    if !super::quiet(args) {
+        println!("{}", summary_table(&manifest).render());
+    }
+    Ok(manifest)
+}
+
+fn validate(args: &Args) -> Result<RunManifest> {
+    let files = &args.positional[1..];
+    if files.is_empty() {
+        bail!("plan validate needs at least one plan file");
+    }
+    let mut manifest =
+        RunManifest::new("plan-validate", 0, ClusterConfig::default().to_json());
+    for path in files {
+        let plan = load(path)?;
+        let (_, scenarios) = plan
+            .resolve(&ClusterConfig::default())
+            .map_err(|e| anyhow!("{path}: {e}"))?;
+        let inline = plan
+            .entries
+            .iter()
+            .filter(|e| matches!(e, crate::runtime::plan::PlanEntry::Spec(_)))
+            .count();
+        let note = format!(
+            "{path}: ok — plan {:?}, {} scenario(s) ({} inline, {} grid \
+             entr{}), seed {}, {} config override(s)",
+            plan.name,
+            scenarios.len(),
+            inline,
+            plan.entries.len() - inline,
+            if plan.entries.len() - inline == 1 { "y" } else { "ies" },
+            plan.seed.map_or("default".to_string(), |s| s.to_string()),
+            plan.overrides.len(),
+        );
+        if !super::quiet(args) {
+            println!("{note}");
+        }
+        manifest.note(note);
+    }
+    Ok(manifest)
+}
+
+fn list(args: &Args) -> Result<RunManifest> {
+    let mut manifest =
+        RunManifest::new("plan-list", 0, ClusterConfig::default().to_json());
+    let mut kinds = Table::new(
+        &format!(
+            "Scenario kinds (spec schema {}, plan schema {PLAN_SCHEMA_VERSION})",
+            crate::runtime::scenario::SPEC_SCHEMA_VERSION
+        ),
+        &["Kind", "Summary", "Spec fields (all optional; defaults in docs/plans.md)"],
+    );
+    for d in REGISTRY {
+        kinds.row(&[d.kind.to_string(), d.summary.to_string(), d.fields.to_string()]);
+        manifest.note(format!("kind {}: {} — fields: {}", d.kind, d.summary, d.fields));
+    }
+    let mut grids = Table::new(
+        "Built-in grids (reference by name in a plan's \"grid\" entries)",
+        &["Grid", "Quick scenarios", "Full scenarios"],
+    );
+    for name in GRID_NAMES {
+        let (q, f) = (grid_len(name, true), grid_len(name, false));
+        grids.row(&[name.to_string(), q.to_string(), f.to_string()]);
+        manifest.note(format!("grid {name}: quick {q}, full {f}"));
+    }
+    if !super::quiet(args) {
+        println!("{}", kinds.render());
+        println!("{}", grids.render());
+    }
+    Ok(manifest)
+}
+
+/// Human-readable digest: id, kind and the record's first metric.
+fn summary_table(manifest: &RunManifest) -> Table {
+    let mut t = Table::new(
+        "Plan sweep — user-authored scenarios through the deterministic engine",
+        &["Scenario", "Kind", "Headline metric", "Value"],
+    );
+    for s in &manifest.scenarios {
+        let (name, value) = s
+            .metrics
+            .first()
+            .map(|m| (m.name.clone(), format!("{:.3}", m.measured)))
+            .unwrap_or_else(|| ("-".into(), "-".into()));
+        t.row(&[s.id.clone(), s.kind.clone(), name, value]);
+    }
+    t
+}

@@ -1,6 +1,9 @@
 //! `sakuraone suite` — the full paper-vs-measured scenario sweep through
 //! the deterministic parallel engine (`runtime::sweep`), plus the CI
-//! regression gate against a committed baseline manifest.
+//! regression gate against a committed baseline manifest. With
+//! `--plan FILE` the grid comes from a user-authored sweep plan instead
+//! of the built-in `standard_grid` (see docs/plans.md); the baseline gate
+//! still applies if the caller passes `--baseline`.
 //!
 //! The manifest on stdout (`--json`) is byte-identical for any
 //! `--workers` value with the same seed; wall-clock timing goes to
@@ -9,20 +12,28 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::run_manifest::{compare_to_baseline, RunManifest};
-use crate::runtime::sweep::{default_workers, run_sweep, standard_grid, SweepConfig};
+use crate::runtime::sweep::{run_sweep, standard_grid, SweepConfig};
 use crate::util::cli::Args;
 use crate::util::table::Table;
 
 pub fn handle(args: &Args) -> Result<RunManifest> {
-    let cfg = super::cluster_config(args)?;
     let quick = args.flag("quick");
-    let workers = if args.flag("serial") {
-        1
-    } else {
-        args.get_usize("workers", default_workers()).map_err(anyhow::Error::msg)?
+    let workers = super::worker_count(args)?;
+    // Grid + config + seed: the built-in standard grid by default, or a
+    // user-authored plan (its config overrides apply first, CLI wins;
+    // the plan path parses --seed itself inside `plan::load_resolved`).
+    let (cfg, scenarios, seed, grid_name) = match args.get("plan") {
+        None => (
+            super::cluster_config(args)?,
+            standard_grid(quick),
+            args.get_u64("seed", 42).map_err(anyhow::Error::msg)?,
+            if quick { "quick".to_string() } else { "full".to_string() },
+        ),
+        Some(path) => {
+            let (cfg, scenarios, seed, name) = super::plan::load_resolved(path, args)?;
+            (cfg, scenarios, seed, format!("plan {name}"))
+        }
     };
-    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
-    let scenarios = standard_grid(quick);
 
     let t0 = std::time::Instant::now();
     let manifest = run_sweep(&cfg, &scenarios, &SweepConfig { workers, seed });
@@ -32,7 +43,7 @@ pub fn handle(args: &Args) -> Result<RunManifest> {
         manifest.scenarios.len(),
         workers,
         wall,
-        if quick { "quick" } else { "full" },
+        grid_name,
         seed,
     );
 

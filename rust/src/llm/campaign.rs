@@ -53,7 +53,7 @@ pub const INTERVAL_SOURCE_OVERRIDE: &str = "override";
 
 /// One simulated training campaign: an N-day allocation of the LLM job on
 /// the cluster, with failure, checkpoint and restart processes.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CampaignConfig {
     pub llm: LlmConfig,
     pub duration_days: f64,

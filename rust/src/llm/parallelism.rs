@@ -15,7 +15,7 @@ use crate::config::ClusterConfig;
 use crate::hardware::GpuModel;
 use crate::topology::graph::Fabric;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LlmConfig {
     /// Model parameters (dense decoder).
     pub params: f64,

@@ -13,6 +13,8 @@
 //!   collectives — algorithm × size × topology × failure grid (§2.2)
 //!   campaign — goodput-true N-day training campaigns (failures ×
 //!              checkpoint/restart × Lustre I/O over the step-time model)
+//!   plan    — user-authored sweep plans: serializable scenario specs and
+//!             built-in grids in one JSON document (docs/plans.md)
 //!   validate— numerics checks through the AOT artifacts
 //!   report  — Table 3 census, rankings, config inventory
 //!   suite   — everything above through the parallel sweep engine
@@ -54,6 +56,7 @@ fn run(args: &Args) -> Result<()> {
         "sched" => commands::sched::handle(args)?,
         "collectives" => commands::collectives::handle(args)?,
         "campaign" => commands::campaign::handle(args)?,
+        "plan" => commands::plan::handle(args)?,
         "power" => commands::power::handle(args)?,
         "checkpoint" => commands::checkpoint::handle(args)?,
         "resilience" => commands::resilience::handle(args)?,

@@ -9,7 +9,7 @@
 
 use crate::topology::graph::{Device, Fabric, SwitchTier};
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FailurePlan {
     /// Spine switches to fail (by ordinal among spines).
     pub spines: Vec<usize>,

@@ -1,10 +1,14 @@
 //! Runtime layer: the PJRT bridge (manifest-driven loading and execution
 //! of AOT-compiled HLO artifacts), the versioned run-manifest format every
-//! CLI command emits, and the deterministic parallel sweep engine.
+//! CLI command emits, the scenario registry + serializable spec API, the
+//! user-authored sweep-plan loader, and the deterministic parallel sweep
+//! engine.
 
 pub mod artifacts;
 pub mod pjrt;
+pub mod plan;
 pub mod run_manifest;
+pub mod scenario;
 pub mod sweep;
 pub mod xla_stub;
 
@@ -24,5 +28,10 @@ compile_error!(
 
 pub use artifacts::{ArtifactMeta, DType, Manifest, TensorSpec};
 pub use pjrt::Runtime;
+pub use plan::{SweepPlan, PLAN_SCHEMA_VERSION};
 pub use run_manifest::{RunManifest, ScenarioRecord};
-pub use sweep::{run_sweep, Scenario, SweepConfig};
+pub use scenario::{
+    descriptor, KindDescriptor, Scenario, ScenarioSpec, REGISTRY,
+    SPEC_SCHEMA_VERSION,
+};
+pub use sweep::{run_sweep, SweepConfig};

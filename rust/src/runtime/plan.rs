@@ -1,0 +1,468 @@
+//! User-authored sweep plans: a serializable document that names a set of
+//! scenarios — inline [`ScenarioSpec`] JSON, built-in grids, or both —
+//! plus cluster-config overrides and a seed, executed through the same
+//! deterministic engine as the built-in suite (`sakuraone plan run`,
+//! `sakuraone suite --plan FILE`; see docs/plans.md).
+//!
+//! Document shape (plan schema [`PLAN_SCHEMA_VERSION`]):
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "name": "mixed-study",
+//!   "seed": 7,
+//!   "config": {"nodes": 100, "topology": "rail-optimized"},
+//!   "scenarios": [
+//!     {"id": "hpl/paper", "spec": {"kind": "hpl", "paper": true}},
+//!     {"grid": "collectives", "quick": true, "filter": "hierarchical"}
+//!   ]
+//! }
+//! ```
+//!
+//! Strictness mirrors the spec codec: unknown top-level or entry fields
+//! are an error, spec objects decode with per-kind defaults, and resolved
+//! scenario ids must be unique. `config` values apply through
+//! `ClusterConfig::apply_override` in sorted key order (so `nodes`
+//! lands before `pods` rebalances `nodes_per_pod`); CLI `--key value`
+//! overrides are applied on top by the command layer and win.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::config::ClusterConfig;
+use crate::runtime::scenario::{Scenario, ScenarioSpec};
+use crate::runtime::sweep::{campaign_grid, collectives_grid, standard_grid};
+use crate::util::json::Json;
+
+/// Version of the plan document format; also pins the spec encoding the
+/// plan's inline scenarios use (spec schema 1).
+pub const PLAN_SCHEMA_VERSION: u64 = 1;
+
+/// The built-in grids a plan can reference by name.
+pub const GRID_NAMES: [&str; 3] = ["standard", "collectives", "campaign"];
+
+/// Materialize a built-in grid by name.
+pub fn grid_by_name(name: &str, quick: bool) -> Result<Vec<Scenario>, String> {
+    match name {
+        "standard" => Ok(standard_grid(quick)),
+        "collectives" => Ok(collectives_grid(quick)),
+        "campaign" => Ok(campaign_grid(quick)),
+        other => Err(format!(
+            "unknown grid {other:?} (known: {})",
+            GRID_NAMES.join(", ")
+        )),
+    }
+}
+
+/// Size of a built-in grid (for `plan list` and docs).
+pub fn grid_len(name: &str, quick: bool) -> usize {
+    grid_by_name(name, quick).map(|g| g.len()).unwrap_or(0)
+}
+
+/// One entry in a plan's scenario list.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanEntry {
+    /// An inline scenario: explicit id + spec.
+    Spec(Scenario),
+    /// A built-in grid, optionally trimmed to its quick subset and/or
+    /// filtered to ids containing a substring.
+    Grid { grid: String, quick: bool, filter: Option<String> },
+}
+
+/// A user-authored sweep: what `sakuraone plan run` executes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPlan {
+    pub name: String,
+    /// Sweep seed; an explicit CLI `--seed` wins over it.
+    pub seed: Option<u64>,
+    /// Cluster-config overrides (`ClusterConfig::apply_override` keys).
+    pub overrides: BTreeMap<String, String>,
+    pub entries: Vec<PlanEntry>,
+}
+
+impl SweepPlan {
+    /// Parse a plan document. Structural errors (unknown fields, bad
+    /// schema, malformed specs) are caught here; id-collision and
+    /// config-override errors surface in [`SweepPlan::resolve`].
+    pub fn from_json(j: &Json) -> Result<SweepPlan, String> {
+        let m = j.as_obj().ok_or("plan: expected an object")?;
+        for k in m.keys() {
+            if !["schema", "name", "seed", "config", "scenarios"].contains(&k.as_str()) {
+                return Err(format!(
+                    "plan: unknown field {k:?} (allowed: schema, name, seed, \
+                     config, scenarios)"
+                ));
+            }
+        }
+        let schema = m
+            .get("schema")
+            .and_then(Json::as_f64)
+            .filter(|s| s.fract() == 0.0)
+            .ok_or("plan: missing or non-integer \"schema\"")? as u64;
+        if schema != PLAN_SCHEMA_VERSION {
+            return Err(format!(
+                "plan: schema {schema} != supported {PLAN_SCHEMA_VERSION}"
+            ));
+        }
+        let name = m
+            .get("name")
+            .and_then(Json::as_str)
+            .filter(|n| !n.is_empty())
+            .ok_or("plan: missing or empty \"name\"")?
+            .to_string();
+        // Same exact-integer bound as the spec codec's `int_or`: JSON
+        // numbers are f64, so larger seeds would round silently.
+        let seed = match m.get("seed") {
+            None => None,
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 && *n < 2e15 => {
+                Some(*n as u64)
+            }
+            Some(other) => {
+                return Err(format!(
+                    "plan.seed: expected a non-negative integer below 2e15, \
+                     got {other:?}"
+                ))
+            }
+        };
+        let mut overrides = BTreeMap::new();
+        if let Some(cfg) = m.get("config") {
+            let co = cfg.as_obj().ok_or("plan.config: expected an object")?;
+            for (k, v) in co {
+                let v = match v {
+                    Json::Str(s) => s.clone(),
+                    Json::Num(_) | Json::Bool(_) => v.emit(),
+                    other => {
+                        return Err(format!(
+                            "plan.config.{k}: expected a string or number, got {other:?}"
+                        ))
+                    }
+                };
+                overrides.insert(k.clone(), v);
+            }
+        }
+        let list = m
+            .get("scenarios")
+            .and_then(Json::as_arr)
+            .ok_or("plan: missing \"scenarios\" array")?;
+        if list.is_empty() {
+            return Err("plan: \"scenarios\" must not be empty".into());
+        }
+        let mut entries = Vec::with_capacity(list.len());
+        for (i, e) in list.iter().enumerate() {
+            entries.push(Self::entry_from_json(e, i)?);
+        }
+        Ok(SweepPlan { name, seed, overrides, entries })
+    }
+
+    fn entry_from_json(e: &Json, i: usize) -> Result<PlanEntry, String> {
+        let at = format!("plan.scenarios[{i}]");
+        let m = e.as_obj().ok_or_else(|| format!("{at}: expected an object"))?;
+        if m.contains_key("grid") {
+            for k in m.keys() {
+                if !["grid", "quick", "filter"].contains(&k.as_str()) {
+                    return Err(format!(
+                        "{at}: unknown field {k:?} on a grid entry \
+                         (allowed: grid, quick, filter)"
+                    ));
+                }
+            }
+            let grid = m.get("grid").and_then(Json::as_str).ok_or_else(|| {
+                format!("{at}.grid: expected a grid name ({})", GRID_NAMES.join(", "))
+            })?;
+            if !GRID_NAMES.contains(&grid) {
+                return Err(format!(
+                    "{at}: unknown grid {grid:?} (known: {})",
+                    GRID_NAMES.join(", ")
+                ));
+            }
+            let quick = match m.get("quick") {
+                None => false,
+                Some(Json::Bool(b)) => *b,
+                Some(other) => {
+                    return Err(format!("{at}.quick: expected a bool, got {other:?}"))
+                }
+            };
+            let filter = match m.get("filter") {
+                None => None,
+                Some(Json::Str(s)) if !s.is_empty() => Some(s.clone()),
+                Some(other) => {
+                    return Err(format!(
+                        "{at}.filter: expected a non-empty string, got {other:?}"
+                    ))
+                }
+            };
+            return Ok(PlanEntry::Grid { grid: grid.to_string(), quick, filter });
+        }
+        for k in m.keys() {
+            if !["id", "spec"].contains(&k.as_str()) {
+                return Err(format!(
+                    "{at}: unknown field {k:?} on an inline entry \
+                     (allowed: id, spec; or use a grid entry)"
+                ));
+            }
+        }
+        let id = m
+            .get("id")
+            .and_then(Json::as_str)
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| format!("{at}: inline entries need a non-empty \"id\""))?;
+        let spec = m
+            .get("spec")
+            .ok_or_else(|| format!("{at}: inline entries need a \"spec\" object"))?;
+        let spec = ScenarioSpec::from_json(spec).map_err(|e| format!("{at}: {e}"))?;
+        Ok(PlanEntry::Spec(Scenario::new(id, spec)))
+    }
+
+    /// Canonical re-emission of the plan (inline specs in canonical spec
+    /// JSON) — what `plan validate` prints with `--json`.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Num(PLAN_SCHEMA_VERSION as f64));
+        root.insert("name".into(), Json::Str(self.name.clone()));
+        if let Some(seed) = self.seed {
+            root.insert("seed".into(), Json::Num(seed as f64));
+        }
+        if !self.overrides.is_empty() {
+            root.insert(
+                "config".into(),
+                Json::Obj(
+                    self.overrides
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            );
+        }
+        let scenarios = self
+            .entries
+            .iter()
+            .map(|e| match e {
+                PlanEntry::Spec(s) => {
+                    let mut m = BTreeMap::new();
+                    m.insert("id".into(), Json::Str(s.id.clone()));
+                    m.insert("spec".into(), s.spec.to_json());
+                    Json::Obj(m)
+                }
+                PlanEntry::Grid { grid, quick, filter } => {
+                    let mut m = BTreeMap::new();
+                    m.insert("grid".into(), Json::Str(grid.clone()));
+                    m.insert("quick".into(), Json::Bool(*quick));
+                    if let Some(f) = filter {
+                        m.insert("filter".into(), Json::Str(f.clone()));
+                    }
+                    Json::Obj(m)
+                }
+            })
+            .collect();
+        root.insert("scenarios".into(), Json::Arr(scenarios));
+        Json::Obj(root)
+    }
+
+    /// The sweep seed: explicit CLI value > plan value > default.
+    pub fn seed_or(&self, cli: Option<u64>, default: u64) -> u64 {
+        cli.or(self.seed).unwrap_or(default)
+    }
+
+    /// Materialize the plan: apply config overrides to `base` and expand
+    /// every entry into the flat, ordered scenario list the engine runs.
+    pub fn resolve(
+        &self,
+        base: &ClusterConfig,
+    ) -> Result<(ClusterConfig, Vec<Scenario>), String> {
+        let mut cfg = base.clone();
+        for (k, v) in &self.overrides {
+            cfg.apply_override(k, v).map_err(|e| format!("plan.config: {e}"))?;
+        }
+        let mut scenarios = Vec::new();
+        for e in &self.entries {
+            match e {
+                PlanEntry::Spec(s) => scenarios.push(s.clone()),
+                PlanEntry::Grid { grid, quick, filter } => {
+                    let g = grid_by_name(grid, *quick)?;
+                    let kept: Vec<Scenario> = match filter {
+                        Some(f) => g.into_iter().filter(|s| s.id.contains(f.as_str())).collect(),
+                        None => g,
+                    };
+                    if kept.is_empty() {
+                        return Err(format!(
+                            "plan: grid {grid:?} with filter {:?} selects no scenarios",
+                            filter.as_deref().unwrap_or("")
+                        ));
+                    }
+                    scenarios.extend(kept);
+                }
+            }
+        }
+        let mut seen = BTreeSet::new();
+        for s in &scenarios {
+            if !seen.insert(s.id.as_str()) {
+                return Err(format!(
+                    "plan: duplicate scenario id {:?} (inline ids must not \
+                     collide with grid ids)",
+                    s.id
+                ));
+            }
+        }
+        Ok((cfg, scenarios))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<SweepPlan, String> {
+        SweepPlan::from_json(&Json::parse(s).expect("test json parses"))
+    }
+
+    const MINIMAL: &str = r#"{
+        "schema": 1,
+        "name": "t",
+        "scenarios": [{"id": "hpl/x", "spec": {"kind": "hpl"}}]
+    }"#;
+
+    #[test]
+    fn minimal_plan_parses_and_resolves() {
+        let p = parse(MINIMAL).unwrap();
+        assert_eq!(p.name, "t");
+        assert_eq!(p.seed, None);
+        assert_eq!(p.seed_or(None, 42), 42);
+        assert_eq!(p.seed_or(Some(7), 42), 7);
+        let (cfg, scenarios) = p.resolve(&ClusterConfig::default()).unwrap();
+        assert_eq!(cfg.nodes, 100);
+        assert_eq!(scenarios.len(), 1);
+        assert_eq!(scenarios[0].id, "hpl/x");
+        assert_eq!(scenarios[0].kind(), "hpl");
+    }
+
+    #[test]
+    fn grids_expand_with_quick_and_filter() {
+        let p = parse(
+            r#"{
+                "schema": 1, "name": "g", "seed": 9,
+                "config": {"nodes": 16},
+                "scenarios": [
+                    {"grid": "collectives", "quick": true, "filter": "hierarchical"},
+                    {"grid": "campaign", "quick": true}
+                ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(p.seed_or(None, 42), 9);
+        let (cfg, scenarios) = p.resolve(&ClusterConfig::default()).unwrap();
+        assert_eq!(cfg.nodes, 16);
+        assert!(scenarios.iter().all(|s| {
+            s.id.contains("hierarchical") || s.id.starts_with("campaign/")
+        }));
+        let n_campaign = scenarios.iter().filter(|s| s.kind() == "campaign").count();
+        assert_eq!(n_campaign, crate::runtime::sweep::CAMPAIGN_QUICK_LEN);
+        assert!(scenarios.len() > n_campaign);
+    }
+
+    #[test]
+    fn structural_errors_are_rejected() {
+        for (doc, needle) in [
+            (r#"[]"#, "expected an object"),
+            (r#"{"name": "x", "scenarios": []}"#, "\"schema\""),
+            (r#"{"schema": 2, "name": "x", "scenarios": []}"#, "schema 2"),
+            (r#"{"schema": 1.5, "name": "x", "scenarios": []}"#, "non-integer"),
+            (
+                r#"{"schema": 1, "name": "x", "seed": 2000000000000001, "scenarios": [{"grid": "standard"}]}"#,
+                "below 2e15",
+            ),
+            (r#"{"schema": 1, "scenarios": []}"#, "\"name\""),
+            (r#"{"schema": 1, "name": "x", "scenarios": []}"#, "must not be empty"),
+            (
+                r#"{"schema": 1, "name": "x", "warp": 1, "scenarios": [{"grid": "standard"}]}"#,
+                "unknown field \"warp\"",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "scenarios": [{"grid": "warp"}]}"#,
+                "unknown grid",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "scenarios": [{"grid": "standard", "warp": 1}]}"#,
+                "grid entry",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "scenarios": [{"spec": {"kind": "hpl"}}]}"#,
+                "need a non-empty \"id\"",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a"}]}"#,
+                "\"spec\" object",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "warp"}}]}"#,
+                "unknown scenario kind",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "hpl", "warp": 1}}]}"#,
+                "unknown field",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "seed": -1, "scenarios": [{"grid": "standard"}]}"#,
+                "plan.seed",
+            ),
+        ] {
+            let err = parse(doc).unwrap_err();
+            assert!(err.contains(needle), "{doc}: {err}");
+        }
+    }
+
+    #[test]
+    fn resolve_rejects_duplicate_ids_and_bad_overrides() {
+        let p = parse(
+            r#"{"schema": 1, "name": "d", "scenarios": [
+                {"id": "hpl/paper", "spec": {"kind": "hpl", "paper": true}},
+                {"grid": "standard", "quick": true, "filter": "hpl/paper"}
+            ]}"#,
+        )
+        .unwrap();
+        let err = p.resolve(&ClusterConfig::default()).unwrap_err();
+        assert!(err.contains("duplicate scenario id"), "{err}");
+
+        let p = parse(
+            r#"{"schema": 1, "name": "o", "config": {"warp-drive": 11},
+                "scenarios": [{"grid": "standard", "quick": true}]}"#,
+        )
+        .unwrap();
+        let err = p.resolve(&ClusterConfig::default()).unwrap_err();
+        assert!(err.contains("plan.config"), "{err}");
+
+        let p = parse(
+            r#"{"schema": 1, "name": "f",
+                "scenarios": [{"grid": "standard", "quick": true, "filter": "nope"}]}"#,
+        )
+        .unwrap();
+        let err = p.resolve(&ClusterConfig::default()).unwrap_err();
+        assert!(err.contains("selects no scenarios"), "{err}");
+    }
+
+    #[test]
+    fn numeric_config_values_stringify() {
+        let p = parse(
+            r#"{"schema": 1, "name": "n", "config": {"nodes": 48, "topology": "fat-tree"},
+                "scenarios": [{"grid": "standard", "quick": true}]}"#,
+        )
+        .unwrap();
+        let (cfg, _) = p.resolve(&ClusterConfig::default()).unwrap();
+        assert_eq!(cfg.nodes, 48);
+        assert_eq!(cfg.network.topology.name(), "fat-tree");
+    }
+
+    #[test]
+    fn plan_roundtrips_through_canonical_json() {
+        let p = parse(
+            r#"{"schema": 1, "name": "rt", "seed": 3, "config": {"nodes": 16},
+                "scenarios": [
+                    {"id": "a", "spec": {"kind": "sched", "jobs": 10}},
+                    {"grid": "campaign", "quick": true, "filter": "flaky"}
+                ]}"#,
+        )
+        .unwrap();
+        let j = p.to_json();
+        let back = SweepPlan::from_json(&j).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.to_json().emit(), j.emit());
+    }
+}

@@ -16,7 +16,10 @@ use crate::util::json::Json;
 
 /// Bump when the manifest shape changes; `from_json` rejects mismatches so
 /// CI fails loudly instead of silently comparing across schemas.
-pub const SCHEMA_VERSION: u64 = 1;
+/// History: 1 = initial shape; 2 = scenario records carry their canonical
+/// spec (`spec`) and the root records the spec encoding version
+/// (`spec_schema`) — manifests are self-describing and replayable.
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// One measured metric, optionally anchored to a paper-reported value.
 #[derive(Debug, Clone, PartialEq)]
@@ -42,6 +45,11 @@ pub struct ScenarioRecord {
     pub kind: String,
     pub params: BTreeMap<String, String>,
     pub metrics: Vec<MetricRow>,
+    /// Canonical spec JSON (`ScenarioSpec::to_json`) when the record came
+    /// out of the sweep engine — replay it with `sakuraone plan run` or
+    /// `ScenarioSpec::from_json`. Records built by single-benchmark
+    /// subcommands may omit it.
+    pub spec: Option<Json>,
 }
 
 impl ScenarioRecord {
@@ -141,6 +149,10 @@ impl RunManifest {
     pub fn to_json(&self) -> Json {
         let mut root = BTreeMap::new();
         root.insert("schema".into(), Json::Num(self.schema as f64));
+        root.insert(
+            "spec_schema".into(),
+            Json::Num(crate::runtime::scenario::SPEC_SCHEMA_VERSION as f64),
+        );
         root.insert("command".into(), Json::Str(self.command.clone()));
         root.insert("seed".into(), Json::Num(self.seed as f64));
         root.insert("config".into(), self.config.clone());
@@ -164,6 +176,9 @@ impl RunManifest {
                             .collect(),
                     ),
                 );
+                if let Some(spec) = &s.spec {
+                    o.insert("spec".into(), spec.clone());
+                }
                 o.insert(
                     "metrics".into(),
                     Json::Arr(
@@ -197,6 +212,16 @@ impl RunManifest {
         if schema != SCHEMA_VERSION {
             bail!("manifest schema {schema} != supported {SCHEMA_VERSION}");
         }
+        if let Some(v) = j.get("spec_schema") {
+            let supported = crate::runtime::scenario::SPEC_SCHEMA_VERSION;
+            match v.as_f64() {
+                Some(n) if n.fract() == 0.0 && n as u64 == supported => {}
+                _ => bail!(
+                    "manifest spec_schema {} != supported {supported}",
+                    v.emit()
+                ),
+            }
+        }
         let command = j
             .get("command")
             .and_then(|c| c.as_str())
@@ -225,6 +250,7 @@ impl RunManifest {
                 .ok_or_else(|| anyhow!("scenario: missing id"))?;
             let kind = s.get("kind").and_then(|k| k.as_str()).unwrap_or("");
             let mut rec = ScenarioRecord::new(id, kind);
+            rec.spec = s.get("spec").cloned();
             if let Some(params) = s.get("params").and_then(|p| p.as_obj()) {
                 for (k, v) in params {
                     if let Some(v) = v.as_str() {
@@ -365,6 +391,30 @@ mod tests {
         let parsed = RunManifest::from_json(&Json::parse(&emitted).unwrap()).unwrap();
         assert_eq!(parsed, m);
         assert_eq!(parsed.to_json().emit(), emitted);
+    }
+
+    #[test]
+    fn spec_field_roundtrips_when_present() {
+        let mut m = sample();
+        let spec = Json::parse(r#"{"kind":"sched","jobs":200}"#).unwrap();
+        m.scenarios[1].spec = Some(spec.clone());
+        let emitted = m.to_json().emit();
+        assert!(emitted.contains("\"spec\":{\"jobs\":200,\"kind\":\"sched\"}"));
+        let parsed = RunManifest::from_json(&Json::parse(&emitted).unwrap()).unwrap();
+        assert_eq!(parsed.scenarios[1].spec, Some(spec));
+        assert_eq!(parsed.scenarios[0].spec, None);
+        assert_eq!(parsed.to_json().emit(), emitted);
+    }
+
+    #[test]
+    fn spec_schema_mismatch_rejected() {
+        let m = sample();
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("spec_schema".into(), Json::Num(99.0));
+        }
+        let err = RunManifest::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("spec_schema"));
     }
 
     #[test]

@@ -1,0 +1,1307 @@
+//! First-class scenario API: the per-kind registry every sweep scenario
+//! dispatches through, and the canonical, versioned JSON encoding that
+//! makes specs serializable — manifests become self-describing and
+//! replayable, and sweep plans user-authorable (see docs/plans.md).
+//!
+//! Layout: [`ScenarioSpec`] stays a closed enum (the type system still
+//! checks every variant), but everything *about* a kind — its wire name,
+//! summary, parameter cheatsheet, decoder, encoder and runner — lives in
+//! one [`KindDescriptor`] row of [`REGISTRY`]. `Scenario::kind()` and
+//! `ScenarioSpec::{to_json, from_json}` plus `Scenario::run` all dispatch
+//! through the registry, so adding a kind is one enum variant plus one
+//! registry row — there is no parallel string list to keep in sync.
+//!
+//! Encoding contract (spec schema [`SPEC_SCHEMA_VERSION`]):
+//! - `to_json` emits the canonical object: `"kind"` plus the kind's
+//!   fields, every field present, keys sorted (`util::json` objects are
+//!   `BTreeMap`s) — deterministic bytes;
+//! - `from_json` accepts sparse objects: missing fields take the kind's
+//!   documented defaults, unknown fields or kinds are an error (typo
+//!   safety for hand-written plan files);
+//! - the round trip is exact: `from_json(to_json(s)) == s`, and
+//!   re-emission is byte-identical (integral numbers emit as integers,
+//!   fractional f64 via shortest-round-trip Display);
+//! - integer fields (dimensions, counts, seeds) are bounded to values a
+//!   JSON number carries exactly (`< 2e15`, under f64's 2^53 integer
+//!   range): `from_json` rejects larger values, so a spec built in Rust
+//!   with e.g. a full-range u64 seed is outside the serializable domain
+//!   and fails on re-decode rather than silently losing precision. Every
+//!   built-in grid and the sweep engine stay far under the bound.
+
+use std::collections::BTreeMap;
+
+use crate::benchmarks::hpcg::{run_hpcg, HpcgParams, HpcgResult};
+use crate::benchmarks::hpl::{run_hpl, HplParams, HplResult};
+use crate::benchmarks::hpl_mxp::{run_mxp, MxpParams, MxpResult};
+use crate::benchmarks::io500::{run_io500_on, Io500Params, Io500Result};
+use crate::benchmarks::report::paper;
+use crate::collectives::{AllReduceAlgo, CollectiveEngine, Rank};
+use crate::config::{ClusterConfig, TopologyKind};
+use crate::llm::campaign::{run_campaign, CampaignConfig, CampaignReport};
+use crate::llm::{step_time, LlmConfig};
+use crate::network::{apply_failures, FailurePlan};
+use crate::runtime::run_manifest::ScenarioRecord;
+use crate::scheduler::{Job, SlurmSim};
+use crate::storage::LustreModel;
+use crate::topology::builders::build;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Version of the spec wire encoding. Recorded once per manifest
+/// (`spec_schema`) and per plan document (`schema`), not in every spec
+/// object; bump when a kind's field set changes incompatibly.
+pub const SPEC_SCHEMA_VERSION: u64 = 1;
+
+/// One benchmark configuration in a sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub id: String,
+    pub spec: ScenarioSpec,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioSpec {
+    /// `paper` anchors the record to the published Table 7 numbers.
+    Hpl { params: HplParams, paper: bool },
+    Hpcg { params: HpcgParams, paper: bool },
+    Mxp { params: MxpParams, paper: bool },
+    /// Anchored to Table 10 when `client_nodes` is 10 or 96 and healthy.
+    Io500 { params: Io500Params, degraded: bool },
+    /// Step-time model on an alternative fabric.
+    Llm { llm: LlmConfig, topology: TopologyKind },
+    /// Degraded-network drill: hierarchical all-reduce under failures.
+    Resilience { plan: FailurePlan, bytes: f64 },
+    /// One collective (algorithm × message size × topology × optional
+    /// failure plan) through the contention-true engine.
+    Collective {
+        algo: AllReduceAlgo,
+        bytes: f64,
+        topology: TopologyKind,
+        plan: Option<FailurePlan>,
+    },
+    /// Goodput-true training campaign: failures × checkpoint/restart ×
+    /// Lustre I/O composed over the step-time model (seeded).
+    Campaign { campaign: Box<CampaignConfig>, topology: TopologyKind },
+    /// Synthetic job mix through the Slurm-like scheduler (seeded).
+    Sched { jobs: usize },
+    /// Scaled-down cluster running a proportionally scaled HPL.
+    Cluster { nodes: usize, params: HplParams },
+}
+
+/// Everything the system knows about one scenario kind. The registry row
+/// is the single source of truth for the kind's wire name, docs, JSON
+/// codec and runner.
+pub struct KindDescriptor {
+    /// Wire name (`"kind"` in spec JSON, `kind` in scenario records).
+    pub kind: &'static str,
+    /// One-line summary for `sakuraone plan list`.
+    pub summary: &'static str,
+    /// Spec-field cheatsheet for `sakuraone plan list` (defaults noted in
+    /// docs/plans.md).
+    pub fields: &'static str,
+    /// Decode a spec object of this kind (sparse fields allowed, unknown
+    /// fields rejected).
+    pub decode: fn(&Json) -> Result<ScenarioSpec, String>,
+    /// Canonical encoding; inverse of `decode` on canonical objects.
+    pub encode: fn(&ScenarioSpec) -> Json,
+    /// Run one scenario of this kind. Pure f64 simulation — deterministic
+    /// given `(cfg, scenario, seed)`.
+    pub run: fn(&Scenario, &ClusterConfig, u64) -> ScenarioRecord,
+    /// A runnable default spec (also the base `decode` fills sparse
+    /// objects from).
+    pub example: fn() -> ScenarioSpec,
+}
+
+/// Every scenario kind, in the order specs are documented.
+pub static REGISTRY: [&KindDescriptor; 10] = [
+    &HPL, &HPCG, &MXP, &IO500, &LLM, &RESILIENCE, &COLLECTIVE, &CAMPAIGN,
+    &SCHED, &CLUSTER,
+];
+
+/// Look a descriptor up by wire name.
+pub fn descriptor(kind: &str) -> Option<&'static KindDescriptor> {
+    REGISTRY.iter().find(|d| d.kind == kind).copied()
+}
+
+fn known_kinds() -> String {
+    REGISTRY.iter().map(|d| d.kind).collect::<Vec<_>>().join(", ")
+}
+
+impl Scenario {
+    pub fn new(id: &str, spec: ScenarioSpec) -> Self {
+        Self { id: id.to_string(), spec }
+    }
+
+    /// Scenario family name, from the registry row.
+    pub fn kind(&self) -> &'static str {
+        self.spec.descriptor().kind
+    }
+
+    /// Run the scenario through its registry runner; the record carries
+    /// the canonical spec JSON so manifests are self-describing.
+    pub fn run(&self, cfg: &ClusterConfig, seed: u64) -> ScenarioRecord {
+        let d = self.spec.descriptor();
+        let mut rec = (d.run)(self, cfg, seed);
+        rec.spec = Some(self.spec.to_json());
+        rec
+    }
+}
+
+impl ScenarioSpec {
+    /// The registry row this spec dispatches through.
+    pub fn descriptor(&self) -> &'static KindDescriptor {
+        match self {
+            ScenarioSpec::Hpl { .. } => &HPL,
+            ScenarioSpec::Hpcg { .. } => &HPCG,
+            ScenarioSpec::Mxp { .. } => &MXP,
+            ScenarioSpec::Io500 { .. } => &IO500,
+            ScenarioSpec::Llm { .. } => &LLM,
+            ScenarioSpec::Resilience { .. } => &RESILIENCE,
+            ScenarioSpec::Collective { .. } => &COLLECTIVE,
+            ScenarioSpec::Campaign { .. } => &CAMPAIGN,
+            ScenarioSpec::Sched { .. } => &SCHED,
+            ScenarioSpec::Cluster { .. } => &CLUSTER,
+        }
+    }
+
+    /// Canonical JSON encoding (see the module contract).
+    pub fn to_json(&self) -> Json {
+        (self.descriptor().encode)(self)
+    }
+
+    /// Decode a spec object: `"kind"` selects the registry row, which
+    /// decodes the remaining fields.
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec, String> {
+        let m = obj(j, "spec")?;
+        let kind = m
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "spec: missing \"kind\"".to_string())?;
+        let d = descriptor(kind).ok_or_else(|| {
+            format!("spec: unknown scenario kind {kind:?} (known: {})", known_kinds())
+        })?;
+        (d.decode)(j)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON helpers: strict on unknown keys, defaults for missing ones.
+
+fn obj<'a>(j: &'a Json, at: &str) -> Result<&'a BTreeMap<String, Json>, String> {
+    j.as_obj().ok_or_else(|| format!("{at}: expected an object"))
+}
+
+fn check_keys(
+    m: &BTreeMap<String, Json>,
+    allowed: &[&str],
+    at: &str,
+) -> Result<(), String> {
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(format!(
+                "{at}: unknown field {k:?} (allowed: {})",
+                allowed.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn num(m: &BTreeMap<String, Json>, key: &str, at: &str) -> Result<Option<f64>, String> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Num(n)) if n.is_finite() => Ok(Some(*n)),
+        Some(other) => Err(format!("{at}.{key}: expected a finite number, got {other:?}")),
+    }
+}
+
+fn f64_or(m: &BTreeMap<String, Json>, key: &str, default: f64, at: &str) -> Result<f64, String> {
+    Ok(num(m, key, at)?.unwrap_or(default))
+}
+
+// Integer fields ride JSON numbers (f64); the 2e15 cap keeps them inside
+// f64's exact-integer range so encode/decode can never lose precision
+// (see the module contract).
+fn int_or(m: &BTreeMap<String, Json>, key: &str, default: u64, at: &str) -> Result<u64, String> {
+    match num(m, key, at)? {
+        None => Ok(default),
+        Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 2e15 => Ok(n as u64),
+        Some(n) => Err(format!(
+            "{at}.{key}: expected a non-negative integer below 2e15, got {n}"
+        )),
+    }
+}
+
+fn usize_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: usize,
+    at: &str,
+) -> Result<usize, String> {
+    int_or(m, key, default as u64, at).map(|n| n as usize)
+}
+
+fn bool_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: bool,
+    at: &str,
+) -> Result<bool, String> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(other) => Err(format!("{at}.{key}: expected a bool, got {other:?}")),
+    }
+}
+
+fn usize_list_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: Vec<usize>,
+    at: &str,
+) -> Result<Vec<usize>, String> {
+    let Some(v) = m.get(key) else { return Ok(default) };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| format!("{at}.{key}: expected an array of integers"))?;
+    arr.iter()
+        .map(|x| match x.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 2e15 => Ok(n as usize),
+            _ => Err(format!(
+                "{at}.{key}: expected non-negative integers below 2e15"
+            )),
+        })
+        .collect()
+}
+
+fn topology_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: TopologyKind,
+    at: &str,
+) -> Result<TopologyKind, String> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(Json::Str(s)) => {
+            TopologyKind::parse(s).map_err(|e| format!("{at}.{key}: {e}"))
+        }
+        Some(other) => Err(format!("{at}.{key}: expected a topology name, got {other:?}")),
+    }
+}
+
+fn jnum(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn jint(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn spec_obj(kind: &str) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("kind".into(), Json::Str(kind.into()));
+    m
+}
+
+// ---------------------------------------------------------------------------
+// FailurePlan / LlmConfig / CampaignConfig codecs (shared by kinds).
+
+fn failure_plan_to_json(p: &FailurePlan) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "spines".into(),
+        Json::Arr(p.spines.iter().map(|&s| jint(s as u64)).collect()),
+    );
+    m.insert(
+        "leaves".into(),
+        Json::Arr(p.leaves.iter().map(|&l| jint(l as u64)).collect()),
+    );
+    m.insert("cable_fraction".into(), jnum(p.cable_fraction));
+    m.insert("seed".into(), jint(p.seed));
+    Json::Obj(m)
+}
+
+fn failure_plan_from_json(j: &Json, base: FailurePlan, at: &str) -> Result<FailurePlan, String> {
+    let m = obj(j, at)?;
+    check_keys(m, &["spines", "leaves", "cable_fraction", "seed"], at)?;
+    Ok(FailurePlan {
+        spines: usize_list_or(m, "spines", base.spines, at)?,
+        leaves: usize_list_or(m, "leaves", base.leaves, at)?,
+        cable_fraction: f64_or(m, "cable_fraction", base.cable_fraction, at)?,
+        seed: int_or(m, "seed", base.seed, at)?,
+    })
+}
+
+fn llm_to_json(c: &LlmConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("params".into(), jnum(c.params));
+    m.insert("batch_tokens".into(), jnum(c.batch_tokens));
+    m.insert("microbatches".into(), jint(c.microbatches as u64));
+    m.insert("dp".into(), jint(c.dp as u64));
+    m.insert("tp".into(), jint(c.tp as u64));
+    m.insert("pp".into(), jint(c.pp as u64));
+    m.insert("flops_per_token_factor".into(), jnum(c.flops_per_token_factor));
+    m.insert("mfu_ceiling".into(), jnum(c.mfu_ceiling));
+    Json::Obj(m)
+}
+
+fn llm_from_json(j: &Json, base: LlmConfig, at: &str) -> Result<LlmConfig, String> {
+    let m = obj(j, at)?;
+    check_keys(
+        m,
+        &[
+            "params", "batch_tokens", "microbatches", "dp", "tp", "pp",
+            "flops_per_token_factor", "mfu_ceiling",
+        ],
+        at,
+    )?;
+    Ok(LlmConfig {
+        params: f64_or(m, "params", base.params, at)?,
+        batch_tokens: f64_or(m, "batch_tokens", base.batch_tokens, at)?,
+        microbatches: usize_or(m, "microbatches", base.microbatches, at)?,
+        dp: usize_or(m, "dp", base.dp, at)?,
+        tp: usize_or(m, "tp", base.tp, at)?,
+        pp: usize_or(m, "pp", base.pp, at)?,
+        flops_per_token_factor: f64_or(
+            m,
+            "flops_per_token_factor",
+            base.flops_per_token_factor,
+            at,
+        )?,
+        mfu_ceiling: f64_or(m, "mfu_ceiling", base.mfu_ceiling, at)?,
+    })
+}
+
+fn campaign_to_json(c: &CampaignConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("llm".into(), llm_to_json(&c.llm));
+    m.insert("duration_days".into(), jnum(c.duration_days));
+    m.insert("node_mtbf_hours".into(), jnum(c.node_mtbf_hours));
+    m.insert("fabric_mtbf_hours".into(), jnum(c.fabric_mtbf_hours));
+    m.insert(
+        "interval_override".into(),
+        c.interval_override.map_or(Json::Null, jint),
+    );
+    m.insert("overhead_budget".into(), jnum(c.overhead_budget));
+    m.insert("ckpt_overlap".into(), jnum(c.ckpt_overlap));
+    m.insert("restart_fixed_s".into(), jnum(c.restart_fixed_s));
+    m.insert("fabric_repair_hours".into(), jnum(c.fabric_repair_hours));
+    m.insert("requeue_bg_jobs".into(), jint(c.requeue_bg_jobs as u64));
+    m.insert("hazard_base_per_hour".into(), jnum(c.hazard_base_per_hour));
+    m.insert("cable_plan".into(), failure_plan_to_json(&c.cable_plan));
+    m.insert("spine_plan".into(), failure_plan_to_json(&c.spine_plan));
+    Json::Obj(m)
+}
+
+fn campaign_from_json(
+    j: &Json,
+    base: CampaignConfig,
+    at: &str,
+) -> Result<CampaignConfig, String> {
+    let m = obj(j, at)?;
+    check_keys(
+        m,
+        &[
+            "llm", "duration_days", "node_mtbf_hours", "fabric_mtbf_hours",
+            "interval_override", "overhead_budget", "ckpt_overlap",
+            "restart_fixed_s", "fabric_repair_hours", "requeue_bg_jobs",
+            "hazard_base_per_hour", "cable_plan", "spine_plan",
+        ],
+        at,
+    )?;
+    let interval_override = match m.get("interval_override") {
+        None => base.interval_override,
+        Some(Json::Null) => None,
+        Some(_) => Some(int_or(m, "interval_override", 0, at)?),
+    };
+    Ok(CampaignConfig {
+        llm: match m.get("llm") {
+            Some(j) => llm_from_json(j, base.llm, &format!("{at}.llm"))?,
+            None => base.llm,
+        },
+        duration_days: f64_or(m, "duration_days", base.duration_days, at)?,
+        node_mtbf_hours: f64_or(m, "node_mtbf_hours", base.node_mtbf_hours, at)?,
+        fabric_mtbf_hours: f64_or(m, "fabric_mtbf_hours", base.fabric_mtbf_hours, at)?,
+        interval_override,
+        overhead_budget: f64_or(m, "overhead_budget", base.overhead_budget, at)?,
+        ckpt_overlap: f64_or(m, "ckpt_overlap", base.ckpt_overlap, at)?,
+        restart_fixed_s: f64_or(m, "restart_fixed_s", base.restart_fixed_s, at)?,
+        fabric_repair_hours: f64_or(
+            m,
+            "fabric_repair_hours",
+            base.fabric_repair_hours,
+            at,
+        )?,
+        requeue_bg_jobs: usize_or(m, "requeue_bg_jobs", base.requeue_bg_jobs, at)?,
+        hazard_base_per_hour: f64_or(
+            m,
+            "hazard_base_per_hour",
+            base.hazard_base_per_hour,
+            at,
+        )?,
+        cable_plan: match m.get("cable_plan") {
+            Some(j) => failure_plan_from_json(j, base.cable_plan, &format!("{at}.cable_plan"))?,
+            None => base.cable_plan,
+        },
+        spine_plan: match m.get("spine_plan") {
+            Some(j) => failure_plan_from_json(j, base.spine_plan, &format!("{at}.spine_plan"))?,
+            None => base.spine_plan,
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// hpl
+
+static HPL: KindDescriptor = KindDescriptor {
+    kind: "hpl",
+    summary: "HPL dense-LU throughput (paper Table 7)",
+    fields: "params{n,nb,p,q,stride,interference,bcast_exposed}, paper",
+    decode: |j| {
+        let m = obj(j, "hpl")?;
+        check_keys(m, &["kind", "params", "paper"], "hpl")?;
+        let params = match m.get("params") {
+            Some(p) => hpl_params_from_json(p, HplParams::paper(), "hpl.params")?,
+            None => HplParams::paper(),
+        };
+        Ok(ScenarioSpec::Hpl { params, paper: bool_or(m, "paper", false, "hpl")? })
+    },
+    encode: |s| {
+        let ScenarioSpec::Hpl { params, paper } = s else { unreachable!() };
+        let mut m = spec_obj("hpl");
+        m.insert("params".into(), hpl_params_to_json(params));
+        m.insert("paper".into(), Json::Bool(*paper));
+        Json::Obj(m)
+    },
+    run: |s, cfg, _seed| {
+        let ScenarioSpec::Hpl { params, paper } = &s.spec else { unreachable!() };
+        hpl_record(&s.id, &run_hpl(cfg, params), *paper)
+    },
+    example: || ScenarioSpec::Hpl { params: HplParams::paper(), paper: true },
+};
+
+fn hpl_params_to_json(p: &HplParams) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("n".into(), jint(p.n));
+    m.insert("nb".into(), jint(p.nb));
+    m.insert("p".into(), jint(p.p as u64));
+    m.insert("q".into(), jint(p.q as u64));
+    m.insert("stride".into(), jint(p.stride as u64));
+    m.insert("interference".into(), jnum(p.interference));
+    m.insert("bcast_exposed".into(), jnum(p.bcast_exposed));
+    Json::Obj(m)
+}
+
+fn hpl_params_from_json(j: &Json, base: HplParams, at: &str) -> Result<HplParams, String> {
+    let m = obj(j, at)?;
+    check_keys(
+        m,
+        &["n", "nb", "p", "q", "stride", "interference", "bcast_exposed"],
+        at,
+    )?;
+    Ok(HplParams {
+        n: int_or(m, "n", base.n, at)?,
+        nb: int_or(m, "nb", base.nb, at)?,
+        p: usize_or(m, "p", base.p, at)?,
+        q: usize_or(m, "q", base.q, at)?,
+        stride: usize_or(m, "stride", base.stride, at)?,
+        interference: f64_or(m, "interference", base.interference, at)?,
+        bcast_exposed: f64_or(m, "bcast_exposed", base.bcast_exposed, at)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// hpcg
+
+static HPCG: KindDescriptor = KindDescriptor {
+    kind: "hpcg",
+    summary: "HPCG memory-bound CG solve (paper Table 8)",
+    fields: "params{nx,ny,nz,px,py,pz,threads_per_process,spmv_bw_eff,\
+             symgs_bw_eff,ref_iters,opt_iters,mg_levels}, paper",
+    decode: |j| {
+        let m = obj(j, "hpcg")?;
+        check_keys(m, &["kind", "params", "paper"], "hpcg")?;
+        let params = match m.get("params") {
+            Some(p) => hpcg_params_from_json(p, HpcgParams::paper(), "hpcg.params")?,
+            None => HpcgParams::paper(),
+        };
+        Ok(ScenarioSpec::Hpcg { params, paper: bool_or(m, "paper", false, "hpcg")? })
+    },
+    encode: |s| {
+        let ScenarioSpec::Hpcg { params, paper } = s else { unreachable!() };
+        let mut m = spec_obj("hpcg");
+        m.insert("params".into(), hpcg_params_to_json(params));
+        m.insert("paper".into(), Json::Bool(*paper));
+        Json::Obj(m)
+    },
+    run: |s, cfg, _seed| {
+        let ScenarioSpec::Hpcg { params, paper } = &s.spec else { unreachable!() };
+        hpcg_record(&s.id, &run_hpcg(cfg, params), *paper)
+    },
+    example: || ScenarioSpec::Hpcg { params: HpcgParams::paper(), paper: true },
+};
+
+fn hpcg_params_to_json(p: &HpcgParams) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("nx".into(), jint(p.nx));
+    m.insert("ny".into(), jint(p.ny));
+    m.insert("nz".into(), jint(p.nz));
+    m.insert("px".into(), jint(p.px as u64));
+    m.insert("py".into(), jint(p.py as u64));
+    m.insert("pz".into(), jint(p.pz as u64));
+    m.insert("threads_per_process".into(), jint(p.threads_per_process as u64));
+    m.insert("spmv_bw_eff".into(), jnum(p.spmv_bw_eff));
+    m.insert("symgs_bw_eff".into(), jnum(p.symgs_bw_eff));
+    m.insert("ref_iters".into(), jint(p.ref_iters as u64));
+    m.insert("opt_iters".into(), jint(p.opt_iters as u64));
+    m.insert("mg_levels".into(), jint(p.mg_levels as u64));
+    Json::Obj(m)
+}
+
+fn hpcg_params_from_json(j: &Json, base: HpcgParams, at: &str) -> Result<HpcgParams, String> {
+    let m = obj(j, at)?;
+    check_keys(
+        m,
+        &[
+            "nx", "ny", "nz", "px", "py", "pz", "threads_per_process",
+            "spmv_bw_eff", "symgs_bw_eff", "ref_iters", "opt_iters", "mg_levels",
+        ],
+        at,
+    )?;
+    Ok(HpcgParams {
+        nx: int_or(m, "nx", base.nx, at)?,
+        ny: int_or(m, "ny", base.ny, at)?,
+        nz: int_or(m, "nz", base.nz, at)?,
+        px: usize_or(m, "px", base.px, at)?,
+        py: usize_or(m, "py", base.py, at)?,
+        pz: usize_or(m, "pz", base.pz, at)?,
+        threads_per_process: usize_or(
+            m,
+            "threads_per_process",
+            base.threads_per_process,
+            at,
+        )?,
+        spmv_bw_eff: f64_or(m, "spmv_bw_eff", base.spmv_bw_eff, at)?,
+        symgs_bw_eff: f64_or(m, "symgs_bw_eff", base.symgs_bw_eff, at)?,
+        ref_iters: int_or(m, "ref_iters", base.ref_iters as u64, at)? as u32,
+        opt_iters: int_or(m, "opt_iters", base.opt_iters as u64, at)? as u32,
+        mg_levels: int_or(m, "mg_levels", base.mg_levels as u64, at)? as u32,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// mxp
+
+static MXP: KindDescriptor = KindDescriptor {
+    kind: "mxp",
+    summary: "HPL-MxP mixed-precision LU + GMRES-IR (paper Table 9)",
+    fields: "params{n,nb,p,q,stride,ir_iters,ir_bw_eff,interference,\
+             bcast_exposed}, paper",
+    decode: |j| {
+        let m = obj(j, "mxp")?;
+        check_keys(m, &["kind", "params", "paper"], "mxp")?;
+        let params = match m.get("params") {
+            Some(p) => mxp_params_from_json(p, MxpParams::paper(), "mxp.params")?,
+            None => MxpParams::paper(),
+        };
+        Ok(ScenarioSpec::Mxp { params, paper: bool_or(m, "paper", false, "mxp")? })
+    },
+    encode: |s| {
+        let ScenarioSpec::Mxp { params, paper } = s else { unreachable!() };
+        let mut m = spec_obj("mxp");
+        m.insert("params".into(), mxp_params_to_json(params));
+        m.insert("paper".into(), Json::Bool(*paper));
+        Json::Obj(m)
+    },
+    run: |s, cfg, _seed| {
+        let ScenarioSpec::Mxp { params, paper } = &s.spec else { unreachable!() };
+        mxp_record(&s.id, &run_mxp(cfg, params), *paper)
+    },
+    example: || ScenarioSpec::Mxp { params: MxpParams::paper(), paper: true },
+};
+
+fn mxp_params_to_json(p: &MxpParams) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("n".into(), jint(p.n));
+    m.insert("nb".into(), jint(p.nb));
+    m.insert("p".into(), jint(p.p as u64));
+    m.insert("q".into(), jint(p.q as u64));
+    m.insert("stride".into(), jint(p.stride as u64));
+    m.insert("ir_iters".into(), jint(p.ir_iters as u64));
+    m.insert("ir_bw_eff".into(), jnum(p.ir_bw_eff));
+    m.insert("interference".into(), jnum(p.interference));
+    m.insert("bcast_exposed".into(), jnum(p.bcast_exposed));
+    Json::Obj(m)
+}
+
+fn mxp_params_from_json(j: &Json, base: MxpParams, at: &str) -> Result<MxpParams, String> {
+    let m = obj(j, at)?;
+    check_keys(
+        m,
+        &[
+            "n", "nb", "p", "q", "stride", "ir_iters", "ir_bw_eff",
+            "interference", "bcast_exposed",
+        ],
+        at,
+    )?;
+    Ok(MxpParams {
+        n: int_or(m, "n", base.n, at)?,
+        nb: int_or(m, "nb", base.nb, at)?,
+        p: usize_or(m, "p", base.p, at)?,
+        q: usize_or(m, "q", base.q, at)?,
+        stride: usize_or(m, "stride", base.stride, at)?,
+        ir_iters: int_or(m, "ir_iters", base.ir_iters as u64, at)? as u32,
+        ir_bw_eff: f64_or(m, "ir_bw_eff", base.ir_bw_eff, at)?,
+        interference: f64_or(m, "interference", base.interference, at)?,
+        bcast_exposed: f64_or(m, "bcast_exposed", base.bcast_exposed, at)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// io500
+
+static IO500: KindDescriptor = KindDescriptor {
+    kind: "io500",
+    summary: "IO500 storage benchmark on the Lustre model (paper Table 10)",
+    fields: "params{client_nodes,procs_per_node,files_per_proc,seed}, degraded",
+    decode: |j| {
+        let m = obj(j, "io500")?;
+        check_keys(m, &["kind", "params", "degraded"], "io500")?;
+        let params = match m.get("params") {
+            Some(p) => io500_params_from_json(p, Io500Params::paper_10node(), "io500.params")?,
+            None => Io500Params::paper_10node(),
+        };
+        Ok(ScenarioSpec::Io500 {
+            params,
+            degraded: bool_or(m, "degraded", false, "io500")?,
+        })
+    },
+    encode: |s| {
+        let ScenarioSpec::Io500 { params, degraded } = s else { unreachable!() };
+        let mut m = spec_obj("io500");
+        let mut p = BTreeMap::new();
+        p.insert("client_nodes".into(), jint(params.client_nodes as u64));
+        p.insert("procs_per_node".into(), jint(params.procs_per_node as u64));
+        p.insert("files_per_proc".into(), jint(params.files_per_proc as u64));
+        p.insert("seed".into(), jint(params.seed));
+        m.insert("params".into(), Json::Obj(p));
+        m.insert("degraded".into(), Json::Bool(*degraded));
+        Json::Obj(m)
+    },
+    run: |s, cfg, _seed| {
+        let ScenarioSpec::Io500 { params, degraded } = &s.spec else { unreachable!() };
+        let model = if *degraded {
+            LustreModel::sakuraone(&cfg.storage).with_switch_failure()
+        } else {
+            LustreModel::sakuraone(&cfg.storage)
+        };
+        io500_record(&s.id, &run_io500_on(&model, params), *degraded)
+    },
+    example: || ScenarioSpec::Io500 { params: Io500Params::paper_10node(), degraded: false },
+};
+
+fn io500_params_from_json(
+    j: &Json,
+    base: Io500Params,
+    at: &str,
+) -> Result<Io500Params, String> {
+    let m = obj(j, at)?;
+    check_keys(m, &["client_nodes", "procs_per_node", "files_per_proc", "seed"], at)?;
+    Ok(Io500Params {
+        client_nodes: usize_or(m, "client_nodes", base.client_nodes, at)?,
+        procs_per_node: usize_or(m, "procs_per_node", base.procs_per_node, at)?,
+        files_per_proc: usize_or(m, "files_per_proc", base.files_per_proc, at)?,
+        seed: int_or(m, "seed", base.seed, at)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// llm
+
+static LLM: KindDescriptor = KindDescriptor {
+    kind: "llm",
+    summary: "distributed LLM step-time model on a chosen fabric",
+    fields: "llm{params,batch_tokens,microbatches,dp,tp,pp,\
+             flops_per_token_factor,mfu_ceiling}, topology",
+    decode: |j| {
+        let m = obj(j, "llm")?;
+        check_keys(m, &["kind", "llm", "topology"], "llm")?;
+        let llm = match m.get("llm") {
+            Some(l) => llm_from_json(l, LlmConfig::llama70b_on_sakuraone(), "llm.llm")?,
+            None => LlmConfig::llama70b_on_sakuraone(),
+        };
+        Ok(ScenarioSpec::Llm {
+            llm,
+            topology: topology_or(m, "topology", TopologyKind::RailOptimized, "llm")?,
+        })
+    },
+    encode: |s| {
+        let ScenarioSpec::Llm { llm, topology } = s else { unreachable!() };
+        let mut m = spec_obj("llm");
+        m.insert("llm".into(), llm_to_json(llm));
+        m.insert("topology".into(), Json::Str(topology.name().into()));
+        Json::Obj(m)
+    },
+    run: |s, cfg, _seed| {
+        let ScenarioSpec::Llm { llm, topology } = &s.spec else { unreachable!() };
+        let mut c = cfg.clone();
+        c.network.topology = *topology;
+        let fabric = build(&c);
+        let st = step_time(&c, &fabric, llm);
+        ScenarioRecord::new(&s.id, s.kind())
+            .param("topology", topology.name())
+            .param("gpus", llm.gpus())
+            .param("dp", llm.dp)
+            .param("tp", llm.tp)
+            .param("pp", llm.pp)
+            .metric("step_time_s", st.total)
+            .metric("compute_s", st.compute)
+            .metric("tp_comm_s", st.tp_comm)
+            .metric("dp_comm_s", st.dp_comm)
+            .metric("pp_comm_s", st.pp_comm)
+            .metric("mfu_pct", st.mfu * 100.0)
+            .metric("tokens_per_s", st.tokens_per_s)
+    },
+    example: || ScenarioSpec::Llm {
+        llm: LlmConfig::llama70b_on_sakuraone(),
+        topology: TopologyKind::RailOptimized,
+    },
+};
+
+// ---------------------------------------------------------------------------
+// resilience
+
+static RESILIENCE: KindDescriptor = KindDescriptor {
+    kind: "resilience",
+    summary: "degraded-fabric drill: hierarchical all-reduce under failures",
+    fields: "plan{spines,leaves,cable_fraction,seed}, bytes",
+    decode: |j| {
+        let m = obj(j, "resilience")?;
+        check_keys(m, &["kind", "plan", "bytes"], "resilience")?;
+        let plan = match m.get("plan") {
+            Some(p) => failure_plan_from_json(p, FailurePlan::spine_down(1), "resilience.plan")?,
+            None => FailurePlan::spine_down(1),
+        };
+        Ok(ScenarioSpec::Resilience {
+            plan,
+            bytes: f64_or(m, "bytes", 1e9, "resilience")?,
+        })
+    },
+    encode: |s| {
+        let ScenarioSpec::Resilience { plan, bytes } = s else { unreachable!() };
+        let mut m = spec_obj("resilience");
+        m.insert("plan".into(), failure_plan_to_json(plan));
+        m.insert("bytes".into(), jnum(*bytes));
+        Json::Obj(m)
+    },
+    run: |s, cfg, _seed| {
+        let ScenarioSpec::Resilience { plan, bytes } = &s.spec else { unreachable!() };
+        let fabric = build(cfg);
+        let degraded_fabric = apply_failures(&fabric, plan);
+        let nodes: Vec<usize> = (0..cfg.nodes).collect();
+        let healthy = CollectiveEngine::new(&fabric, cfg)
+            .hierarchical_allreduce(&nodes, *bytes)
+            .total;
+        let degraded = CollectiveEngine::new(&degraded_fabric, cfg)
+            .hierarchical_allreduce(&nodes, *bytes)
+            .total;
+        ScenarioRecord::new(&s.id, s.kind())
+            .param("spines_down", plan.spines.len())
+            .param("leaves_down", plan.leaves.len())
+            .param("cable_fraction", plan.cable_fraction)
+            .metric("healthy_ms", healthy * 1e3)
+            .metric("degraded_ms", degraded * 1e3)
+            .metric("slowdown_x", degraded / healthy.max(1e-12))
+    },
+    example: || ScenarioSpec::Resilience { plan: FailurePlan::spine_down(1), bytes: 1e9 },
+};
+
+// ---------------------------------------------------------------------------
+// collective
+
+static COLLECTIVE: KindDescriptor = KindDescriptor {
+    kind: "collective",
+    summary: "one collective through the contention-true engine",
+    fields: "algo(ring|tree|recursive-doubling|hierarchical), bytes, \
+             topology, plan{spines,leaves,cable_fraction,seed}|null",
+    decode: |j| {
+        let m = obj(j, "collective")?;
+        check_keys(m, &["kind", "algo", "bytes", "topology", "plan"], "collective")?;
+        let algo = match m.get("algo") {
+            None => AllReduceAlgo::Hierarchical,
+            Some(Json::Str(s)) => {
+                AllReduceAlgo::parse(s).map_err(|e| format!("collective.algo: {e}"))?
+            }
+            Some(other) => {
+                return Err(format!("collective.algo: expected a name, got {other:?}"))
+            }
+        };
+        let plan = match m.get("plan") {
+            None | Some(Json::Null) => None,
+            Some(p) => Some(failure_plan_from_json(
+                p,
+                FailurePlan::default(),
+                "collective.plan",
+            )?),
+        };
+        Ok(ScenarioSpec::Collective {
+            algo,
+            bytes: f64_or(m, "bytes", 1e8, "collective")?,
+            topology: topology_or(
+                m,
+                "topology",
+                TopologyKind::RailOptimized,
+                "collective",
+            )?,
+            plan,
+        })
+    },
+    encode: |s| {
+        let ScenarioSpec::Collective { algo, bytes, topology, plan } = s else {
+            unreachable!()
+        };
+        let mut m = spec_obj("collective");
+        m.insert("algo".into(), Json::Str(algo.name().into()));
+        m.insert("bytes".into(), jnum(*bytes));
+        m.insert("topology".into(), Json::Str(topology.name().into()));
+        m.insert(
+            "plan".into(),
+            plan.as_ref().map_or(Json::Null, failure_plan_to_json),
+        );
+        Json::Obj(m)
+    },
+    run: |s, cfg, _seed| {
+        let ScenarioSpec::Collective { algo, bytes, topology, plan } = &s.spec else {
+            unreachable!()
+        };
+        let mut c = cfg.clone();
+        c.network.topology = *topology;
+        let healthy = build(&c);
+        let fabric = match plan {
+            Some(p) => apply_failures(&healthy, p),
+            None => healthy,
+        };
+        let engine = CollectiveEngine::new(&fabric, &c);
+        let nodes: Vec<usize> = (0..c.nodes).collect();
+        // the DP-group shape: hierarchical drives whole nodes, the flat
+        // algorithms run one rank per node on rail 0
+        let t = match algo {
+            AllReduceAlgo::Hierarchical => engine.hierarchical_allreduce(&nodes, *bytes),
+            flat => {
+                let ranks: Vec<Rank> = nodes.iter().map(|&n| (n, 0)).collect();
+                match flat {
+                    AllReduceAlgo::Ring => engine.ring_allreduce(&ranks, *bytes),
+                    AllReduceAlgo::Tree => engine.tree_allreduce(&ranks, *bytes),
+                    _ => engine.recursive_doubling_allreduce(&ranks, *bytes),
+                }
+            }
+        };
+        let mut rec = ScenarioRecord::new(&s.id, s.kind())
+            .param("algo", algo.name())
+            .param("topology", topology.name())
+            .param("bytes", *bytes as u64)
+            .param("nodes", c.nodes)
+            .param("degraded", plan.is_some())
+            .metric("total_ms", t.total * 1e3)
+            .metric("inter_ms", t.inter * 1e3)
+            .metric("intra_ms", t.intra * 1e3)
+            .metric("eth_flows", t.flows as f64)
+            .metric("peak_link_util", t.max_util);
+        if t.total > 0.0 {
+            rec = rec.metric("algbw_gbps", *bytes / t.total / 1e9);
+        }
+        if let Some(p) = plan {
+            rec = rec
+                .param("spines_down", p.spines.len())
+                .param("cable_fraction", p.cable_fraction);
+        }
+        rec
+    },
+    example: || ScenarioSpec::Collective {
+        algo: AllReduceAlgo::Hierarchical,
+        bytes: 1e8,
+        topology: TopologyKind::RailOptimized,
+        plan: None,
+    },
+};
+
+// ---------------------------------------------------------------------------
+// campaign
+
+static CAMPAIGN: KindDescriptor = KindDescriptor {
+    kind: "campaign",
+    summary: "goodput-true training campaign (failures × checkpoints × I/O)",
+    fields: "campaign{llm{...},duration_days,node_mtbf_hours,\
+             fabric_mtbf_hours,interval_override,overhead_budget,\
+             ckpt_overlap,restart_fixed_s,fabric_repair_hours,\
+             requeue_bg_jobs,hazard_base_per_hour,cable_plan,spine_plan}, \
+             topology",
+    decode: |j| {
+        let m = obj(j, "campaign")?;
+        check_keys(m, &["kind", "campaign", "topology"], "campaign")?;
+        let campaign = match m.get("campaign") {
+            Some(c) => {
+                campaign_from_json(c, CampaignConfig::llama70b_30d(), "campaign.campaign")?
+            }
+            None => CampaignConfig::llama70b_30d(),
+        };
+        Ok(ScenarioSpec::Campaign {
+            campaign: Box::new(campaign),
+            topology: topology_or(m, "topology", TopologyKind::RailOptimized, "campaign")?,
+        })
+    },
+    encode: |s| {
+        let ScenarioSpec::Campaign { campaign, topology } = s else { unreachable!() };
+        let mut m = spec_obj("campaign");
+        m.insert("campaign".into(), campaign_to_json(campaign));
+        m.insert("topology".into(), Json::Str(topology.name().into()));
+        Json::Obj(m)
+    },
+    run: |s, cfg, seed| {
+        let ScenarioSpec::Campaign { campaign, topology } = &s.spec else {
+            unreachable!()
+        };
+        let mut c = cfg.clone();
+        c.network.topology = *topology;
+        let report = run_campaign(&c, campaign, seed);
+        campaign_record(&s.id, &report, campaign, *topology)
+    },
+    example: || ScenarioSpec::Campaign {
+        campaign: Box::new(CampaignConfig::llama70b_30d()),
+        topology: TopologyKind::RailOptimized,
+    },
+};
+
+// ---------------------------------------------------------------------------
+// sched
+
+static SCHED: KindDescriptor = KindDescriptor {
+    kind: "sched",
+    summary: "synthetic job mix through the Slurm-like scheduler (seeded)",
+    fields: "jobs",
+    decode: |j| {
+        let m = obj(j, "sched")?;
+        check_keys(m, &["kind", "jobs"], "sched")?;
+        Ok(ScenarioSpec::Sched { jobs: usize_or(m, "jobs", 200, "sched")? })
+    },
+    encode: |s| {
+        let ScenarioSpec::Sched { jobs } = s else { unreachable!() };
+        let mut m = spec_obj("sched");
+        m.insert("jobs".into(), jint(*jobs as u64));
+        Json::Obj(m)
+    },
+    run: |s, cfg, seed| {
+        let ScenarioSpec::Sched { jobs } = &s.spec else { unreachable!() };
+        let mut sim = SlurmSim::new(cfg);
+        let mut rng = Rng::new(seed);
+        for id in 0..*jobs as u64 {
+            let nodes = 1 + rng.below(48) as usize;
+            let rt = rng.lognormal(600.0, 1.0);
+            sim.submit(
+                Job::new(id, "sweep-job", nodes, rt * 2.0, rt)
+                    .with_submit_time(rng.range(0.0, 4.0 * 3600.0))
+                    .with_priority(rng.below(3) as i64),
+            );
+        }
+        let stats = sim.run();
+        ScenarioRecord::new(&s.id, s.kind())
+            .param("jobs", *jobs)
+            .metric("completed", stats.completed as f64)
+            .metric("backfilled", stats.backfilled as f64)
+            .metric("mean_wait_s", stats.mean_wait)
+            .metric("utilization_pct", stats.utilization * 100.0)
+            .metric("single_pod_pct", stats.single_pod_fraction * 100.0)
+    },
+    example: || ScenarioSpec::Sched { jobs: 200 },
+};
+
+// ---------------------------------------------------------------------------
+// cluster
+
+static CLUSTER: KindDescriptor = KindDescriptor {
+    kind: "cluster",
+    summary: "scaled-down cluster running a proportionally scaled HPL",
+    fields: "nodes, params{n,nb,p,q,stride,interference,bcast_exposed}",
+    decode: |j| {
+        let m = obj(j, "cluster")?;
+        check_keys(m, &["kind", "nodes", "params"], "cluster")?;
+        let params = match m.get("params") {
+            Some(p) => hpl_params_from_json(p, HplParams::paper(), "cluster.params")?,
+            None => HplParams::paper(),
+        };
+        Ok(ScenarioSpec::Cluster { nodes: usize_or(m, "nodes", 25, "cluster")?, params })
+    },
+    encode: |s| {
+        let ScenarioSpec::Cluster { nodes, params } = s else { unreachable!() };
+        let mut m = spec_obj("cluster");
+        m.insert("nodes".into(), jint(*nodes as u64));
+        m.insert("params".into(), hpl_params_to_json(params));
+        Json::Obj(m)
+    },
+    run: |s, cfg, _seed| {
+        let ScenarioSpec::Cluster { nodes, params } = &s.spec else { unreachable!() };
+        let mut c = cfg.clone();
+        c.apply_override("nodes", &nodes.to_string()).expect("nodes override");
+        let r = run_hpl(&c, params);
+        hpl_record(&s.id, &r, false).param("nodes", *nodes)
+    },
+    example: || ScenarioSpec::Cluster {
+        nodes: 25,
+        params: HplParams { n: 1_352_704, p: 8, q: 25, ..HplParams::paper() },
+    },
+};
+
+// ---------------------------------------------------------------------------
+// Record builders shared with the single-benchmark subcommands.
+
+pub(crate) fn hpl_record(id: &str, r: &HplResult, anchored: bool) -> ScenarioRecord {
+    let rec = ScenarioRecord::new(id, "hpl")
+        .param("n", r.params.n)
+        .param("nb", r.params.nb)
+        .param("grid", format!("{}x{}", r.params.p, r.params.q));
+    if anchored {
+        rec.metric_vs_paper("rmax_pflops", r.rmax / 1e15, paper::HPL_RMAX_PF)
+            .metric_vs_paper("time_s", r.time_s, paper::HPL_TIME_S)
+            .metric_vs_paper(
+                "per_gpu_tflops",
+                r.rmax_per_gpu / 1e12,
+                paper::HPL_PER_GPU_TF,
+            )
+            .metric_vs_paper(
+                "max_gemm_tflops",
+                r.max_gemm_per_gpu / 1e12,
+                paper::HPL_MAX_GEMM_TF,
+            )
+    } else {
+        rec.metric("rmax_pflops", r.rmax / 1e15)
+            .metric("time_s", r.time_s)
+            .metric("per_gpu_tflops", r.rmax_per_gpu / 1e12)
+    }
+}
+
+pub(crate) fn hpcg_record(id: &str, r: &HpcgResult, anchored: bool) -> ScenarioRecord {
+    let p = &r.params;
+    let rec = ScenarioRecord::new(id, "hpcg")
+        .param("dims", format!("{}x{}x{}", p.nx, p.ny, p.nz))
+        .param("grid", format!("{}x{}x{}", p.px, p.py, p.pz));
+    if anchored {
+        rec.metric_vs_paper("raw_gflops", r.raw_gflops, paper::HPCG_RAW_GF)
+            .metric_vs_paper(
+                "convergence_gflops",
+                r.convergence_gflops,
+                paper::HPCG_CONV_GF,
+            )
+            .metric_vs_paper("final_gflops", r.final_gflops, paper::HPCG_FINAL_GF)
+            .metric_vs_paper(
+                "bw_tbs_per_gpu",
+                r.observed_bw_per_gpu / 1e12,
+                paper::HPCG_BW_TBS,
+            )
+    } else {
+        rec.metric("raw_gflops", r.raw_gflops)
+            .metric("final_gflops", r.final_gflops)
+            .metric("bw_tbs_per_gpu", r.observed_bw_per_gpu / 1e12)
+    }
+}
+
+pub(crate) fn mxp_record(id: &str, r: &MxpResult, anchored: bool) -> ScenarioRecord {
+    let rec = ScenarioRecord::new(id, "mxp")
+        .param("n", r.params.n)
+        .param("nb", r.params.nb)
+        .param("grid", format!("{}x{}", r.params.p, r.params.q))
+        .param("ir_iters", r.params.ir_iters);
+    if anchored {
+        rec.metric_vs_paper("rmax_pflops", r.rmax / 1e15, paper::MXP_RMAX_PF)
+            .metric_vs_paper(
+                "per_gpu_tflops",
+                r.rmax_per_gpu / 1e12,
+                paper::MXP_PER_GPU_TF,
+            )
+            .metric_vs_paper("lu_only_pflops", r.lu_only / 1e15, paper::MXP_LU_PF)
+            .metric_vs_paper(
+                "lu_only_per_gpu_tflops",
+                r.lu_only_per_gpu / 1e12,
+                paper::MXP_LU_PER_GPU_TF,
+            )
+    } else {
+        rec.metric("rmax_pflops", r.rmax / 1e15)
+            .metric("lu_only_pflops", r.lu_only / 1e15)
+            .metric("total_time_s", r.total_time_s)
+    }
+}
+
+pub(crate) fn campaign_record(
+    id: &str,
+    r: &CampaignReport,
+    cc: &CampaignConfig,
+    topology: TopologyKind,
+) -> ScenarioRecord {
+    ScenarioRecord::new(id, "campaign")
+        .param("campaign_schema", r.schema)
+        .param("topology", topology.name())
+        .param("gpus", cc.llm.gpus())
+        .param("dp", cc.llm.dp)
+        .param("tp", cc.llm.tp)
+        .param("pp", cc.llm.pp)
+        .param("days", cc.duration_days)
+        .param("node_mtbf_h", cc.node_mtbf_hours)
+        .param("fabric_mtbf_h", cc.fabric_mtbf_hours)
+        .param("interval_source", r.interval_source)
+        .param("ckpt_fits_backend", r.checkpoint_fits_backend)
+        .metric("goodput_tokens_per_s", r.goodput_tokens_per_s)
+        .metric("fault_free_tokens_per_s", r.fault_free_tokens_per_s)
+        .metric("goodput_frac_pct", r.goodput_fraction * 100.0)
+        .metric("mfu_goodput_pct", r.mfu_goodput * 100.0)
+        .metric("availability_pct", r.availability * 100.0)
+        .metric("committed_tokens", r.committed_tokens)
+        .metric("step_time_s", r.step_time_s)
+        .metric("degraded_step_time_s", r.degraded_step_time_s)
+        .metric("interval_steps", r.interval_steps as f64)
+        .metric("checkpoint_stall_s", r.checkpoint_stall_s)
+        .metric("checkpoint_writes", r.checkpoint_writes as f64)
+        .metric("node_failures", r.node_failures as f64)
+        .metric("fabric_failures", r.fabric_failures as f64)
+        .metric("compute_s", r.time.compute_s)
+        .metric("checkpoint_s", r.time.checkpoint_s)
+        .metric("lost_work_s", r.time.lost_work_s)
+        .metric("restart_s", r.time.restart_s)
+        .metric("queue_s", r.time.queue_s)
+}
+
+pub(crate) fn io500_record(id: &str, r: &Io500Result, degraded: bool) -> ScenarioRecord {
+    let rec = ScenarioRecord::new(id, "io500")
+        .param("client_nodes", r.params.client_nodes)
+        .param("ppn", r.params.procs_per_node)
+        .param("degraded", degraded);
+    // Anchor only the paper's exact configurations (128 procs per node,
+    // healthy storage) — a 10-node run at a different process density is
+    // a different experiment, not a Table 10 reproduction.
+    let paper_density = r.params.procs_per_node == 128;
+    let anchor = match (r.params.client_nodes, degraded) {
+        (10, false) if paper_density => Some((
+            paper::IO500_10N_TOTAL,
+            paper::IO500_10N_BW,
+            paper::IO500_10N_IOPS,
+        )),
+        (96, false) if paper_density => Some((
+            paper::IO500_96N_TOTAL,
+            paper::IO500_96N_BW,
+            paper::IO500_96N_IOPS,
+        )),
+        _ => None,
+    };
+    match anchor {
+        Some((total, bw, iops)) => rec
+            .metric_vs_paper("total_score", r.total_score, total)
+            .metric_vs_paper("bw_gib_s", r.bw_score_gib, bw)
+            .metric_vs_paper("iops_k", r.iops_score_k, iops),
+        None => rec
+            .metric("total_score", r.total_score)
+            .metric("bw_gib_s", r.bw_score_gib)
+            .metric("iops_k", r.iops_score_k),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_kinds_are_unique_and_resolvable() {
+        let mut kinds: Vec<&str> = REGISTRY.iter().map(|d| d.kind).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(kinds.len(), REGISTRY.len(), "duplicate kind names");
+        for d in REGISTRY {
+            assert!(std::ptr::eq(descriptor(d.kind).unwrap(), d));
+            assert!(!d.summary.is_empty() && !d.fields.is_empty());
+        }
+        assert!(descriptor("warp-drive").is_none());
+    }
+
+    #[test]
+    fn every_example_matches_its_descriptor_and_roundtrips() {
+        for d in REGISTRY {
+            let spec = (d.example)();
+            assert_eq!(spec.descriptor().kind, d.kind);
+            let j = spec.to_json();
+            assert_eq!(j.get("kind").unwrap().as_str().unwrap(), d.kind);
+            let back = ScenarioSpec::from_json(&j)
+                .unwrap_or_else(|e| panic!("{}: {e}", d.kind));
+            assert_eq!(back, spec, "{} round trip", d.kind);
+            assert_eq!(back.to_json().emit(), j.emit(), "{} re-emission", d.kind);
+        }
+    }
+
+    #[test]
+    fn kind_names_come_from_the_registry() {
+        for d in REGISTRY {
+            let s = Scenario::new("x", (d.example)());
+            assert_eq!(s.kind(), d.kind);
+        }
+    }
+
+    #[test]
+    fn sparse_specs_fill_in_documented_defaults() {
+        let j = Json::parse(r#"{"kind": "hpl"}"#).unwrap();
+        let spec = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(spec, ScenarioSpec::Hpl { params: HplParams::paper(), paper: false });
+
+        let j = Json::parse(r#"{"kind": "hpl", "params": {"nb": 512}}"#).unwrap();
+        let ScenarioSpec::Hpl { params, .. } = ScenarioSpec::from_json(&j).unwrap() else {
+            panic!()
+        };
+        assert_eq!(params.nb, 512);
+        assert_eq!(params.n, HplParams::paper().n);
+
+        let j = Json::parse(
+            r#"{"kind": "campaign", "campaign": {"duration_days": 14}}"#,
+        )
+        .unwrap();
+        let ScenarioSpec::Campaign { campaign, topology } =
+            ScenarioSpec::from_json(&j).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(campaign.duration_days, 14.0);
+        assert_eq!(campaign.llm, CampaignConfig::llama70b_30d().llm);
+        assert_eq!(topology, TopologyKind::RailOptimized);
+    }
+
+    #[test]
+    fn unknown_kind_and_fields_are_rejected() {
+        let err = ScenarioSpec::from_json(&Json::parse(r#"{"kind": "warp"}"#).unwrap())
+            .unwrap_err();
+        assert!(err.contains("unknown scenario kind"), "{err}");
+        assert!(err.contains("hpl"), "error should list known kinds: {err}");
+
+        let err =
+            ScenarioSpec::from_json(&Json::parse(r#"{"kind": "hpl", "warp": 1}"#).unwrap())
+                .unwrap_err();
+        assert!(err.contains("unknown field"), "{err}");
+
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"kind": "hpl", "params": {"warp": 1}}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.contains("hpl.params"), "{err}");
+
+        assert!(ScenarioSpec::from_json(&Json::parse("[]").unwrap()).is_err());
+        assert!(ScenarioSpec::from_json(&Json::parse("{}").unwrap()).is_err());
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"kind": "collective", "algo": "warp"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.contains("collective.algo"), "{err}");
+    }
+
+    #[test]
+    fn records_carry_their_spec() {
+        let mut cfg = ClusterConfig::default();
+        cfg.apply_override("nodes", "16").unwrap();
+        let s = Scenario::new("sched/8jobs", ScenarioSpec::Sched { jobs: 8 });
+        let rec = s.run(&cfg, 3);
+        let spec = rec.spec.expect("record carries its spec");
+        assert_eq!(ScenarioSpec::from_json(&spec).unwrap(), s.spec);
+    }
+}

@@ -1,9 +1,12 @@
-//! Deterministic parallel sweep engine.
+//! Deterministic parallel sweep engine and the built-in scenario grids.
 //!
 //! Fans benchmark scenarios — HPL/HPCG/MxP problem-size grids, IO500
 //! client sweeps, degraded-network drills, scaled-down cluster configs,
 //! LLM step-time ablations, goodput campaigns, scheduler mixes — across a
 //! scoped worker pool and merges the results into one [`RunManifest`].
+//! The scenario types themselves, their registry and their JSON encoding
+//! live in [`runtime::scenario`](crate::runtime::scenario); user-authored
+//! sweeps load through [`runtime::plan`](crate::runtime::plan).
 //!
 //! Determinism contract: the manifest is **byte-identical for any worker
 //! count**. Results are written into a slot indexed by scenario position
@@ -15,21 +18,19 @@ use std::collections::VecDeque;
 use std::sync::Mutex;
 use std::thread;
 
-use crate::benchmarks::hpcg::{run_hpcg, HpcgParams, HpcgResult};
-use crate::benchmarks::hpl::{run_hpl, HplParams, HplResult};
-use crate::benchmarks::hpl_mxp::{run_mxp, MxpParams, MxpResult};
-use crate::benchmarks::io500::{run_io500_on, Io500Params, Io500Result};
-use crate::benchmarks::report::paper;
-use crate::collectives::{AllReduceAlgo, CollectiveEngine, Rank};
+use crate::benchmarks::hpcg::HpcgParams;
+use crate::benchmarks::hpl::HplParams;
+use crate::benchmarks::hpl_mxp::MxpParams;
+use crate::benchmarks::io500::Io500Params;
+use crate::collectives::AllReduceAlgo;
 use crate::config::{ClusterConfig, TopologyKind};
-use crate::llm::campaign::{run_campaign, CampaignConfig, CampaignReport};
-use crate::llm::{step_time, LlmConfig};
-use crate::network::{apply_failures, FailurePlan};
+use crate::llm::campaign::CampaignConfig;
+use crate::llm::LlmConfig;
+use crate::network::FailurePlan;
 use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
-use crate::scheduler::{Job, SlurmSim};
-use crate::storage::LustreModel;
-use crate::topology::builders::build;
 use crate::util::rng::Rng;
+
+pub use crate::runtime::scenario::{Scenario, ScenarioSpec};
 
 /// How a sweep runs; the seed feeds every stochastic scenario.
 #[derive(Debug, Clone)]
@@ -54,358 +55,6 @@ pub fn default_workers() -> usize {
 pub fn scenario_seed(base: u64, index: usize) -> u64 {
     let tag = (index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     Rng::new(base ^ tag).next_u64()
-}
-
-/// One benchmark configuration in a sweep.
-#[derive(Debug, Clone)]
-pub struct Scenario {
-    pub id: String,
-    pub spec: ScenarioSpec,
-}
-
-#[derive(Debug, Clone)]
-pub enum ScenarioSpec {
-    /// `paper` anchors the record to the published Table 7 numbers.
-    Hpl { params: HplParams, paper: bool },
-    Hpcg { params: HpcgParams, paper: bool },
-    Mxp { params: MxpParams, paper: bool },
-    /// Anchored to Table 10 when `client_nodes` is 10 or 96 and healthy.
-    Io500 { params: Io500Params, degraded: bool },
-    /// Step-time model on an alternative fabric.
-    Llm { llm: LlmConfig, topology: TopologyKind },
-    /// Degraded-network drill: hierarchical all-reduce under failures.
-    Resilience { plan: FailurePlan, bytes: f64 },
-    /// One collective (algorithm × message size × topology × optional
-    /// failure plan) through the contention-true engine.
-    Collective {
-        algo: AllReduceAlgo,
-        bytes: f64,
-        topology: TopologyKind,
-        plan: Option<FailurePlan>,
-    },
-    /// Goodput-true training campaign: failures × checkpoint/restart ×
-    /// Lustre I/O composed over the step-time model (seeded).
-    Campaign { campaign: Box<CampaignConfig>, topology: TopologyKind },
-    /// Synthetic job mix through the Slurm-like scheduler (seeded).
-    Sched { jobs: usize },
-    /// Scaled-down cluster running a proportionally scaled HPL.
-    Cluster { nodes: usize, params: HplParams },
-}
-
-impl Scenario {
-    pub fn new(id: &str, spec: ScenarioSpec) -> Self {
-        Self { id: id.to_string(), spec }
-    }
-
-    pub fn kind(&self) -> &'static str {
-        match self.spec {
-            ScenarioSpec::Hpl { .. } => "hpl",
-            ScenarioSpec::Hpcg { .. } => "hpcg",
-            ScenarioSpec::Mxp { .. } => "mxp",
-            ScenarioSpec::Io500 { .. } => "io500",
-            ScenarioSpec::Llm { .. } => "llm",
-            ScenarioSpec::Resilience { .. } => "resilience",
-            ScenarioSpec::Collective { .. } => "collective",
-            ScenarioSpec::Campaign { .. } => "campaign",
-            ScenarioSpec::Sched { .. } => "sched",
-            ScenarioSpec::Cluster { .. } => "cluster",
-        }
-    }
-
-    /// Run the scenario. Pure f64 simulation — deterministic given
-    /// `(cfg, self, seed)`.
-    pub fn run(&self, cfg: &ClusterConfig, seed: u64) -> ScenarioRecord {
-        match &self.spec {
-            ScenarioSpec::Hpl { params, paper } => {
-                hpl_record(&self.id, &run_hpl(cfg, params), *paper)
-            }
-            ScenarioSpec::Hpcg { params, paper } => {
-                hpcg_record(&self.id, &run_hpcg(cfg, params), *paper)
-            }
-            ScenarioSpec::Mxp { params, paper } => {
-                mxp_record(&self.id, &run_mxp(cfg, params), *paper)
-            }
-            ScenarioSpec::Io500 { params, degraded } => {
-                let model = if *degraded {
-                    LustreModel::sakuraone(&cfg.storage).with_switch_failure()
-                } else {
-                    LustreModel::sakuraone(&cfg.storage)
-                };
-                io500_record(&self.id, &run_io500_on(&model, params), *degraded)
-            }
-            ScenarioSpec::Llm { llm, topology } => {
-                let mut c = cfg.clone();
-                c.network.topology = *topology;
-                let fabric = build(&c);
-                let st = step_time(&c, &fabric, llm);
-                ScenarioRecord::new(&self.id, self.kind())
-                    .param("topology", topology.name())
-                    .param("gpus", llm.gpus())
-                    .param("dp", llm.dp)
-                    .param("tp", llm.tp)
-                    .param("pp", llm.pp)
-                    .metric("step_time_s", st.total)
-                    .metric("compute_s", st.compute)
-                    .metric("tp_comm_s", st.tp_comm)
-                    .metric("dp_comm_s", st.dp_comm)
-                    .metric("pp_comm_s", st.pp_comm)
-                    .metric("mfu_pct", st.mfu * 100.0)
-                    .metric("tokens_per_s", st.tokens_per_s)
-            }
-            ScenarioSpec::Resilience { plan, bytes } => {
-                let fabric = build(cfg);
-                let degraded_fabric = apply_failures(&fabric, plan);
-                let nodes: Vec<usize> = (0..cfg.nodes).collect();
-                let healthy = CollectiveEngine::new(&fabric, cfg)
-                    .hierarchical_allreduce(&nodes, *bytes)
-                    .total;
-                let degraded = CollectiveEngine::new(&degraded_fabric, cfg)
-                    .hierarchical_allreduce(&nodes, *bytes)
-                    .total;
-                ScenarioRecord::new(&self.id, self.kind())
-                    .param("spines_down", plan.spines.len())
-                    .param("leaves_down", plan.leaves.len())
-                    .param("cable_fraction", plan.cable_fraction)
-                    .metric("healthy_ms", healthy * 1e3)
-                    .metric("degraded_ms", degraded * 1e3)
-                    .metric("slowdown_x", degraded / healthy.max(1e-12))
-            }
-            ScenarioSpec::Collective { algo, bytes, topology, plan } => {
-                let mut c = cfg.clone();
-                c.network.topology = *topology;
-                let healthy = build(&c);
-                let fabric = match plan {
-                    Some(p) => apply_failures(&healthy, p),
-                    None => healthy,
-                };
-                let engine = CollectiveEngine::new(&fabric, &c);
-                let nodes: Vec<usize> = (0..c.nodes).collect();
-                // the DP-group shape: hierarchical drives whole nodes,
-                // the flat algorithms run one rank per node on rail 0
-                let t = match algo {
-                    AllReduceAlgo::Hierarchical => {
-                        engine.hierarchical_allreduce(&nodes, *bytes)
-                    }
-                    flat => {
-                        let ranks: Vec<Rank> =
-                            nodes.iter().map(|&n| (n, 0)).collect();
-                        match flat {
-                            AllReduceAlgo::Ring => {
-                                engine.ring_allreduce(&ranks, *bytes)
-                            }
-                            AllReduceAlgo::Tree => {
-                                engine.tree_allreduce(&ranks, *bytes)
-                            }
-                            _ => engine
-                                .recursive_doubling_allreduce(&ranks, *bytes),
-                        }
-                    }
-                };
-                let mut rec = ScenarioRecord::new(&self.id, self.kind())
-                    .param("algo", algo.name())
-                    .param("topology", topology.name())
-                    .param("bytes", *bytes as u64)
-                    .param("nodes", c.nodes)
-                    .param("degraded", plan.is_some())
-                    .metric("total_ms", t.total * 1e3)
-                    .metric("inter_ms", t.inter * 1e3)
-                    .metric("intra_ms", t.intra * 1e3)
-                    .metric("eth_flows", t.flows as f64)
-                    .metric("peak_link_util", t.max_util);
-                if t.total > 0.0 {
-                    rec = rec.metric("algbw_gbps", *bytes / t.total / 1e9);
-                }
-                if let Some(p) = plan {
-                    rec = rec
-                        .param("spines_down", p.spines.len())
-                        .param("cable_fraction", p.cable_fraction);
-                }
-                rec
-            }
-            ScenarioSpec::Campaign { campaign, topology } => {
-                let mut c = cfg.clone();
-                c.network.topology = *topology;
-                let report = run_campaign(&c, campaign, seed);
-                campaign_record(&self.id, &report, campaign, *topology)
-            }
-            ScenarioSpec::Sched { jobs } => {
-                let mut sim = SlurmSim::new(cfg);
-                let mut rng = Rng::new(seed);
-                for id in 0..*jobs as u64 {
-                    let nodes = 1 + rng.below(48) as usize;
-                    let rt = rng.lognormal(600.0, 1.0);
-                    sim.submit(
-                        Job::new(id, "sweep-job", nodes, rt * 2.0, rt)
-                            .with_submit_time(rng.range(0.0, 4.0 * 3600.0))
-                            .with_priority(rng.below(3) as i64),
-                    );
-                }
-                let stats = sim.run();
-                ScenarioRecord::new(&self.id, self.kind())
-                    .param("jobs", *jobs)
-                    .metric("completed", stats.completed as f64)
-                    .metric("backfilled", stats.backfilled as f64)
-                    .metric("mean_wait_s", stats.mean_wait)
-                    .metric("utilization_pct", stats.utilization * 100.0)
-                    .metric("single_pod_pct", stats.single_pod_fraction * 100.0)
-            }
-            ScenarioSpec::Cluster { nodes, params } => {
-                let mut c = cfg.clone();
-                c.apply_override("nodes", &nodes.to_string())
-                    .expect("nodes override");
-                let r = run_hpl(&c, params);
-                hpl_record(&self.id, &r, false).param("nodes", *nodes)
-            }
-        }
-    }
-}
-
-pub(crate) fn hpl_record(id: &str, r: &HplResult, anchored: bool) -> ScenarioRecord {
-    let rec = ScenarioRecord::new(id, "hpl")
-        .param("n", r.params.n)
-        .param("nb", r.params.nb)
-        .param("grid", format!("{}x{}", r.params.p, r.params.q));
-    if anchored {
-        rec.metric_vs_paper("rmax_pflops", r.rmax / 1e15, paper::HPL_RMAX_PF)
-            .metric_vs_paper("time_s", r.time_s, paper::HPL_TIME_S)
-            .metric_vs_paper(
-                "per_gpu_tflops",
-                r.rmax_per_gpu / 1e12,
-                paper::HPL_PER_GPU_TF,
-            )
-            .metric_vs_paper(
-                "max_gemm_tflops",
-                r.max_gemm_per_gpu / 1e12,
-                paper::HPL_MAX_GEMM_TF,
-            )
-    } else {
-        rec.metric("rmax_pflops", r.rmax / 1e15)
-            .metric("time_s", r.time_s)
-            .metric("per_gpu_tflops", r.rmax_per_gpu / 1e12)
-    }
-}
-
-pub(crate) fn hpcg_record(id: &str, r: &HpcgResult, anchored: bool) -> ScenarioRecord {
-    let p = &r.params;
-    let rec = ScenarioRecord::new(id, "hpcg")
-        .param("dims", format!("{}x{}x{}", p.nx, p.ny, p.nz))
-        .param("grid", format!("{}x{}x{}", p.px, p.py, p.pz));
-    if anchored {
-        rec.metric_vs_paper("raw_gflops", r.raw_gflops, paper::HPCG_RAW_GF)
-            .metric_vs_paper(
-                "convergence_gflops",
-                r.convergence_gflops,
-                paper::HPCG_CONV_GF,
-            )
-            .metric_vs_paper("final_gflops", r.final_gflops, paper::HPCG_FINAL_GF)
-            .metric_vs_paper(
-                "bw_tbs_per_gpu",
-                r.observed_bw_per_gpu / 1e12,
-                paper::HPCG_BW_TBS,
-            )
-    } else {
-        rec.metric("raw_gflops", r.raw_gflops)
-            .metric("final_gflops", r.final_gflops)
-            .metric("bw_tbs_per_gpu", r.observed_bw_per_gpu / 1e12)
-    }
-}
-
-pub(crate) fn mxp_record(id: &str, r: &MxpResult, anchored: bool) -> ScenarioRecord {
-    let rec = ScenarioRecord::new(id, "mxp")
-        .param("n", r.params.n)
-        .param("nb", r.params.nb)
-        .param("grid", format!("{}x{}", r.params.p, r.params.q))
-        .param("ir_iters", r.params.ir_iters);
-    if anchored {
-        rec.metric_vs_paper("rmax_pflops", r.rmax / 1e15, paper::MXP_RMAX_PF)
-            .metric_vs_paper(
-                "per_gpu_tflops",
-                r.rmax_per_gpu / 1e12,
-                paper::MXP_PER_GPU_TF,
-            )
-            .metric_vs_paper("lu_only_pflops", r.lu_only / 1e15, paper::MXP_LU_PF)
-            .metric_vs_paper(
-                "lu_only_per_gpu_tflops",
-                r.lu_only_per_gpu / 1e12,
-                paper::MXP_LU_PER_GPU_TF,
-            )
-    } else {
-        rec.metric("rmax_pflops", r.rmax / 1e15)
-            .metric("lu_only_pflops", r.lu_only / 1e15)
-            .metric("total_time_s", r.total_time_s)
-    }
-}
-
-pub(crate) fn campaign_record(
-    id: &str,
-    r: &CampaignReport,
-    cc: &CampaignConfig,
-    topology: TopologyKind,
-) -> ScenarioRecord {
-    ScenarioRecord::new(id, "campaign")
-        .param("campaign_schema", r.schema)
-        .param("topology", topology.name())
-        .param("gpus", cc.llm.gpus())
-        .param("dp", cc.llm.dp)
-        .param("tp", cc.llm.tp)
-        .param("pp", cc.llm.pp)
-        .param("days", cc.duration_days)
-        .param("node_mtbf_h", cc.node_mtbf_hours)
-        .param("fabric_mtbf_h", cc.fabric_mtbf_hours)
-        .param("interval_source", r.interval_source)
-        .param("ckpt_fits_backend", r.checkpoint_fits_backend)
-        .metric("goodput_tokens_per_s", r.goodput_tokens_per_s)
-        .metric("fault_free_tokens_per_s", r.fault_free_tokens_per_s)
-        .metric("goodput_frac_pct", r.goodput_fraction * 100.0)
-        .metric("mfu_goodput_pct", r.mfu_goodput * 100.0)
-        .metric("availability_pct", r.availability * 100.0)
-        .metric("committed_tokens", r.committed_tokens)
-        .metric("step_time_s", r.step_time_s)
-        .metric("degraded_step_time_s", r.degraded_step_time_s)
-        .metric("interval_steps", r.interval_steps as f64)
-        .metric("checkpoint_stall_s", r.checkpoint_stall_s)
-        .metric("checkpoint_writes", r.checkpoint_writes as f64)
-        .metric("node_failures", r.node_failures as f64)
-        .metric("fabric_failures", r.fabric_failures as f64)
-        .metric("compute_s", r.time.compute_s)
-        .metric("checkpoint_s", r.time.checkpoint_s)
-        .metric("lost_work_s", r.time.lost_work_s)
-        .metric("restart_s", r.time.restart_s)
-        .metric("queue_s", r.time.queue_s)
-}
-
-pub(crate) fn io500_record(id: &str, r: &Io500Result, degraded: bool) -> ScenarioRecord {
-    let rec = ScenarioRecord::new(id, "io500")
-        .param("client_nodes", r.params.client_nodes)
-        .param("ppn", r.params.procs_per_node)
-        .param("degraded", degraded);
-    // Anchor only the paper's exact configurations (128 procs per node,
-    // healthy storage) — a 10-node run at a different process density is
-    // a different experiment, not a Table 10 reproduction.
-    let paper_density = r.params.procs_per_node == 128;
-    let anchor = match (r.params.client_nodes, degraded) {
-        (10, false) if paper_density => Some((
-            paper::IO500_10N_TOTAL,
-            paper::IO500_10N_BW,
-            paper::IO500_10N_IOPS,
-        )),
-        (96, false) if paper_density => Some((
-            paper::IO500_96N_TOTAL,
-            paper::IO500_96N_BW,
-            paper::IO500_96N_IOPS,
-        )),
-        _ => None,
-    };
-    match anchor {
-        Some((total, bw, iops)) => rec
-            .metric_vs_paper("total_score", r.total_score, total)
-            .metric_vs_paper("bw_gib_s", r.bw_score_gib, bw)
-            .metric_vs_paper("iops_k", r.iops_score_k, iops),
-        None => rec
-            .metric("total_score", r.total_score)
-            .metric("bw_gib_s", r.bw_score_gib)
-            .metric("iops_k", r.iops_score_k),
-    }
 }
 
 /// Stable scenario id for a collective grid point, e.g.
@@ -700,7 +349,7 @@ pub fn run_sweep(
 }
 
 /// [`run_sweep`] with an explicit manifest command name, for subcommands
-/// (e.g. `collectives`) that reuse the deterministic engine.
+/// (e.g. `collectives`, `plan`) that reuse the deterministic engine.
 pub fn run_sweep_named(
     cfg: &ClusterConfig,
     scenarios: &[Scenario],

@@ -97,6 +97,42 @@ impl Args {
                 .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
         }
     }
+
+    /// Like [`Args::get_u64`] but distinguishes "not given" from a value,
+    /// for options whose absence falls back to another source (e.g. a
+    /// sweep plan's seed).
+    pub fn get_opt_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+}
+
+/// Expected shape of an N-dimensional `AxBx…` option, for error messages:
+/// `PxQ` for 2 axes, `PxQxR` for 3, …
+fn dims_shape(n: usize) -> String {
+    const AXES: [&str; 4] = ["P", "Q", "R", "S"];
+    AXES[..n.min(AXES.len())].join("x")
+}
+
+/// Parse an `AxBx…` dimension option (`--grid 16x49`, `--dims 8x7x14`)
+/// into exactly `N` integers. `what` names the option in errors.
+pub fn parse_dims<const N: usize>(s: &str, what: &str) -> Result<[u64; N], String> {
+    let parts: Vec<&str> = s.split('x').collect();
+    if parts.len() != N {
+        return Err(format!("{what} must be {}, got {s:?}", dims_shape(N)));
+    }
+    let mut out = [0u64; N];
+    for (slot, part) in out.iter_mut().zip(&parts) {
+        *slot = part.parse().map_err(|_| {
+            format!("{what} must be {} (integers), got {s:?}", dims_shape(N))
+        })?;
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -149,5 +185,34 @@ mod tests {
         let a = parse(&["--help"], &["help"]);
         assert_eq!(a.subcommand, None);
         assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn get_opt_u64_distinguishes_absent_from_given() {
+        let a = parse(&["suite", "--seed", "7"], &[]);
+        assert_eq!(a.get_opt_u64("seed").unwrap(), Some(7));
+        assert_eq!(a.get_opt_u64("workers").unwrap(), None);
+        let a = parse(&["suite", "--seed", "many"], &[]);
+        assert!(a.get_opt_u64("seed").is_err());
+    }
+
+    #[test]
+    fn parse_dims_accepts_exact_arity() {
+        assert_eq!(parse_dims::<2>("16x49", "--grid").unwrap(), [16, 49]);
+        assert_eq!(parse_dims::<3>("8x7x14", "--dims").unwrap(), [8, 7, 14]);
+    }
+
+    #[test]
+    fn parse_dims_error_messages_name_option_and_shape() {
+        let e = parse_dims::<2>("16", "--grid").unwrap_err();
+        assert_eq!(e, "--grid must be PxQ, got \"16\"");
+        let e = parse_dims::<2>("16x49x2", "--grid").unwrap_err();
+        assert_eq!(e, "--grid must be PxQ, got \"16x49x2\"");
+        let e = parse_dims::<3>("8x7", "--dims").unwrap_err();
+        assert_eq!(e, "--dims must be PxQxR, got \"8x7\"");
+        let e = parse_dims::<3>("8x7xbig", "--dims").unwrap_err();
+        assert_eq!(e, "--dims must be PxQxR (integers), got \"8x7xbig\"");
+        let e = parse_dims::<2>("-4x8", "--grid").unwrap_err();
+        assert_eq!(e, "--grid must be PxQ (integers), got \"-4x8\"");
     }
 }

@@ -1,0 +1,224 @@
+//! Integration tests for the plan API: the committed example plans must
+//! load, validate and run deterministically through `sakuraone plan run`
+//! and `sakuraone suite --plan`, and the spec-in-manifest field must make
+//! sweep manifests replayable.
+
+use sakuraone::commands;
+use sakuraone::config::ClusterConfig;
+use sakuraone::runtime::scenario::{Scenario, ScenarioSpec};
+use sakuraone::runtime::sweep::scenario_seed;
+use sakuraone::util::cli::Args;
+use sakuraone::util::json::Json;
+
+const MIXED: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/plans/mixed.json");
+const PLANS_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/plans");
+
+fn args(v: &[&str]) -> Args {
+    Args::parse(v.iter().map(|s| s.to_string()), commands::FLAGS).unwrap()
+}
+
+fn committed_plans() -> Vec<String> {
+    let mut out: Vec<String> = std::fs::read_dir(PLANS_DIR)
+        .expect("examples/plans exists")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path().to_string_lossy().into_owned())
+        .filter(|p| p.ends_with(".json"))
+        .collect();
+    out.sort();
+    assert!(out.len() >= 2, "expected committed example plans, got {out:?}");
+    out
+}
+
+#[test]
+fn committed_example_plans_validate() {
+    for p in committed_plans() {
+        let plan = commands::plan::load(&p).unwrap_or_else(|e| panic!("{p}: {e}"));
+        let (_, scenarios) = plan
+            .resolve(&ClusterConfig::default())
+            .unwrap_or_else(|e| panic!("{p}: {e}"));
+        assert!(!scenarios.is_empty(), "{p}");
+    }
+    // and through the CLI handler, over every committed file at once
+    let mut v = vec!["plan".to_string(), "validate".to_string()];
+    v.extend(committed_plans());
+    let m = commands::plan::handle(
+        &Args::parse(v.into_iter().chain(["--json".into()]), commands::FLAGS).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(m.command, "plan-validate");
+    assert_eq!(m.notes.len(), committed_plans().len());
+    assert!(m.notes.iter().all(|n| n.contains("ok")));
+}
+
+#[test]
+fn mixed_plan_runs_the_cross_grid_mix_byte_identically() {
+    let run = |workers: &str| {
+        commands::plan::handle(&args(&[
+            "plan", "run", MIXED, "--json", "--workers", workers,
+        ]))
+        .unwrap()
+    };
+    let one = run("1");
+    let four = run("4");
+    assert_eq!(
+        one.to_json().emit(),
+        four.to_json().emit(),
+        "worker count leaked into the plan manifest"
+    );
+    assert_eq!(one.command, "plan/mixed-hpl-collective-campaign");
+    assert_eq!(one.seed, 7, "plan seed applies");
+
+    // the cross-grid mix: inline specs + filtered collectives grid +
+    // campaign quick pair, spanning three scenario families
+    let ids: Vec<&str> = one.scenarios.iter().map(|s| s.id.as_str()).collect();
+    for id in [
+        "hpl/paper",
+        "hpl/nb512",
+        "collective/hierarchical-rail-optimized-100m",
+        "collective/hierarchical-rail-optimized-100m-degraded",
+        "collective/ring-dragonfly-1g",
+        "campaign/llama70b-30d",
+        "campaign/llama70b-14d-fat-tree",
+    ] {
+        assert!(ids.contains(&id), "{id} missing from {ids:?}");
+    }
+    for kind in ["hpl", "collective", "campaign"] {
+        assert!(one.scenarios.iter().any(|s| s.kind == kind), "{kind} missing");
+    }
+    // the filter kept only hierarchical collectives from the grid entry
+    assert!(one
+        .scenarios
+        .iter()
+        .filter(|s| s.kind == "collective")
+        .all(|s| s.id.contains("hierarchical") || s.id == "collective/ring-dragonfly-1g"));
+}
+
+#[test]
+fn suite_with_plan_runs_the_same_scenarios() {
+    let run = |workers: &str| {
+        commands::suite::handle(&args(&[
+            "suite", "--json", "--plan", MIXED, "--workers", workers,
+        ]))
+        .unwrap()
+    };
+    let one = run("1");
+    let four = run("4");
+    assert_eq!(one.to_json().emit(), four.to_json().emit());
+    assert_eq!(one.command, "suite");
+    assert_eq!(one.seed, 7);
+
+    // same scenario records as `plan run` — only the manifest command
+    // name differs between the two entry points
+    let plan_run =
+        commands::plan::handle(&args(&["plan", "run", MIXED, "--json", "--serial"]))
+            .unwrap();
+    assert_eq!(one.scenarios, plan_run.scenarios);
+}
+
+#[test]
+fn quick_flag_is_rejected_on_both_plan_entry_points() {
+    let err = commands::suite::handle(&args(&[
+        "suite", "--json", "--quick", "--plan", MIXED,
+    ]))
+    .expect_err("--quick must conflict with --plan");
+    assert!(format!("{err:#}").contains("--quick has no effect"));
+
+    let err = commands::plan::handle(&args(&["plan", "run", MIXED, "--quick"]))
+        .expect_err("--quick must conflict with plan run");
+    assert!(format!("{err:#}").contains("--quick has no effect"));
+}
+
+#[test]
+fn cli_seed_and_config_overrides_win_over_the_plan() {
+    let m = commands::plan::handle(&args(&[
+        "plan", "run", MIXED, "--json", "--serial", "--seed", "99", "--nodes", "64",
+    ]))
+    .unwrap();
+    assert_eq!(m.seed, 99, "explicit --seed beats the plan seed");
+    assert_eq!(m.config.get("nodes").unwrap().as_usize().unwrap(), 64);
+
+    // without --seed the plan's seed sticks
+    let m = commands::plan::handle(&args(&["plan", "run", MIXED, "--json", "--serial"]))
+        .unwrap();
+    assert_eq!(m.seed, 7);
+}
+
+#[test]
+fn manifests_are_replayable_from_their_embedded_specs() {
+    let m = commands::plan::handle(&args(&["plan", "run", MIXED, "--json", "--serial"]))
+        .unwrap();
+    // rebuild every scenario purely from the manifest and re-run it with
+    // the engine's per-index seed: records must reproduce exactly
+    let cfg = ClusterConfig::default(); // mixed.json config == defaults
+    for (i, rec) in m.scenarios.iter().enumerate() {
+        let spec_json = rec.spec.as_ref().unwrap_or_else(|| panic!("{}: no spec", rec.id));
+        let spec = ScenarioSpec::from_json(spec_json)
+            .unwrap_or_else(|e| panic!("{}: {e}", rec.id));
+        let replayed =
+            Scenario::new(&rec.id, spec).run(&cfg, scenario_seed(m.seed, i));
+        assert_eq!(&replayed, rec, "{} does not replay", rec.id);
+    }
+}
+
+#[test]
+fn plan_list_covers_the_registry_and_grids() {
+    let m = commands::plan::handle(&args(&["plan", "list", "--json"])).unwrap();
+    assert_eq!(m.command, "plan-list");
+    for kind in [
+        "hpl", "hpcg", "mxp", "io500", "llm", "resilience", "collective",
+        "campaign", "sched", "cluster",
+    ] {
+        assert!(
+            m.notes.iter().any(|n| n.starts_with(&format!("kind {kind}:"))),
+            "{kind} missing from plan list"
+        );
+    }
+    for grid in ["standard", "collectives", "campaign"] {
+        assert!(m.notes.iter().any(|n| n.starts_with(&format!("grid {grid}:"))));
+    }
+}
+
+#[test]
+fn bad_plans_fail_loudly_through_the_cli() {
+    let dir = std::env::temp_dir().join("sakuraone-test-plans");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let cases = [
+        ("unknown-kind.json", r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "warp"}}]}"#, "unknown scenario kind"),
+        ("unknown-field.json", r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "hpl", "warp": 1}}]}"#, "unknown field"),
+        ("bad-schema.json", r#"{"schema": 9, "name": "x", "scenarios": [{"grid": "standard"}]}"#, "schema 9"),
+        ("dup-id.json", r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "sched"}}, {"id": "a", "spec": {"kind": "sched"}}]}"#, "duplicate scenario id"),
+        ("not-json.json", "{", "parsing plan"),
+    ] ;
+    for (file, body, needle) in cases {
+        let path = dir.join(file);
+        std::fs::write(&path, body).unwrap();
+        let p = path.to_str().unwrap().to_string();
+        for action in ["validate", "run"] {
+            let err = commands::plan::handle(&args(&["plan", action, &p, "--json"]))
+                .expect_err(&format!("{action} {file} must fail"));
+            assert!(
+                format!("{err:#}").contains(needle),
+                "{action} {file}: {err:#}"
+            );
+        }
+    }
+    // a missing file is a readable error, not a panic
+    let err = commands::plan::handle(&args(&["plan", "run", "/nonexistent.json"]))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("reading plan"));
+}
+
+#[test]
+fn plan_action_is_required_and_checked() {
+    for (argv, needle) in [
+        (vec!["plan"], "needs an action"),
+        (vec!["plan", "frobnicate"], "unknown plan action"),
+        (vec!["plan", "run"], "needs a plan file"),
+        (vec!["plan", "validate"], "at least one plan file"),
+    ] {
+        let err = commands::plan::handle(&args(&argv)).unwrap_err();
+        assert!(format!("{err:#}").contains(needle), "{argv:?}: {err:#}");
+    }
+}

@@ -1,0 +1,179 @@
+//! Exhaustive round-trip tests for the serializable scenario API: every
+//! scenario any built-in grid can emit must survive
+//! `from_json(to_json(spec)) == spec` and re-emit byte-identical JSON
+//! (the replayability contract manifests and plan files rest on), plus
+//! negative coverage for unknown kinds/fields in hand-written documents.
+
+use sakuraone::runtime::scenario::{descriptor, ScenarioSpec, REGISTRY};
+use sakuraone::runtime::sweep::{
+    campaign_grid, collectives_grid, standard_grid, Scenario,
+};
+use sakuraone::util::json::Json;
+
+fn all_grid_scenarios() -> Vec<Scenario> {
+    let mut all = Vec::new();
+    all.extend(standard_grid(true));
+    all.extend(standard_grid(false));
+    all.extend(collectives_grid(true));
+    all.extend(collectives_grid(false));
+    all.extend(campaign_grid(true));
+    all.extend(campaign_grid(false));
+    all
+}
+
+#[test]
+fn every_builtin_grid_scenario_roundtrips_exactly() {
+    let all = all_grid_scenarios();
+    // a meaningful corpus, not a handful of lucky points
+    assert!(all.len() > 80, "only {} scenarios", all.len());
+    for s in &all {
+        let j = s.spec.to_json();
+        let text = j.emit();
+        // value round trip
+        let back = ScenarioSpec::from_json(&j)
+            .unwrap_or_else(|e| panic!("{}: {e}", s.id));
+        assert_eq!(back, s.spec, "{}: value round trip", s.id);
+        // byte round trip through text (parse + re-emit)
+        let reparsed = Json::parse(&text).unwrap();
+        let back2 = ScenarioSpec::from_json(&reparsed).unwrap();
+        assert_eq!(back2, s.spec, "{}: text round trip", s.id);
+        assert_eq!(back2.to_json().emit(), text, "{}: byte re-emission", s.id);
+        // the embedded kind agrees with the registry dispatch
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), s.kind());
+    }
+}
+
+#[test]
+fn grid_coverage_spans_every_registered_kind() {
+    let all = all_grid_scenarios();
+    for d in REGISTRY {
+        assert!(
+            all.iter().any(|s| s.kind() == d.kind),
+            "no grid scenario exercises kind {}",
+            d.kind
+        );
+    }
+}
+
+#[test]
+fn registry_lookup_is_total_over_grid_scenarios() {
+    for s in all_grid_scenarios() {
+        let d = descriptor(s.kind()).expect("kind resolves in the registry");
+        assert_eq!(d.kind, s.kind());
+    }
+}
+
+#[test]
+fn property_seeded_sparse_docs_decode_and_roundtrip() {
+    // Drive the decoders with seeded sparse documents through the
+    // in-house property harness: whatever decodes must round-trip
+    // exactly, like the grid corpus.
+    use sakuraone::util::proptest::{check, Config};
+    check(
+        Config { cases: 256, ..Config::default() },
+        |rng| {
+            let jobs = 1 + rng.below(500);
+            let bytes = 1e6 * (1.0 + rng.below(1000) as f64);
+            let nodes = 2 + rng.below(99);
+            match rng.below(5) {
+                0 => format!(r#"{{"kind": "sched", "jobs": {jobs}}}"#),
+                1 => format!(
+                    r#"{{"kind": "collective", "bytes": {bytes}, "algo": "tree"}}"#
+                ),
+                2 => format!(r#"{{"kind": "cluster", "nodes": {nodes}}}"#),
+                3 => format!(
+                    r#"{{"kind": "hpl", "params": {{"nb": {}}}}}"#,
+                    256 * (1 + rng.below(8))
+                ),
+                _ => format!(
+                    r#"{{"kind": "campaign", "campaign": {{"duration_days": {}}}}}"#,
+                    1 + rng.below(60)
+                ),
+            }
+        },
+        |doc: &String| {
+            let spec = ScenarioSpec::from_json(&Json::parse(doc)?)
+                .map_err(|e| format!("decode: {e}"))?;
+            let j = spec.to_json();
+            let back = ScenarioSpec::from_json(&j).map_err(|e| format!("re-decode: {e}"))?;
+            if back != spec {
+                return Err("value round trip diverged".into());
+            }
+            if back.to_json().emit() != j.emit() {
+                return Err("byte re-emission diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn unknown_kind_is_rejected_with_known_list() {
+    let err = ScenarioSpec::from_json(
+        &Json::parse(r#"{"kind": "quantum-annealer"}"#).unwrap(),
+    )
+    .unwrap_err();
+    assert!(err.contains("unknown scenario kind"), "{err}");
+    for d in REGISTRY {
+        assert!(err.contains(d.kind), "error must list {}: {err}", d.kind);
+    }
+}
+
+#[test]
+fn unknown_fields_are_rejected_at_every_level() {
+    for doc in [
+        r#"{"kind": "hpl", "paper": true, "warp": 1}"#,
+        r#"{"kind": "hpl", "params": {"n": 4096, "warp": 1}}"#,
+        r#"{"kind": "llm", "llm": {"dp": 4, "warp": 1}}"#,
+        r#"{"kind": "campaign", "campaign": {"warp": 1}}"#,
+        r#"{"kind": "campaign", "campaign": {"cable_plan": {"warp": 1}}}"#,
+        r#"{"kind": "collective", "plan": {"warp": 1}}"#,
+        r#"{"kind": "io500", "params": {"warp": 1}}"#,
+        r#"{"kind": "resilience", "plan": {"warp": 1}}"#,
+    ] {
+        let err = ScenarioSpec::from_json(&Json::parse(doc).unwrap()).unwrap_err();
+        assert!(err.contains("unknown field"), "{doc}: {err}");
+        assert!(err.contains("warp"), "{doc}: {err}");
+    }
+}
+
+#[test]
+fn type_errors_are_rejected() {
+    for doc in [
+        r#"{"kind": "sched", "jobs": "many"}"#,
+        r#"{"kind": "sched", "jobs": 1.5}"#,
+        r#"{"kind": "sched", "jobs": -3}"#,
+        r#"{"kind": "hpl", "paper": 1}"#,
+        r#"{"kind": "llm", "topology": "torus"}"#,
+        r#"{"kind": "collective", "algo": "butterfly"}"#,
+        r#"{"kind": "resilience", "plan": {"spines": [0.5]}}"#,
+        r#"{"kind": 42}"#,
+        r#"[]"#,
+        r#"{}"#,
+    ] {
+        assert!(
+            ScenarioSpec::from_json(&Json::parse(doc).unwrap()).is_err(),
+            "{doc} should be rejected"
+        );
+    }
+}
+
+#[test]
+fn sparse_decode_then_run_matches_full_decode_then_run() {
+    // A sparse spec and its canonical re-emission are the same scenario:
+    // running both must produce identical records (modulo the embedded
+    // spec, which is canonical in both cases by construction).
+    let cfg = {
+        let mut c = sakuraone::config::ClusterConfig::default();
+        c.apply_override("nodes", "16").unwrap();
+        c
+    };
+    let sparse =
+        ScenarioSpec::from_json(&Json::parse(r#"{"kind": "sched", "jobs": 40}"#).unwrap())
+            .unwrap();
+    let canonical = ScenarioSpec::from_json(&sparse.to_json()).unwrap();
+    let a = Scenario::new("sched/40", sparse).run(&cfg, 5);
+    let b = Scenario::new("sched/40", canonical).run(&cfg, 5);
+    assert_eq!(a, b);
+    assert!(a.spec.is_some());
+}
