@@ -1,0 +1,228 @@
+//! `sakuraone cluster` — inspect the platform registry and the versioned
+//! cluster spec codec (see docs/clusters.md).
+//!
+//!   cluster list                 registry platforms + headline shape
+//!   cluster show NAME|FILE       canonical cluster spec (codec output)
+//!   cluster validate [ARG...]    decode + invariant-check; no args =
+//!                                every registry platform
+//!   cluster diff A B             field-by-field spec diff
+//!
+//! `show`/`validate`/`diff` arguments are registry platform names or
+//! paths to JSON cluster spec files (sparse specs allowed — a spec file
+//! may name its base via `"platform"`). The manifest `--json` emits uses
+//! the shown/validated cluster as its root spec, so `cluster show NAME
+//! --json` round-trips through `ClusterConfig::from_json` byte-exactly.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{spec, ClusterConfig, PLATFORMS};
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    if args.get("platform").is_some() {
+        // every other subcommand takes --platform as its base; here
+        // platforms are positional operands, so a flag that silently did
+        // nothing would mislead
+        bail!(
+            "cluster takes platform names as positional arguments \
+             (e.g. `cluster show abci3-like`); --platform is not used here"
+        );
+    }
+    match args.positional.first().map(String::as_str) {
+        Some("list") => list(args),
+        Some("show") => show(args),
+        Some("validate") => validate(args),
+        Some("diff") => diff(args),
+        Some(other) => {
+            bail!("unknown cluster action {other:?} (list | show | validate | diff)")
+        }
+        None => bail!(
+            "cluster needs an action: cluster list | show NAME|FILE | \
+             validate [NAME|FILE...] | diff A B"
+        ),
+    }
+}
+
+/// Resolve a platform name or spec-file path to a validated cluster.
+fn resolve(arg: &str) -> Result<ClusterConfig> {
+    if let Some(p) = spec::platform(arg) {
+        return Ok((p.build)());
+    }
+    if std::path::Path::new(arg).is_file() {
+        let text = std::fs::read_to_string(arg)
+            .map_err(|e| anyhow!("reading cluster spec {arg}: {e}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing cluster spec {arg}: {e}"))?;
+        return spec::from_json_at(&j, arg).map_err(anyhow::Error::msg);
+    }
+    bail!(
+        "unknown platform or cluster spec file {arg:?} (known platforms: {})",
+        spec::known_platforms()
+    )
+}
+
+fn platform_record(name: &str, cfg: &ClusterConfig) -> ScenarioRecord {
+    ScenarioRecord::new(&format!("cluster/{name}"), "cluster")
+        .param("name", &cfg.name)
+        .param("topology", cfg.network.topology.name())
+        .param("switch_chip", &cfg.network.switch_chip)
+        .metric("nodes", cfg.nodes as f64)
+        .metric("total_gpus", cfg.total_gpus() as f64)
+        .metric("spines", cfg.network.spines as f64)
+        .metric("node_leaf_gbps", cfg.network.node_leaf_gbps)
+        .metric("leaf_spine_gbps", cfg.network.leaf_spine_gbps)
+        .metric("storage_servers", cfg.storage.servers as f64)
+}
+
+fn list(args: &Args) -> Result<RunManifest> {
+    let mut manifest =
+        RunManifest::new("cluster-list", 0, ClusterConfig::default().to_json());
+    let mut t = Table::new(
+        &format!(
+            "Platform registry (cluster schema {})",
+            crate::config::CLUSTER_SCHEMA_VERSION
+        ),
+        &["Platform", "Nodes", "GPUs", "Topology", "Fabric", "Summary"],
+    );
+    for p in PLATFORMS {
+        let cfg = (p.build)();
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        t.row(&[
+            p.name.to_string(),
+            cfg.nodes.to_string(),
+            cfg.total_gpus().to_string(),
+            cfg.network.topology.name().to_string(),
+            format!(
+                "{:.0}G/{:.0}G x{}",
+                cfg.network.node_leaf_gbps,
+                cfg.network.leaf_spine_gbps,
+                cfg.network.leaf_spine_parallel
+            ),
+            p.summary.to_string(),
+        ]);
+        manifest.note(format!("platform {}: {}", p.name, p.summary));
+        manifest.push(platform_record(p.name, &cfg));
+    }
+    if !super::quiet(args) {
+        println!("{}", t.render());
+    }
+    Ok(manifest)
+}
+
+fn show(args: &Args) -> Result<RunManifest> {
+    let arg = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("cluster show needs a platform name or spec file"))?;
+    let cfg = resolve(arg)?;
+    // The manifest root *is* the canonical spec, so `--json` output
+    // round-trips through the codec.
+    let mut manifest = RunManifest::new("cluster-show", 0, cfg.to_json());
+    manifest.push(platform_record(arg, &cfg));
+    if !super::quiet(args) {
+        println!("{}", cfg.to_json().emit());
+    }
+    Ok(manifest)
+}
+
+fn validate(args: &Args) -> Result<RunManifest> {
+    // No arguments: validate the whole registry (what CI runs).
+    let names: Vec<String> = if args.positional.len() > 1 {
+        args.positional[1..].to_vec()
+    } else {
+        PLATFORMS.iter().map(|p| p.name.to_string()).collect()
+    };
+    let mut manifest =
+        RunManifest::new("cluster-validate", 0, ClusterConfig::default().to_json());
+    for name in &names {
+        let cfg = resolve(name)?;
+        cfg.validate().map_err(|e| anyhow!("{name}: {e}"))?;
+        // the codec round trip is part of the contract being validated
+        let j = cfg.to_json();
+        let back = ClusterConfig::from_json(&j).map_err(|e| anyhow!("{name}: {e}"))?;
+        if back.to_json().emit() != j.emit() {
+            bail!("{name}: canonical spec does not re-emit byte-identically");
+        }
+        let note = format!(
+            "{name}: ok — {} ({} nodes, {} GPUs, {}, round-trip exact)",
+            cfg.name,
+            cfg.nodes,
+            cfg.total_gpus(),
+            cfg.network.topology.name(),
+        );
+        if !super::quiet(args) {
+            println!("{note}");
+        }
+        manifest.note(note);
+        manifest.push(platform_record(name, &cfg));
+    }
+    Ok(manifest)
+}
+
+/// Flatten a spec to dotted leaf paths for the diff view.
+fn flatten(prefix: &str, j: &Json, out: &mut Vec<(String, String)>) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let path = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                flatten(&path, v, out);
+            }
+        }
+        other => out.push((prefix.to_string(), other.emit())),
+    }
+}
+
+fn diff(args: &Args) -> Result<RunManifest> {
+    let (a, b) = match &args.positional[1..] {
+        [a, b] => (a, b),
+        _ => bail!("cluster diff needs exactly two platforms/spec files: diff A B"),
+    };
+    let ca = resolve(a)?;
+    let cb = resolve(b)?;
+    let mut fa = Vec::new();
+    let mut fb = Vec::new();
+    flatten("", &ca.to_json(), &mut fa);
+    flatten("", &cb.to_json(), &mut fb);
+    // the codec emits the identical field set for every cluster, so the
+    // flattened paths line up one-to-one
+    debug_assert_eq!(
+        fa.iter().map(|(p, _)| p).collect::<Vec<_>>(),
+        fb.iter().map(|(p, _)| p).collect::<Vec<_>>()
+    );
+
+    let mut manifest = RunManifest::new("cluster-diff", 0, ca.to_json());
+    let mut t = Table::new(
+        &format!("Cluster diff — {a} vs {b}"),
+        &["Field", a.as_str(), b.as_str()],
+    );
+    let mut differing = 0usize;
+    for ((path, va), (_, vb)) in fa.iter().zip(&fb) {
+        if va != vb {
+            differing += 1;
+            t.row(&[path.clone(), va.clone(), vb.clone()]);
+            manifest.note(format!("{path}: {va} -> {vb}"));
+        }
+    }
+    manifest.push(
+        ScenarioRecord::new(&format!("cluster-diff/{a}-vs-{b}"), "cluster")
+            .param("a", a)
+            .param("b", b)
+            .metric("fields_differing", differing as f64)
+            .metric("fields_compared", fa.len() as f64),
+    );
+    if !super::quiet(args) {
+        if differing == 0 {
+            println!("{a} and {b} resolve to identical cluster specs");
+        } else {
+            println!("{}", t.render());
+        }
+    }
+    Ok(manifest)
+}

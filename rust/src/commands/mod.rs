@@ -6,6 +6,7 @@
 
 pub mod campaign;
 pub mod checkpoint;
+pub mod cluster;
 pub mod collectives;
 pub mod config;
 pub mod hpcg;
@@ -34,27 +35,40 @@ pub const FLAGS: &[&str] = &[
     "software", "json", "degraded", "quick", "serial",
 ];
 
-/// The `--key value` cluster overrides every subcommand accepts.
-pub(crate) const CLUSTER_OVERRIDE_KEYS: &[&str] =
-    &["nodes", "pods", "topology", "rails", "spines", "gpus-per-node"];
-
 /// Apply the CLI's `--nodes/--topology/...` overrides onto `cfg` (on top
-/// of whatever base the caller built — defaults, or a plan's `config`).
+/// of whatever base the caller built — a platform, or a plan's cluster).
+/// The key set is the codec's [`crate::config::spec::OVERRIDE_FIELDS`] —
+/// one source of truth for CLI, plan `config` maps and JSON specs.
 pub(crate) fn apply_cluster_overrides(
     cfg: &mut ClusterConfig,
     args: &Args,
 ) -> Result<()> {
-    for &key in CLUSTER_OVERRIDE_KEYS {
-        if let Some(v) = args.get(key) {
-            cfg.apply_override(key, v).map_err(anyhow::Error::msg)?;
-        }
-    }
-    Ok(())
+    // Batch application validates once at the end, so key order (we walk
+    // OVERRIDE_FIELDS, which is sorted) cannot reject a valid final
+    // combination like `--topology rail-only --spines 0`.
+    let pairs = crate::config::spec::OVERRIDE_FIELDS
+        .iter()
+        .filter_map(|(key, _)| args.get(key).map(|v| (*key, v)));
+    crate::config::spec::apply_overrides(cfg, pairs).map_err(anyhow::Error::msg)
 }
 
-/// Shared `--nodes/--topology/...` overrides on the paper's default cluster.
+/// The base cluster the CLI starts from: `--platform NAME` picks a
+/// registry platform, default `sakuraone` (the paper cluster).
+pub(crate) fn platform_base(args: &Args) -> Result<ClusterConfig> {
+    match args.get("platform") {
+        None => Ok(ClusterConfig::default()),
+        Some(name) => {
+            let p = crate::config::spec::platform_or_err(name)
+                .map_err(anyhow::Error::msg)?;
+            Ok((p.build)())
+        }
+    }
+}
+
+/// Shared `--platform` + `--nodes/--topology/...` resolution every
+/// subcommand uses.
 pub(crate) fn cluster_config(args: &Args) -> Result<ClusterConfig> {
-    let mut cfg = ClusterConfig::default();
+    let mut cfg = platform_base(args)?;
     apply_cluster_overrides(&mut cfg, args)?;
     Ok(cfg)
 }
@@ -103,10 +117,16 @@ USAGE: sakuraone <subcommand> [options]
             [--baseline FILE] [--tolerance PCT] [--plan FILE]
   plan      run FILE [--workers N] [--seed S]     (user-authored sweeps,
             | validate FILE... | list              see docs/plans.md)
+  cluster   list | show NAME|FILE | validate [NAME|FILE...] | diff A B
+            (platform registry + cluster spec codec, see docs/clusters.md)
 
 Every subcommand also accepts:
   --json        emit the run manifest as JSON on stdout (quiet tables)
   --out FILE    write the run manifest to FILE
+  --platform P  start from a registry platform instead of sakuraone
+                (see `sakuraone cluster list`), overrides apply on top;
+                not with `cluster` (positional) or a plan whose
+                "cluster" field already picks platforms
 
 Topology kinds: rail-optimized | rail-only | fat-tree | dragonfly"#,
         crate::version()
@@ -155,6 +175,53 @@ mod tests {
     fn bad_override_is_error() {
         let a = parse(&["topo", "--topology", "torus"]);
         assert!(cluster_config(&a).is_err());
+    }
+
+    #[test]
+    fn override_order_cannot_reject_valid_combinations() {
+        // spines applies before topology (sorted key walk); only the
+        // final state is validated, so this spine-less rail-only config
+        // is accepted.
+        let a = parse(&["topo", "--topology", "rail-only", "--spines", "0"]);
+        let cfg = cluster_config(&a).unwrap();
+        assert_eq!(cfg.network.topology.name(), "rail-only");
+        assert_eq!(cfg.network.spines, 0);
+
+        // ...but an invalid final state still fails
+        let a = parse(&["topo", "--spines", "0"]);
+        assert!(cluster_config(&a).is_err());
+    }
+
+    #[test]
+    fn platform_flag_selects_a_registry_base() {
+        let a = parse(&["topo", "--platform", "abci3-like"]);
+        let cfg = cluster_config(&a).unwrap();
+        assert_eq!(cfg.name, "ABCI3-LIKE");
+        assert_eq!(cfg.network.topology.name(), "fat-tree");
+
+        // CLI overrides still win on top of the platform base
+        let a = parse(&["topo", "--platform", "sakuraone-halfscale", "--nodes", "20"]);
+        let cfg = cluster_config(&a).unwrap();
+        assert_eq!(cfg.nodes, 20);
+        assert_eq!(cfg.network.spines, 4);
+
+        let a = parse(&["topo", "--platform", "tsubame"]);
+        let err = cluster_config(&a).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown platform"));
+    }
+
+    #[test]
+    fn every_override_key_is_accepted_from_the_cli() {
+        // one source of truth: each codec override key works as --key value
+        for (key, _) in crate::config::spec::OVERRIDE_FIELDS {
+            let value = match *key {
+                "topology" => "fat-tree",
+                "ethernet-efficiency" => "0.9",
+                _ => "8",
+            };
+            let a = parse(&["topo", &format!("--{key}"), value]);
+            cluster_config(&a).unwrap_or_else(|e| panic!("--{key}: {e}"));
+        }
     }
 
     #[test]

@@ -7,16 +7,17 @@
 //!
 //! `plan run` manifests are byte-identical for any `--workers` value with
 //! the same seed — the same contract as `suite`/`collectives`/`campaign`,
-//! because plans execute through the same `run_sweep_named` engine with
-//! per-scenario seeds derived from `(seed, index)`.
+//! because plans execute through the same `run_sweep_runs` engine with
+//! per-scenario seeds derived from the global `(seed, index)` scheme,
+//! including cross-platform plans (one run group per platform).
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::ClusterConfig;
 use crate::runtime::plan::{grid_len, SweepPlan, GRID_NAMES, PLAN_SCHEMA_VERSION};
 use crate::runtime::run_manifest::RunManifest;
-use crate::runtime::scenario::{Scenario, REGISTRY};
-use crate::runtime::sweep::{run_sweep_named, SweepConfig};
+use crate::runtime::scenario::REGISTRY;
+use crate::runtime::sweep::{run_sweep_runs, SweepConfig, SweepRun};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -39,15 +40,15 @@ pub fn load(path: &str) -> Result<SweepPlan> {
     SweepPlan::from_json(&j).map_err(|e| anyhow!("{path}: {e}"))
 }
 
-/// Load a plan and fully resolve it against the CLI: the plan's `config`
-/// overrides apply first, CLI cluster overrides win on top, and the seed
-/// is CLI `--seed` > plan seed > default. Shared by `plan run` and
-/// `suite --plan` so the two entry points cannot drift. Returns
-/// `(cfg, scenarios, seed, plan name)`.
+/// Load a plan and fully resolve it against the CLI: the plan's cluster
+/// refs and `config` overrides apply first, CLI cluster overrides win on
+/// top (of every platform group), and the seed is CLI `--seed` > plan
+/// seed > default. Shared by `plan run` and `suite --plan` so the two
+/// entry points cannot drift. Returns `(runs, seed, plan name)`.
 pub(crate) fn load_resolved(
     path: &str,
     args: &Args,
-) -> Result<(ClusterConfig, Vec<Scenario>, u64, String)> {
+) -> Result<(Vec<SweepRun>, u64, String)> {
     if args.flag("quick") {
         // A plan chooses its own grid subsets (`"quick"` on its grid
         // entries); silently ignoring the flag would change what a
@@ -58,13 +59,20 @@ pub(crate) fn load_resolved(
         );
     }
     let plan = load(path)?;
-    let (mut cfg, scenarios) = plan
-        .resolve(&ClusterConfig::default())
-        .map_err(|e| anyhow!("{path}: {e}"))?;
-    super::apply_cluster_overrides(&mut cfg, args)?;
+    if args.get("platform").is_some() && !plan.clusters.is_empty() {
+        bail!(
+            "--platform conflicts with the plan's \"cluster\" field; \
+             edit the plan instead"
+        );
+    }
+    let base = super::platform_base(args)?;
+    let mut runs = plan.resolve(&base).map_err(|e| anyhow!("{path}: {e}"))?;
+    for run in &mut runs {
+        super::apply_cluster_overrides(&mut run.cfg, args)?;
+    }
     let cli_seed = args.get_opt_u64("seed").map_err(anyhow::Error::msg)?;
     let seed = plan.seed_or(cli_seed, 42);
-    Ok((cfg, scenarios, seed, plan.name))
+    Ok((runs, seed, plan.name))
 }
 
 fn run(args: &Args) -> Result<RunManifest> {
@@ -72,22 +80,19 @@ fn run(args: &Args) -> Result<RunManifest> {
         .positional
         .get(1)
         .ok_or_else(|| anyhow!("plan run needs a plan file: plan run FILE"))?;
-    let (cfg, scenarios, seed, name) = load_resolved(path, args)?;
+    let (runs, seed, name) = load_resolved(path, args)?;
     let workers = super::worker_count(args)?;
 
     let t0 = std::time::Instant::now();
-    let manifest = run_sweep_named(
-        &cfg,
-        &scenarios,
-        &SweepConfig { workers, seed },
-        &format!("plan/{name}"),
-    );
+    let manifest =
+        run_sweep_runs(&runs, &SweepConfig { workers, seed }, &format!("plan/{name}"));
     eprintln!(
-        "plan {}: {} scenarios on {} worker(s) in {:.2}s (seed {})",
+        "plan {}: {} scenarios on {} worker(s) in {:.2}s ({} cluster(s), seed {})",
         name,
         manifest.scenarios.len(),
         workers,
         t0.elapsed().as_secs_f64(),
+        runs.len(),
         seed,
     );
 
@@ -102,23 +107,31 @@ fn validate(args: &Args) -> Result<RunManifest> {
     if files.is_empty() {
         bail!("plan validate needs at least one plan file");
     }
-    let mut manifest =
-        RunManifest::new("plan-validate", 0, ClusterConfig::default().to_json());
+    // honor --platform like `plan run` does (and name-check it), so a
+    // validate invocation never silently drops a CLI flag
+    let base = super::platform_base(args)?;
+    let mut manifest = RunManifest::new("plan-validate", 0, base.to_json());
     for path in files {
         let plan = load(path)?;
-        let (_, scenarios) = plan
-            .resolve(&ClusterConfig::default())
-            .map_err(|e| anyhow!("{path}: {e}"))?;
+        if args.get("platform").is_some() && !plan.clusters.is_empty() {
+            bail!(
+                "{path}: --platform conflicts with the plan's \"cluster\" \
+                 field; edit the plan instead"
+            );
+        }
+        let runs = plan.resolve(&base).map_err(|e| anyhow!("{path}: {e}"))?;
+        let total: usize = runs.iter().map(|r| r.scenarios.len()).sum();
         let inline = plan
             .entries
             .iter()
             .filter(|e| matches!(e, crate::runtime::plan::PlanEntry::Spec(_)))
             .count();
         let note = format!(
-            "{path}: ok — plan {:?}, {} scenario(s) ({} inline, {} grid \
-             entr{}), seed {}, {} config override(s)",
+            "{path}: ok — plan {:?}, {} scenario(s) on {} cluster(s) \
+             ({} inline, {} grid entr{}), seed {}, {} config override(s)",
             plan.name,
-            scenarios.len(),
+            total,
+            runs.len(),
             inline,
             plan.entries.len() - inline,
             if plan.entries.len() - inline == 1 { "y" } else { "ies" },

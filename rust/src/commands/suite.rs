@@ -12,31 +12,35 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::run_manifest::{compare_to_baseline, RunManifest};
-use crate::runtime::sweep::{run_sweep, standard_grid, SweepConfig};
+use crate::runtime::sweep::{run_sweep_runs, standard_grid, SweepConfig, SweepRun};
 use crate::util::cli::Args;
 use crate::util::table::Table;
 
 pub fn handle(args: &Args) -> Result<RunManifest> {
     let quick = args.flag("quick");
     let workers = super::worker_count(args)?;
-    // Grid + config + seed: the built-in standard grid by default, or a
-    // user-authored plan (its config overrides apply first, CLI wins;
-    // the plan path parses --seed itself inside `plan::load_resolved`).
-    let (cfg, scenarios, seed, grid_name) = match args.get("plan") {
+    // Runs + seed: the built-in standard grid on one cluster by default,
+    // or a user-authored plan — possibly cross-platform (its cluster refs
+    // and config overrides apply first, CLI wins; the plan path parses
+    // --seed itself inside `plan::load_resolved`).
+    let (runs, seed, grid_name) = match args.get("plan") {
         None => (
-            super::cluster_config(args)?,
-            standard_grid(quick),
+            vec![SweepRun {
+                label: None,
+                cfg: super::cluster_config(args)?,
+                scenarios: standard_grid(quick),
+            }],
             args.get_u64("seed", 42).map_err(anyhow::Error::msg)?,
             if quick { "quick".to_string() } else { "full".to_string() },
         ),
         Some(path) => {
-            let (cfg, scenarios, seed, name) = super::plan::load_resolved(path, args)?;
-            (cfg, scenarios, seed, format!("plan {name}"))
+            let (runs, seed, name) = super::plan::load_resolved(path, args)?;
+            (runs, seed, format!("plan {name}"))
         }
     };
 
     let t0 = std::time::Instant::now();
-    let manifest = run_sweep(&cfg, &scenarios, &SweepConfig { workers, seed });
+    let manifest = run_sweep_runs(&runs, &SweepConfig { workers, seed }, "suite");
     let wall = t0.elapsed().as_secs_f64();
     eprintln!(
         "suite: {} scenarios on {} worker(s) in {:.2}s (grid: {}, seed {})",

@@ -1,14 +1,21 @@
 //! Typed cluster configuration. Defaults reproduce the paper's Tables 1
 //! (compute node), 4 (interconnect), 5 (storage) and 6 (system software).
 //!
-//! The config is plain Rust (builder-style mutation + JSON dump via
-//! `util::json`); CLI overrides arrive as `--key value` pairs.
+//! The config is a first-class, serializable API: [`spec`] holds the
+//! versioned canonical JSON codec (`to_json`/`from_json`, cluster schema
+//! [`spec::CLUSTER_SCHEMA_VERSION`]), the named platform registry
+//! ([`spec::PLATFORMS`]) and the `--key value` override layer the CLI and
+//! sweep plans share. Every decode and override path ends in
+//! [`ClusterConfig::validate`] (see docs/clusters.md).
+
+pub mod spec;
+
+pub use spec::{platform, PlatformDescriptor, CLUSTER_SCHEMA_VERSION, PLATFORMS};
 
 use crate::util::json::Json;
-use std::collections::BTreeMap;
 
 /// Compute-node hardware (paper Table 1).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NodeConfig {
     pub chassis: String,
     pub cpu_model: String,
@@ -49,7 +56,7 @@ impl Default for NodeConfig {
 }
 
 /// Interconnect fabric (paper Table 4 / Figure 2).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NetworkConfig {
     pub topology: TopologyKind,
     pub pods: usize,
@@ -80,13 +87,20 @@ pub enum TopologyKind {
 }
 
 impl TopologyKind {
+    /// Every kind, in wire-name order (for docs and error messages).
+    pub const ALL: [TopologyKind; 4] =
+        [Self::RailOptimized, Self::RailOnly, Self::FatTree, Self::Dragonfly];
+
     pub fn parse(s: &str) -> Result<Self, String> {
         match s {
             "rail-optimized" | "rail_optimized" => Ok(Self::RailOptimized),
             "rail-only" | "rail_only" => Ok(Self::RailOnly),
             "fat-tree" | "fat_tree" => Ok(Self::FatTree),
             "dragonfly" => Ok(Self::Dragonfly),
-            other => Err(format!("unknown topology {other:?}")),
+            other => Err(format!(
+                "unknown topology {other:?} (known: {})",
+                Self::ALL.map(|k| k.name()).join(", ")
+            )),
         }
     }
 
@@ -123,7 +137,7 @@ impl Default for NetworkConfig {
 }
 
 /// Storage subsystem (paper Table 5 + §2.3).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StorageConfig {
     pub chassis: String,
     pub servers: usize,
@@ -170,7 +184,7 @@ impl Default for StorageConfig {
 
 /// Software stack (paper Table 6) — informational inventory used by
 /// `sakuraone report --software` and the module-environment simulation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SoftwareConfig {
     pub os: String,
     pub container: String,
@@ -215,7 +229,7 @@ impl Default for SoftwareConfig {
 }
 
 /// The whole SAKURAONE deployment.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterConfig {
     pub name: String,
     pub nodes: usize,
@@ -247,77 +261,109 @@ impl ClusterConfig {
         self.nodes * self.node.cpus_per_node * self.node.cores_per_cpu
     }
 
-    /// Apply `--key value` overrides from the CLI. Supported keys are the
-    /// ones experiments sweep; unknown keys are an error (typo safety).
+    /// Apply a `--key value` override (CLI and plan `config` maps) through
+    /// the cluster codec's field paths — see [`spec::apply_override`] and
+    /// [`spec::OVERRIDE_FIELDS`] for the shared key set and error surface.
     pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), String> {
-        let parse_usize = |v: &str| {
-            v.parse::<usize>().map_err(|_| format!("{key}: bad integer {v:?}"))
-        };
-        let parse_f64 = |v: &str| {
-            v.parse::<f64>().map_err(|_| format!("{key}: bad number {v:?}"))
-        };
-        match key {
-            "nodes" => {
-                self.nodes = parse_usize(value)?;
-                // keep pods consistent: split evenly across 2 pods
-                self.network.nodes_per_pod = self.nodes.div_ceil(self.network.pods);
-            }
-            "gpus-per-node" => self.node.gpus_per_node = parse_usize(value)?,
-            "topology" => self.network.topology = TopologyKind::parse(value)?,
-            "pods" => {
-                let pods = parse_usize(value)?;
-                if pods == 0 {
-                    return Err("pods: must be at least 1".into());
-                }
-                self.network.pods = pods;
-                self.network.nodes_per_pod = self.nodes.div_ceil(pods);
-            }
-            "rails" => {
-                self.network.rails = parse_usize(value)?;
-                self.network.leaf_per_pod = self.network.rails;
-            }
-            "spines" => self.network.spines = parse_usize(value)?,
-            "node-leaf-gbps" => self.network.node_leaf_gbps = parse_f64(value)?,
-            "leaf-spine-gbps" => self.network.leaf_spine_gbps = parse_f64(value)?,
-            "ethernet-efficiency" => {
-                self.network.ethernet_efficiency = parse_f64(value)?
-            }
-            "storage-servers" => self.storage.servers = parse_usize(value)?,
-            other => return Err(format!("unknown config override {other:?}")),
-        }
-        Ok(())
+        spec::apply_override(self, key, value)
     }
 
-    /// Machine-readable dump (the `sakuraone config --dump` output).
+    /// Canonical cluster spec (cluster schema
+    /// [`spec::CLUSTER_SCHEMA_VERSION`]): every field, keys sorted,
+    /// byte-deterministic — what `sakuraone config --dump` prints, every
+    /// run manifest embeds at its root, and [`ClusterConfig::from_json`]
+    /// round-trips exactly.
     pub fn to_json(&self) -> Json {
-        let mut m = BTreeMap::new();
-        m.insert("name".into(), Json::Str(self.name.clone()));
-        m.insert("nodes".into(), Json::Num(self.nodes as f64));
-        m.insert(
-            "gpus_per_node".into(),
-            Json::Num(self.node.gpus_per_node as f64),
-        );
-        m.insert("total_gpus".into(), Json::Num(self.total_gpus() as f64));
-        m.insert(
-            "topology".into(),
-            Json::Str(self.network.topology.name().into()),
-        );
-        m.insert("pods".into(), Json::Num(self.network.pods as f64));
-        m.insert("rails".into(), Json::Num(self.network.rails as f64));
-        m.insert("spines".into(), Json::Num(self.network.spines as f64));
-        m.insert(
-            "leaf_spine_gbps".into(),
-            Json::Num(self.network.leaf_spine_gbps),
-        );
-        m.insert(
-            "storage_servers".into(),
-            Json::Num(self.storage.servers as f64),
-        );
-        m.insert(
-            "storage_theoretical_gbps".into(),
-            Json::Num(self.storage.theoretical_bw_bytes_per_s / 1e9),
-        );
-        Json::Obj(m)
+        spec::to_json(self)
+    }
+
+    /// Decode a (possibly sparse) cluster spec; missing fields come from
+    /// the `"platform"` base (default `sakuraone`), unknown fields are an
+    /// error, and the result is validated.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        spec::from_json(j)
+    }
+
+    /// Enforce the documented cluster invariants (docs/clusters.md). Every
+    /// codec decode and every override path calls this, so no API hands
+    /// out an inconsistent cluster. Returns the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        fn positive(v: f64, what: &str) -> Result<(), String> {
+            if v > 0.0 && v.is_finite() {
+                Ok(())
+            } else {
+                Err(format!("{what}: must be positive and finite, got {v}"))
+            }
+        }
+        fn at_least_one(v: usize, what: &str) -> Result<(), String> {
+            if v >= 1 {
+                Ok(())
+            } else {
+                Err(format!("{what}: must be at least 1"))
+            }
+        }
+
+        if self.name.is_empty() {
+            return Err("name: must not be empty".into());
+        }
+        at_least_one(self.nodes, "nodes")?;
+        at_least_one(self.node.cpus_per_node, "node.cpus_per_node")?;
+        at_least_one(self.node.cores_per_cpu, "node.cores_per_cpu")?;
+        at_least_one(self.node.gpus_per_node, "node.gpus_per_node")?;
+        at_least_one(self.node.compute_nics, "node.compute_nics")?;
+        positive(self.node.dram_bytes, "node.dram_bytes")?;
+        positive(self.node.dram_bw_bytes_per_s, "node.dram_bw_bytes_per_s")?;
+        positive(self.node.compute_nic_gbps, "node.compute_nic_gbps")?;
+        positive(self.node.storage_nic_gbps, "node.storage_nic_gbps")?;
+
+        let net = &self.network;
+        at_least_one(net.pods, "network.pods")?;
+        at_least_one(net.nodes_per_pod, "network.nodes_per_pod")?;
+        if net.pods * net.nodes_per_pod < self.nodes {
+            return Err(format!(
+                "network: pods * nodes_per_pod ({} * {}) must cover nodes ({})",
+                net.pods, net.nodes_per_pod, self.nodes
+            ));
+        }
+        at_least_one(net.rails, "network.rails")?;
+        at_least_one(net.leaf_per_pod, "network.leaf_per_pod")?;
+        // rail-only fabrics have no spine tier; dragonfly derives its
+        // groups from pods/leafs — only the Clos builds consume `spines`.
+        if matches!(net.topology, TopologyKind::RailOptimized | TopologyKind::FatTree) {
+            at_least_one(net.spines, "network.spines")?;
+        }
+        at_least_one(net.leaf_spine_parallel, "network.leaf_spine_parallel")?;
+        positive(net.node_leaf_gbps, "network.node_leaf_gbps")?;
+        positive(net.leaf_spine_gbps, "network.leaf_spine_gbps")?;
+        positive(net.switch_capacity_tbps, "network.switch_capacity_tbps")?;
+        positive(net.switch_latency_ns, "network.switch_latency_ns")?;
+        positive(net.nic_latency_ns, "network.nic_latency_ns")?;
+        if !(net.ethernet_efficiency > 0.0 && net.ethernet_efficiency <= 1.0) {
+            return Err(format!(
+                "network.ethernet_efficiency: must be in (0, 1], got {}",
+                net.ethernet_efficiency
+            ));
+        }
+
+        let st = &self.storage;
+        at_least_one(st.servers, "storage.servers")?;
+        at_least_one(st.controllers_per_server, "storage.controllers_per_server")?;
+        at_least_one(st.nvme_per_server, "storage.nvme_per_server")?;
+        at_least_one(st.server_nics, "storage.server_nics")?;
+        at_least_one(st.storage_switches, "storage.storage_switches")?;
+        positive(st.nvme_bytes, "storage.nvme_bytes")?;
+        positive(st.nvme_read_bps, "storage.nvme_read_bps")?;
+        positive(st.nvme_write_bps, "storage.nvme_write_bps")?;
+        positive(st.server_nic_gbps, "storage.server_nic_gbps")?;
+        positive(
+            st.theoretical_bw_bytes_per_s,
+            "storage.theoretical_bw_bytes_per_s",
+        )?;
+        positive(st.mds_create_ops, "storage.mds_create_ops")?;
+        positive(st.mds_stat_ops, "storage.mds_stat_ops")?;
+        positive(st.mds_delete_ops, "storage.mds_delete_ops")?;
+        positive(st.mds_readdir_ops, "storage.mds_readdir_ops")?;
+        Ok(())
     }
 }
 
@@ -369,20 +415,66 @@ mod tests {
     }
 
     #[test]
-    fn json_dump_contains_headline_fields() {
-        let j = ClusterConfig::default().to_json();
-        assert_eq!(j.get("total_gpus").unwrap().as_usize().unwrap(), 800);
+    fn json_dump_is_the_canonical_cluster_spec() {
+        let c = ClusterConfig::default();
+        let j = c.to_json();
+        assert_eq!(j.get("nodes").unwrap().as_usize().unwrap(), 100);
         assert_eq!(
-            j.get("topology").unwrap().as_str().unwrap(),
+            j.get("network").unwrap().get("topology").unwrap().as_str().unwrap(),
             "rail-optimized"
         );
+        // no derived fields: the dump is exactly the decodable field set
+        assert!(j.get("total_gpus").is_none());
+        assert_eq!(ClusterConfig::from_json(&j).unwrap(), c);
     }
 
     #[test]
-    fn topology_kind_roundtrip() {
+    fn default_config_validates() {
+        ClusterConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_documented_violations() {
+        let mut c = ClusterConfig::default();
+        c.nodes = 0;
+        assert!(c.validate().unwrap_err().contains("nodes"));
+
+        let mut c = ClusterConfig::default();
+        c.network.nodes_per_pod = 10;
+        assert!(c.validate().unwrap_err().contains("pods * nodes_per_pod"));
+
+        let mut c = ClusterConfig::default();
+        c.network.spines = 0;
+        assert!(c.validate().is_err());
+        // ...but a rail-only fabric has no spine tier to require
+        c.network.topology = TopologyKind::RailOnly;
+        c.validate().unwrap();
+
+        let mut c = ClusterConfig::default();
+        c.network.ethernet_efficiency = 0.0;
+        assert!(c.validate().unwrap_err().contains("ethernet_efficiency"));
+
+        let mut c = ClusterConfig::default();
+        c.storage.nvme_write_bps = -1.0;
+        assert!(c.validate().unwrap_err().contains("nvme_write_bps"));
+    }
+
+    #[test]
+    fn topology_kind_roundtrip_and_exact_parse_error() {
         for k in ["rail-optimized", "rail-only", "fat-tree", "dragonfly"] {
             assert_eq!(TopologyKind::parse(k).unwrap().name(), k);
         }
-        assert!(TopologyKind::parse("torus").is_err());
+        // exact message: lists every known kind (plan files and CLI both
+        // surface this string verbatim)
+        assert_eq!(
+            TopologyKind::parse("torus").unwrap_err(),
+            "unknown topology \"torus\" (known: rail-optimized, rail-only, \
+             fat-tree, dragonfly)"
+        );
+        assert_eq!(
+            TopologyKind::parse("Fat-Tree").unwrap_err(),
+            "unknown topology \"Fat-Tree\" (known: rail-optimized, rail-only, \
+             fat-tree, dragonfly)"
+        );
     }
 }

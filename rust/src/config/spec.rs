@@ -1,0 +1,827 @@
+//! First-class cluster API: the versioned canonical JSON codec for
+//! [`ClusterConfig`] and the named **platform registry** — the cluster-side
+//! mirror of `runtime::scenario`'s spec codec and kind registry.
+//!
+//! Encoding contract (cluster schema [`CLUSTER_SCHEMA_VERSION`]):
+//! - [`to_json`] emits the canonical object: every field present, keys
+//!   sorted (`util::json` objects are `BTreeMap`s), nested sections
+//!   `node`/`network`/`storage`/`software` — deterministic bytes;
+//! - [`from_json`] accepts sparse objects: an optional `"platform"` field
+//!   names the registry platform whose constructor provides the base
+//!   (default `sakuraone`), missing fields take the base's values, unknown
+//!   fields or platform names are an error (typo safety for hand-written
+//!   cluster files and plan documents);
+//! - two ergonomic couplings mirror the CLI: setting `nodes` or
+//!   `network.pods` without an explicit `network.nodes_per_pod` rebalances
+//!   `nodes_per_pod = ceil(nodes / pods)`, and setting `network.rails`
+//!   without `network.leaf_per_pod` keeps one leaf per rail. Canonical
+//!   objects carry every field, so re-decoding them never re-triggers a
+//!   coupling — the round trip is exact: `from_json(to_json(c)) == c` with
+//!   byte-identical re-emission;
+//! - every decode and override path ends in [`ClusterConfig::validate`],
+//!   so no API hands out a cluster that violates the documented
+//!   invariants (see docs/clusters.md);
+//! - integer fields ride JSON numbers (f64) under the same `< 2e15`
+//!   exact-integer bound as the scenario spec codec.
+//!
+//! The version is recorded once per manifest root (`cluster_schema`), not
+//! in every spec object — the same convention as `spec_schema`.
+//!
+//! [`apply_override`] rebuilds the CLI's `--key value` override layer on
+//! top of the codec: each override key maps to a codec field path
+//! ([`OVERRIDE_FIELDS`]), the value becomes a one-leaf sparse document,
+//! and the document decodes onto the current config — so the CLI, plan
+//! `config` maps and JSON cluster specs share one decoder, one coupling
+//! rule set and one error surface.
+
+use std::collections::BTreeMap;
+
+use super::{
+    ClusterConfig, NetworkConfig, NodeConfig, SoftwareConfig, StorageConfig,
+    TopologyKind,
+};
+use crate::util::json::Json;
+
+/// Version of the cluster wire encoding. Recorded per manifest root
+/// (`cluster_schema`); bump when the field set changes incompatibly.
+pub const CLUSTER_SCHEMA_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Platform registry
+
+/// Everything the system knows about one named platform: its wire name
+/// (usable in plan `cluster` fields, spec `platform` fields and the CLI's
+/// `--platform`), a one-line summary, and the constructor producing its
+/// resolved [`ClusterConfig`].
+pub struct PlatformDescriptor {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub build: fn() -> ClusterConfig,
+}
+
+static SAKURAONE: PlatformDescriptor = PlatformDescriptor {
+    name: "sakuraone",
+    summary: "the paper's production cluster: 100 nodes x 8 H100, 800 GbE \
+              rail-optimized leaf-spine, SONiC/RoCEv2, all-flash Lustre",
+    build: ClusterConfig::default,
+};
+
+static SAKURAONE_HALFSCALE: PlatformDescriptor = PlatformDescriptor {
+    name: "sakuraone-halfscale",
+    summary: "half-scale SAKURAONE trim: 50 nodes in two 25-node pods, \
+              4 spines, half the Lustre servers",
+    build: || {
+        let mut c = ClusterConfig::default();
+        c.name = "SAKURAONE-HALFSCALE".into();
+        c.nodes = 50;
+        c.network.nodes_per_pod = 25;
+        c.network.spines = 4;
+        c.storage.servers = 2;
+        c.storage.theoretical_bw_bytes_per_s = 100e9;
+        c
+    },
+};
+
+static ABCI3_LIKE: PlatformDescriptor = PlatformDescriptor {
+    name: "abci3-like",
+    summary: "InfiniBand-flavored contrast in the spirit of ABCI 3.0 \
+              (Takano et al., 2024): NDR fat-tree, lower switch latency, \
+              higher payload efficiency, closed switch stack",
+    build: || {
+        let mut c = ClusterConfig::default();
+        c.name = "ABCI3-LIKE".into();
+        c.network.topology = TopologyKind::FatTree;
+        // NDR200 per rail toward the leaf, 2x NDR400 per leaf-spine pair —
+        // less per-NIC bandwidth than SAKURAONE's 400 GbE but a cut-through
+        // fabric with ~2.5x lower switch latency and near-wire payload
+        // efficiency (credit-based flow control, no PFC/ECN margins).
+        c.network.node_leaf_gbps = 200.0;
+        c.network.leaf_spine_gbps = 400.0;
+        c.network.leaf_spine_parallel = 2;
+        c.network.switch_capacity_tbps = 25.6;
+        c.network.switch_latency_ns = 300.0;
+        c.network.nic_latency_ns = 600.0;
+        c.network.ethernet_efficiency = 0.98;
+        c.network.software = "proprietary InfiniBand stack".into();
+        c.network.switch_chip = "NVIDIA Quantum-2 QM9700".into();
+        c
+    },
+};
+
+static FAT_TREE_800G: PlatformDescriptor = PlatformDescriptor {
+    name: "fat-tree-800g",
+    summary: "fabric ablation: SAKURAONE's 800 GbE hardware rebuilt as a \
+              node-local fat-tree (no rail alignment), doubled spine tier",
+    build: || {
+        let mut c = ClusterConfig::default();
+        c.name = "FAT-TREE-800G".into();
+        c.network.topology = TopologyKind::FatTree;
+        c.network.spines = 16;
+        c
+    },
+};
+
+/// Every registered platform, in documentation order.
+pub static PLATFORMS: [&PlatformDescriptor; 4] =
+    [&SAKURAONE, &SAKURAONE_HALFSCALE, &ABCI3_LIKE, &FAT_TREE_800G];
+
+/// Look a platform up by wire name.
+pub fn platform(name: &str) -> Option<&'static PlatformDescriptor> {
+    PLATFORMS.iter().find(|p| p.name == name).copied()
+}
+
+/// [`platform`] with the canonical lookup-failure message — the one
+/// error string every caller (CLI, plan loader, codec, coordinator)
+/// surfaces for an unknown platform name.
+pub fn platform_or_err(name: &str) -> Result<&'static PlatformDescriptor, String> {
+    platform(name).ok_or_else(|| {
+        format!("unknown platform {name:?} (known: {})", known_platforms())
+    })
+}
+
+/// Comma-separated platform names for error messages.
+pub fn known_platforms() -> String {
+    PLATFORMS.iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+}
+
+// ---------------------------------------------------------------------------
+// JSON helpers: strict on unknown keys, defaults for missing ones (the
+// same discipline as runtime::scenario's spec codec).
+
+fn obj<'a>(j: &'a Json, at: &str) -> Result<&'a BTreeMap<String, Json>, String> {
+    j.as_obj().ok_or_else(|| format!("{at}: expected an object"))
+}
+
+fn check_keys(
+    m: &BTreeMap<String, Json>,
+    allowed: &[&str],
+    at: &str,
+) -> Result<(), String> {
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(format!(
+                "{at}: unknown field {k:?} (allowed: {})",
+                allowed.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn num(m: &BTreeMap<String, Json>, key: &str, at: &str) -> Result<Option<f64>, String> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Num(n)) if n.is_finite() => Ok(Some(*n)),
+        Some(other) => {
+            Err(format!("{at}.{key}: expected a finite number, got {other:?}"))
+        }
+    }
+}
+
+fn f64_or(m: &BTreeMap<String, Json>, key: &str, default: f64, at: &str) -> Result<f64, String> {
+    Ok(num(m, key, at)?.unwrap_or(default))
+}
+
+fn usize_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: usize,
+    at: &str,
+) -> Result<usize, String> {
+    match num(m, key, at)? {
+        None => Ok(default),
+        Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 2e15 => Ok(n as usize),
+        Some(n) => Err(format!(
+            "{at}.{key}: expected a non-negative integer below 2e15, got {n}"
+        )),
+    }
+}
+
+fn str_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: &str,
+    at: &str,
+) -> Result<String, String> {
+    match m.get(key) {
+        None => Ok(default.to_string()),
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(other) => Err(format!("{at}.{key}: expected a string, got {other:?}")),
+    }
+}
+
+fn str_list_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: &[String],
+    at: &str,
+) -> Result<Vec<String>, String> {
+    let Some(v) = m.get(key) else { return Ok(default.to_vec()) };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| format!("{at}.{key}: expected an array of strings"))?;
+    arr.iter()
+        .map(|x| {
+            x.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("{at}.{key}: expected an array of strings"))
+        })
+        .collect()
+}
+
+fn topology_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: TopologyKind,
+    at: &str,
+) -> Result<TopologyKind, String> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(Json::Str(s)) => {
+            TopologyKind::parse(s).map_err(|e| format!("{at}.{key}: {e}"))
+        }
+        Some(other) => {
+            Err(format!("{at}.{key}: expected a topology name, got {other:?}"))
+        }
+    }
+}
+
+fn jnum(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn jint(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn jlist(v: &[String]) -> Json {
+    Json::Arr(v.iter().map(|s| jstr(s)).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Section codecs
+
+const NODE_KEYS: &[&str] = &[
+    "chassis", "cpu_model", "cpus_per_node", "cores_per_cpu", "gpus_per_node",
+    "dram_bytes", "dram_bw_bytes_per_s", "nvme_drives", "nvme_bytes_each",
+    "compute_nics", "compute_nic_gbps", "storage_nics", "storage_nic_gbps",
+];
+
+fn node_to_json(n: &NodeConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("chassis".into(), jstr(&n.chassis));
+    m.insert("cpu_model".into(), jstr(&n.cpu_model));
+    m.insert("cpus_per_node".into(), jint(n.cpus_per_node));
+    m.insert("cores_per_cpu".into(), jint(n.cores_per_cpu));
+    m.insert("gpus_per_node".into(), jint(n.gpus_per_node));
+    m.insert("dram_bytes".into(), jnum(n.dram_bytes));
+    m.insert("dram_bw_bytes_per_s".into(), jnum(n.dram_bw_bytes_per_s));
+    m.insert("nvme_drives".into(), jint(n.nvme_drives));
+    m.insert("nvme_bytes_each".into(), jnum(n.nvme_bytes_each));
+    m.insert("compute_nics".into(), jint(n.compute_nics));
+    m.insert("compute_nic_gbps".into(), jnum(n.compute_nic_gbps));
+    m.insert("storage_nics".into(), jint(n.storage_nics));
+    m.insert("storage_nic_gbps".into(), jnum(n.storage_nic_gbps));
+    Json::Obj(m)
+}
+
+fn node_from_json(j: &Json, base: NodeConfig, at: &str) -> Result<NodeConfig, String> {
+    let m = obj(j, at)?;
+    check_keys(m, NODE_KEYS, at)?;
+    Ok(NodeConfig {
+        chassis: str_or(m, "chassis", &base.chassis, at)?,
+        cpu_model: str_or(m, "cpu_model", &base.cpu_model, at)?,
+        cpus_per_node: usize_or(m, "cpus_per_node", base.cpus_per_node, at)?,
+        cores_per_cpu: usize_or(m, "cores_per_cpu", base.cores_per_cpu, at)?,
+        gpus_per_node: usize_or(m, "gpus_per_node", base.gpus_per_node, at)?,
+        dram_bytes: f64_or(m, "dram_bytes", base.dram_bytes, at)?,
+        dram_bw_bytes_per_s: f64_or(
+            m,
+            "dram_bw_bytes_per_s",
+            base.dram_bw_bytes_per_s,
+            at,
+        )?,
+        nvme_drives: usize_or(m, "nvme_drives", base.nvme_drives, at)?,
+        nvme_bytes_each: f64_or(m, "nvme_bytes_each", base.nvme_bytes_each, at)?,
+        compute_nics: usize_or(m, "compute_nics", base.compute_nics, at)?,
+        compute_nic_gbps: f64_or(m, "compute_nic_gbps", base.compute_nic_gbps, at)?,
+        storage_nics: usize_or(m, "storage_nics", base.storage_nics, at)?,
+        storage_nic_gbps: f64_or(m, "storage_nic_gbps", base.storage_nic_gbps, at)?,
+    })
+}
+
+const NETWORK_KEYS: &[&str] = &[
+    "topology", "pods", "nodes_per_pod", "rails", "leaf_per_pod", "spines",
+    "node_leaf_gbps", "leaf_spine_gbps", "leaf_spine_parallel",
+    "switch_capacity_tbps", "switch_latency_ns", "nic_latency_ns",
+    "ethernet_efficiency", "software", "switch_chip",
+];
+
+fn network_to_json(n: &NetworkConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("topology".into(), jstr(n.topology.name()));
+    m.insert("pods".into(), jint(n.pods));
+    m.insert("nodes_per_pod".into(), jint(n.nodes_per_pod));
+    m.insert("rails".into(), jint(n.rails));
+    m.insert("leaf_per_pod".into(), jint(n.leaf_per_pod));
+    m.insert("spines".into(), jint(n.spines));
+    m.insert("node_leaf_gbps".into(), jnum(n.node_leaf_gbps));
+    m.insert("leaf_spine_gbps".into(), jnum(n.leaf_spine_gbps));
+    m.insert("leaf_spine_parallel".into(), jint(n.leaf_spine_parallel));
+    m.insert("switch_capacity_tbps".into(), jnum(n.switch_capacity_tbps));
+    m.insert("switch_latency_ns".into(), jnum(n.switch_latency_ns));
+    m.insert("nic_latency_ns".into(), jnum(n.nic_latency_ns));
+    m.insert("ethernet_efficiency".into(), jnum(n.ethernet_efficiency));
+    m.insert("software".into(), jstr(&n.software));
+    m.insert("switch_chip".into(), jstr(&n.switch_chip));
+    Json::Obj(m)
+}
+
+fn network_from_json(
+    j: &Json,
+    base: NetworkConfig,
+    at: &str,
+) -> Result<NetworkConfig, String> {
+    let m = obj(j, at)?;
+    check_keys(m, NETWORK_KEYS, at)?;
+    Ok(NetworkConfig {
+        topology: topology_or(m, "topology", base.topology, at)?,
+        pods: usize_or(m, "pods", base.pods, at)?,
+        nodes_per_pod: usize_or(m, "nodes_per_pod", base.nodes_per_pod, at)?,
+        rails: usize_or(m, "rails", base.rails, at)?,
+        leaf_per_pod: usize_or(m, "leaf_per_pod", base.leaf_per_pod, at)?,
+        spines: usize_or(m, "spines", base.spines, at)?,
+        node_leaf_gbps: f64_or(m, "node_leaf_gbps", base.node_leaf_gbps, at)?,
+        leaf_spine_gbps: f64_or(m, "leaf_spine_gbps", base.leaf_spine_gbps, at)?,
+        leaf_spine_parallel: usize_or(
+            m,
+            "leaf_spine_parallel",
+            base.leaf_spine_parallel,
+            at,
+        )?,
+        switch_capacity_tbps: f64_or(
+            m,
+            "switch_capacity_tbps",
+            base.switch_capacity_tbps,
+            at,
+        )?,
+        switch_latency_ns: f64_or(m, "switch_latency_ns", base.switch_latency_ns, at)?,
+        nic_latency_ns: f64_or(m, "nic_latency_ns", base.nic_latency_ns, at)?,
+        ethernet_efficiency: f64_or(
+            m,
+            "ethernet_efficiency",
+            base.ethernet_efficiency,
+            at,
+        )?,
+        software: str_or(m, "software", &base.software, at)?,
+        switch_chip: str_or(m, "switch_chip", &base.switch_chip, at)?,
+    })
+}
+
+const STORAGE_KEYS: &[&str] = &[
+    "chassis", "servers", "controllers_per_server", "nvme_per_server",
+    "nvme_bytes", "nvme_read_bps", "nvme_write_bps", "server_nics",
+    "server_nic_gbps", "storage_switches", "theoretical_bw_bytes_per_s",
+    "mds_create_ops", "mds_stat_ops", "mds_delete_ops", "mds_readdir_ops",
+];
+
+fn storage_to_json(s: &StorageConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("chassis".into(), jstr(&s.chassis));
+    m.insert("servers".into(), jint(s.servers));
+    m.insert("controllers_per_server".into(), jint(s.controllers_per_server));
+    m.insert("nvme_per_server".into(), jint(s.nvme_per_server));
+    m.insert("nvme_bytes".into(), jnum(s.nvme_bytes));
+    m.insert("nvme_read_bps".into(), jnum(s.nvme_read_bps));
+    m.insert("nvme_write_bps".into(), jnum(s.nvme_write_bps));
+    m.insert("server_nics".into(), jint(s.server_nics));
+    m.insert("server_nic_gbps".into(), jnum(s.server_nic_gbps));
+    m.insert("storage_switches".into(), jint(s.storage_switches));
+    m.insert(
+        "theoretical_bw_bytes_per_s".into(),
+        jnum(s.theoretical_bw_bytes_per_s),
+    );
+    m.insert("mds_create_ops".into(), jnum(s.mds_create_ops));
+    m.insert("mds_stat_ops".into(), jnum(s.mds_stat_ops));
+    m.insert("mds_delete_ops".into(), jnum(s.mds_delete_ops));
+    m.insert("mds_readdir_ops".into(), jnum(s.mds_readdir_ops));
+    Json::Obj(m)
+}
+
+fn storage_from_json(
+    j: &Json,
+    base: StorageConfig,
+    at: &str,
+) -> Result<StorageConfig, String> {
+    let m = obj(j, at)?;
+    check_keys(m, STORAGE_KEYS, at)?;
+    Ok(StorageConfig {
+        chassis: str_or(m, "chassis", &base.chassis, at)?,
+        servers: usize_or(m, "servers", base.servers, at)?,
+        controllers_per_server: usize_or(
+            m,
+            "controllers_per_server",
+            base.controllers_per_server,
+            at,
+        )?,
+        nvme_per_server: usize_or(m, "nvme_per_server", base.nvme_per_server, at)?,
+        nvme_bytes: f64_or(m, "nvme_bytes", base.nvme_bytes, at)?,
+        nvme_read_bps: f64_or(m, "nvme_read_bps", base.nvme_read_bps, at)?,
+        nvme_write_bps: f64_or(m, "nvme_write_bps", base.nvme_write_bps, at)?,
+        server_nics: usize_or(m, "server_nics", base.server_nics, at)?,
+        server_nic_gbps: f64_or(m, "server_nic_gbps", base.server_nic_gbps, at)?,
+        storage_switches: usize_or(m, "storage_switches", base.storage_switches, at)?,
+        theoretical_bw_bytes_per_s: f64_or(
+            m,
+            "theoretical_bw_bytes_per_s",
+            base.theoretical_bw_bytes_per_s,
+            at,
+        )?,
+        mds_create_ops: f64_or(m, "mds_create_ops", base.mds_create_ops, at)?,
+        mds_stat_ops: f64_or(m, "mds_stat_ops", base.mds_stat_ops, at)?,
+        mds_delete_ops: f64_or(m, "mds_delete_ops", base.mds_delete_ops, at)?,
+        mds_readdir_ops: f64_or(m, "mds_readdir_ops", base.mds_readdir_ops, at)?,
+    })
+}
+
+const SOFTWARE_KEYS: &[&str] = &[
+    "os", "container", "scheduler", "cuda_versions", "cudnn_versions",
+    "hpcx_versions", "nccl_versions", "python_envs",
+];
+
+fn software_to_json(s: &SoftwareConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("os".into(), jstr(&s.os));
+    m.insert("container".into(), jstr(&s.container));
+    m.insert("scheduler".into(), jstr(&s.scheduler));
+    m.insert("cuda_versions".into(), jlist(&s.cuda_versions));
+    m.insert("cudnn_versions".into(), jlist(&s.cudnn_versions));
+    m.insert("hpcx_versions".into(), jlist(&s.hpcx_versions));
+    m.insert("nccl_versions".into(), jlist(&s.nccl_versions));
+    m.insert("python_envs".into(), jlist(&s.python_envs));
+    Json::Obj(m)
+}
+
+fn software_from_json(
+    j: &Json,
+    base: SoftwareConfig,
+    at: &str,
+) -> Result<SoftwareConfig, String> {
+    let m = obj(j, at)?;
+    check_keys(m, SOFTWARE_KEYS, at)?;
+    Ok(SoftwareConfig {
+        os: str_or(m, "os", &base.os, at)?,
+        container: str_or(m, "container", &base.container, at)?,
+        scheduler: str_or(m, "scheduler", &base.scheduler, at)?,
+        cuda_versions: str_list_or(m, "cuda_versions", &base.cuda_versions, at)?,
+        cudnn_versions: str_list_or(m, "cudnn_versions", &base.cudnn_versions, at)?,
+        hpcx_versions: str_list_or(m, "hpcx_versions", &base.hpcx_versions, at)?,
+        nccl_versions: str_list_or(m, "nccl_versions", &base.nccl_versions, at)?,
+        python_envs: str_list_or(m, "python_envs", &base.python_envs, at)?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Whole-cluster codec
+
+const CLUSTER_KEYS: &[&str] =
+    &["platform", "name", "nodes", "node", "network", "storage", "software"];
+
+/// Canonical encoding: every field, keys sorted, no derived values (only
+/// settable fields round-trip, so `from_json` can stay strict).
+pub fn to_json(c: &ClusterConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".into(), jstr(&c.name));
+    m.insert("nodes".into(), jint(c.nodes));
+    m.insert("node".into(), node_to_json(&c.node));
+    m.insert("network".into(), network_to_json(&c.network));
+    m.insert("storage".into(), storage_to_json(&c.storage));
+    m.insert("software".into(), software_to_json(&c.software));
+    Json::Obj(m)
+}
+
+/// Decode a cluster spec (sparse allowed, base from `"platform"` or
+/// `sakuraone`) and validate the result. `at` prefixes error messages.
+pub fn from_json_at(j: &Json, at: &str) -> Result<ClusterConfig, String> {
+    // `decode_onto` performs the strict unknown-key check; here we only
+    // need the `"platform"` base.
+    let m = obj(j, at)?;
+    let base = match m.get("platform") {
+        None => ClusterConfig::default(),
+        Some(Json::Str(p)) => {
+            let d = platform_or_err(p).map_err(|e| format!("{at}.platform: {e}"))?;
+            (d.build)()
+        }
+        Some(other) => {
+            return Err(format!(
+                "{at}.platform: expected a platform name, got {other:?}"
+            ))
+        }
+    };
+    let cfg = decode_onto(j, base, at)?;
+    cfg.validate().map_err(|e| format!("{at}: {e}"))?;
+    Ok(cfg)
+}
+
+/// Decode a cluster spec with the `sakuraone` (or `"platform"`-named)
+/// base; the entry point plan files and `cluster show/validate` use.
+pub fn from_json(j: &Json) -> Result<ClusterConfig, String> {
+    from_json_at(j, "cluster")
+}
+
+/// Fill `base` from the (sparse) document's fields, applying the
+/// nodes/pods and rails couplings for fields the document leaves out.
+/// Does not validate — callers do, after any further fixups.
+fn decode_onto(j: &Json, base: ClusterConfig, at: &str) -> Result<ClusterConfig, String> {
+    let m = obj(j, at)?;
+    check_keys(m, CLUSTER_KEYS, at)?;
+
+    // Coupling triggers are judged on the *document*, not the values:
+    // an explicit `nodes_per_pod`/`leaf_per_pod` always wins, and the
+    // canonical (full) encoding never re-triggers a coupling.
+    let net = m.get("network").and_then(Json::as_obj);
+    let nodes_set = m.contains_key("nodes");
+    let pods_set = net.is_some_and(|n| n.contains_key("pods"));
+    let npp_set = net.is_some_and(|n| n.contains_key("nodes_per_pod"));
+    let rails_set = net.is_some_and(|n| n.contains_key("rails"));
+    let lpp_set = net.is_some_and(|n| n.contains_key("leaf_per_pod"));
+
+    let mut cfg = ClusterConfig {
+        name: str_or(m, "name", &base.name, at)?,
+        nodes: usize_or(m, "nodes", base.nodes, at)?,
+        node: match m.get("node") {
+            Some(j) => node_from_json(j, base.node, &format!("{at}.node"))?,
+            None => base.node,
+        },
+        network: match m.get("network") {
+            Some(j) => network_from_json(j, base.network, &format!("{at}.network"))?,
+            None => base.network,
+        },
+        storage: match m.get("storage") {
+            Some(j) => storage_from_json(j, base.storage, &format!("{at}.storage"))?,
+            None => base.storage,
+        },
+        software: match m.get("software") {
+            Some(j) => {
+                software_from_json(j, base.software, &format!("{at}.software"))?
+            }
+            None => base.software,
+        },
+    };
+    if (nodes_set || pods_set) && !npp_set {
+        cfg.network.nodes_per_pod = cfg.nodes.div_ceil(cfg.network.pods.max(1));
+    }
+    if rails_set && !lpp_set {
+        cfg.network.leaf_per_pod = cfg.network.rails;
+    }
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------------
+// Overrides: the CLI/plan `--key value` layer, rebuilt on the codec
+
+/// Every override key the CLI and plan `config` maps accept, with the
+/// codec field path it writes through. Sorted by key — the order plans
+/// apply their `config` maps in, and the order error messages list.
+pub const OVERRIDE_FIELDS: &[(&str, &str)] = &[
+    ("ethernet-efficiency", "network.ethernet_efficiency"),
+    ("gpus-per-node", "node.gpus_per_node"),
+    ("leaf-spine-gbps", "network.leaf_spine_gbps"),
+    ("node-leaf-gbps", "network.node_leaf_gbps"),
+    ("nodes", "nodes"),
+    ("pods", "network.pods"),
+    ("rails", "network.rails"),
+    ("spines", "network.spines"),
+    ("storage-servers", "storage.servers"),
+    ("topology", "network.topology"),
+];
+
+/// Comma-separated override keys for error messages.
+pub fn known_override_keys() -> String {
+    OVERRIDE_FIELDS
+        .iter()
+        .map(|(k, _)| *k)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Decode one `--key value` pair onto the config *without* the final
+/// validation — the building block batch application composes.
+fn apply_override_unvalidated(
+    cfg: &mut ClusterConfig,
+    key: &str,
+    value: &str,
+) -> Result<(), String> {
+    let Some((_, path)) = OVERRIDE_FIELDS.iter().find(|(k, _)| *k == key) else {
+        return Err(format!(
+            "unknown config override {key:?} (known: {})",
+            known_override_keys()
+        ));
+    };
+    let leaf = match value.parse::<f64>() {
+        Ok(n) if n.is_finite() => Json::Num(n),
+        _ => Json::Str(value.to_string()),
+    };
+    let patch = path.rsplit('.').fold(leaf, |acc, seg| {
+        let mut m = BTreeMap::new();
+        m.insert(seg.to_string(), acc);
+        Json::Obj(m)
+    });
+    *cfg = decode_onto(&patch, cfg.clone(), "override")?;
+    Ok(())
+}
+
+/// Apply one `--key value` override by decoding a one-leaf sparse
+/// document onto the current config — CLI, plan overrides and JSON specs
+/// share the codec's parsers, couplings, and validation.
+pub fn apply_override(
+    cfg: &mut ClusterConfig,
+    key: &str,
+    value: &str,
+) -> Result<(), String> {
+    apply_overrides(cfg, [(key, value)])
+}
+
+/// Apply a batch of overrides, validating once **after the whole batch**
+/// — validation must not depend on application order, so combinations
+/// whose intermediate state is inconsistent but whose final state is
+/// valid (e.g. `--topology rail-only --spines 0`, where `spines` sorts
+/// before `topology`) apply cleanly. The config is untouched on error.
+pub fn apply_overrides<'a, I>(cfg: &mut ClusterConfig, pairs: I) -> Result<(), String>
+where
+    I: IntoIterator<Item = (&'a str, &'a str)>,
+{
+    let mut next = cfg.clone();
+    for (key, value) in pairs {
+        apply_override_unvalidated(&mut next, key, value)?;
+    }
+    next.validate()?;
+    *cfg = next;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let mut names: Vec<&str> = PLATFORMS.iter().map(|p| p.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), PLATFORMS.len(), "duplicate platform names");
+        for p in PLATFORMS {
+            assert!(std::ptr::eq(platform(p.name).unwrap(), p));
+            assert!(!p.summary.is_empty());
+        }
+        assert!(platform("tsubame").is_none());
+    }
+
+    #[test]
+    fn every_platform_validates_and_roundtrips_exactly() {
+        for p in PLATFORMS {
+            let cfg = (p.build)();
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", p.name));
+            let j = to_json(&cfg);
+            let back = from_json(&j).unwrap_or_else(|e| panic!("{}: {e}", p.name));
+            assert_eq!(back, cfg, "{}: value round trip", p.name);
+            assert_eq!(back.to_json().emit(), j.emit(), "{}: re-emission", p.name);
+            // and through text (parse + re-decode)
+            let reparsed = Json::parse(&j.emit()).unwrap();
+            assert_eq!(from_json(&reparsed).unwrap(), cfg, "{}: text", p.name);
+        }
+    }
+
+    #[test]
+    fn sparse_docs_fill_from_the_named_platform_base() {
+        let j = Json::parse(r#"{"platform": "abci3-like"}"#).unwrap();
+        assert_eq!(from_json(&j).unwrap(), (ABCI3_LIKE.build)());
+
+        let j = Json::parse(r#"{"platform": "sakuraone-halfscale", "nodes": 40}"#)
+            .unwrap();
+        let cfg = from_json(&j).unwrap();
+        assert_eq!(cfg.nodes, 40);
+        assert_eq!(cfg.network.nodes_per_pod, 20, "nodes rebalances pods");
+        assert_eq!(cfg.network.spines, 4, "rest comes from the platform");
+
+        // no platform key: sakuraone is the base
+        let j = Json::parse(r#"{"network": {"rails": 4}}"#).unwrap();
+        let cfg = from_json(&j).unwrap();
+        assert_eq!(cfg.nodes, 100);
+        assert_eq!(cfg.network.rails, 4);
+        assert_eq!(cfg.network.leaf_per_pod, 4, "rails pulls leaf_per_pod");
+    }
+
+    #[test]
+    fn explicit_layout_fields_win_over_couplings() {
+        let j = Json::parse(
+            r#"{"nodes": 60, "network": {"pods": 3, "nodes_per_pod": 30}}"#,
+        )
+        .unwrap();
+        let cfg = from_json(&j).unwrap();
+        assert_eq!(cfg.network.nodes_per_pod, 30, "explicit value kept");
+        // and the canonical re-emission never re-triggers the coupling
+        let back = from_json(&to_json(&cfg)).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn unknown_fields_platforms_and_types_are_rejected() {
+        for (doc, needle) in [
+            (r#"{"warp": 1}"#, "unknown field \"warp\""),
+            (r#"{"platform": "tsubame"}"#, "unknown platform"),
+            (r#"{"platform": 4}"#, "expected a platform name"),
+            (r#"{"node": {"warp": 1}}"#, "cluster.node: unknown field"),
+            (r#"{"network": {"warp": 1}}"#, "cluster.network: unknown field"),
+            (r#"{"storage": {"warp": 1}}"#, "cluster.storage: unknown field"),
+            (r#"{"software": {"warp": 1}}"#, "cluster.software: unknown field"),
+            (r#"{"nodes": "many"}"#, "expected a finite number"),
+            (r#"{"nodes": 1.5}"#, "non-negative integer"),
+            (r#"{"network": {"topology": "torus"}}"#, "unknown topology"),
+            (r#"{"software": {"cuda_versions": [1]}}"#, "array of strings"),
+            (r#"[]"#, "expected an object"),
+        ] {
+            let err = from_json(&Json::parse(doc).unwrap()).unwrap_err();
+            assert!(err.contains(needle), "{doc}: {err}");
+        }
+    }
+
+    #[test]
+    fn invalid_configs_fail_validation_on_decode() {
+        for (doc, needle) in [
+            (r#"{"nodes": 0}"#, "nodes"),
+            (r#"{"network": {"rails": 0}}"#, "network.rails"),
+            (r#"{"network": {"spines": 0}}"#, "network.spines"),
+            (r#"{"network": {"ethernet_efficiency": 1.5}}"#, "ethernet_efficiency"),
+            (
+                r#"{"network": {"nodes_per_pod": 10}}"#,
+                "pods * nodes_per_pod",
+            ),
+            (r#"{"storage": {"servers": 0}}"#, "storage.servers"),
+        ] {
+            let err = from_json(&Json::parse(doc).unwrap()).unwrap_err();
+            assert!(err.contains(needle), "{doc}: {err}");
+        }
+    }
+
+    #[test]
+    fn overrides_share_the_codec_error_surface() {
+        let mut cfg = ClusterConfig::default();
+        let err = apply_override(&mut cfg, "warp-drive", "11").unwrap_err();
+        assert_eq!(
+            err,
+            "unknown config override \"warp-drive\" (known: \
+             ethernet-efficiency, gpus-per-node, leaf-spine-gbps, \
+             node-leaf-gbps, nodes, pods, rails, spines, storage-servers, \
+             topology)"
+        );
+        let err = apply_override(&mut cfg, "nodes", "many").unwrap_err();
+        assert_eq!(
+            err,
+            "override.nodes: expected a finite number, got Str(\"many\")"
+        );
+        let err = apply_override(&mut cfg, "topology", "torus").unwrap_err();
+        assert_eq!(
+            err,
+            "override.network.topology: unknown topology \"torus\" (known: \
+             rail-optimized, rail-only, fat-tree, dragonfly)"
+        );
+        assert_eq!(cfg, ClusterConfig::default(), "failed overrides change nothing");
+    }
+
+    #[test]
+    fn override_batches_validate_only_the_final_state() {
+        // `spines` sorts before `topology`: a per-key validation would
+        // reject the intermediate (rail-optimized, spines=0) state even
+        // though the final (rail-only, spines=0) config is valid.
+        let mut cfg = ClusterConfig::default();
+        apply_overrides(&mut cfg, [("spines", "0"), ("topology", "rail-only")])
+            .unwrap();
+        assert_eq!(cfg.network.topology, TopologyKind::RailOnly);
+        assert_eq!(cfg.network.spines, 0);
+
+        // a batch whose *final* state is invalid still fails atomically
+        let mut cfg = ClusterConfig::default();
+        let err = apply_overrides(&mut cfg, [("spines", "0")]).unwrap_err();
+        assert_eq!(err, "network.spines: must be at least 1");
+        assert_eq!(cfg, ClusterConfig::default(), "untouched on error");
+    }
+
+    #[test]
+    fn overrides_apply_couplings_and_validate() {
+        let mut cfg = ClusterConfig::default();
+        apply_override(&mut cfg, "nodes", "200").unwrap();
+        assert_eq!(cfg.nodes, 200);
+        assert_eq!(cfg.network.nodes_per_pod, 100);
+        apply_override(&mut cfg, "pods", "4").unwrap();
+        assert_eq!(cfg.network.nodes_per_pod, 50);
+        apply_override(&mut cfg, "rails", "4").unwrap();
+        assert_eq!(cfg.network.leaf_per_pod, 4);
+        assert!(apply_override(&mut cfg, "pods", "0").is_err());
+        assert!(apply_override(&mut cfg, "ethernet-efficiency", "1.5").is_err());
+    }
+}

@@ -30,8 +30,21 @@ pub struct Platform {
 
 impl Platform {
     pub fn new(cfg: ClusterConfig) -> Self {
+        debug_assert!(
+            cfg.validate().is_ok(),
+            "Platform::new: invalid cluster: {:?}",
+            cfg.validate()
+        );
         let fabric = build(&cfg);
         Self { cfg, fabric, metrics: Metrics::new(), runtime: None, next_job_id: 1 }
+    }
+
+    /// Construct the leader for a named registry platform
+    /// (`config::spec::PLATFORMS`, e.g. `"sakuraone"`, `"abci3-like"`).
+    pub fn from_registry(name: &str) -> Result<Self> {
+        let d = crate::config::spec::platform_or_err(name)
+            .map_err(anyhow::Error::msg)?;
+        Ok(Self::new((d.build)()))
     }
 
     /// Lazily attach the PJRT runtime (needs `make artifacts`).
@@ -194,6 +207,18 @@ mod tests {
         assert!(r.rmax > 30e15);
         assert!(p.metrics.gauge("hpl.rmax_pflops").unwrap() > 30.0);
         assert_eq!(p.metrics.counter("jobs.completed"), 1);
+    }
+
+    #[test]
+    fn platform_constructs_from_the_registry() {
+        for d in crate::config::PLATFORMS {
+            let p = Platform::from_registry(d.name)
+                .unwrap_or_else(|e| panic!("{}: {e}", d.name));
+            assert_eq!(p.cfg, (d.build)());
+            assert!(p.fabric.hosts().count() > 0, "{}: empty fabric", d.name);
+        }
+        let err = Platform::from_registry("tsubame").unwrap_err();
+        assert!(err.to_string().contains("unknown platform"));
     }
 
     fn artifacts_built() -> bool {

@@ -14,7 +14,10 @@
 //!   campaign — goodput-true N-day training campaigns (failures ×
 //!              checkpoint/restart × Lustre I/O over the step-time model)
 //!   plan    — user-authored sweep plans: serializable scenario specs and
-//!             built-in grids in one JSON document (docs/plans.md)
+//!             built-in grids in one JSON document, runnable on any
+//!             registry platform or several at once (docs/plans.md)
+//!   cluster — the platform registry and versioned cluster spec codec:
+//!             list/show/validate/diff (docs/clusters.md)
 //!   validate— numerics checks through the AOT artifacts
 //!   report  — Table 3 census, rankings, config inventory
 //!   suite   — everything above through the parallel sweep engine
@@ -57,6 +60,7 @@ fn run(args: &Args) -> Result<()> {
         "collectives" => commands::collectives::handle(args)?,
         "campaign" => commands::campaign::handle(args)?,
         "plan" => commands::plan::handle(args)?,
+        "cluster" => commands::cluster::handle(args)?,
         "power" => commands::power::handle(args)?,
         "checkpoint" => commands::checkpoint::handle(args)?,
         "resilience" => commands::resilience::handle(args)?,

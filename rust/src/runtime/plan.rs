@@ -1,16 +1,18 @@
 //! User-authored sweep plans: a serializable document that names a set of
 //! scenarios — inline [`ScenarioSpec`] JSON, built-in grids, or both —
-//! plus cluster-config overrides and a seed, executed through the same
-//! deterministic engine as the built-in suite (`sakuraone plan run`,
-//! `sakuraone suite --plan FILE`; see docs/plans.md).
+//! plus the cluster(s) to run them on, cluster-config overrides and a
+//! seed, executed through the same deterministic engine as the built-in
+//! suite (`sakuraone plan run`, `sakuraone suite --plan FILE`; see
+//! docs/plans.md and docs/clusters.md).
 //!
 //! Document shape (plan schema [`PLAN_SCHEMA_VERSION`]):
 //!
 //! ```json
 //! {
-//!   "schema": 1,
+//!   "schema": 2,
 //!   "name": "mixed-study",
 //!   "seed": 7,
+//!   "cluster": ["sakuraone", "abci3-like"],
 //!   "config": {"nodes": 100, "topology": "rail-optimized"},
 //!   "scenarios": [
 //!     {"id": "hpl/paper", "spec": {"kind": "hpl", "paper": true}},
@@ -19,23 +21,33 @@
 //! }
 //! ```
 //!
+//! `cluster` (schema 2) selects the platform(s) the scenarios run on: a
+//! registry platform name, an inline cluster spec object (decoded through
+//! `config::spec`), or an array of those — the **cross-platform** shape,
+//! which runs the whole scenario list once per platform with ids prefixed
+//! `<label>/` and per-record cluster specs embedded in the manifest.
+//!
 //! Strictness mirrors the spec codec: unknown top-level or entry fields
 //! are an error, spec objects decode with per-kind defaults, and resolved
 //! scenario ids must be unique. `config` values apply through
 //! `ClusterConfig::apply_override` in sorted key order (so `nodes`
-//! lands before `pods` rebalances `nodes_per_pod`); CLI `--key value`
-//! overrides are applied on top by the command layer and win.
+//! lands before `pods` rebalances `nodes_per_pod`) to **every** cluster
+//! in the plan — shared ablation knobs across platforms; CLI `--key
+//! value` overrides are applied on top by the command layer and win.
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::config::ClusterConfig;
+use crate::config::{spec as cluster_spec, ClusterConfig};
 use crate::runtime::scenario::{Scenario, ScenarioSpec};
-use crate::runtime::sweep::{campaign_grid, collectives_grid, standard_grid};
+use crate::runtime::sweep::{campaign_grid, collectives_grid, standard_grid, SweepRun};
 use crate::util::json::Json;
 
 /// Version of the plan document format; also pins the spec encoding the
-/// plan's inline scenarios use (spec schema 1).
-pub const PLAN_SCHEMA_VERSION: u64 = 1;
+/// plan's inline scenarios use (spec schema 1) and the cluster encoding
+/// its `cluster` field uses (cluster schema 1).
+/// History: 1 = name/seed/config/scenarios; 2 = the `cluster` field
+/// (platform name, inline spec, or array — cross-platform sweeps).
+pub const PLAN_SCHEMA_VERSION: u64 = 2;
 
 /// The built-in grids a plan can reference by name.
 pub const GRID_NAMES: [&str; 3] = ["standard", "collectives", "campaign"];
@@ -68,13 +80,75 @@ pub enum PlanEntry {
     Grid { grid: String, quick: bool, filter: Option<String> },
 }
 
+/// One cluster reference in a plan's `cluster` field: a registry platform
+/// by wire name, or a fully decoded inline spec.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterRef {
+    Platform(String),
+    Inline(Box<ClusterConfig>),
+}
+
+impl ClusterRef {
+    fn from_json(j: &Json, at: &str) -> Result<ClusterRef, String> {
+        match j {
+            Json::Str(name) => {
+                cluster_spec::platform_or_err(name).map_err(|e| format!("{at}: {e}"))?;
+                Ok(ClusterRef::Platform(name.clone()))
+            }
+            Json::Obj(_) => Ok(ClusterRef::Inline(Box::new(
+                cluster_spec::from_json_at(j, at)?,
+            ))),
+            other => Err(format!(
+                "{at}: expected a platform name or cluster spec object, \
+                 got {other:?}"
+            )),
+        }
+    }
+
+    /// The resolved cluster this reference names.
+    pub fn build(&self) -> ClusterConfig {
+        match self {
+            ClusterRef::Platform(name) => {
+                (cluster_spec::platform(name).expect("validated at parse").build)()
+            }
+            ClusterRef::Inline(cfg) => (**cfg).clone(),
+        }
+    }
+
+    /// Stable, id-safe label: the platform wire name, or the inline
+    /// spec's `name` lowercased with non-alphanumerics mapped to `-`.
+    pub fn label(&self) -> String {
+        match self {
+            ClusterRef::Platform(name) => name.clone(),
+            ClusterRef::Inline(cfg) => cfg
+                .name
+                .to_lowercase()
+                .chars()
+                .map(|c| if c.is_alphanumeric() { c } else { '-' })
+                .collect(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            ClusterRef::Platform(name) => Json::Str(name.clone()),
+            ClusterRef::Inline(cfg) => cfg.to_json(),
+        }
+    }
+}
+
 /// A user-authored sweep: what `sakuraone plan run` executes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepPlan {
     pub name: String,
     /// Sweep seed; an explicit CLI `--seed` wins over it.
     pub seed: Option<u64>,
-    /// Cluster-config overrides (`ClusterConfig::apply_override` keys).
+    /// The cluster(s) to run on. Empty = the caller's base (the default
+    /// platform); one entry = that cluster, ids unprefixed; several =
+    /// cross-platform sweep, ids prefixed per label.
+    pub clusters: Vec<ClusterRef>,
+    /// Cluster-config overrides (`ClusterConfig::apply_override` keys),
+    /// applied to every cluster in the plan.
     pub overrides: BTreeMap<String, String>,
     pub entries: Vec<PlanEntry>,
 }
@@ -86,10 +160,12 @@ impl SweepPlan {
     pub fn from_json(j: &Json) -> Result<SweepPlan, String> {
         let m = j.as_obj().ok_or("plan: expected an object")?;
         for k in m.keys() {
-            if !["schema", "name", "seed", "config", "scenarios"].contains(&k.as_str()) {
+            if !["schema", "name", "seed", "cluster", "config", "scenarios"]
+                .contains(&k.as_str())
+            {
                 return Err(format!(
                     "plan: unknown field {k:?} (allowed: schema, name, seed, \
-                     config, scenarios)"
+                     cluster, config, scenarios)"
                 ));
             }
         }
@@ -123,6 +199,32 @@ impl SweepPlan {
                 ))
             }
         };
+        let clusters = match m.get("cluster") {
+            None => Vec::new(),
+            Some(Json::Arr(items)) => {
+                if items.is_empty() {
+                    return Err("plan.cluster: array must not be empty".into());
+                }
+                let refs: Vec<ClusterRef> = items
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| {
+                        ClusterRef::from_json(c, &format!("plan.cluster[{i}]"))
+                    })
+                    .collect::<Result<_, _>>()?;
+                let mut labels = BTreeSet::new();
+                for r in &refs {
+                    if !labels.insert(r.label()) {
+                        return Err(format!(
+                            "plan.cluster: duplicate cluster label {:?}",
+                            r.label()
+                        ));
+                    }
+                }
+                refs
+            }
+            Some(single) => vec![ClusterRef::from_json(single, "plan.cluster")?],
+        };
         let mut overrides = BTreeMap::new();
         if let Some(cfg) = m.get("config") {
             let co = cfg.as_obj().ok_or("plan.config: expected an object")?;
@@ -150,7 +252,7 @@ impl SweepPlan {
         for (i, e) in list.iter().enumerate() {
             entries.push(Self::entry_from_json(e, i)?);
         }
-        Ok(SweepPlan { name, seed, overrides, entries })
+        Ok(SweepPlan { name, seed, clusters, overrides, entries })
     }
 
     fn entry_from_json(e: &Json, i: usize) -> Result<PlanEntry, String> {
@@ -221,6 +323,18 @@ impl SweepPlan {
         if let Some(seed) = self.seed {
             root.insert("seed".into(), Json::Num(seed as f64));
         }
+        match self.clusters.as_slice() {
+            [] => {}
+            [single] => {
+                root.insert("cluster".into(), single.to_json());
+            }
+            many => {
+                root.insert(
+                    "cluster".into(),
+                    Json::Arr(many.iter().map(ClusterRef::to_json).collect()),
+                );
+            }
+        }
         if !self.overrides.is_empty() {
             root.insert(
                 "config".into(),
@@ -262,16 +376,9 @@ impl SweepPlan {
         cli.or(self.seed).unwrap_or(default)
     }
 
-    /// Materialize the plan: apply config overrides to `base` and expand
-    /// every entry into the flat, ordered scenario list the engine runs.
-    pub fn resolve(
-        &self,
-        base: &ClusterConfig,
-    ) -> Result<(ClusterConfig, Vec<Scenario>), String> {
-        let mut cfg = base.clone();
-        for (k, v) in &self.overrides {
-            cfg.apply_override(k, v).map_err(|e| format!("plan.config: {e}"))?;
-        }
+    /// Expand every entry into the flat, ordered scenario list (before any
+    /// per-platform id prefixing).
+    fn expand_entries(&self) -> Result<Vec<Scenario>, String> {
         let mut scenarios = Vec::new();
         for e in &self.entries {
             match e {
@@ -292,8 +399,44 @@ impl SweepPlan {
                 }
             }
         }
+        Ok(scenarios)
+    }
+
+    /// Materialize the plan into the engine's run groups: resolve the
+    /// plan's cluster(s) (falling back to `base` when the plan names
+    /// none), apply config overrides to each, and expand the scenario
+    /// list — once per cluster, with `<label>/` id prefixes when the plan
+    /// compares several platforms. Resolved ids must be unique across the
+    /// whole sweep.
+    pub fn resolve(&self, base: &ClusterConfig) -> Result<Vec<SweepRun>, String> {
+        let scenarios = self.expand_entries()?;
+        let bases: Vec<(Option<String>, ClusterConfig)> = match self.clusters.as_slice()
+        {
+            [] => vec![(None, base.clone())],
+            [single] => vec![(None, single.build())],
+            many => many.iter().map(|c| (Some(c.label()), c.build())).collect(),
+        };
+        let mut runs = Vec::with_capacity(bases.len());
+        for (label, mut cfg) in bases {
+            // one batch per cluster: validation runs once after all keys,
+            // so the (sorted) application order cannot reject valid
+            // combinations (e.g. {"spines": 0, "topology": "rail-only"})
+            cluster_spec::apply_overrides(
+                &mut cfg,
+                self.overrides.iter().map(|(k, v)| (k.as_str(), v.as_str())),
+            )
+            .map_err(|e| format!("plan.config: {e}"))?;
+            let scenarios = match &label {
+                None => scenarios.clone(),
+                Some(l) => scenarios
+                    .iter()
+                    .map(|s| Scenario::new(&format!("{l}/{}", s.id), s.spec.clone()))
+                    .collect(),
+            };
+            runs.push(SweepRun { label, cfg, scenarios });
+        }
         let mut seen = BTreeSet::new();
-        for s in &scenarios {
+        for s in runs.iter().flat_map(|r| &r.scenarios) {
             if !seen.insert(s.id.as_str()) {
                 return Err(format!(
                     "plan: duplicate scenario id {:?} (inline ids must not \
@@ -302,7 +445,7 @@ impl SweepPlan {
                 ));
             }
         }
-        Ok((cfg, scenarios))
+        Ok(runs)
     }
 }
 
@@ -315,7 +458,7 @@ mod tests {
     }
 
     const MINIMAL: &str = r#"{
-        "schema": 1,
+        "schema": 2,
         "name": "t",
         "scenarios": [{"id": "hpl/x", "spec": {"kind": "hpl"}}]
     }"#;
@@ -325,20 +468,23 @@ mod tests {
         let p = parse(MINIMAL).unwrap();
         assert_eq!(p.name, "t");
         assert_eq!(p.seed, None);
+        assert!(p.clusters.is_empty());
         assert_eq!(p.seed_or(None, 42), 42);
         assert_eq!(p.seed_or(Some(7), 42), 7);
-        let (cfg, scenarios) = p.resolve(&ClusterConfig::default()).unwrap();
-        assert_eq!(cfg.nodes, 100);
-        assert_eq!(scenarios.len(), 1);
-        assert_eq!(scenarios[0].id, "hpl/x");
-        assert_eq!(scenarios[0].kind(), "hpl");
+        let runs = p.resolve(&ClusterConfig::default()).unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].label, None);
+        assert_eq!(runs[0].cfg.nodes, 100);
+        assert_eq!(runs[0].scenarios.len(), 1);
+        assert_eq!(runs[0].scenarios[0].id, "hpl/x");
+        assert_eq!(runs[0].scenarios[0].kind(), "hpl");
     }
 
     #[test]
     fn grids_expand_with_quick_and_filter() {
         let p = parse(
             r#"{
-                "schema": 1, "name": "g", "seed": 9,
+                "schema": 2, "name": "g", "seed": 9,
                 "config": {"nodes": 16},
                 "scenarios": [
                     {"grid": "collectives", "quick": true, "filter": "hierarchical"},
@@ -348,7 +494,8 @@ mod tests {
         )
         .unwrap();
         assert_eq!(p.seed_or(None, 42), 9);
-        let (cfg, scenarios) = p.resolve(&ClusterConfig::default()).unwrap();
+        let runs = p.resolve(&ClusterConfig::default()).unwrap();
+        let (cfg, scenarios) = (&runs[0].cfg, &runs[0].scenarios);
         assert_eq!(cfg.nodes, 16);
         assert!(scenarios.iter().all(|s| {
             s.id.contains("hierarchical") || s.id.starts_with("campaign/")
@@ -359,49 +506,157 @@ mod tests {
     }
 
     #[test]
+    fn single_cluster_field_selects_the_platform_without_prefixes() {
+        let p = parse(
+            r#"{"schema": 2, "name": "c", "cluster": "abci3-like",
+                "scenarios": [{"id": "hpl/x", "spec": {"kind": "hpl"}}]}"#,
+        )
+        .unwrap();
+        assert_eq!(p.clusters, vec![ClusterRef::Platform("abci3-like".into())]);
+        let runs = p.resolve(&ClusterConfig::default()).unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].label, None, "single cluster: classic shape");
+        assert_eq!(runs[0].cfg.name, "ABCI3-LIKE");
+        assert_eq!(runs[0].scenarios[0].id, "hpl/x", "no prefix");
+    }
+
+    #[test]
+    fn inline_cluster_specs_decode_through_the_codec() {
+        let p = parse(
+            r#"{"schema": 2, "name": "i",
+                "cluster": {"platform": "sakuraone-halfscale", "nodes": 40},
+                "scenarios": [{"id": "sched/a", "spec": {"kind": "sched"}}]}"#,
+        )
+        .unwrap();
+        let runs = p.resolve(&ClusterConfig::default()).unwrap();
+        assert_eq!(runs[0].cfg.nodes, 40);
+        assert_eq!(runs[0].cfg.network.spines, 4, "halfscale base");
+        // label derives from the cluster name (used only in multi shape)
+        assert_eq!(p.clusters[0].label(), "sakuraone-halfscale");
+    }
+
+    #[test]
+    fn cross_platform_arrays_prefix_ids_per_label() {
+        let p = parse(
+            r#"{"schema": 2, "name": "x",
+                "cluster": ["sakuraone", "abci3-like", "fat-tree-800g"],
+                "scenarios": [
+                    {"id": "hpl/a", "spec": {"kind": "hpl"}},
+                    {"id": "sched/b", "spec": {"kind": "sched", "jobs": 10}}
+                ]}"#,
+        )
+        .unwrap();
+        let runs = p.resolve(&ClusterConfig::default()).unwrap();
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0].label.as_deref(), Some("sakuraone"));
+        assert_eq!(runs[1].label.as_deref(), Some("abci3-like"));
+        assert_eq!(runs[1].cfg.network.topology.name(), "fat-tree");
+        assert_eq!(runs[0].scenarios[0].id, "sakuraone/hpl/a");
+        assert_eq!(runs[2].scenarios[1].id, "fat-tree-800g/sched/b");
+        // the shared grid is identical across platforms, modulo prefixes
+        for r in &runs {
+            assert_eq!(r.scenarios.len(), 2);
+            assert_eq!(r.scenarios[0].spec, runs[0].scenarios[0].spec);
+        }
+    }
+
+    #[test]
+    fn plan_config_batches_validate_only_the_final_state() {
+        let p = parse(
+            r#"{"schema": 2, "name": "ro",
+                "config": {"spines": 0, "topology": "rail-only"},
+                "scenarios": [{"id": "sched/a", "spec": {"kind": "sched"}}]}"#,
+        )
+        .unwrap();
+        let runs = p.resolve(&ClusterConfig::default()).unwrap();
+        assert_eq!(runs[0].cfg.network.topology.name(), "rail-only");
+        assert_eq!(runs[0].cfg.network.spines, 0);
+    }
+
+    #[test]
+    fn plan_config_overrides_apply_to_every_platform() {
+        let p = parse(
+            r#"{"schema": 2, "name": "o",
+                "cluster": ["sakuraone", "abci3-like"],
+                "config": {"nodes": 32},
+                "scenarios": [{"id": "hpl/a", "spec": {"kind": "hpl"}}]}"#,
+        )
+        .unwrap();
+        let runs = p.resolve(&ClusterConfig::default()).unwrap();
+        assert!(runs.iter().all(|r| r.cfg.nodes == 32));
+        assert!(runs.iter().all(|r| r.cfg.network.nodes_per_pod == 16));
+        // platform identity survives the shared knob
+        assert_eq!(runs[1].cfg.network.switch_chip, "NVIDIA Quantum-2 QM9700");
+    }
+
+    #[test]
     fn structural_errors_are_rejected() {
         for (doc, needle) in [
             (r#"[]"#, "expected an object"),
             (r#"{"name": "x", "scenarios": []}"#, "\"schema\""),
-            (r#"{"schema": 2, "name": "x", "scenarios": []}"#, "schema 2"),
+            (r#"{"schema": 1, "name": "x", "scenarios": []}"#, "schema 1"),
             (r#"{"schema": 1.5, "name": "x", "scenarios": []}"#, "non-integer"),
             (
-                r#"{"schema": 1, "name": "x", "seed": 2000000000000001, "scenarios": [{"grid": "standard"}]}"#,
+                r#"{"schema": 2, "name": "x", "seed": 2000000000000001, "scenarios": [{"grid": "standard"}]}"#,
                 "below 2e15",
             ),
-            (r#"{"schema": 1, "scenarios": []}"#, "\"name\""),
-            (r#"{"schema": 1, "name": "x", "scenarios": []}"#, "must not be empty"),
+            (r#"{"schema": 2, "scenarios": []}"#, "\"name\""),
+            (r#"{"schema": 2, "name": "x", "scenarios": []}"#, "must not be empty"),
             (
-                r#"{"schema": 1, "name": "x", "warp": 1, "scenarios": [{"grid": "standard"}]}"#,
+                r#"{"schema": 2, "name": "x", "warp": 1, "scenarios": [{"grid": "standard"}]}"#,
                 "unknown field \"warp\"",
             ),
             (
-                r#"{"schema": 1, "name": "x", "scenarios": [{"grid": "warp"}]}"#,
+                r#"{"schema": 2, "name": "x", "scenarios": [{"grid": "warp"}]}"#,
                 "unknown grid",
             ),
             (
-                r#"{"schema": 1, "name": "x", "scenarios": [{"grid": "standard", "warp": 1}]}"#,
+                r#"{"schema": 2, "name": "x", "scenarios": [{"grid": "standard", "warp": 1}]}"#,
                 "grid entry",
             ),
             (
-                r#"{"schema": 1, "name": "x", "scenarios": [{"spec": {"kind": "hpl"}}]}"#,
+                r#"{"schema": 2, "name": "x", "scenarios": [{"spec": {"kind": "hpl"}}]}"#,
                 "need a non-empty \"id\"",
             ),
             (
-                r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a"}]}"#,
+                r#"{"schema": 2, "name": "x", "scenarios": [{"id": "a"}]}"#,
                 "\"spec\" object",
             ),
             (
-                r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "warp"}}]}"#,
+                r#"{"schema": 2, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "warp"}}]}"#,
                 "unknown scenario kind",
             ),
             (
-                r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "hpl", "warp": 1}}]}"#,
+                r#"{"schema": 2, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "hpl", "warp": 1}}]}"#,
                 "unknown field",
             ),
             (
-                r#"{"schema": 1, "name": "x", "seed": -1, "scenarios": [{"grid": "standard"}]}"#,
+                r#"{"schema": 2, "name": "x", "seed": -1, "scenarios": [{"grid": "standard"}]}"#,
                 "plan.seed",
+            ),
+            (
+                r#"{"schema": 2, "name": "x", "cluster": "tsubame", "scenarios": [{"grid": "standard"}]}"#,
+                "unknown platform",
+            ),
+            (
+                r#"{"schema": 2, "name": "x", "cluster": 4, "scenarios": [{"grid": "standard"}]}"#,
+                "platform name or cluster spec",
+            ),
+            (
+                r#"{"schema": 2, "name": "x", "cluster": [], "scenarios": [{"grid": "standard"}]}"#,
+                "array must not be empty",
+            ),
+            (
+                r#"{"schema": 2, "name": "x", "cluster": ["sakuraone", "sakuraone"], "scenarios": [{"grid": "standard"}]}"#,
+                "duplicate cluster label",
+            ),
+            (
+                r#"{"schema": 2, "name": "x", "cluster": {"warp": 1}, "scenarios": [{"grid": "standard"}]}"#,
+                "unknown field \"warp\"",
+            ),
+            (
+                r#"{"schema": 2, "name": "x", "cluster": {"nodes": 0}, "scenarios": [{"grid": "standard"}]}"#,
+                "at least 1",
             ),
         ] {
             let err = parse(doc).unwrap_err();
@@ -412,7 +667,7 @@ mod tests {
     #[test]
     fn resolve_rejects_duplicate_ids_and_bad_overrides() {
         let p = parse(
-            r#"{"schema": 1, "name": "d", "scenarios": [
+            r#"{"schema": 2, "name": "d", "scenarios": [
                 {"id": "hpl/paper", "spec": {"kind": "hpl", "paper": true}},
                 {"grid": "standard", "quick": true, "filter": "hpl/paper"}
             ]}"#,
@@ -422,7 +677,7 @@ mod tests {
         assert!(err.contains("duplicate scenario id"), "{err}");
 
         let p = parse(
-            r#"{"schema": 1, "name": "o", "config": {"warp-drive": 11},
+            r#"{"schema": 2, "name": "o", "config": {"warp-drive": 11},
                 "scenarios": [{"grid": "standard", "quick": true}]}"#,
         )
         .unwrap();
@@ -430,7 +685,7 @@ mod tests {
         assert!(err.contains("plan.config"), "{err}");
 
         let p = parse(
-            r#"{"schema": 1, "name": "f",
+            r#"{"schema": 2, "name": "f",
                 "scenarios": [{"grid": "standard", "quick": true, "filter": "nope"}]}"#,
         )
         .unwrap();
@@ -441,23 +696,37 @@ mod tests {
     #[test]
     fn numeric_config_values_stringify() {
         let p = parse(
-            r#"{"schema": 1, "name": "n", "config": {"nodes": 48, "topology": "fat-tree"},
+            r#"{"schema": 2, "name": "n", "config": {"nodes": 48, "topology": "fat-tree"},
                 "scenarios": [{"grid": "standard", "quick": true}]}"#,
         )
         .unwrap();
-        let (cfg, _) = p.resolve(&ClusterConfig::default()).unwrap();
-        assert_eq!(cfg.nodes, 48);
-        assert_eq!(cfg.network.topology.name(), "fat-tree");
+        let runs = p.resolve(&ClusterConfig::default()).unwrap();
+        assert_eq!(runs[0].cfg.nodes, 48);
+        assert_eq!(runs[0].cfg.network.topology.name(), "fat-tree");
     }
 
     #[test]
     fn plan_roundtrips_through_canonical_json() {
         let p = parse(
-            r#"{"schema": 1, "name": "rt", "seed": 3, "config": {"nodes": 16},
+            r#"{"schema": 2, "name": "rt", "seed": 3,
+                "cluster": ["sakuraone-halfscale", "fat-tree-800g"],
+                "config": {"nodes": 16},
                 "scenarios": [
                     {"id": "a", "spec": {"kind": "sched", "jobs": 10}},
                     {"grid": "campaign", "quick": true, "filter": "flaky"}
                 ]}"#,
+        )
+        .unwrap();
+        let j = p.to_json();
+        let back = SweepPlan::from_json(&j).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.to_json().emit(), j.emit());
+
+        // inline specs re-emit canonically and survive the round trip too
+        let p = parse(
+            r#"{"schema": 2, "name": "rt2",
+                "cluster": {"platform": "abci3-like", "nodes": 64},
+                "scenarios": [{"id": "a", "spec": {"kind": "hpl"}}]}"#,
         )
         .unwrap();
         let j = p.to_json();

@@ -18,8 +18,13 @@ use crate::util::json::Json;
 /// CI fails loudly instead of silently comparing across schemas.
 /// History: 1 = initial shape; 2 = scenario records carry their canonical
 /// spec (`spec`) and the root records the spec encoding version
-/// (`spec_schema`) — manifests are self-describing and replayable.
-pub const SCHEMA_VERSION: u64 = 2;
+/// (`spec_schema`) — manifests are self-describing and replayable;
+/// 3 = the root embeds the full resolved cluster spec (`cluster`, encoded
+/// with cluster schema `cluster_schema` — see `config::spec`), and records
+/// from cross-platform sweeps carry their own `cluster` when they ran on a
+/// different cluster than the root — manifests are *completely* replayable
+/// (cluster + specs + seeds).
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// One measured metric, optionally anchored to a paper-reported value.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,6 +55,11 @@ pub struct ScenarioRecord {
     /// `ScenarioSpec::from_json`. Records built by single-benchmark
     /// subcommands may omit it.
     pub spec: Option<Json>,
+    /// Canonical cluster spec (`config::spec::to_json`) when the record
+    /// ran on a different cluster than the manifest root — set by the
+    /// sweep engine for cross-platform sweeps. Replay rule: a record's
+    /// cluster is `cluster` when present, else the root's.
+    pub cluster: Option<Json>,
 }
 
 impl ScenarioRecord {
@@ -96,19 +106,21 @@ pub struct RunManifest {
     pub schema: u64,
     pub command: String,
     pub seed: u64,
-    /// Cluster summary (`ClusterConfig::to_json`).
-    pub config: Json,
+    /// The full resolved cluster spec (`config::spec::to_json`) the run
+    /// executed on — decodable with `ClusterConfig::from_json`, so a
+    /// manifest alone rebuilds its cluster.
+    pub cluster: Json,
     pub scenarios: Vec<ScenarioRecord>,
     pub notes: Vec<String>,
 }
 
 impl RunManifest {
-    pub fn new(command: &str, seed: u64, config: Json) -> Self {
+    pub fn new(command: &str, seed: u64, cluster: Json) -> Self {
         Self {
             schema: SCHEMA_VERSION,
             command: command.to_string(),
             seed,
-            config,
+            cluster,
             scenarios: Vec::new(),
             notes: Vec::new(),
         }
@@ -153,9 +165,13 @@ impl RunManifest {
             "spec_schema".into(),
             Json::Num(crate::runtime::scenario::SPEC_SCHEMA_VERSION as f64),
         );
+        root.insert(
+            "cluster_schema".into(),
+            Json::Num(crate::config::CLUSTER_SCHEMA_VERSION as f64),
+        );
         root.insert("command".into(), Json::Str(self.command.clone()));
         root.insert("seed".into(), Json::Num(self.seed as f64));
-        root.insert("config".into(), self.config.clone());
+        root.insert("cluster".into(), self.cluster.clone());
         root.insert(
             "notes".into(),
             Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
@@ -178,6 +194,9 @@ impl RunManifest {
                 );
                 if let Some(spec) = &s.spec {
                     o.insert("spec".into(), spec.clone());
+                }
+                if let Some(cluster) = &s.cluster {
+                    o.insert("cluster".into(), cluster.clone());
                 }
                 o.insert(
                     "metrics".into(),
@@ -222,13 +241,23 @@ impl RunManifest {
                 ),
             }
         }
+        if let Some(v) = j.get("cluster_schema") {
+            let supported = crate::config::CLUSTER_SCHEMA_VERSION;
+            match v.as_f64() {
+                Some(n) if n.fract() == 0.0 && n as u64 == supported => {}
+                _ => bail!(
+                    "manifest cluster_schema {} != supported {supported}",
+                    v.emit()
+                ),
+            }
+        }
         let command = j
             .get("command")
             .and_then(|c| c.as_str())
             .ok_or_else(|| anyhow!("manifest: missing command"))?
             .to_string();
         let seed = j.get("seed").and_then(|s| s.as_f64()).unwrap_or(0.0) as u64;
-        let config = j.get("config").cloned().unwrap_or(Json::Null);
+        let cluster = j.get("cluster").cloned().unwrap_or(Json::Null);
         let notes = j
             .get("notes")
             .and_then(|n| n.as_arr())
@@ -251,6 +280,7 @@ impl RunManifest {
             let kind = s.get("kind").and_then(|k| k.as_str()).unwrap_or("");
             let mut rec = ScenarioRecord::new(id, kind);
             rec.spec = s.get("spec").cloned();
+            rec.cluster = s.get("cluster").cloned();
             if let Some(params) = s.get("params").and_then(|p| p.as_obj()) {
                 for (k, v) in params {
                     if let Some(v) = v.as_str() {
@@ -272,7 +302,7 @@ impl RunManifest {
             }
             scenarios.push(rec);
         }
-        Ok(Self { schema, command, seed, config, scenarios, notes })
+        Ok(Self { schema, command, seed, cluster, scenarios, notes })
     }
 }
 
@@ -407,6 +437,19 @@ mod tests {
     }
 
     #[test]
+    fn record_cluster_roundtrips_when_present() {
+        let mut m = sample();
+        let cluster = Json::parse(r#"{"nodes":50}"#).unwrap();
+        m.scenarios[0].cluster = Some(cluster.clone());
+        let emitted = m.to_json().emit();
+        assert!(emitted.contains("\"cluster\":{\"nodes\":50}"));
+        let parsed = RunManifest::from_json(&Json::parse(&emitted).unwrap()).unwrap();
+        assert_eq!(parsed.scenarios[0].cluster, Some(cluster));
+        assert_eq!(parsed.scenarios[1].cluster, None);
+        assert_eq!(parsed.to_json().emit(), emitted);
+    }
+
+    #[test]
     fn spec_schema_mismatch_rejected() {
         let m = sample();
         let mut j = m.to_json();
@@ -415,6 +458,26 @@ mod tests {
         }
         let err = RunManifest::from_json(&j).unwrap_err();
         assert!(err.to_string().contains("spec_schema"));
+    }
+
+    #[test]
+    fn cluster_schema_mismatch_rejected() {
+        let m = sample();
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("cluster_schema".into(), Json::Num(99.0));
+        }
+        let err = RunManifest::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("cluster_schema"));
+    }
+
+    #[test]
+    fn root_cluster_spec_is_decodable() {
+        let cfg = crate::config::ClusterConfig::default();
+        let m = RunManifest::new("x", 0, cfg.to_json());
+        let back = crate::config::ClusterConfig::from_json(&m.cluster).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.to_json().emit(), m.cluster.emit());
     }
 
     #[test]

@@ -1029,7 +1029,14 @@ static CLUSTER: KindDescriptor = KindDescriptor {
             Some(p) => hpl_params_from_json(p, HplParams::paper(), "cluster.params")?,
             None => HplParams::paper(),
         };
-        Ok(ScenarioSpec::Cluster { nodes: usize_or(m, "nodes", 25, "cluster")?, params })
+        let nodes = usize_or(m, "nodes", 25, "cluster")?;
+        // the runner scales the cluster via `apply_override("nodes", ...)`,
+        // which validates — reject here so a bad plan is a decode error,
+        // not a worker-thread panic at run time
+        if nodes == 0 {
+            return Err("cluster.nodes: must be at least 1".into());
+        }
+        Ok(ScenarioSpec::Cluster { nodes, params })
     },
     encode: |s| {
         let ScenarioSpec::Cluster { nodes, params } = s else { unreachable!() };

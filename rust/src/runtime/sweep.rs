@@ -337,6 +337,18 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
     g
 }
 
+/// One (cluster, scenarios) group in a sweep. Single-cluster sweeps are
+/// one unlabeled run; cross-platform plans resolve to one labeled run per
+/// platform, sharing a scenario grid (ids pre-prefixed by the resolver).
+#[derive(Debug, Clone)]
+pub struct SweepRun {
+    /// Platform label for cross-platform sweeps (`None` for the classic
+    /// single-cluster shape); recorded in the manifest notes.
+    pub label: Option<String>,
+    pub cfg: ClusterConfig,
+    pub scenarios: Vec<Scenario>,
+}
+
 /// Run every scenario across `workers` threads and merge the results into
 /// a manifest. Same `(cfg, scenarios, seed)` ⇒ byte-identical output for
 /// any worker count.
@@ -356,23 +368,77 @@ pub fn run_sweep_named(
     sweep: &SweepConfig,
     command: &str,
 ) -> RunManifest {
-    let workers = sweep.workers.clamp(1, scenarios.len().max(1));
-    let queue: Mutex<VecDeque<usize>> = Mutex::new((0..scenarios.len()).collect());
+    run_sweep_runs(
+        &[SweepRun { label: None, cfg: cfg.clone(), scenarios: scenarios.to_vec() }],
+        sweep,
+        command,
+    )
+}
+
+/// The general engine entry point: one or more (cluster, scenarios)
+/// groups through the same worker pool. Scenario seeds derive from the
+/// *global* index over the concatenated groups, so the manifest stays
+/// byte-identical for any worker count. The manifest root embeds the
+/// first group's canonical cluster spec; records from groups whose
+/// cluster differs carry their own spec (`ScenarioRecord::cluster`), so
+/// every record remains replayable from the manifest alone.
+pub fn run_sweep_runs(
+    runs: &[SweepRun],
+    sweep: &SweepConfig,
+    command: &str,
+) -> RunManifest {
+    let jobs: Vec<(usize, &Scenario)> = runs
+        .iter()
+        .enumerate()
+        .flat_map(|(ri, r)| r.scenarios.iter().map(move |s| (ri, s)))
+        .collect();
+    // `cluster` to stamp on each group's records: None when the group ran
+    // on the root (first) cluster — the usual single-cluster case. Config
+    // equality implies byte-equal specs because the codec is canonical.
+    let embeds: Vec<Option<crate::util::json::Json>> = runs
+        .iter()
+        .map(|r| {
+            if runs.first().is_some_and(|first| first.cfg == r.cfg) {
+                None
+            } else {
+                Some(r.cfg.to_json())
+            }
+        })
+        .collect();
+
+    let workers = sweep.workers.clamp(1, jobs.len().max(1));
+    let queue: Mutex<VecDeque<usize>> = Mutex::new((0..jobs.len()).collect());
     let slots: Mutex<Vec<Option<ScenarioRecord>>> =
-        Mutex::new((0..scenarios.len()).map(|_| None).collect());
+        Mutex::new((0..jobs.len()).map(|_| None).collect());
 
     thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
                 let next = queue.lock().unwrap().pop_front();
                 let Some(i) = next else { break };
-                let record = scenarios[i].run(cfg, scenario_seed(sweep.seed, i));
+                let (ri, scenario) = jobs[i];
+                let mut record =
+                    scenario.run(&runs[ri].cfg, scenario_seed(sweep.seed, i));
+                record.cluster = embeds[ri].clone();
                 slots.lock().unwrap()[i] = Some(record);
             });
         }
     });
 
-    let mut manifest = RunManifest::new(command, sweep.seed, cfg.to_json());
+    let root = runs
+        .first()
+        .map(|r| r.cfg.to_json())
+        .unwrap_or(crate::util::json::Json::Null);
+    let mut manifest = RunManifest::new(command, sweep.seed, root);
+    for run in runs {
+        if let Some(label) = &run.label {
+            manifest.note(format!(
+                "cluster {label}: {} ({} scenario(s))",
+                run.cfg.name,
+                run.scenarios.len()
+            ));
+        }
+    }
     for record in slots.into_inner().unwrap().into_iter().flatten() {
         manifest.push(record);
     }
@@ -510,6 +576,53 @@ mod tests {
             .map(|k| rec.metric_value(k).unwrap())
             .sum();
         assert!((ledger - 7.0 * 86_400.0).abs() < 1.0, "ledger {ledger}");
+    }
+
+    #[test]
+    fn multi_run_sweeps_embed_per_group_clusters_deterministically() {
+        let mk = |platform: &str| {
+            (crate::config::platform(platform).unwrap().build)()
+        };
+        let scen = |prefix: &str| {
+            vec![
+                Scenario::new(
+                    &format!("{prefix}/sched"),
+                    ScenarioSpec::Sched { jobs: 20 },
+                ),
+                collective_scenario(
+                    AllReduceAlgo::Hierarchical,
+                    TopologyKind::RailOptimized,
+                    1e6,
+                    None,
+                ),
+            ]
+        };
+        // two platforms, distinct scenario ids per group
+        let mut second = scen("b");
+        second[1].id = format!("b/{}", second[1].id);
+        let runs = vec![
+            SweepRun { label: Some("a".into()), cfg: mk("sakuraone"), scenarios: scen("a") },
+            SweepRun { label: Some("b".into()), cfg: mk("abci3-like"), scenarios: second },
+        ];
+        let one = run_sweep_runs(&runs, &SweepConfig { workers: 1, seed: 5 }, "plan/x");
+        let four = run_sweep_runs(&runs, &SweepConfig { workers: 4, seed: 5 }, "plan/x");
+        assert_eq!(one.to_json().emit(), four.to_json().emit());
+        assert_eq!(one.scenarios.len(), 4);
+        // root = first group's cluster; its records carry no per-record spec
+        assert_eq!(one.cluster.emit(), mk("sakuraone").to_json().emit());
+        assert!(one.scenarios[0].cluster.is_none());
+        assert!(one.scenarios[1].cluster.is_none());
+        // the second group's records embed the abci3-like spec verbatim
+        let emb = one.scenarios[2].cluster.as_ref().expect("group-2 cluster");
+        assert_eq!(emb.emit(), mk("abci3-like").to_json().emit());
+        // labeled groups leave a note trail
+        assert!(one.notes.iter().any(|n| n.starts_with("cluster a:")));
+        assert!(one.notes.iter().any(|n| n.starts_with("cluster b:")));
+        // seeds are global-index based: the same scenario at a different
+        // global position draws a different stream
+        let a_sched = one.scenarios[0].metric_value("mean_wait_s");
+        let b_sched = one.scenarios[2].metric_value("mean_wait_s");
+        assert_ne!(a_sched, b_sched);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Round-trip and error-surface tests for the versioned cluster codec
+//! (`config::spec`, cluster schema 1): every registry platform must
+//! survive `from_json(to_json(c)) == c` with byte-identical re-emission,
+//! seeded sparse documents must decode-then-round-trip through the
+//! in-house property harness, and schema-3 manifests must be rebuildable
+//! from their embedded cluster spec byte for byte.
+
+use sakuraone::commands;
+use sakuraone::config::{spec, ClusterConfig, TopologyKind, PLATFORMS};
+use sakuraone::runtime::run_manifest::RunManifest;
+use sakuraone::runtime::scenario::ScenarioSpec;
+use sakuraone::runtime::sweep::{run_sweep_runs, scenario_seed, Scenario, SweepConfig};
+use sakuraone::util::cli::Args;
+use sakuraone::util::json::Json;
+
+fn args(v: &[&str]) -> Args {
+    Args::parse(v.iter().map(|s| s.to_string()), commands::FLAGS).unwrap()
+}
+
+#[test]
+fn every_registry_platform_roundtrips_byte_identically() {
+    for p in PLATFORMS {
+        let cfg = (p.build)();
+        cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", p.name));
+        let j = cfg.to_json();
+        let text = j.emit();
+        // value round trip
+        let back = ClusterConfig::from_json(&j)
+            .unwrap_or_else(|e| panic!("{}: {e}", p.name));
+        assert_eq!(back, cfg, "{}: value round trip", p.name);
+        // byte round trip through text (parse + re-emit)
+        let reparsed = Json::parse(&text).unwrap();
+        let back2 = ClusterConfig::from_json(&reparsed).unwrap();
+        assert_eq!(back2.to_json().emit(), text, "{}: byte re-emission", p.name);
+    }
+}
+
+#[test]
+fn property_seeded_sparse_cluster_docs_decode_and_roundtrip() {
+    // Seeded sparse documents through the in-house property harness:
+    // whatever decodes must re-decode from its canonical emission to the
+    // same config with identical bytes (the replayability contract the
+    // manifest root rests on).
+    use sakuraone::util::proptest::{check, Config};
+    check(
+        Config { cases: 256, ..Config::default() },
+        |rng| {
+            let platform = PLATFORMS[rng.below(PLATFORMS.len() as u64) as usize].name;
+            let nodes = 2 + rng.below(198);
+            let rails = 1 + rng.below(8);
+            let eff = 0.5 + rng.below(50) as f64 / 100.0;
+            let servers = 1 + rng.below(8);
+            match rng.below(5) {
+                0 => format!(r#"{{"platform": "{platform}"}}"#),
+                1 => format!(r#"{{"platform": "{platform}", "nodes": {nodes}}}"#),
+                2 => format!(
+                    r#"{{"network": {{"rails": {rails}, "ethernet_efficiency": {eff}}}}}"#
+                ),
+                3 => format!(
+                    r#"{{"nodes": {nodes}, "storage": {{"servers": {servers}}}}}"#
+                ),
+                _ => format!(
+                    r#"{{"platform": "{platform}", "network": {{"topology": "fat-tree"}}}}"#
+                ),
+            }
+        },
+        |doc: &String| {
+            let cfg = ClusterConfig::from_json(&Json::parse(doc)?)
+                .map_err(|e| format!("decode: {e}"))?;
+            cfg.validate().map_err(|e| format!("decoded invalid: {e}"))?;
+            let j = cfg.to_json();
+            let back = ClusterConfig::from_json(&j)
+                .map_err(|e| format!("re-decode: {e}"))?;
+            if back != cfg {
+                return Err("value round trip diverged".into());
+            }
+            if back.to_json().emit() != j.emit() {
+                return Err("byte re-emission diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn topology_parse_error_is_exact() {
+    // Matching the exactness style of util::cli::parse_dims tests: these
+    // strings surface verbatim in CLI and plan-file errors.
+    assert_eq!(
+        TopologyKind::parse("torus").unwrap_err(),
+        "unknown topology \"torus\" (known: rail-optimized, rail-only, \
+         fat-tree, dragonfly)"
+    );
+    assert_eq!(
+        TopologyKind::parse("").unwrap_err(),
+        "unknown topology \"\" (known: rail-optimized, rail-only, \
+         fat-tree, dragonfly)"
+    );
+}
+
+#[test]
+fn override_errors_are_exact() {
+    let mut cfg = ClusterConfig::default();
+    assert_eq!(
+        cfg.apply_override("warp-drive", "11").unwrap_err(),
+        "unknown config override \"warp-drive\" (known: \
+         ethernet-efficiency, gpus-per-node, leaf-spine-gbps, \
+         node-leaf-gbps, nodes, pods, rails, spines, storage-servers, \
+         topology)"
+    );
+    assert_eq!(
+        cfg.apply_override("nodes", "many").unwrap_err(),
+        "override.nodes: expected a finite number, got Str(\"many\")"
+    );
+    assert_eq!(
+        cfg.apply_override("nodes", "1.5").unwrap_err(),
+        "override.nodes: expected a non-negative integer below 2e15, got 1.5"
+    );
+    assert_eq!(
+        cfg.apply_override("topology", "torus").unwrap_err(),
+        "override.network.topology: unknown topology \"torus\" (known: \
+         rail-optimized, rail-only, fat-tree, dragonfly)"
+    );
+    assert_eq!(
+        cfg.apply_override("pods", "0").unwrap_err(),
+        "network.pods: must be at least 1"
+    );
+    assert_eq!(
+        cfg.apply_override("ethernet-efficiency", "1.5").unwrap_err(),
+        "network.ethernet_efficiency: must be in (0, 1], got 1.5"
+    );
+    // failed overrides leave the config untouched
+    assert_eq!(cfg, ClusterConfig::default());
+}
+
+#[test]
+fn cli_plan_and_json_share_one_override_surface() {
+    // The same bad value produces the codec's error through every entry
+    // point: direct apply_override, the CLI layer, and a plan's `config`
+    // map — one decoder, one error string.
+    let mut cfg = ClusterConfig::default();
+    let direct = cfg.apply_override("topology", "torus").unwrap_err();
+
+    let cli = commands::topo::handle(&args(&["topo", "--topology", "torus"]))
+        .unwrap_err();
+    assert!(format!("{cli:#}").contains(&direct), "CLI: {cli:#}");
+
+    let plan_doc = r#"{"schema": 2, "name": "x", "config": {"topology": "torus"},
+        "scenarios": [{"id": "a", "spec": {"kind": "sched"}}]}"#;
+    let plan = sakuraone::runtime::plan::SweepPlan::from_json(
+        &Json::parse(plan_doc).unwrap(),
+    )
+    .unwrap();
+    let err = plan.resolve(&ClusterConfig::default()).unwrap_err();
+    assert!(err.contains(&direct), "plan error embeds the codec error: {err}");
+}
+
+#[test]
+fn schema3_manifests_rebuild_their_run_byte_for_byte() {
+    // The full replay contract: cluster + specs + seeds, nothing else.
+    // Run a cross-platform sweep, then reconstruct every (cfg, scenario)
+    // pair purely from the emitted manifest and byte-compare.
+    let plan_path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/plans/platform-compare.json"
+    );
+    let m = commands::plan::handle(&args(&[
+        "plan", "run", plan_path, "--json", "--serial",
+    ]))
+    .unwrap();
+    let emitted = m.to_json().emit();
+
+    // parse the manifest back and rebuild
+    let parsed = RunManifest::from_json(&Json::parse(&emitted).unwrap()).unwrap();
+    let root_cfg = ClusterConfig::from_json(&parsed.cluster).unwrap();
+    let mut rebuilt = RunManifest::new(&parsed.command, parsed.seed, root_cfg.to_json());
+    for note in &parsed.notes {
+        rebuilt.note(note);
+    }
+    for (i, rec) in parsed.scenarios.iter().enumerate() {
+        // replay rule: the record's cluster when present, else the root's
+        let cfg = match &rec.cluster {
+            Some(c) => ClusterConfig::from_json(c)
+                .unwrap_or_else(|e| panic!("{}: {e}", rec.id)),
+            None => root_cfg.clone(),
+        };
+        let spec = ScenarioSpec::from_json(rec.spec.as_ref().unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e}", rec.id));
+        let mut replayed =
+            Scenario::new(&rec.id, spec).run(&cfg, scenario_seed(parsed.seed, i));
+        replayed.cluster = rec.cluster.clone();
+        rebuilt.push(replayed);
+    }
+    assert_eq!(rebuilt.to_json().emit(), emitted, "manifest rebuilds byte-for-byte");
+}
+
+#[test]
+fn embedded_cluster_specs_roundtrip_through_the_codec() {
+    // Acceptance: every emitted manifest embeds a cluster spec that
+    // round-trips byte-identically through the schema-1 cluster codec —
+    // at the root and on every cross-platform record.
+    let runs: Vec<_> = ["sakuraone", "abci3-like", "fat-tree-800g"]
+        .iter()
+        .map(|name| sakuraone::runtime::sweep::SweepRun {
+            label: Some(name.to_string()),
+            cfg: (spec::platform(name).unwrap().build)(),
+            scenarios: vec![Scenario::new(
+                &format!("{name}/sched"),
+                ScenarioSpec::Sched { jobs: 10 },
+            )],
+        })
+        .collect();
+    let m = run_sweep_runs(&runs, &SweepConfig { workers: 2, seed: 3 }, "x");
+    let mut specs = vec![m.cluster.clone()];
+    specs.extend(m.scenarios.iter().filter_map(|r| r.cluster.clone()));
+    assert_eq!(specs.len(), 3, "root + two non-root platform records");
+    for j in specs {
+        let cfg = ClusterConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.to_json().emit(), j.emit());
+    }
+}

@@ -1,0 +1,255 @@
+//! Integration tests for the first-class cluster API surface: the
+//! `sakuraone cluster list|show|validate|diff` subcommand family, the
+//! `--platform` flag, and the committed cross-platform comparison plan
+//! (`examples/plans/platform-compare.json`) through both `plan run` and
+//! `suite --plan`.
+
+use sakuraone::commands;
+use sakuraone::config::{ClusterConfig, PLATFORMS};
+use sakuraone::util::cli::Args;
+
+const COMPARE: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/../examples/plans/platform-compare.json"
+);
+
+fn args(v: &[&str]) -> Args {
+    Args::parse(v.iter().map(|s| s.to_string()), commands::FLAGS).unwrap()
+}
+
+#[test]
+fn cluster_list_covers_the_whole_registry() {
+    let m = commands::cluster::handle(&args(&["cluster", "list", "--json"])).unwrap();
+    assert_eq!(m.command, "cluster-list");
+    assert_eq!(m.scenarios.len(), PLATFORMS.len());
+    for p in PLATFORMS {
+        assert!(
+            m.scenarios.iter().any(|s| s.id == format!("cluster/{}", p.name)),
+            "{} missing from cluster list",
+            p.name
+        );
+        assert!(m.notes.iter().any(|n| n.starts_with(&format!("platform {}:", p.name))));
+    }
+    // headline shape is machine-readable
+    let sak = m.scenario("cluster/sakuraone").unwrap();
+    assert_eq!(sak.metric_value("nodes"), Some(100.0));
+    assert_eq!(sak.metric_value("total_gpus"), Some(800.0));
+}
+
+#[test]
+fn cluster_show_manifest_root_is_the_canonical_spec() {
+    let m = commands::cluster::handle(&args(&[
+        "cluster", "show", "abci3-like", "--json",
+    ]))
+    .unwrap();
+    assert_eq!(m.command, "cluster-show");
+    let cfg = ClusterConfig::from_json(&m.cluster).unwrap();
+    assert_eq!(cfg.name, "ABCI3-LIKE");
+    assert_eq!(cfg.network.topology.name(), "fat-tree");
+    assert_eq!(cfg.to_json().emit(), m.cluster.emit(), "root spec round-trips");
+}
+
+#[test]
+fn cluster_show_reads_sparse_spec_files() {
+    let dir = std::env::temp_dir().join("sakuraone-test-clusters");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trimmed.json");
+    std::fs::write(
+        &path,
+        r#"{"platform": "sakuraone-halfscale", "nodes": 30, "name": "TRIM-30"}"#,
+    )
+    .unwrap();
+    let m = commands::cluster::handle(&args(&[
+        "cluster", "show", path.to_str().unwrap(), "--json",
+    ]))
+    .unwrap();
+    let cfg = ClusterConfig::from_json(&m.cluster).unwrap();
+    assert_eq!(cfg.name, "TRIM-30");
+    assert_eq!(cfg.nodes, 30);
+    assert_eq!(cfg.network.nodes_per_pod, 15, "nodes coupling applied");
+    assert_eq!(cfg.network.spines, 4, "halfscale base fields");
+}
+
+#[test]
+fn cluster_validate_checks_the_registry_and_rejects_bad_specs() {
+    // no args = every registry platform
+    let m = commands::cluster::handle(&args(&["cluster", "validate", "--json"]))
+        .unwrap();
+    assert_eq!(m.command, "cluster-validate");
+    assert_eq!(m.notes.len(), PLATFORMS.len());
+    assert!(m.notes.iter().all(|n| n.contains("ok")));
+
+    // named platforms and spec files work too
+    commands::cluster::handle(&args(&["cluster", "validate", "fat-tree-800g", "--json"]))
+        .unwrap();
+
+    let dir = std::env::temp_dir().join("sakuraone-test-clusters");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, r#"{"nodes": 0}"#).unwrap();
+    let err = commands::cluster::handle(&args(&[
+        "cluster", "validate", bad.to_str().unwrap(),
+    ]))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("at least 1"), "{err:#}");
+
+    let err = commands::cluster::handle(&args(&["cluster", "validate", "tsubame"]))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("unknown platform"), "{err:#}");
+}
+
+#[test]
+fn cluster_diff_surfaces_platform_contrasts() {
+    let m = commands::cluster::handle(&args(&[
+        "cluster", "diff", "sakuraone", "abci3-like", "--json",
+    ]))
+    .unwrap();
+    assert_eq!(m.command, "cluster-diff");
+    let rec = &m.scenarios[0];
+    let differing = rec.metric_value("fields_differing").unwrap();
+    assert!(differing >= 5.0, "expected a real contrast, got {differing}");
+    for field in [
+        "network.topology",
+        "network.node_leaf_gbps",
+        "network.switch_latency_ns",
+        "network.switch_chip",
+    ] {
+        assert!(
+            m.notes.iter().any(|n| n.starts_with(&format!("{field}:"))),
+            "{field} missing from diff notes: {:?}",
+            m.notes
+        );
+    }
+    // self-diff is empty
+    let m = commands::cluster::handle(&args(&[
+        "cluster", "diff", "sakuraone", "sakuraone", "--json",
+    ]))
+    .unwrap();
+    assert_eq!(m.scenarios[0].metric_value("fields_differing"), Some(0.0));
+}
+
+#[test]
+fn cluster_action_is_required_and_checked() {
+    for (argv, needle) in [
+        (vec!["cluster"], "needs an action"),
+        (vec!["cluster", "frobnicate"], "unknown cluster action"),
+        (vec!["cluster", "show"], "needs a platform name"),
+        (vec!["cluster", "diff", "sakuraone"], "exactly two"),
+        (vec!["cluster", "show", "tsubame"], "unknown platform"),
+    ] {
+        let err = commands::cluster::handle(&args(&argv)).unwrap_err();
+        assert!(format!("{err:#}").contains(needle), "{argv:?}: {err:#}");
+    }
+}
+
+#[test]
+fn platform_compare_plan_is_byte_identical_across_workers() {
+    let run = |workers: &str| {
+        commands::plan::handle(&args(&[
+            "plan", "run", COMPARE, "--json", "--workers", workers,
+        ]))
+        .unwrap()
+    };
+    let one = run("1");
+    let four = run("4");
+    assert_eq!(
+        one.to_json().emit(),
+        four.to_json().emit(),
+        "worker count leaked into the cross-platform manifest"
+    );
+    assert_eq!(one.command, "plan/platform-compare");
+    assert_eq!(one.seed, 21);
+
+    // three platforms x five scenarios, ids prefixed per platform
+    assert_eq!(one.scenarios.len(), 15);
+    for platform in ["sakuraone", "abci3-like", "fat-tree-800g"] {
+        for scenario in [
+            "hpl/paper-shape",
+            "cluster/nodes25-scaled-hpl",
+            "io500/10node",
+            "resilience/spines2",
+            "sched/200jobs",
+        ] {
+            let id = format!("{platform}/{scenario}");
+            assert!(
+                one.scenarios.iter().any(|s| s.id == id),
+                "{id} missing"
+            );
+        }
+        assert!(
+            one.notes.iter().any(|n| n.starts_with(&format!("cluster {platform}:"))),
+            "note for {platform} missing"
+        );
+    }
+
+    // root cluster = first platform; other platforms embed their spec
+    let root = ClusterConfig::from_json(&one.cluster).unwrap();
+    assert_eq!(root.name, "SAKURAONE");
+    for s in &one.scenarios {
+        match s.id.split('/').next().unwrap() {
+            "sakuraone" => assert!(s.cluster.is_none(), "{}: root covers it", s.id),
+            _ => {
+                let j = s.cluster.as_ref().unwrap_or_else(|| panic!("{}", s.id));
+                let cfg = ClusterConfig::from_json(j).unwrap();
+                assert_eq!(cfg.to_json().emit(), j.emit(), "{}: round trip", s.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn suite_with_platform_compare_plan_matches_plan_run() {
+    let suite = commands::suite::handle(&args(&[
+        "suite", "--json", "--plan", COMPARE, "--serial",
+    ]))
+    .unwrap();
+    let plan = commands::plan::handle(&args(&[
+        "plan", "run", COMPARE, "--json", "--serial",
+    ]))
+    .unwrap();
+    assert_eq!(suite.command, "suite");
+    assert_eq!(suite.scenarios, plan.scenarios);
+    assert_eq!(suite.cluster.emit(), plan.cluster.emit());
+}
+
+#[test]
+fn platform_flag_conflicts_with_plan_cluster_field() {
+    let err = commands::plan::handle(&args(&[
+        "plan", "run", COMPARE, "--platform", "sakuraone",
+    ]))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("--platform conflicts"), "{err:#}");
+}
+
+#[test]
+fn single_benchmark_commands_accept_platform() {
+    let m = commands::topo::handle(&args(&[
+        "topo", "--platform", "fat-tree-800g", "--json",
+    ]))
+    .unwrap();
+    let cfg = ClusterConfig::from_json(&m.cluster).unwrap();
+    assert_eq!(cfg.name, "FAT-TREE-800G");
+    assert_eq!(cfg.network.spines, 16);
+    // the fabric actually built on the ablated topology
+    let rec = m.scenario("topo/fabric").unwrap();
+    assert_eq!(rec.params.get("topology").map(String::as_str), Some("fat-tree"));
+}
+
+#[test]
+fn platform_comparison_shows_fabric_contrast() {
+    // The point of the whole API: the same drill on two platforms gives
+    // different, attributable numbers. The resilience drill rides each
+    // platform's own fabric (no per-spec topology pin).
+    let m = commands::plan::handle(&args(&["plan", "run", COMPARE, "--json", "--serial"]))
+        .unwrap();
+    let healthy = |platform: &str| {
+        m.scenario(&format!("{platform}/resilience/spines2"))
+            .unwrap()
+            .metric_value("healthy_ms")
+            .unwrap()
+    };
+    let sak = healthy("sakuraone");
+    let abci = healthy("abci3-like");
+    assert!(sak > 0.0 && abci > 0.0);
+    assert_ne!(sak, abci, "fabric contrast must be visible in the numbers");
+}

@@ -136,7 +136,7 @@ fn cli_seed_and_config_overrides_win_over_the_plan() {
     ]))
     .unwrap();
     assert_eq!(m.seed, 99, "explicit --seed beats the plan seed");
-    assert_eq!(m.config.get("nodes").unwrap().as_usize().unwrap(), 64);
+    assert_eq!(m.cluster.get("nodes").unwrap().as_usize().unwrap(), 64);
 
     // without --seed the plan's seed sticks
     let m = commands::plan::handle(&args(&["plan", "run", MIXED, "--json", "--serial"]))
@@ -148,9 +148,11 @@ fn cli_seed_and_config_overrides_win_over_the_plan() {
 fn manifests_are_replayable_from_their_embedded_specs() {
     let m = commands::plan::handle(&args(&["plan", "run", MIXED, "--json", "--serial"]))
         .unwrap();
-    // rebuild every scenario purely from the manifest and re-run it with
-    // the engine's per-index seed: records must reproduce exactly
-    let cfg = ClusterConfig::default(); // mixed.json config == defaults
+    // rebuild the cluster AND every scenario purely from the manifest
+    // (schema 3: the root embeds the full resolved cluster spec) and
+    // re-run with the engine's per-index seed: records must reproduce
+    let cfg = ClusterConfig::from_json(&m.cluster).expect("root cluster decodes");
+    assert_eq!(cfg.to_json().emit(), m.cluster.emit(), "root cluster round-trips");
     for (i, rec) in m.scenarios.iter().enumerate() {
         let spec_json = rec.spec.as_ref().unwrap_or_else(|| panic!("{}: no spec", rec.id));
         let spec = ScenarioSpec::from_json(spec_json)
@@ -185,10 +187,13 @@ fn bad_plans_fail_loudly_through_the_cli() {
     std::fs::create_dir_all(&dir).unwrap();
 
     let cases = [
-        ("unknown-kind.json", r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "warp"}}]}"#, "unknown scenario kind"),
-        ("unknown-field.json", r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "hpl", "warp": 1}}]}"#, "unknown field"),
+        ("unknown-kind.json", r#"{"schema": 2, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "warp"}}]}"#, "unknown scenario kind"),
+        ("unknown-field.json", r#"{"schema": 2, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "hpl", "warp": 1}}]}"#, "unknown field"),
         ("bad-schema.json", r#"{"schema": 9, "name": "x", "scenarios": [{"grid": "standard"}]}"#, "schema 9"),
-        ("dup-id.json", r#"{"schema": 1, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "sched"}}, {"id": "a", "spec": {"kind": "sched"}}]}"#, "duplicate scenario id"),
+        ("old-schema.json", r#"{"schema": 1, "name": "x", "scenarios": [{"grid": "standard"}]}"#, "schema 1"),
+        ("dup-id.json", r#"{"schema": 2, "name": "x", "scenarios": [{"id": "a", "spec": {"kind": "sched"}}, {"id": "a", "spec": {"kind": "sched"}}]}"#, "duplicate scenario id"),
+        ("unknown-platform.json", r#"{"schema": 2, "name": "x", "cluster": "tsubame", "scenarios": [{"grid": "standard"}]}"#, "unknown platform"),
+        ("invalid-cluster.json", r#"{"schema": 2, "name": "x", "cluster": {"nodes": 0}, "scenarios": [{"grid": "standard"}]}"#, "at least 1"),
         ("not-json.json", "{", "parsing plan"),
     ] ;
     for (file, body, needle) in cases {

@@ -146,6 +146,7 @@ fn type_errors_are_rejected() {
         r#"{"kind": "hpl", "paper": 1}"#,
         r#"{"kind": "llm", "topology": "torus"}"#,
         r#"{"kind": "collective", "algo": "butterfly"}"#,
+        r#"{"kind": "cluster", "nodes": 0}"#,
         r#"{"kind": "resilience", "plan": {"spines": [0.5]}}"#,
         r#"{"kind": 42}"#,
         r#"[]"#,
