@@ -8,7 +8,9 @@ use crate::util::cli::Args;
 
 pub fn handle(args: &Args) -> Result<RunManifest> {
     let cfg = super::cluster_config(args)?;
-    if args.flag("dump") {
+    // --dump and --json both claim stdout; --json wins so the stream
+    // stays one JSON document (the manifest embeds the cluster anyway)
+    if args.flag("dump") && !super::quiet(args) {
         println!("{}", cfg.to_json().emit());
     } else if !super::quiet(args) {
         println!("{}", render_system(&cfg));

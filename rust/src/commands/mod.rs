@@ -21,6 +21,7 @@ pub mod resilience;
 pub mod sched;
 pub mod suite;
 pub mod topo;
+pub mod trace;
 pub mod train;
 pub mod validate;
 
@@ -119,6 +120,9 @@ USAGE: sakuraone <subcommand> [options]
             | validate FILE... | list              see docs/plans.md)
   cluster   list | show NAME|FILE | validate [NAME|FILE...] | diff A B
             (platform registry + cluster spec codec, see docs/clusters.md)
+  trace     synth [--seed S] [--preset P] [--days D] [--trace-out FILE]
+            | replay FILE|- [--policy fifo|backfill|fairshare]
+            | stats FILE|-                 (workload traces, docs/traces.md)
 
 Every subcommand also accepts:
   --json        emit the run manifest as JSON on stdout (quiet tables)

@@ -1,0 +1,181 @@
+//! `sakuraone trace` — workload-trace synthesis, replay and stats
+//! (docs/traces.md).
+//!
+//! `synth` prints the canonical trace JSON on stdout (unless `--json`
+//! claims the stream for the manifest; `--trace-out FILE` always works),
+//! so `sakuraone trace synth --seed 7 | sakuraone trace replay -` pipes
+//! a byte-reproducible trace straight into the policy sweep.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::runtime::scenario::trace_record;
+use crate::scheduler::trace::{
+    replay, summarize, synthesize, Policy, SynthConfig, Trace,
+};
+use crate::util::cli::Args;
+use crate::util::table::{kv_table, Table};
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    match args.positional.first().map(String::as_str) {
+        Some("synth") => synth(args),
+        Some("replay") => replay_cmd(args),
+        Some("stats") => stats(args),
+        Some(other) => {
+            bail!("unknown trace action {other:?} (known: synth, replay, stats)")
+        }
+        None => bail!("trace: missing action (synth, replay, stats)"),
+    }
+}
+
+/// Build the synth config: `--preset` picks the base, knob flags override.
+fn synth_config(args: &Args) -> Result<SynthConfig> {
+    let mut cfg = SynthConfig::preset(args.get("preset").unwrap_or("dev-week"))
+        .map_err(anyhow::Error::msg)?;
+    if let Some(name) = args.get("name") {
+        cfg.name = name.to_string();
+    }
+    cfg.duration_days =
+        args.get_f64("days", cfg.duration_days).map_err(anyhow::Error::msg)?;
+    cfg.accounts =
+        args.get_usize("accounts", cfg.accounts).map_err(anyhow::Error::msg)?;
+    cfg.training_jobs = args
+        .get_usize("training-jobs", cfg.training_jobs)
+        .map_err(anyhow::Error::msg)?;
+    cfg.interactive_per_hour = args
+        .get_f64("interactive-rate", cfg.interactive_per_hour)
+        .map_err(anyhow::Error::msg)?;
+    cfg.diurnal_amplitude = args
+        .get_f64("amplitude", cfg.diurnal_amplitude)
+        .map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+fn summary_record(id: &str, trace: &Trace, extra: &[(&str, String)]) -> ScenarioRecord {
+    let s = summarize(trace);
+    let mut rec = ScenarioRecord::new(id, "trace").param("trace", trace.name.as_str());
+    for (k, v) in extra {
+        rec = rec.param(k, v);
+    }
+    rec.metric("jobs", s.jobs as f64)
+        .metric("accounts", s.accounts as f64)
+        .metric("span_days", s.span_days)
+        .metric("node_hours", s.node_hours)
+        .metric("max_nodes", s.max_nodes as f64)
+        .metric("completed_pct", s.completed_fraction * 100.0)
+        .metric("median_runtime_s", s.median_runtime_s)
+        .metric("p90_runtime_s", s.p90_runtime_s)
+}
+
+fn synth(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let synth = synth_config(args)?;
+    let trace = synthesize(&synth, seed);
+    let text = trace.to_json().emit();
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, &text)
+            .with_context(|| format!("writing trace to {path}"))?;
+    }
+    // the trace itself is the payload; --json redirects stdout to the
+    // manifest instead (use --trace-out to capture both)
+    if !super::quiet(args) {
+        println!("{text}");
+    }
+    let mut m = RunManifest::new("trace", seed, cfg.to_json());
+    m.push(summary_record(
+        &format!("trace/synth-{}", trace.name),
+        &trace,
+        &[("seed", seed.to_string()), ("synth", synth.to_json().emit())],
+    ));
+    Ok(m)
+}
+
+/// Read a trace document from FILE, or stdin for `-`.
+fn load_trace(args: &Args) -> Result<Trace> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("trace: missing TRACE file (or '-' for stdin)");
+    };
+    let text = if path == "-" {
+        std::io::read_to_string(std::io::stdin()).context("reading trace from stdin")?
+    } else {
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?
+    };
+    Trace::parse(&text).map_err(anyhow::Error::msg)
+}
+
+fn replay_cmd(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let trace = load_trace(args)?;
+    let policies: Vec<Policy> = match args.get("policy") {
+        Some(p) => vec![Policy::parse(p).map_err(anyhow::Error::msg)?],
+        None => Policy::ALL.to_vec(),
+    };
+    let mut m = RunManifest::new("trace", seed, cfg.to_json());
+    let mut table = Table::new(
+        &format!(
+            "trace replay — {} ({} jobs) on {} nodes",
+            trace.name,
+            trace.jobs.len(),
+            cfg.nodes
+        ),
+        &[
+            "policy",
+            "backfilled",
+            "wait p50 (s)",
+            "wait p90 (s)",
+            "wait mean (s)",
+            "util (%)",
+            "makespan (h)",
+        ],
+    );
+    for policy in policies {
+        let rep = replay(&trace, &cfg, policy);
+        table.row(&[
+            policy.name().to_string(),
+            format!("{}", rep.backfilled),
+            format!("{:.1}", rep.wait_p50_s),
+            format!("{:.1}", rep.wait_p90_s),
+            format!("{:.1}", rep.wait_mean_s),
+            format!("{:.1}", rep.utilization * 100.0),
+            format!("{:.2}", rep.makespan_s / 3600.0),
+        ]);
+        m.push(trace_record(
+            &format!("trace/{}-{}", trace.name, policy.name()),
+            &trace,
+            &rep,
+        ));
+    }
+    if !super::quiet(args) {
+        println!("{}", table.render());
+    }
+    Ok(m)
+}
+
+fn stats(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let trace = load_trace(args)?;
+    let s = summarize(&trace);
+    if !super::quiet(args) {
+        println!(
+            "{}",
+            kv_table(
+                &format!("trace stats — {}", trace.name),
+                &[
+                    ("jobs", format!("{}", s.jobs)),
+                    ("accounts", format!("{}", s.accounts)),
+                    ("span", format!("{:.2} days", s.span_days)),
+                    ("node-hours", format!("{:.0}", s.node_hours)),
+                    ("widest job", format!("{} nodes", s.max_nodes)),
+                    ("completed", format!("{:.1}%", s.completed_fraction * 100.0)),
+                    ("median runtime", format!("{:.0} s", s.median_runtime_s)),
+                    ("p90 runtime", format!("{:.0} s", s.p90_runtime_s)),
+                ],
+            )
+        );
+    }
+    let mut m = RunManifest::new("trace", 0, cfg.to_json());
+    m.push(summary_record(&format!("trace/stats-{}", trace.name), &trace, &[]));
+    Ok(m)
+}

@@ -145,89 +145,14 @@ pub fn known_platforms() -> String {
 }
 
 // ---------------------------------------------------------------------------
-// JSON helpers: strict on unknown keys, defaults for missing ones (the
-// same discipline as runtime::scenario's spec codec).
+// JSON helpers: the shared canonical-codec surface (util::codec), the
+// same discipline as runtime::scenario's spec codec, plus thin local
+// wrappers (usize-typed `jint`, config-aware `topology_or`) so util
+// stays config-independent.
 
-fn obj<'a>(j: &'a Json, at: &str) -> Result<&'a BTreeMap<String, Json>, String> {
-    j.as_obj().ok_or_else(|| format!("{at}: expected an object"))
-}
-
-fn check_keys(
-    m: &BTreeMap<String, Json>,
-    allowed: &[&str],
-    at: &str,
-) -> Result<(), String> {
-    for k in m.keys() {
-        if !allowed.contains(&k.as_str()) {
-            return Err(format!(
-                "{at}: unknown field {k:?} (allowed: {})",
-                allowed.join(", ")
-            ));
-        }
-    }
-    Ok(())
-}
-
-fn num(m: &BTreeMap<String, Json>, key: &str, at: &str) -> Result<Option<f64>, String> {
-    match m.get(key) {
-        None => Ok(None),
-        Some(Json::Num(n)) if n.is_finite() => Ok(Some(*n)),
-        Some(other) => {
-            Err(format!("{at}.{key}: expected a finite number, got {other:?}"))
-        }
-    }
-}
-
-fn f64_or(m: &BTreeMap<String, Json>, key: &str, default: f64, at: &str) -> Result<f64, String> {
-    Ok(num(m, key, at)?.unwrap_or(default))
-}
-
-fn usize_or(
-    m: &BTreeMap<String, Json>,
-    key: &str,
-    default: usize,
-    at: &str,
-) -> Result<usize, String> {
-    match num(m, key, at)? {
-        None => Ok(default),
-        Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 2e15 => Ok(n as usize),
-        Some(n) => Err(format!(
-            "{at}.{key}: expected a non-negative integer below 2e15, got {n}"
-        )),
-    }
-}
-
-fn str_or(
-    m: &BTreeMap<String, Json>,
-    key: &str,
-    default: &str,
-    at: &str,
-) -> Result<String, String> {
-    match m.get(key) {
-        None => Ok(default.to_string()),
-        Some(Json::Str(s)) => Ok(s.clone()),
-        Some(other) => Err(format!("{at}.{key}: expected a string, got {other:?}")),
-    }
-}
-
-fn str_list_or(
-    m: &BTreeMap<String, Json>,
-    key: &str,
-    default: &[String],
-    at: &str,
-) -> Result<Vec<String>, String> {
-    let Some(v) = m.get(key) else { return Ok(default.to_vec()) };
-    let arr = v
-        .as_arr()
-        .ok_or_else(|| format!("{at}.{key}: expected an array of strings"))?;
-    arr.iter()
-        .map(|x| {
-            x.as_str()
-                .map(str::to_string)
-                .ok_or_else(|| format!("{at}.{key}: expected an array of strings"))
-        })
-        .collect()
-}
+use crate::util::codec::{
+    check_keys, f64_or, jlist, jnum, jstr, obj, str_list_or, str_or, usize_or,
+};
 
 fn topology_or(
     m: &BTreeMap<String, Json>,
@@ -235,31 +160,11 @@ fn topology_or(
     default: TopologyKind,
     at: &str,
 ) -> Result<TopologyKind, String> {
-    match m.get(key) {
-        None => Ok(default),
-        Some(Json::Str(s)) => {
-            TopologyKind::parse(s).map_err(|e| format!("{at}.{key}: {e}"))
-        }
-        Some(other) => {
-            Err(format!("{at}.{key}: expected a topology name, got {other:?}"))
-        }
-    }
-}
-
-fn jnum(n: f64) -> Json {
-    Json::Num(n)
+    crate::util::codec::name_or(m, key, default, at, "topology name", TopologyKind::parse)
 }
 
 fn jint(n: usize) -> Json {
-    Json::Num(n as f64)
-}
-
-fn jstr(s: &str) -> Json {
-    Json::Str(s.to_string())
-}
-
-fn jlist(v: &[String]) -> Json {
-    Json::Arr(v.iter().map(|s| jstr(s)).collect())
+    crate::util::codec::jint(n as u64)
 }
 
 // ---------------------------------------------------------------------------

@@ -237,11 +237,10 @@ pub fn requeue_wait(cfg: &ClusterConfig, nodes: usize, bg_jobs: usize, seed: u64
         return 0.0;
     }
     let mut sim = SlurmSim::new(cfg);
-    let mut rng = Rng::new(seed);
-    for id in 0..bg_jobs as u64 {
-        let n = 1 + rng.below((cfg.nodes / 2).max(1) as u64) as usize;
-        let rt = rng.lognormal(900.0, 0.8);
-        sim.submit(Job::new(id, "bg", n, rt * 1.5, rt).with_priority(1));
+    // trace-fed background mix: dev-week-calibrated training jobs from
+    // the workload synthesizer (scheduler::trace), ids 0..bg_jobs
+    for job in crate::scheduler::trace::requeue_background_jobs(cfg, bg_jobs, seed) {
+        sim.submit(job);
     }
     let rid = bg_jobs as u64;
     let want = nodes.clamp(1, cfg.nodes);

@@ -18,6 +18,8 @@
 //!             registry platform or several at once (docs/plans.md)
 //!   cluster — the platform registry and versioned cluster spec codec:
 //!             list/show/validate/diff (docs/clusters.md)
+//!   trace   — workload traces: synth/replay/stats through the Slurm
+//!             simulator's scheduler-policy sweep (docs/traces.md)
 //!   validate— numerics checks through the AOT artifacts
 //!   report  — Table 3 census, rankings, config inventory
 //!   suite   — everything above through the parallel sweep engine
@@ -61,6 +63,7 @@ fn run(args: &Args) -> Result<()> {
         "campaign" => commands::campaign::handle(args)?,
         "plan" => commands::plan::handle(args)?,
         "cluster" => commands::cluster::handle(args)?,
+        "trace" => commands::trace::handle(args)?,
         "power" => commands::power::handle(args)?,
         "checkpoint" => commands::checkpoint::handle(args)?,
         "resilience" => commands::resilience::handle(args)?,

@@ -41,6 +41,7 @@ use crate::llm::campaign::{run_campaign, CampaignConfig, CampaignReport};
 use crate::llm::{step_time, LlmConfig};
 use crate::network::{apply_failures, FailurePlan};
 use crate::runtime::run_manifest::ScenarioRecord;
+use crate::scheduler::trace::{self, Policy, SynthConfig};
 use crate::scheduler::{Job, SlurmSim};
 use crate::storage::LustreModel;
 use crate::topology::builders::build;
@@ -86,6 +87,9 @@ pub enum ScenarioSpec {
     Sched { jobs: usize },
     /// Scaled-down cluster running a proportionally scaled HPL.
     Cluster { nodes: usize, params: HplParams },
+    /// Synthesized workload trace replayed through the Slurm-like
+    /// scheduler under a policy (docs/traces.md).
+    Trace { synth: Box<SynthConfig>, policy: Policy },
 }
 
 /// Everything the system knows about one scenario kind. The registry row
@@ -113,9 +117,9 @@ pub struct KindDescriptor {
 }
 
 /// Every scenario kind, in the order specs are documented.
-pub static REGISTRY: [&KindDescriptor; 10] = [
+pub static REGISTRY: [&KindDescriptor; 11] = [
     &HPL, &HPCG, &MXP, &IO500, &LLM, &RESILIENCE, &COLLECTIVE, &CAMPAIGN,
-    &SCHED, &CLUSTER,
+    &SCHED, &CLUSTER, &TRACE,
 ];
 
 /// Look a descriptor up by wire name.
@@ -161,6 +165,7 @@ impl ScenarioSpec {
             ScenarioSpec::Campaign { .. } => &CAMPAIGN,
             ScenarioSpec::Sched { .. } => &SCHED,
             ScenarioSpec::Cluster { .. } => &CLUSTER,
+            ScenarioSpec::Trace { .. } => &TRACE,
         }
     }
 
@@ -185,94 +190,14 @@ impl ScenarioSpec {
 }
 
 // ---------------------------------------------------------------------------
-// JSON helpers: strict on unknown keys, defaults for missing ones.
+// JSON helpers: the shared canonical-codec surface (util::codec) — strict
+// on unknown keys, defaults for missing ones — plus two thin local
+// wrappers that keep util config-independent.
 
-fn obj<'a>(j: &'a Json, at: &str) -> Result<&'a BTreeMap<String, Json>, String> {
-    j.as_obj().ok_or_else(|| format!("{at}: expected an object"))
-}
-
-fn check_keys(
-    m: &BTreeMap<String, Json>,
-    allowed: &[&str],
-    at: &str,
-) -> Result<(), String> {
-    for k in m.keys() {
-        if !allowed.contains(&k.as_str()) {
-            return Err(format!(
-                "{at}: unknown field {k:?} (allowed: {})",
-                allowed.join(", ")
-            ));
-        }
-    }
-    Ok(())
-}
-
-fn num(m: &BTreeMap<String, Json>, key: &str, at: &str) -> Result<Option<f64>, String> {
-    match m.get(key) {
-        None => Ok(None),
-        Some(Json::Num(n)) if n.is_finite() => Ok(Some(*n)),
-        Some(other) => Err(format!("{at}.{key}: expected a finite number, got {other:?}")),
-    }
-}
-
-fn f64_or(m: &BTreeMap<String, Json>, key: &str, default: f64, at: &str) -> Result<f64, String> {
-    Ok(num(m, key, at)?.unwrap_or(default))
-}
-
-// Integer fields ride JSON numbers (f64); the 2e15 cap keeps them inside
-// f64's exact-integer range so encode/decode can never lose precision
-// (see the module contract).
-fn int_or(m: &BTreeMap<String, Json>, key: &str, default: u64, at: &str) -> Result<u64, String> {
-    match num(m, key, at)? {
-        None => Ok(default),
-        Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 2e15 => Ok(n as u64),
-        Some(n) => Err(format!(
-            "{at}.{key}: expected a non-negative integer below 2e15, got {n}"
-        )),
-    }
-}
-
-fn usize_or(
-    m: &BTreeMap<String, Json>,
-    key: &str,
-    default: usize,
-    at: &str,
-) -> Result<usize, String> {
-    int_or(m, key, default as u64, at).map(|n| n as usize)
-}
-
-fn bool_or(
-    m: &BTreeMap<String, Json>,
-    key: &str,
-    default: bool,
-    at: &str,
-) -> Result<bool, String> {
-    match m.get(key) {
-        None => Ok(default),
-        Some(Json::Bool(b)) => Ok(*b),
-        Some(other) => Err(format!("{at}.{key}: expected a bool, got {other:?}")),
-    }
-}
-
-fn usize_list_or(
-    m: &BTreeMap<String, Json>,
-    key: &str,
-    default: Vec<usize>,
-    at: &str,
-) -> Result<Vec<usize>, String> {
-    let Some(v) = m.get(key) else { return Ok(default) };
-    let arr = v
-        .as_arr()
-        .ok_or_else(|| format!("{at}.{key}: expected an array of integers"))?;
-    arr.iter()
-        .map(|x| match x.as_f64() {
-            Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 2e15 => Ok(n as usize),
-            _ => Err(format!(
-                "{at}.{key}: expected non-negative integers below 2e15"
-            )),
-        })
-        .collect()
-}
+use crate::util::codec::{
+    bool_or, check_keys, f64_or, int_or, jint, jnum, obj, usize_list_or,
+    usize_or,
+};
 
 fn topology_or(
     m: &BTreeMap<String, Json>,
@@ -280,27 +205,11 @@ fn topology_or(
     default: TopologyKind,
     at: &str,
 ) -> Result<TopologyKind, String> {
-    match m.get(key) {
-        None => Ok(default),
-        Some(Json::Str(s)) => {
-            TopologyKind::parse(s).map_err(|e| format!("{at}.{key}: {e}"))
-        }
-        Some(other) => Err(format!("{at}.{key}: expected a topology name, got {other:?}")),
-    }
-}
-
-fn jnum(n: f64) -> Json {
-    Json::Num(n)
-}
-
-fn jint(n: u64) -> Json {
-    Json::Num(n as f64)
+    crate::util::codec::name_or(m, key, default, at, "topology name", TopologyKind::parse)
 }
 
 fn spec_obj(kind: &str) -> BTreeMap<String, Json> {
-    let mut m = BTreeMap::new();
-    m.insert("kind".into(), Json::Str(kind.into()));
-    m
+    crate::util::codec::tagged_obj("kind", kind)
 }
 
 // ---------------------------------------------------------------------------
@@ -1059,6 +968,55 @@ static CLUSTER: KindDescriptor = KindDescriptor {
 };
 
 // ---------------------------------------------------------------------------
+// trace
+
+static TRACE: KindDescriptor = KindDescriptor {
+    kind: "trace",
+    summary: "synthesized workload trace replayed under a scheduler policy",
+    fields: "synth{name,duration_days,accounts,training_jobs,\
+             training_nodes_max,interactive_per_hour,diurnal_amplitude,\
+             peak_hour,cancelled_fraction,...}, policy",
+    decode: |j| {
+        let m = obj(j, "trace")?;
+        check_keys(m, &["kind", "synth", "policy"], "trace")?;
+        let synth = match m.get("synth") {
+            Some(s) => {
+                SynthConfig::from_json(s, SynthConfig::dev_cluster_week(), "trace.synth")?
+            }
+            None => SynthConfig::dev_cluster_week(),
+        };
+        Ok(ScenarioSpec::Trace {
+            synth: Box::new(synth),
+            policy: crate::util::codec::name_or(
+                m,
+                "policy",
+                Policy::Backfill,
+                "trace",
+                "policy name",
+                Policy::parse,
+            )?,
+        })
+    },
+    encode: |s| {
+        let ScenarioSpec::Trace { synth, policy } = s else { unreachable!() };
+        let mut m = spec_obj("trace");
+        m.insert("policy".into(), Json::Str(policy.name().into()));
+        m.insert("synth".into(), synth.to_json());
+        Json::Obj(m)
+    },
+    run: |s, cfg, seed| {
+        let ScenarioSpec::Trace { synth, policy } = &s.spec else { unreachable!() };
+        let t = trace::synthesize(synth, seed);
+        let rep = trace::replay(&t, cfg, *policy);
+        trace_record(&s.id, &t, &rep)
+    },
+    example: || ScenarioSpec::Trace {
+        synth: Box::new(SynthConfig::dev_cluster_week()),
+        policy: Policy::Backfill,
+    },
+};
+
+// ---------------------------------------------------------------------------
 // Record builders shared with the single-benchmark subcommands.
 
 pub(crate) fn hpl_record(id: &str, r: &HplResult, anchored: bool) -> ScenarioRecord {
@@ -1173,6 +1131,26 @@ pub(crate) fn campaign_record(
         .metric("lost_work_s", r.time.lost_work_s)
         .metric("restart_s", r.time.restart_s)
         .metric("queue_s", r.time.queue_s)
+}
+
+pub(crate) fn trace_record(
+    id: &str,
+    t: &trace::Trace,
+    r: &trace::ReplayReport,
+) -> ScenarioRecord {
+    ScenarioRecord::new(id, "trace")
+        .param("trace", t.name.as_str())
+        .param("policy", r.policy.name())
+        .param("jobs", r.jobs)
+        .metric("completed", r.completed as f64)
+        .metric("backfilled", r.backfilled as f64)
+        .metric("wait_mean_s", r.wait_mean_s)
+        .metric("wait_p50_s", r.wait_p50_s)
+        .metric("wait_p90_s", r.wait_p90_s)
+        .metric("wait_p99_s", r.wait_p99_s)
+        .metric("wait_max_s", r.wait_max_s)
+        .metric("utilization_pct", r.utilization * 100.0)
+        .metric("makespan_h", r.makespan_s / 3600.0)
 }
 
 pub(crate) fn io500_record(id: &str, r: &Io500Result, degraded: bool) -> ScenarioRecord {

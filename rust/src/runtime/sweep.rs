@@ -28,6 +28,7 @@ use crate::llm::campaign::CampaignConfig;
 use crate::llm::LlmConfig;
 use crate::network::FailurePlan;
 use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::scheduler::trace::{Policy, SynthConfig};
 use crate::util::rng::Rng;
 
 pub use crate::runtime::scenario::{Scenario, ScenarioSpec};
@@ -224,6 +225,22 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
             1e8,
             None,
         ),
+        // Workload-trace replay: the same synthesized dev-week trace under
+        // conservative backfill vs strict FIFO (docs/traces.md).
+        Scenario::new(
+            "trace/dev-week-backfill",
+            S::Trace {
+                synth: Box::new(SynthConfig::dev_cluster_week()),
+                policy: Policy::Backfill,
+            },
+        ),
+        Scenario::new(
+            "trace/dev-week-fifo",
+            S::Trace {
+                synth: Box::new(SynthConfig::dev_cluster_week()),
+                policy: Policy::Fifo,
+            },
+        ),
     ];
     // Goodput campaigns (the `campaign` subcommand runs the full grid;
     // the suite gates the quick pair).
@@ -321,6 +338,23 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
             },
         ),
         Scenario::new("sched/400jobs", S::Sched { jobs: 400 }),
+        // Trace-replay policy ablations beyond the gated backfill/fifo
+        // pair: fairshare on the dev-week trace, and the multi-tenant
+        // contrast operating point.
+        Scenario::new(
+            "trace/dev-week-fairshare",
+            S::Trace {
+                synth: Box::new(SynthConfig::dev_cluster_week()),
+                policy: Policy::Fairshare,
+            },
+        ),
+        Scenario::new(
+            "trace/multi-tenant-week",
+            S::Trace {
+                synth: Box::new(SynthConfig::multi_tenant_week()),
+                policy: Policy::Backfill,
+            },
+        ),
         // Collective algorithm × topology ablations beyond the quick picks.
         collective_scenario(AllReduceAlgo::Ring, TopologyKind::RailOptimized, 1e9, None),
         collective_scenario(AllReduceAlgo::Tree, TopologyKind::RailOptimized, 1e8, None),

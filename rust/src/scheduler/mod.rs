@@ -1,12 +1,18 @@
 //! Slurm-like workload manager (paper §3): jobs, rail-aware placement,
-//! priority FIFO + conservative backfill.
+//! priority FIFO + conservative backfill, and workload-trace
+//! synthesis/replay (docs/traces.md).
 
 pub mod fairshare;
 pub mod job;
 pub mod placement;
 pub mod slurm;
+pub mod trace;
 
 pub use fairshare::{FairShare, Partition};
 pub use job::{Allocation, Job, JobState};
 pub use placement::{place, Placement};
 pub use slurm::{SchedulerStats, SlurmSim};
+pub use trace::{
+    replay, summarize, synthesize, Outcome, Policy, ReplayReport, SynthConfig,
+    Trace, TraceJob, TraceSummary, TRACE_SCHEMA_VERSION,
+};

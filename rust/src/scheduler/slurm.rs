@@ -30,6 +30,7 @@ pub struct SlurmSim {
     waits: Vec<f64>,
     backfilled: usize,
     single_pod: usize,
+    backfill_enabled: bool,
 }
 
 impl SlurmSim {
@@ -45,7 +46,22 @@ impl SlurmSim {
             waits: Vec::new(),
             backfilled: 0,
             single_pod: 0,
+            backfill_enabled: true,
         }
+    }
+
+    /// Toggle conservative backfill (on by default). With backfill off
+    /// the queue is strict priority FIFO: nothing starts past a blocked
+    /// head — the `fifo` end of the trace-replay policy sweep
+    /// (`scheduler::trace`).
+    pub fn set_backfill(&mut self, on: bool) {
+        self.backfill_enabled = on;
+    }
+
+    /// Per-job queue waits (seconds), in start order — the sample the
+    /// trace-replay reports take percentiles over.
+    pub fn waits(&self) -> &[f64] {
+        &self.waits
     }
 
     pub fn submit(&mut self, job: Job) {
@@ -112,7 +128,10 @@ impl SlurmSim {
                 }
                 Some(resv) => {
                     // backfill: must fit now and not delay the reservation
-                    if can_place && self.now + job.time_limit <= resv {
+                    if self.backfill_enabled
+                        && can_place
+                        && self.now + job.time_limit <= resv
+                    {
                         self.start(&job);
                         self.pending.remove(i);
                         self.backfilled += 1;
@@ -264,6 +283,23 @@ mod tests {
         // small starts at ~2 (backfilled), not after head
         let small = s.history.iter().find(|a| a.job_id == 3).unwrap();
         assert!(small.start < 10.0, "start={}", small.start);
+    }
+
+    #[test]
+    fn backfill_off_forces_strict_fifo() {
+        let mut s = sim();
+        s.set_backfill(false);
+        // same workload as backfill_fills_the_hole: with the toggle off
+        // the small job must queue behind the blocked head instead.
+        s.submit(Job::new(1, "wide", 60, 200.0, 100.0));
+        s.submit(Job::new(2, "head", 100, 200.0, 10.0).with_submit_time(1.0));
+        s.submit(Job::new(3, "small", 10, 50.0, 50.0).with_submit_time(2.0));
+        let stats = s.run();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.backfilled, 0);
+        let small = s.history.iter().find(|a| a.job_id == 3).unwrap();
+        assert!(small.start >= 110.0, "start={}", small.start);
+        assert_eq!(s.waits().len(), 3);
     }
 
     #[test]

@@ -1,0 +1,899 @@
+//! Workload traces: a versioned canonical JSON trace format (schema
+//! [`TRACE_SCHEMA_VERSION`]), a seeded synthesizer, and replay through
+//! [`SlurmSim`] under a scheduler-policy sweep.
+//!
+//! The synthesizer is calibrated to the workload dynamics the follow-up
+//! paper reports for SAKURAONE's single-tenant LLM development
+//! environment (arxiv 2604.13600): a base of long training jobs under
+//! diurnal interactive bursts, with parameterized churn (cancelled /
+//! failed / timed-out fractions). The `multi-tenant-week` preset is the
+//! contrasting ABCI 3.0-style operating point (arxiv 2411.09134): many
+//! accounts, flatter diurnal swing, smaller and shorter jobs.
+//!
+//! Codec contract (shared with the scenario and cluster codecs via
+//! `util::codec`): `to_json` emits every field with sorted keys —
+//! deterministic bytes; `from_json` accepts sparse job objects with
+//! documented defaults and rejects unknown fields and version
+//! mismatches; the round trip is exact and re-emission byte-identical.
+//! Synthesis is a pure function of `(SynthConfig, seed)` on the seeded
+//! RNG substrate, so traces are byte-reproducible; replay is free of
+//! randomness, so `(trace, cluster, policy)` fixes the report.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::config::ClusterConfig;
+use crate::util::codec::{
+    check_keys, check_schema, f64_or, int_or, jint, jnum, jstr, name_or, obj,
+    str_or, usize_or,
+};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::fairshare::FairShare;
+use super::job::Job;
+use super::slurm::SlurmSim;
+
+/// Version of the trace wire encoding; every trace document carries it
+/// as `"schema"`. Bump when the job field set changes incompatibly.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// How a traced job ended on the real (or synthetic) cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Completed,
+    Failed,
+    Cancelled,
+    Timeout,
+}
+
+impl Outcome {
+    pub const ALL: [Outcome; 4] = [
+        Outcome::Completed,
+        Outcome::Failed,
+        Outcome::Cancelled,
+        Outcome::Timeout,
+    ];
+
+    /// Wire name (`"outcome"` in trace JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Completed => "completed",
+            Outcome::Failed => "failed",
+            Outcome::Cancelled => "cancelled",
+            Outcome::Timeout => "timeout",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Outcome, String> {
+        Outcome::ALL
+            .into_iter()
+            .find(|o| o.name() == s)
+            .ok_or_else(|| {
+                let known =
+                    Outcome::ALL.map(Outcome::name).join(", ");
+                format!("unknown job outcome {s:?} (known: {known})")
+            })
+    }
+}
+
+/// One job in a workload trace. `requested_s` is what the user asked
+/// Slurm for (the wall limit backfill reasons about); `runtime_s` is
+/// what actually happened.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceJob {
+    pub id: u64,
+    pub account: String,
+    /// Submission time, seconds from trace start.
+    pub submit_s: f64,
+    /// Whole nodes (SAKURAONE allocates by node).
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Requested wall limit (s).
+    pub requested_s: f64,
+    /// Actual runtime (s).
+    pub runtime_s: f64,
+    pub outcome: Outcome,
+}
+
+const JOB_KEYS: &[&str] = &[
+    "account", "gpus_per_node", "id", "nodes", "outcome", "requested_s",
+    "runtime_s", "submit_s",
+];
+
+impl TraceJob {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("account".into(), jstr(&self.account));
+        m.insert("gpus_per_node".into(), jint(self.gpus_per_node as u64));
+        m.insert("id".into(), jint(self.id));
+        m.insert("nodes".into(), jint(self.nodes as u64));
+        m.insert("outcome".into(), jstr(self.outcome.name()));
+        m.insert("requested_s".into(), jnum(self.requested_s));
+        m.insert("runtime_s".into(), jnum(self.runtime_s));
+        m.insert("submit_s".into(), jnum(self.submit_s));
+        Json::Obj(m)
+    }
+
+    /// Decode one job object; sparse fields take defaults (`id` defaults
+    /// to the job's index in the `jobs` array).
+    fn from_json(j: &Json, default_id: u64, at: &str) -> Result<TraceJob, String> {
+        let m = obj(j, at)?;
+        check_keys(m, JOB_KEYS, at)?;
+        let nodes = usize_or(m, "nodes", 1, at)?;
+        if nodes == 0 {
+            return Err(format!("{at}.nodes: must be at least 1"));
+        }
+        for key in ["submit_s", "requested_s", "runtime_s"] {
+            if f64_or(m, key, 0.0, at)? < 0.0 {
+                return Err(format!("{at}.{key}: must be non-negative"));
+            }
+        }
+        Ok(TraceJob {
+            id: int_or(m, "id", default_id, at)?,
+            account: str_or(m, "account", "acct-00", at)?,
+            submit_s: f64_or(m, "submit_s", 0.0, at)?,
+            nodes,
+            gpus_per_node: usize_or(m, "gpus_per_node", 8, at)?,
+            requested_s: f64_or(m, "requested_s", 3600.0, at)?,
+            runtime_s: f64_or(m, "runtime_s", 1800.0, at)?,
+            outcome: name_or(
+                m,
+                "outcome",
+                Outcome::Completed,
+                at,
+                "job outcome",
+                Outcome::parse,
+            )?,
+        })
+    }
+}
+
+/// A workload trace: a named list of jobs (canonical order: as listed;
+/// replay sorts by submit time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    pub jobs: Vec<TraceJob>,
+}
+
+impl Trace {
+    /// Canonical encoding: `{"jobs": [...], "name": ..., "schema": 1}`
+    /// (keys sorted by the `BTreeMap`), every job field present.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), jint(TRACE_SCHEMA_VERSION));
+        m.insert("name".into(), jstr(&self.name));
+        m.insert(
+            "jobs".into(),
+            Json::Arr(self.jobs.iter().map(TraceJob::to_json).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Decode a trace document. The `"schema"` field is required and
+    /// must match [`TRACE_SCHEMA_VERSION`]; job ids must be unique.
+    pub fn from_json(j: &Json) -> Result<Trace, String> {
+        let m = obj(j, "trace")?;
+        check_keys(m, &["jobs", "name", "schema"], "trace")?;
+        check_schema(m, TRACE_SCHEMA_VERSION, "trace")?;
+        let name = str_or(m, "name", "unnamed", "trace")?;
+        let mut jobs = Vec::new();
+        if let Some(v) = m.get("jobs") {
+            let arr = v.as_arr().ok_or_else(|| {
+                "trace.jobs: expected an array of job objects".to_string()
+            })?;
+            let mut seen = BTreeSet::new();
+            for (i, jj) in arr.iter().enumerate() {
+                let at = format!("trace.jobs[{i}]");
+                let job = TraceJob::from_json(jj, i as u64, &at)?;
+                if !seen.insert(job.id) {
+                    return Err(format!("{at}.id: duplicate job id {}", job.id));
+                }
+                jobs.push(job);
+            }
+        }
+        Ok(Trace { name, jobs })
+    }
+
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        Trace::from_json(&Json::parse(text)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthesis
+
+/// Calibration knobs for the synthetic generator. The defaults
+/// ([`SynthConfig::dev_cluster_week`]) follow the follow-up paper's
+/// single-tenant dev-cluster dynamics; [`SynthConfig::multi_tenant_week`]
+/// is the ABCI 3.0-style contrast.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthConfig {
+    /// Trace name (also the synthesized trace's `name`).
+    pub name: String,
+    pub duration_days: f64,
+    /// Distinct accounts jobs are drawn across.
+    pub accounts: usize,
+    pub gpus_per_node: usize,
+    /// Long training jobs — the base load.
+    pub training_jobs: usize,
+    pub training_nodes_max: usize,
+    pub training_runtime_median_s: f64,
+    /// Lognormal shape parameter for training runtimes.
+    pub training_runtime_sigma: f64,
+    /// Mean interactive arrivals per hour (0 disables the burst stream).
+    pub interactive_per_hour: f64,
+    /// Diurnal swing of the interactive rate, 0 (flat) to 1 (full swing).
+    pub diurnal_amplitude: f64,
+    /// Local hour of peak interactive activity.
+    pub peak_hour: f64,
+    pub interactive_nodes_max: usize,
+    pub interactive_runtime_median_s: f64,
+    pub interactive_runtime_sigma: f64,
+    /// Churn: fractions of jobs (re)classified as cancelled / failed /
+    /// timed out, in that precedence order.
+    pub cancelled_fraction: f64,
+    pub failed_fraction: f64,
+    pub timeout_fraction: f64,
+}
+
+const SYNTH_KEYS: &[&str] = &[
+    "accounts",
+    "cancelled_fraction",
+    "diurnal_amplitude",
+    "duration_days",
+    "failed_fraction",
+    "gpus_per_node",
+    "interactive_nodes_max",
+    "interactive_per_hour",
+    "interactive_runtime_median_s",
+    "interactive_runtime_sigma",
+    "name",
+    "peak_hour",
+    "timeout_fraction",
+    "training_jobs",
+    "training_nodes_max",
+    "training_runtime_median_s",
+    "training_runtime_sigma",
+];
+
+impl SynthConfig {
+    /// One week on a single-tenant LLM dev cluster (arxiv 2604.13600):
+    /// a dozen long training jobs, a strong afternoon-peaked interactive
+    /// diurnal, moderate churn.
+    pub fn dev_cluster_week() -> Self {
+        Self {
+            name: "dev-week".into(),
+            duration_days: 7.0,
+            accounts: 6,
+            gpus_per_node: 8,
+            training_jobs: 12,
+            training_nodes_max: 48,
+            training_runtime_median_s: 43_200.0,
+            training_runtime_sigma: 0.6,
+            interactive_per_hour: 6.0,
+            diurnal_amplitude: 0.8,
+            peak_hour: 14.0,
+            interactive_nodes_max: 4,
+            interactive_runtime_median_s: 1800.0,
+            interactive_runtime_sigma: 0.9,
+            cancelled_fraction: 0.10,
+            failed_fraction: 0.06,
+            timeout_fraction: 0.04,
+        }
+    }
+
+    /// One week at a shared multi-tenant operating point (ABCI 3.0
+    /// contrast, arxiv 2411.09134): many accounts, flatter diurnal,
+    /// higher arrival rate of smaller and shorter jobs.
+    pub fn multi_tenant_week() -> Self {
+        Self {
+            name: "multi-tenant-week".into(),
+            duration_days: 7.0,
+            accounts: 24,
+            gpus_per_node: 8,
+            training_jobs: 30,
+            training_nodes_max: 16,
+            training_runtime_median_s: 14_400.0,
+            training_runtime_sigma: 0.8,
+            interactive_per_hour: 30.0,
+            diurnal_amplitude: 0.3,
+            peak_hour: 13.0,
+            interactive_nodes_max: 2,
+            interactive_runtime_median_s: 900.0,
+            interactive_runtime_sigma: 1.0,
+            cancelled_fraction: 0.12,
+            failed_fraction: 0.08,
+            timeout_fraction: 0.05,
+        }
+    }
+
+    /// Preset lookup by wire name (`sakuraone trace synth --preset`).
+    pub fn preset(name: &str) -> Result<SynthConfig, String> {
+        match name {
+            "dev-week" => Ok(Self::dev_cluster_week()),
+            "multi-tenant-week" => Ok(Self::multi_tenant_week()),
+            other => Err(format!(
+                "unknown synth preset {other:?} (known: dev-week, multi-tenant-week)"
+            )),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("accounts".into(), jint(self.accounts as u64));
+        m.insert("cancelled_fraction".into(), jnum(self.cancelled_fraction));
+        m.insert("diurnal_amplitude".into(), jnum(self.diurnal_amplitude));
+        m.insert("duration_days".into(), jnum(self.duration_days));
+        m.insert("failed_fraction".into(), jnum(self.failed_fraction));
+        m.insert("gpus_per_node".into(), jint(self.gpus_per_node as u64));
+        m.insert(
+            "interactive_nodes_max".into(),
+            jint(self.interactive_nodes_max as u64),
+        );
+        m.insert("interactive_per_hour".into(), jnum(self.interactive_per_hour));
+        m.insert(
+            "interactive_runtime_median_s".into(),
+            jnum(self.interactive_runtime_median_s),
+        );
+        m.insert(
+            "interactive_runtime_sigma".into(),
+            jnum(self.interactive_runtime_sigma),
+        );
+        m.insert("name".into(), jstr(&self.name));
+        m.insert("peak_hour".into(), jnum(self.peak_hour));
+        m.insert("timeout_fraction".into(), jnum(self.timeout_fraction));
+        m.insert("training_jobs".into(), jint(self.training_jobs as u64));
+        m.insert(
+            "training_nodes_max".into(),
+            jint(self.training_nodes_max as u64),
+        );
+        m.insert(
+            "training_runtime_median_s".into(),
+            jnum(self.training_runtime_median_s),
+        );
+        m.insert(
+            "training_runtime_sigma".into(),
+            jnum(self.training_runtime_sigma),
+        );
+        Json::Obj(m)
+    }
+
+    /// Sparse decode against `base` (unknown fields rejected).
+    pub fn from_json(j: &Json, base: SynthConfig, at: &str) -> Result<SynthConfig, String> {
+        let m = obj(j, at)?;
+        check_keys(m, SYNTH_KEYS, at)?;
+        Ok(SynthConfig {
+            name: str_or(m, "name", &base.name, at)?,
+            duration_days: f64_or(m, "duration_days", base.duration_days, at)?,
+            accounts: usize_or(m, "accounts", base.accounts, at)?,
+            gpus_per_node: usize_or(m, "gpus_per_node", base.gpus_per_node, at)?,
+            training_jobs: usize_or(m, "training_jobs", base.training_jobs, at)?,
+            training_nodes_max: usize_or(
+                m,
+                "training_nodes_max",
+                base.training_nodes_max,
+                at,
+            )?,
+            training_runtime_median_s: f64_or(
+                m,
+                "training_runtime_median_s",
+                base.training_runtime_median_s,
+                at,
+            )?,
+            training_runtime_sigma: f64_or(
+                m,
+                "training_runtime_sigma",
+                base.training_runtime_sigma,
+                at,
+            )?,
+            interactive_per_hour: f64_or(
+                m,
+                "interactive_per_hour",
+                base.interactive_per_hour,
+                at,
+            )?,
+            diurnal_amplitude: f64_or(
+                m,
+                "diurnal_amplitude",
+                base.diurnal_amplitude,
+                at,
+            )?,
+            peak_hour: f64_or(m, "peak_hour", base.peak_hour, at)?,
+            interactive_nodes_max: usize_or(
+                m,
+                "interactive_nodes_max",
+                base.interactive_nodes_max,
+                at,
+            )?,
+            interactive_runtime_median_s: f64_or(
+                m,
+                "interactive_runtime_median_s",
+                base.interactive_runtime_median_s,
+                at,
+            )?,
+            interactive_runtime_sigma: f64_or(
+                m,
+                "interactive_runtime_sigma",
+                base.interactive_runtime_sigma,
+                at,
+            )?,
+            cancelled_fraction: f64_or(
+                m,
+                "cancelled_fraction",
+                base.cancelled_fraction,
+                at,
+            )?,
+            failed_fraction: f64_or(m, "failed_fraction", base.failed_fraction, at)?,
+            timeout_fraction: f64_or(m, "timeout_fraction", base.timeout_fraction, at)?,
+        })
+    }
+}
+
+/// Synthesize a trace: a pure function of `(cfg, seed)`.
+///
+/// Three forked RNG streams keep the generator stable under knob
+/// changes: stream 1 draws the training base, stream 2 the interactive
+/// arrivals (a non-homogeneous Poisson process via thinning against the
+/// diurnal rate), stream 3 the churn reclassification. Jobs are sorted
+/// by submit time and numbered 0..n.
+pub fn synthesize(cfg: &SynthConfig, seed: u64) -> Trace {
+    let mut root = Rng::new(seed);
+    let duration_s = cfg.duration_days * 86_400.0;
+    let mut jobs: Vec<TraceJob> = Vec::new();
+
+    let mut tr = root.fork(1);
+    for _ in 0..cfg.training_jobs {
+        let nodes = 1 + tr.below(cfg.training_nodes_max.max(1) as u64) as usize;
+        let runtime = tr.lognormal(cfg.training_runtime_median_s, cfg.training_runtime_sigma);
+        let submit = tr.range(0.0, duration_s.max(1.0));
+        let account = format!("acct-{:02}", tr.below(cfg.accounts.max(1) as u64));
+        // users pad training wall limits modestly (1.25-2x actual)
+        let margin = 1.25 + 0.75 * tr.uniform();
+        jobs.push(TraceJob {
+            id: 0,
+            account,
+            submit_s: submit,
+            nodes,
+            gpus_per_node: cfg.gpus_per_node,
+            requested_s: runtime * margin,
+            runtime_s: runtime,
+            outcome: Outcome::Completed,
+        });
+    }
+
+    let mut ia = root.fork(2);
+    if cfg.interactive_per_hour > 0.0 && duration_s > 0.0 {
+        let base_rate = cfg.interactive_per_hour / 3600.0;
+        let amp = cfg.diurnal_amplitude.clamp(0.0, 1.0);
+        let max_rate = base_rate * (1.0 + amp);
+        let mut t = ia.exponential(max_rate);
+        while t < duration_s {
+            let hour = (t / 3600.0) % 24.0;
+            let phase = (hour - cfg.peak_hour) / 24.0 * std::f64::consts::TAU;
+            let rate = base_rate * (1.0 + amp * phase.cos());
+            if ia.uniform() * max_rate < rate {
+                let nodes =
+                    1 + ia.below(cfg.interactive_nodes_max.max(1) as u64) as usize;
+                let runtime = ia
+                    .lognormal(cfg.interactive_runtime_median_s, cfg.interactive_runtime_sigma);
+                let account = format!("acct-{:02}", ia.below(cfg.accounts.max(1) as u64));
+                // interactive sessions over-request heavily (2-4x)
+                let margin = 2.0 + 2.0 * ia.uniform();
+                jobs.push(TraceJob {
+                    id: 0,
+                    account,
+                    submit_s: t,
+                    nodes,
+                    gpus_per_node: cfg.gpus_per_node,
+                    requested_s: runtime * margin,
+                    runtime_s: runtime,
+                    outcome: Outcome::Completed,
+                });
+            }
+            t += ia.exponential(max_rate);
+        }
+    }
+
+    jobs.sort_by(|a, b| a.submit_s.total_cmp(&b.submit_s));
+    let mut ch = root.fork(3);
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.id = i as u64;
+        let u = ch.uniform();
+        if u < cfg.cancelled_fraction {
+            j.outcome = Outcome::Cancelled;
+            j.runtime_s = (j.runtime_s * ch.uniform()).max(1.0);
+        } else if u < cfg.cancelled_fraction + cfg.failed_fraction {
+            j.outcome = Outcome::Failed;
+            j.runtime_s = (j.runtime_s * ch.uniform()).max(1.0);
+        } else if u < cfg.cancelled_fraction + cfg.failed_fraction + cfg.timeout_fraction {
+            j.outcome = Outcome::Timeout;
+            j.runtime_s = j.requested_s;
+        }
+    }
+    Trace { name: cfg.name.clone(), jobs }
+}
+
+// ---------------------------------------------------------------------------
+// Replay
+
+/// Scheduler policy for a replay. `fifo` disables backfill (strict
+/// priority order); `backfill` is the simulator's default conservative
+/// backfill; `fairshare` adds per-account usage-decayed priority boosts
+/// on top of backfill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Fifo,
+    Backfill,
+    Fairshare,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 3] = [Policy::Fifo, Policy::Backfill, Policy::Fairshare];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::Backfill => "backfill",
+            Policy::Fairshare => "fairshare",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        Policy::ALL.into_iter().find(|p| p.name() == s).ok_or_else(|| {
+            let known = Policy::ALL.map(Policy::name).join(", ");
+            format!("unknown scheduler policy {s:?} (known: {known})")
+        })
+    }
+}
+
+/// What one `(trace, cluster, policy)` replay produced. Waits are
+/// queue waits in seconds over all jobs (percentiles via `util::stats`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayReport {
+    pub policy: Policy,
+    pub jobs: usize,
+    pub completed: usize,
+    pub backfilled: usize,
+    pub wait_mean_s: f64,
+    pub wait_p50_s: f64,
+    pub wait_p90_s: f64,
+    pub wait_p99_s: f64,
+    pub wait_max_s: f64,
+    pub utilization: f64,
+    pub makespan_s: f64,
+    pub single_pod_fraction: f64,
+}
+
+/// Replay a trace through the Slurm simulator under `policy`.
+/// Deterministic: no randomness, submit order fixed by
+/// `(submit_s, id)`. Jobs wider than the cluster are clamped to it
+/// (a trace from a bigger machine still replays).
+pub fn replay(trace: &Trace, cfg: &ClusterConfig, policy: Policy) -> ReplayReport {
+    let mut sim = SlurmSim::new(cfg);
+    if policy == Policy::Fifo {
+        sim.set_backfill(false);
+    }
+    let mut order: Vec<&TraceJob> = trace.jobs.iter().collect();
+    order.sort_by(|a, b| a.submit_s.total_cmp(&b.submit_s).then(a.id.cmp(&b.id)));
+    // 24h usage half-life, the fairshare module's integration default
+    let mut fs = FairShare::new(86_400.0);
+    for tj in order {
+        let nodes = tj.nodes.clamp(1, cfg.nodes);
+        let mut job = Job::new(tj.id, &tj.account, nodes, tj.requested_s.max(1.0), tj.runtime_s)
+            .with_submit_time(tj.submit_s);
+        if policy == Policy::Fairshare {
+            job = job.with_priority(fs.priority_boost(&tj.account, tj.submit_s));
+            fs.charge(&tj.account, nodes as f64 * tj.runtime_s, tj.submit_s);
+        }
+        sim.submit(job);
+    }
+    let st = sim.run();
+    let waits = sim.waits();
+    let pct = |p: f64| if waits.is_empty() { 0.0 } else { stats::percentile(waits, p) };
+    ReplayReport {
+        policy,
+        jobs: trace.jobs.len(),
+        completed: st.completed,
+        backfilled: st.backfilled,
+        wait_mean_s: st.mean_wait,
+        wait_p50_s: pct(50.0),
+        wait_p90_s: pct(90.0),
+        wait_p99_s: pct(99.0),
+        wait_max_s: st.max_wait,
+        utilization: st.utilization,
+        makespan_s: st.makespan,
+        single_pod_fraction: st.single_pod_fraction,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Summary (for `sakuraone trace stats`)
+
+/// Shape of a trace at a glance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSummary {
+    pub jobs: usize,
+    pub accounts: usize,
+    pub span_days: f64,
+    pub node_hours: f64,
+    pub max_nodes: usize,
+    pub completed_fraction: f64,
+    pub median_runtime_s: f64,
+    pub p90_runtime_s: f64,
+}
+
+pub fn summarize(trace: &Trace) -> TraceSummary {
+    let jobs = trace.jobs.len();
+    let accounts = trace
+        .jobs
+        .iter()
+        .map(|j| j.account.as_str())
+        .collect::<BTreeSet<_>>()
+        .len();
+    let span_s = trace
+        .jobs
+        .iter()
+        .map(|j| j.submit_s + j.runtime_s)
+        .fold(0.0, f64::max);
+    let node_hours: f64 = trace
+        .jobs
+        .iter()
+        .map(|j| j.nodes as f64 * j.runtime_s / 3600.0)
+        .sum();
+    let runtimes: Vec<f64> = trace.jobs.iter().map(|j| j.runtime_s).collect();
+    let completed =
+        trace.jobs.iter().filter(|j| j.outcome == Outcome::Completed).count();
+    TraceSummary {
+        jobs,
+        accounts,
+        span_days: span_s / 86_400.0,
+        node_hours,
+        max_nodes: trace.jobs.iter().map(|j| j.nodes).max().unwrap_or(0),
+        completed_fraction: if jobs > 0 { completed as f64 / jobs as f64 } else { 0.0 },
+        median_runtime_s: if runtimes.is_empty() { 0.0 } else { stats::percentile(&runtimes, 50.0) },
+        p90_runtime_s: if runtimes.is_empty() { 0.0 } else { stats::percentile(&runtimes, 90.0) },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Campaign background mix
+
+/// A trace-fed background mix for the campaign simulator: short
+/// training-shaped jobs (dev-week calibration, interactive stream off)
+/// all present at t=0 with priority 1, so a restarting campaign job
+/// (priority 10, submitted later) must queue behind whatever is already
+/// on the machine — the requeue-wait contention `llm::campaign` models.
+pub fn requeue_background_jobs(cfg: &ClusterConfig, count: usize, seed: u64) -> Vec<Job> {
+    let mut synth = SynthConfig::dev_cluster_week();
+    synth.name = "campaign-background".into();
+    synth.training_jobs = count;
+    synth.interactive_per_hour = 0.0;
+    synth.training_nodes_max = (cfg.nodes / 2).max(1);
+    synth.training_runtime_median_s = 900.0;
+    synth.training_runtime_sigma = 0.8;
+    let trace = synthesize(&synth, seed);
+    trace
+        .jobs
+        .iter()
+        .map(|tj| {
+            // floor keeps every background job long enough to block the
+            // restart's submit at t=60 (requeue wait stays positive)
+            let rt = tj.runtime_s.max(120.0);
+            Job::new(tj.id, &tj.account, tj.nodes.clamp(1, cfg.nodes), rt * 1.5, rt)
+                .with_priority(1)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::codec::assert_roundtrip;
+
+    #[test]
+    fn outcome_and_policy_names_roundtrip() {
+        for o in Outcome::ALL {
+            assert_eq!(Outcome::parse(o.name()).unwrap(), o);
+        }
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(p.name()).unwrap(), p);
+        }
+        let err = Outcome::parse("exploded").unwrap_err();
+        for o in Outcome::ALL {
+            assert!(err.contains(o.name()), "{err}");
+        }
+        let err = Policy::parse("sjf").unwrap_err();
+        for p in Policy::ALL {
+            assert!(err.contains(p.name()), "{err}");
+        }
+    }
+
+    #[test]
+    fn synthesized_traces_roundtrip_exactly() {
+        for seed in [0, 1, 42] {
+            let t = synthesize(&SynthConfig::dev_cluster_week(), seed);
+            assert_roundtrip(&t, Trace::to_json, Trace::from_json);
+        }
+        let t = synthesize(&SynthConfig::multi_tenant_week(), 7);
+        assert_roundtrip(&t, Trace::to_json, Trace::from_json);
+    }
+
+    #[test]
+    fn synth_is_seed_deterministic() {
+        let cfg = SynthConfig::dev_cluster_week();
+        let a = synthesize(&cfg, 42).to_json().emit();
+        let b = synthesize(&cfg, 42).to_json().emit();
+        assert_eq!(a, b);
+        let c = synthesize(&cfg, 43).to_json().emit();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn synth_has_base_and_burst_structure() {
+        let cfg = SynthConfig::dev_cluster_week();
+        let t = synthesize(&cfg, 1);
+        // ids are 0..n in submit order
+        for (i, j) in t.jobs.iter().enumerate() {
+            assert_eq!(j.id, i as u64);
+            if i > 0 {
+                assert!(j.submit_s >= t.jobs[i - 1].submit_s);
+            }
+        }
+        // ~6/h over a week plus the training base
+        assert!(t.jobs.len() > 500, "only {} jobs", t.jobs.len());
+        let big = t.jobs.iter().filter(|j| j.nodes > cfg.interactive_nodes_max).count();
+        assert!(big >= 1 && big <= cfg.training_jobs, "big={big}");
+        // churn produced every outcome class
+        for o in Outcome::ALL {
+            assert!(t.jobs.iter().any(|j| j.outcome == o), "no {} jobs", o.name());
+        }
+    }
+
+    #[test]
+    fn diurnal_peak_outdraws_trough() {
+        let cfg = SynthConfig::dev_cluster_week();
+        let t = synthesize(&cfg, 3);
+        let near = |h: f64, center: f64| {
+            let d = (h - center).abs();
+            d.min(24.0 - d) <= 3.0
+        };
+        let trough_hour = (cfg.peak_hour + 12.0) % 24.0;
+        let small: Vec<&TraceJob> =
+            t.jobs.iter().filter(|j| j.nodes <= cfg.interactive_nodes_max).collect();
+        let peak = small
+            .iter()
+            .filter(|j| near((j.submit_s / 3600.0) % 24.0, cfg.peak_hour))
+            .count();
+        let trough = small
+            .iter()
+            .filter(|j| near((j.submit_s / 3600.0) % 24.0, trough_hour))
+            .count();
+        assert!(
+            peak > 2 * trough,
+            "peak window {peak} vs trough window {trough}"
+        );
+    }
+
+    #[test]
+    fn sparse_trace_doc_fills_defaults() {
+        let t = Trace::parse(
+            r#"{"schema": 1, "jobs": [{}, {"nodes": 4, "outcome": "failed"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(t.name, "unnamed");
+        assert_eq!(t.jobs.len(), 2);
+        assert_eq!(t.jobs[0].id, 0);
+        assert_eq!(t.jobs[0].nodes, 1);
+        assert_eq!(t.jobs[0].gpus_per_node, 8);
+        assert_eq!(t.jobs[0].outcome, Outcome::Completed);
+        assert_eq!(t.jobs[1].id, 1);
+        assert_eq!(t.jobs[1].nodes, 4);
+        assert_eq!(t.jobs[1].outcome, Outcome::Failed);
+    }
+
+    #[test]
+    fn bad_trace_docs_are_rejected() {
+        for (doc, needle) in [
+            (r#"{"jobs": []}"#, "missing \"schema\""),
+            (r#"{"schema": 2, "jobs": []}"#, "version 2 is not supported"),
+            (r#"{"schema": 1, "warp": 1}"#, "unknown field \"warp\""),
+            (r#"{"schema": 1, "jobs": [{"warp": 1}]}"#, "unknown field \"warp\""),
+            (r#"{"schema": 1, "jobs": [{"nodes": 0}]}"#, "must be at least 1"),
+            (
+                r#"{"schema": 1, "jobs": [{"id": 7}, {"id": 7}]}"#,
+                "duplicate job id 7",
+            ),
+            (
+                r#"{"schema": 1, "jobs": [{"submit_s": -5}]}"#,
+                "must be non-negative",
+            ),
+            (
+                r#"{"schema": 1, "jobs": [{"outcome": "exploded"}]}"#,
+                "unknown job outcome",
+            ),
+            (r#"{"schema": 1, "jobs": 3}"#, "expected an array"),
+            (r#"[]"#, "expected an object"),
+        ] {
+            let err = Trace::parse(doc).unwrap_err();
+            assert!(err.contains(needle), "{doc}: {err}");
+        }
+    }
+
+    #[test]
+    fn synth_config_roundtrips_and_rejects_unknowns() {
+        for cfg in [SynthConfig::dev_cluster_week(), SynthConfig::multi_tenant_week()] {
+            assert_roundtrip(
+                &cfg,
+                SynthConfig::to_json,
+                |j| SynthConfig::from_json(j, SynthConfig::dev_cluster_week(), "synth"),
+            );
+        }
+        let err = SynthConfig::from_json(
+            &Json::parse(r#"{"warp": 1}"#).unwrap(),
+            SynthConfig::dev_cluster_week(),
+            "synth",
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown field \"warp\""), "{err}");
+    }
+
+    #[test]
+    fn replay_is_deterministic_and_fifo_never_backfills() {
+        let cluster = ClusterConfig::default();
+        let trace = synthesize(&SynthConfig::dev_cluster_week(), 42);
+        let fifo = replay(&trace, &cluster, Policy::Fifo);
+        assert_eq!(fifo, replay(&trace, &cluster, Policy::Fifo));
+        assert_eq!(fifo.backfilled, 0);
+        assert_eq!(fifo.completed, trace.jobs.len());
+        let bf = replay(&trace, &cluster, Policy::Backfill);
+        assert_eq!(bf.completed, trace.jobs.len());
+        assert!(bf.wait_mean_s <= fifo.wait_mean_s, "{} vs {}", bf.wait_mean_s, fifo.wait_mean_s);
+        // percentiles are ordered
+        for r in [&fifo, &bf] {
+            assert!(r.wait_p50_s <= r.wait_p90_s);
+            assert!(r.wait_p90_s <= r.wait_p99_s);
+            assert!(r.wait_p99_s <= r.wait_max_s + 1e-9);
+        }
+    }
+
+    #[test]
+    fn oversized_trace_jobs_are_clamped_to_the_cluster() {
+        let mut cluster = ClusterConfig::default();
+        cluster.apply_override("nodes", "4").unwrap();
+        let t = Trace::parse(
+            r#"{"schema": 1, "jobs": [{"nodes": 64, "runtime_s": 100, "requested_s": 200}]}"#,
+        )
+        .unwrap();
+        let rep = replay(&t, &cluster, Policy::Backfill);
+        assert_eq!(rep.completed, 1);
+    }
+
+    #[test]
+    fn summarize_reports_the_shape() {
+        let t = synthesize(&SynthConfig::dev_cluster_week(), 9);
+        let s = summarize(&t);
+        assert_eq!(s.jobs, t.jobs.len());
+        assert!(s.accounts >= 2 && s.accounts <= 6, "accounts={}", s.accounts);
+        assert!(s.span_days > 5.0 && s.span_days < 21.0, "span={}", s.span_days);
+        assert!(s.completed_fraction > 0.6 && s.completed_fraction < 1.0);
+        assert!(s.median_runtime_s <= s.p90_runtime_s);
+        assert!(s.node_hours > 0.0);
+    }
+
+    #[test]
+    fn background_jobs_feed_the_campaign_mix() {
+        let cluster = ClusterConfig::default();
+        let jobs = requeue_background_jobs(&cluster, 8, 42);
+        assert_eq!(jobs.len(), 8);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i as u64);
+            assert_eq!(j.submit_time, 0.0);
+            assert_eq!(j.priority, 1);
+            assert!(j.runtime >= 120.0, "runtime={}", j.runtime);
+            assert!(j.nodes >= 1 && j.nodes <= cluster.nodes / 2);
+        }
+        assert!(requeue_background_jobs(&cluster, 0, 42).is_empty());
+    }
+}

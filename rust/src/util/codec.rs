@@ -1,0 +1,324 @@
+//! Canonical-codec helpers shared by every versioned JSON codec in the
+//! tree — `runtime::scenario` (spec schema), `config::spec` (cluster
+//! schema) and `scheduler::trace` (trace schema) all decode through
+//! these, so sparse-field defaults, unknown-field rejection, the exact
+//! f64-integer bound and every error string live in exactly one place.
+//!
+//! Contract (the same one each codec documents locally):
+//! - decoding is strict on unknown keys ([`check_keys`]) and typo-safe
+//!   on types (every accessor names the path and the expected shape);
+//! - missing fields fall back to a caller-supplied default, so sparse
+//!   hand-written documents decode against a base configuration;
+//! - integer fields ride JSON numbers (f64); the `2e15` cap keeps them
+//!   inside f64's exact-integer range so encode/decode can never lose
+//!   precision;
+//! - encoding emits every field through `BTreeMap` (sorted keys) and
+//!   [`assert_roundtrip`] checks the exact-byte contract
+//!   `from_json(to_json(v)) == v` plus byte-identical re-emission.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Borrow a JSON object or fail with the codec's standard message.
+pub fn obj<'a>(j: &'a Json, at: &str) -> Result<&'a BTreeMap<String, Json>, String> {
+    j.as_obj().ok_or_else(|| format!("{at}: expected an object"))
+}
+
+/// Reject any key outside `allowed` (typo safety for hand-written docs).
+pub fn check_keys(
+    m: &BTreeMap<String, Json>,
+    allowed: &[&str],
+    at: &str,
+) -> Result<(), String> {
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(format!(
+                "{at}: unknown field {k:?} (allowed: {})",
+                allowed.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// A finite number if the key is present, `None` if absent.
+pub fn num(m: &BTreeMap<String, Json>, key: &str, at: &str) -> Result<Option<f64>, String> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Num(n)) if n.is_finite() => Ok(Some(*n)),
+        Some(other) => {
+            Err(format!("{at}.{key}: expected a finite number, got {other:?}"))
+        }
+    }
+}
+
+pub fn f64_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: f64,
+    at: &str,
+) -> Result<f64, String> {
+    Ok(num(m, key, at)?.unwrap_or(default))
+}
+
+/// Integer fields ride JSON numbers (f64); the 2e15 cap keeps them inside
+/// f64's exact-integer range so encode/decode can never lose precision
+/// (see the module contract).
+pub fn int_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: u64,
+    at: &str,
+) -> Result<u64, String> {
+    match num(m, key, at)? {
+        None => Ok(default),
+        Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 2e15 => Ok(n as u64),
+        Some(n) => Err(format!(
+            "{at}.{key}: expected a non-negative integer below 2e15, got {n}"
+        )),
+    }
+}
+
+pub fn usize_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: usize,
+    at: &str,
+) -> Result<usize, String> {
+    int_or(m, key, default as u64, at).map(|n| n as usize)
+}
+
+pub fn bool_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: bool,
+    at: &str,
+) -> Result<bool, String> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(other) => Err(format!("{at}.{key}: expected a bool, got {other:?}")),
+    }
+}
+
+pub fn str_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: &str,
+    at: &str,
+) -> Result<String, String> {
+    match m.get(key) {
+        None => Ok(default.to_string()),
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(other) => Err(format!("{at}.{key}: expected a string, got {other:?}")),
+    }
+}
+
+pub fn usize_list_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: Vec<usize>,
+    at: &str,
+) -> Result<Vec<usize>, String> {
+    let Some(v) = m.get(key) else { return Ok(default) };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| format!("{at}.{key}: expected an array of integers"))?;
+    arr.iter()
+        .map(|x| match x.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 && n < 2e15 => Ok(n as usize),
+            _ => Err(format!(
+                "{at}.{key}: expected non-negative integers below 2e15"
+            )),
+        })
+        .collect()
+}
+
+pub fn str_list_or(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: &[String],
+    at: &str,
+) -> Result<Vec<String>, String> {
+    let Some(v) = m.get(key) else { return Ok(default.to_vec()) };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| format!("{at}.{key}: expected an array of strings"))?;
+    arr.iter()
+        .map(|x| {
+            x.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| format!("{at}.{key}: expected an array of strings"))
+        })
+        .collect()
+}
+
+/// A wire-named enum field: absent takes `default`, a string goes through
+/// `parse` (whose error — e.g. the known-names list — is prefixed with
+/// the path), anything else reports `expected a {what}`. Backs
+/// `topology`, scheduler `policy` and trace `outcome` fields.
+pub fn name_or<T>(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    default: T,
+    at: &str,
+    what: &str,
+    parse: impl Fn(&str) -> Result<T, String>,
+) -> Result<T, String> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(Json::Str(s)) => parse(s).map_err(|e| format!("{at}.{key}: {e}")),
+        Some(other) => Err(format!("{at}.{key}: expected a {what}, got {other:?}")),
+    }
+}
+
+/// Check a document's schema-version field: required, and must equal the
+/// codec's supported version (sparse docs may not omit it — a versioned
+/// format without a version is a silent-drift hazard).
+pub fn check_schema(
+    m: &BTreeMap<String, Json>,
+    expected: u64,
+    at: &str,
+) -> Result<(), String> {
+    match num(m, "schema", at)? {
+        None => Err(format!("{at}: missing \"schema\" (expected {expected})")),
+        Some(n) if n == expected as f64 => Ok(()),
+        Some(n) => Err(format!(
+            "{at}.schema: version {n} is not supported (expected {expected})"
+        )),
+    }
+}
+
+pub fn jnum(n: f64) -> Json {
+    Json::Num(n)
+}
+
+pub fn jint(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+pub fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+pub fn jlist(v: &[String]) -> Json {
+    Json::Arr(v.iter().map(|s| jstr(s)).collect())
+}
+
+/// A fresh object pre-tagged with a discriminator key (e.g. a spec's
+/// `"kind"`), for encoders to fill.
+pub fn tagged_obj(key: &str, value: &str) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert(key.into(), jstr(value));
+    m
+}
+
+/// The exact-byte round-trip contract every canonical codec promises,
+/// as one assertion: decode(encode(v)) == v as a value, again through
+/// emitted text, and the re-emission is byte-identical.
+pub fn assert_roundtrip<T, E, D>(value: &T, encode: E, decode: D)
+where
+    T: PartialEq + std::fmt::Debug,
+    E: Fn(&T) -> Json,
+    D: Fn(&Json) -> Result<T, String>,
+{
+    let j = encode(value);
+    let text = j.emit();
+    let back = decode(&j).unwrap_or_else(|e| panic!("decode of canonical encoding: {e}"));
+    assert_eq!(&back, value, "value round trip");
+    let reparsed = Json::parse(&text).unwrap_or_else(|e| panic!("reparse: {e}"));
+    let back2 = decode(&reparsed).unwrap_or_else(|e| panic!("re-decode: {e}"));
+    assert_eq!(&back2, value, "text round trip");
+    assert_eq!(encode(&back2).emit(), text, "byte re-emission");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(s: &str) -> BTreeMap<String, Json> {
+        Json::parse(s).unwrap().as_obj().unwrap().clone()
+    }
+
+    #[test]
+    fn accessors_fill_defaults_and_reject_types() {
+        let m = doc(r#"{"a": 3, "b": true, "c": "x", "d": [1, 2], "e": ["p"]}"#);
+        assert_eq!(f64_or(&m, "a", 0.0, "t").unwrap(), 3.0);
+        assert_eq!(f64_or(&m, "missing", 9.5, "t").unwrap(), 9.5);
+        assert_eq!(int_or(&m, "a", 0, "t").unwrap(), 3);
+        assert_eq!(usize_or(&m, "missing", 7, "t").unwrap(), 7);
+        assert!(bool_or(&m, "b", false, "t").unwrap());
+        assert_eq!(str_or(&m, "c", "d", "t").unwrap(), "x");
+        assert_eq!(usize_list_or(&m, "d", vec![], "t").unwrap(), vec![1, 2]);
+        assert_eq!(str_list_or(&m, "e", &[], "t").unwrap(), vec!["p".to_string()]);
+
+        let err = int_or(&m, "b", 0, "t").unwrap_err();
+        assert!(err.contains("t.b: expected a finite number"), "{err}");
+        let err = bool_or(&m, "a", false, "t").unwrap_err();
+        assert!(err.contains("t.a: expected a bool"), "{err}");
+        let err = str_or(&m, "a", "d", "t").unwrap_err();
+        assert!(err.contains("t.a: expected a string"), "{err}");
+        let err = usize_list_or(&m, "c", vec![], "t").unwrap_err();
+        assert!(err.contains("array of integers"), "{err}");
+        let err = str_list_or(&m, "d", &[], "t").unwrap_err();
+        assert!(err.contains("array of strings"), "{err}");
+    }
+
+    #[test]
+    fn int_bound_is_enforced() {
+        let m = doc(r#"{"big": 2000000000000001, "neg": -1, "frac": 1.5}"#);
+        for k in ["big", "neg", "frac"] {
+            let err = int_or(&m, k, 0, "t").unwrap_err();
+            assert!(err.contains("non-negative integer below 2e15"), "{k}: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_with_the_allowed_list() {
+        let m = doc(r#"{"a": 1, "warp": 2}"#);
+        let err = check_keys(&m, &["a", "b"], "t").unwrap_err();
+        assert!(err.contains("unknown field \"warp\""), "{err}");
+        assert!(err.contains("allowed: a, b"), "{err}");
+        check_keys(&m, &["a", "warp"], "t").unwrap();
+    }
+
+    #[test]
+    fn name_or_routes_through_the_parser() {
+        let parse = |s: &str| match s {
+            "on" => Ok(true),
+            other => Err(format!("unknown switch {other:?} (known: on)")),
+        };
+        let m = doc(r#"{"s": "on", "bad": "off", "num": 3}"#);
+        assert!(name_or(&m, "s", false, "t", "switch name", parse).unwrap());
+        assert!(!name_or(&m, "missing", false, "t", "switch name", parse).unwrap());
+        let err = name_or(&m, "bad", false, "t", "switch name", parse).unwrap_err();
+        assert!(err.contains("t.bad: unknown switch \"off\""), "{err}");
+        let err = name_or(&m, "num", false, "t", "switch name", parse).unwrap_err();
+        assert!(err.contains("t.num: expected a switch name"), "{err}");
+    }
+
+    #[test]
+    fn schema_check_requires_the_exact_version() {
+        check_schema(&doc(r#"{"schema": 1}"#), 1, "t").unwrap();
+        let err = check_schema(&doc(r#"{}"#), 1, "t").unwrap_err();
+        assert!(err.contains("missing \"schema\""), "{err}");
+        let err = check_schema(&doc(r#"{"schema": 2}"#), 1, "t").unwrap_err();
+        assert!(err.contains("version 2 is not supported"), "{err}");
+        let err = check_schema(&doc(r#"{"schema": "one"}"#), 1, "t").unwrap_err();
+        assert!(err.contains("finite number"), "{err}");
+    }
+
+    #[test]
+    fn roundtrip_helper_accepts_a_faithful_codec() {
+        let encode = |v: &u64| Json::Obj(tagged_obj("kind", "n").into_iter().chain(
+            [("v".to_string(), jint(*v))],
+        ).collect());
+        let decode = |j: &Json| {
+            let m = obj(j, "t")?;
+            check_keys(m, &["kind", "v"], "t")?;
+            int_or(m, "v", 0, "t")
+        };
+        assert_roundtrip(&42u64, encode, decode);
+    }
+}

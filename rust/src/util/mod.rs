@@ -1,9 +1,11 @@
 //! Dependency-light utility layer: deterministic RNG, statistics, units,
-//! ASCII tables, minimal JSON, micro-bench harness, CLI parsing and a small
-//! property-testing helper. Everything above this module builds on std only.
+//! ASCII tables, minimal JSON, shared canonical-codec helpers, micro-bench
+//! harness, CLI parsing and a small property-testing helper. Everything
+//! above this module builds on std only.
 
 pub mod bench;
 pub mod cli;
+pub mod codec;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -1,0 +1,208 @@
+//! Round-trip tests for the versioned workload-trace codec (schema 1)
+//! and the `trace` scenario kind: synthesized traces and hand-written
+//! sparse documents must survive `from_json(to_json(x)) == x` and
+//! re-emit byte-identical JSON, unknown fields and version mismatches
+//! must be rejected with located errors, and replay must be
+//! byte-deterministic across sweep worker counts.
+
+use sakuraone::config::ClusterConfig;
+use sakuraone::runtime::scenario::{descriptor, ScenarioSpec};
+use sakuraone::runtime::sweep::{run_sweep, Scenario, SweepConfig};
+use sakuraone::scheduler::trace::{
+    synthesize, Policy, SynthConfig, Trace, TRACE_SCHEMA_VERSION,
+};
+use sakuraone::util::codec::assert_roundtrip;
+use sakuraone::util::json::Json;
+
+const EXAMPLE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/traces/dev-week.json");
+
+#[test]
+fn synthesized_traces_roundtrip_byte_for_byte() {
+    for (cfg, seed) in [
+        (SynthConfig::dev_cluster_week(), 0),
+        (SynthConfig::dev_cluster_week(), 42),
+        (SynthConfig::multi_tenant_week(), 7),
+    ] {
+        let t = synthesize(&cfg, seed);
+        assert!(t.jobs.len() > 100, "{}: only {} jobs", cfg.name, t.jobs.len());
+        assert_roundtrip(&t, Trace::to_json, Trace::from_json);
+        // and through text: parse + decode + re-emit is a fixed point
+        let text = t.to_json().emit();
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back.to_json().emit(), text, "{} seed {seed}", cfg.name);
+    }
+}
+
+#[test]
+fn committed_example_trace_is_canonical_after_one_decode() {
+    // the committed example is pretty-printed for humans; its decoded
+    // value must still re-emit a stable canonical form
+    let text = std::fs::read_to_string(EXAMPLE).expect("example trace");
+    let t = Trace::parse(&text).unwrap();
+    assert_eq!(t.name, "dev-week-example");
+    assert_eq!(t.jobs.len(), 6);
+    assert_eq!(
+        t.to_json().get("schema").and_then(Json::as_f64),
+        Some(TRACE_SCHEMA_VERSION as f64)
+    );
+    assert_roundtrip(&t, Trace::to_json, Trace::from_json);
+}
+
+#[test]
+fn property_seeded_sparse_trace_docs_roundtrip() {
+    // Seeded sparse trace documents through the in-house property
+    // harness: whatever decodes must round-trip exactly.
+    use sakuraone::util::proptest::{check, Config};
+    check(
+        Config { cases: 256, ..Config::default() },
+        |rng| {
+            let n = rng.below(6);
+            let jobs: Vec<String> = (0..n)
+                .map(|i| match rng.below(4) {
+                    0 => String::from("{}"),
+                    1 => format!(r#"{{"nodes": {}}}"#, 1 + rng.below(100)),
+                    2 => format!(
+                        r#"{{"id": {i}, "submit_s": {}, "runtime_s": {}}}"#,
+                        rng.below(100_000),
+                        1 + rng.below(10_000)
+                    ),
+                    _ => format!(
+                        r#"{{"account": "acct-{:02}", "outcome": "{}"}}"#,
+                        rng.below(24),
+                        ["completed", "failed", "cancelled", "timeout"]
+                            [rng.below(4) as usize]
+                    ),
+                })
+                .collect();
+            format!(r#"{{"schema": 1, "jobs": [{}]}}"#, jobs.join(", "))
+        },
+        |doc: &String| {
+            let t = Trace::parse(doc).map_err(|e| format!("decode: {e}"))?;
+            let text = t.to_json().emit();
+            let back = Trace::parse(&text).map_err(|e| format!("re-decode: {e}"))?;
+            if back != t {
+                return Err("value round trip diverged".into());
+            }
+            if back.to_json().emit() != text {
+                return Err("byte re-emission diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_seeded_trace_specs_roundtrip() {
+    // the scenario-kind surface: sparse {"kind": "trace", ...} documents
+    use sakuraone::util::proptest::{check, Config};
+    check(
+        Config { cases: 128, ..Config::default() },
+        |rng| {
+            let policy = ["fifo", "backfill", "fairshare"][rng.below(3) as usize];
+            match rng.below(3) {
+                0 => format!(r#"{{"kind": "trace", "policy": "{policy}"}}"#),
+                1 => format!(
+                    r#"{{"kind": "trace", "synth": {{"accounts": {}}}}}"#,
+                    1 + rng.below(32)
+                ),
+                _ => format!(
+                    r#"{{"kind": "trace", "policy": "{policy}", "synth": {{"duration_days": {}, "interactive_per_hour": {}}}}}"#,
+                    1 + rng.below(14),
+                    rng.below(40)
+                ),
+            }
+        },
+        |doc: &String| {
+            let spec = ScenarioSpec::from_json(&Json::parse(doc)?)
+                .map_err(|e| format!("decode: {e}"))?;
+            let j = spec.to_json();
+            let back = ScenarioSpec::from_json(&j).map_err(|e| format!("re-decode: {e}"))?;
+            if back != spec {
+                return Err("value round trip diverged".into());
+            }
+            if back.to_json().emit() != j.emit() {
+                return Err("byte re-emission diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn trace_kind_is_registered_with_sparse_defaults() {
+    let d = descriptor("trace").expect("trace kind in the registry");
+    assert_eq!(d.kind, "trace");
+    let spec =
+        ScenarioSpec::from_json(&Json::parse(r#"{"kind": "trace"}"#).unwrap()).unwrap();
+    let ScenarioSpec::Trace { synth, policy } = &spec else {
+        panic!("wrong variant")
+    };
+    assert_eq!(synth.name, "dev-week");
+    assert_eq!(*policy, Policy::Backfill);
+    // the registry example round-trips like everything else
+    let example = (d.example)();
+    assert_eq!(ScenarioSpec::from_json(&example.to_json()).unwrap(), example);
+}
+
+#[test]
+fn bad_trace_documents_are_rejected_with_located_errors() {
+    for (doc, needle) in [
+        (r#"{"jobs": []}"#, "trace: missing \"schema\""),
+        (r#"{"schema": 99, "jobs": []}"#, "version 99 is not supported"),
+        (r#"{"schema": 1, "warp": 1}"#, "trace: unknown field \"warp\""),
+        (
+            r#"{"schema": 1, "jobs": [{"warp": 1}]}"#,
+            "trace.jobs[0]: unknown field \"warp\"",
+        ),
+        (
+            r#"{"schema": 1, "jobs": [{}, {"nodes": 0}]}"#,
+            "trace.jobs[1].nodes: must be at least 1",
+        ),
+        (
+            r#"{"schema": 1, "jobs": [{"runtime_s": -1}]}"#,
+            "trace.jobs[0].runtime_s: must be non-negative",
+        ),
+    ] {
+        let err = Trace::parse(doc).unwrap_err();
+        assert!(err.contains(needle), "{doc}: {err}");
+    }
+    // ...and at the scenario-spec level
+    for (doc, needle) in [
+        (r#"{"kind": "trace", "warp": 1}"#, "unknown field \"warp\""),
+        (r#"{"kind": "trace", "policy": "sjf"}"#, "unknown scheduler policy"),
+        (
+            r#"{"kind": "trace", "synth": {"warp": 1}}"#,
+            "trace.synth: unknown field \"warp\"",
+        ),
+    ] {
+        let err = ScenarioSpec::from_json(&Json::parse(doc).unwrap()).unwrap_err();
+        assert!(err.contains(needle), "{doc}: {err}");
+    }
+}
+
+#[test]
+fn trace_replay_is_byte_deterministic_across_worker_counts() {
+    // the acceptance criterion: a trace-scenario sweep at 1 worker and
+    // at 4 workers emits byte-identical manifests
+    let cfg = ClusterConfig::default();
+    let mut synth = SynthConfig::dev_cluster_week();
+    synth.duration_days = 2.0;
+    let grid: Vec<Scenario> = Policy::ALL
+        .iter()
+        .map(|p| {
+            Scenario::new(
+                &format!("trace/dev-2d-{}", p.name()),
+                ScenarioSpec::Trace { synth: Box::new(synth.clone()), policy: *p },
+            )
+        })
+        .collect();
+    let one = run_sweep(&cfg, &grid, &SweepConfig { workers: 1, seed: 42 });
+    let four = run_sweep(&cfg, &grid, &SweepConfig { workers: 4, seed: 42 });
+    assert_eq!(
+        one.to_json().emit(),
+        four.to_json().emit(),
+        "worker count leaked into the trace manifest"
+    );
+    assert_eq!(one.scenarios.len(), 3);
+}
