@@ -1,66 +1,17 @@
 //! Flow-simulator micro-benchmarks — the L3 hot path the perf pass
-//! optimizes (EXPERIMENTS.md §Perf). Scales the concurrent flow count to
-//! expose the water-filling cost curve.
+//! optimizes (docs/bench.md). Thin wrapper over the shared case registry
+//! in `runtime::benchsuite`, so `cargo bench --bench bench_network` and
+//! `sakuraone bench` measure exactly the same closures.
 //! Run: `cargo bench --bench bench_network`
 
-use sakuraone::config::ClusterConfig;
-use sakuraone::network::{Flow, FlowSim, RoceParams};
-use sakuraone::topology::builders::build;
-use sakuraone::util::bench::Bencher;
+use sakuraone::runtime::benchsuite::{cases, run_timed};
+use sakuraone::util::bench::{BenchConfig, Bencher};
 
 fn main() {
-    let cfg = ClusterConfig::default();
-    let fabric = build(&cfg);
     Bencher::header("bench_network — flow simulator hot path");
-    let mut b = Bencher::new();
-
-    for n_flows in [8usize, 64, 256, 800, 1600] {
-        let flows: Vec<Flow> = (0..n_flows)
-            .map(|i| Flow {
-                src: fabric.host(i % 100, (i / 100) % 8).unwrap(),
-                dst: fabric.host((i * 37 + 11) % 100, (i / 100) % 8).unwrap(),
-                bytes: 64e6,
-                start: 0.0,
-                label: i as u64,
-            })
-            .collect();
-        b.bench(&format!("flowsim_{n_flows}_flows"), || {
-            let mut sim = FlowSim::new(&fabric, RoceParams::default());
-            sim.run(&flows)
-        });
-    }
-
-    // incast pattern (worst case for the allocator: one hot link)
-    let incast: Vec<Flow> = (0..64)
-        .map(|i| Flow {
-            src: fabric.host(i % 50, 3).unwrap(),
-            dst: fabric.host(99, 3).unwrap(),
-            bytes: 16e6,
-            start: (i as f64) * 1e-4,
-            label: i as u64,
-        })
+    let roster: Vec<_> = cases(false)
+        .into_iter()
+        .filter(|c| c.suite == "network")
         .collect();
-    b.bench("flowsim_incast_64_staggered", || {
-        let mut sim = FlowSim::new(&fabric, RoceParams::default());
-        sim.run(&incast)
-    });
-
-    // all-rails ring step, the collective engine's inner call
-    let ring: Vec<Flow> = (0..800)
-        .map(|i| {
-            let node = i % 100;
-            let rail = i / 100;
-            Flow {
-                src: fabric.host(node, rail).unwrap(),
-                dst: fabric.host((node + 1) % 100, rail).unwrap(),
-                bytes: 1.3e6,
-                start: 0.0,
-                label: i as u64,
-            }
-        })
-        .collect();
-    b.bench("flowsim_ring_step_800_flows", || {
-        let mut sim = FlowSim::new(&fabric, RoceParams::default());
-        sim.run(&ring)
-    });
+    run_timed(&roster, &BenchConfig::default(), false);
 }

@@ -97,26 +97,29 @@ impl CollectiveEngine<'_> {
         if p < 2 || bytes <= 0.0 {
             return CollectiveTime::default();
         }
-        let rounds = usize::BITS - (p - 1).leading_zeros(); // ceil(log2 p)
-        let half = bytes / 2.0;
-        let mut out = CollectiveTime::default();
-        for k in 0..rounds {
-            // tree 1 over rank order, tree 2 over the mirrored order: the
-            // sender sets are disjoint, which is what keeps both halves of
-            // the buffer moving at once.
-            let mut reduce_pairs: Vec<(Rank, Rank)> = Vec::new();
-            for (child, parent) in binomial_round(p, k) {
-                reduce_pairs.push((ranks[child], ranks[parent]));
-                reduce_pairs.push((ranks[p - 1 - child], ranks[p - 1 - parent]));
+        self.cached(super::spec_key(b't', bytes, ranks), || {
+            let rounds = usize::BITS - (p - 1).leading_zeros(); // ceil(log2 p)
+            let half = bytes / 2.0;
+            let mut out = CollectiveTime::default();
+            for k in 0..rounds {
+                // tree 1 over rank order, tree 2 over the mirrored order:
+                // the sender sets are disjoint, which is what keeps both
+                // halves of the buffer moving at once.
+                let mut reduce_pairs: Vec<(Rank, Rank)> = Vec::new();
+                for (child, parent) in binomial_round(p, k) {
+                    reduce_pairs.push((ranks[child], ranks[parent]));
+                    reduce_pairs
+                        .push((ranks[p - 1 - child], ranks[p - 1 - parent]));
+                }
+                let bcast_pairs: Vec<(Rank, Rank)> =
+                    reduce_pairs.iter().map(|&(c, par)| (par, c)).collect();
+                for pairs in [&reduce_pairs, &bcast_pairs] {
+                    let phase = self.phase_time(pairs, half);
+                    absorb(&mut out, &phase, 1);
+                }
             }
-            let bcast_pairs: Vec<(Rank, Rank)> =
-                reduce_pairs.iter().map(|&(c, par)| (par, c)).collect();
-            for pairs in [&reduce_pairs, &bcast_pairs] {
-                let phase = self.phase_time(pairs, half);
-                absorb(&mut out, &phase, 1);
-            }
-        }
-        out
+            out
+        })
     }
 
     /// Recursive halving-doubling: fold non-power-of-two remainders into
@@ -133,42 +136,45 @@ impl CollectiveEngine<'_> {
         if p < 2 || bytes <= 0.0 {
             return CollectiveTime::default();
         }
-        let p2 = if p.is_power_of_two() { p } else { p.next_power_of_two() / 2 };
-        let r = p - p2;
-        let mut out = CollectiveTime::default();
-        // pre-fold: ranks 2i+1 (i < r) hand their buffer to 2i and sit out
-        if r > 0 {
-            let pre: Vec<(Rank, Rank)> =
-                (0..r).map(|i| (ranks[2 * i + 1], ranks[2 * i])).collect();
-            let phase = self.phase_time(&pre, bytes);
-            absorb(&mut out, &phase, 1);
-        }
-        let active: Vec<Rank> = (0..r)
-            .map(|i| ranks[2 * i])
-            .chain(ranks[2 * r..].iter().copied())
-            .collect();
-        debug_assert_eq!(active.len(), p2);
-        let rounds = p2.trailing_zeros();
-        for k in 0..rounds {
-            let stride = 1usize << k;
-            let chunk = bytes / 2f64.powi(k as i32 + 1);
-            // every active rank exchanges `chunk` with its XOR partner —
-            // p2 concurrent flows, distinct partners at every stride
-            let pairs: Vec<(Rank, Rank)> = (0..p2)
-                .map(|idx| (active[idx], active[idx ^ stride]))
+        self.cached(super::spec_key(b'd', bytes, ranks), || {
+            let p2 =
+                if p.is_power_of_two() { p } else { p.next_power_of_two() / 2 };
+            let r = p - p2;
+            let mut out = CollectiveTime::default();
+            // pre-fold: ranks 2i+1 (i < r) hand their buffer to 2i, sit out
+            if r > 0 {
+                let pre: Vec<(Rank, Rank)> =
+                    (0..r).map(|i| (ranks[2 * i + 1], ranks[2 * i])).collect();
+                let phase = self.phase_time(&pre, bytes);
+                absorb(&mut out, &phase, 1);
+            }
+            let active: Vec<Rank> = (0..r)
+                .map(|i| ranks[2 * i])
+                .chain(ranks[2 * r..].iter().copied())
                 .collect();
-            let phase = self.phase_time(&pairs, chunk);
-            // reduce-scatter round + its mirrored all-gather round
-            absorb(&mut out, &phase, 2);
-        }
-        // post-fold: return the full result to the parked ranks
-        if r > 0 {
-            let post: Vec<(Rank, Rank)> =
-                (0..r).map(|i| (ranks[2 * i], ranks[2 * i + 1])).collect();
-            let phase = self.phase_time(&post, bytes);
-            absorb(&mut out, &phase, 1);
-        }
-        out
+            debug_assert_eq!(active.len(), p2);
+            let rounds = p2.trailing_zeros();
+            for k in 0..rounds {
+                let stride = 1usize << k;
+                let chunk = bytes / 2f64.powi(k as i32 + 1);
+                // every active rank exchanges `chunk` with its XOR partner —
+                // p2 concurrent flows, distinct partners at every stride
+                let pairs: Vec<(Rank, Rank)> = (0..p2)
+                    .map(|idx| (active[idx], active[idx ^ stride]))
+                    .collect();
+                let phase = self.phase_time(&pairs, chunk);
+                // reduce-scatter round + its mirrored all-gather round
+                absorb(&mut out, &phase, 2);
+            }
+            // post-fold: return the full result to the parked ranks
+            if r > 0 {
+                let post: Vec<(Rank, Rank)> =
+                    (0..r).map(|i| (ranks[2 * i], ranks[2 * i + 1])).collect();
+                let phase = self.phase_time(&post, bytes);
+                absorb(&mut out, &phase, 1);
+            }
+            out
+        })
     }
 
     /// NCCL-tuner-style selection: latency-optimal tree for small

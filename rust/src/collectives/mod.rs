@@ -14,6 +14,7 @@ pub mod algorithms;
 pub use algorithms::AllReduceAlgo;
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 
 use crate::config::ClusterConfig;
 use crate::hardware::nvswitch::NvSwitchFabric;
@@ -64,8 +65,53 @@ pub struct CollectiveEngine<'f> {
     /// NCCL pipelining chunk for broadcast rings.
     pub bcast_chunk: f64,
     /// Persistent flow simulator: ECMP route caches survive across
-    /// collective calls (perf pass — see EXPERIMENTS.md §Perf).
+    /// collective calls (perf pass — see docs/bench.md).
     sim: RefCell<FlowSim<'f>>,
+    /// Memoized collective times, keyed by canonical spec bytes (tag +
+    /// payload bits + rank list). Collectives are pure functions of their
+    /// spec on a fixed fabric/engine, so repeated calls — HPL's ~hundreds
+    /// of identical panel broadcasts, the algorithm selector's candidate
+    /// sweep — hit here instead of re-running the flow simulator
+    /// (docs/bench.md). Callers that mutate the public engine knobs after
+    /// construction must [`Self::clear_time_cache`].
+    cache: RefCell<HashMap<Vec<u8>, CollectiveTime>>,
+}
+
+/// Canonical cache key: tag byte, payload bit pattern, then each rank as
+/// two little-endian u64s. Byte-exact, so distinct specs never collide.
+fn spec_key(tag: u8, bytes: f64, ranks: &[Rank]) -> Vec<u8> {
+    let mut k = Vec::with_capacity(9 + ranks.len() * 16);
+    k.push(tag);
+    k.extend_from_slice(&bytes.to_bits().to_le_bytes());
+    for &(node, rail) in ranks {
+        k.extend_from_slice(&(node as u64).to_le_bytes());
+        k.extend_from_slice(&(rail as u64).to_le_bytes());
+    }
+    k
+}
+
+/// As [`spec_key`] but over a plain node/usize list.
+pub(crate) fn node_key(tag: u8, bytes: f64, nodes: &[usize]) -> Vec<u8> {
+    let mut k = Vec::with_capacity(9 + nodes.len() * 8);
+    k.push(tag);
+    k.extend_from_slice(&bytes.to_bits().to_le_bytes());
+    for &n in nodes {
+        k.extend_from_slice(&(n as u64).to_le_bytes());
+    }
+    k
+}
+
+/// As [`spec_key`] but over (from, to) rank pairs.
+fn pair_key(tag: u8, bytes: f64, pairs: &[(Rank, Rank)]) -> Vec<u8> {
+    let mut k = Vec::with_capacity(9 + pairs.len() * 32);
+    k.push(tag);
+    k.extend_from_slice(&bytes.to_bits().to_le_bytes());
+    for &((a, b), (c, d)) in pairs {
+        for v in [a, b, c, d] {
+            k.extend_from_slice(&(v as u64).to_le_bytes());
+        }
+    }
+    k
 }
 
 impl<'f> CollectiveEngine<'f> {
@@ -79,7 +125,35 @@ impl<'f> CollectiveEngine<'f> {
             sim: RefCell::new(FlowSim::new(fabric, roce.clone())),
             roce,
             bcast_chunk: 4e6,
+            cache: RefCell::new(HashMap::new()),
         }
+    }
+
+    /// Memoize `f` under `key`. The borrow is dropped before `f` runs, so
+    /// nested collectives (ring all-reduce -> reduce-scatter) can consult
+    /// the cache re-entrantly without a `RefCell` panic.
+    fn cached(
+        &self,
+        key: Vec<u8>,
+        f: impl FnOnce() -> CollectiveTime,
+    ) -> CollectiveTime {
+        if let Some(hit) = self.cache.borrow().get(&key) {
+            return hit.clone();
+        }
+        let value = f();
+        self.cache.borrow_mut().insert(key, value.clone());
+        value
+    }
+
+    /// Drop every memoized collective time (bench cases use this to
+    /// measure the cold path; required after mutating engine knobs).
+    pub fn clear_time_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+
+    /// Number of memoized collective specs.
+    pub fn time_cache_len(&self) -> usize {
+        self.cache.borrow().len()
     }
 
     /// Simulate one phase: every `(from, to)` pair sends `bytes`
@@ -165,15 +239,17 @@ impl<'f> CollectiveEngine<'f> {
         if pairs.is_empty() || bytes <= 0.0 {
             return CollectiveTime::default();
         }
-        let out = self.phase_time(pairs, bytes);
-        let eth_bound = out.eth_time >= out.nv_time;
-        CollectiveTime {
-            total: out.time,
-            intra: if eth_bound { 0.0 } else { out.time },
-            inter: if eth_bound { out.time } else { 0.0 },
-            flows: out.eth_flows,
-            max_util: out.max_util,
-        }
+        self.cached(pair_key(b'P', bytes, pairs), || {
+            let out = self.phase_time(pairs, bytes);
+            let eth_bound = out.eth_time >= out.nv_time;
+            CollectiveTime {
+                total: out.time,
+                intra: if eth_bound { 0.0 } else { out.time },
+                inter: if eth_bound { out.time } else { 0.0 },
+                flows: out.eth_flows,
+                max_util: out.max_util,
+            }
+        })
     }
 
     /// Ring all-reduce among `ranks` of a `bytes` buffer: a ring
@@ -197,22 +273,24 @@ impl<'f> CollectiveEngine<'f> {
         if p < 2 || bytes <= 0.0 {
             return CollectiveTime::default();
         }
-        let chunk = bytes / p as f64;
-        let pairs: Vec<(Rank, Rank)> = ranks
-            .iter()
-            .enumerate()
-            .map(|(i, &r)| (r, ranks[(i + 1) % p]))
-            .collect();
-        let step = self.phase_time(&pairs, chunk);
-        let total = (p - 1) as f64 * step.time;
-        let eth_bound = step.eth_time >= step.nv_time;
-        CollectiveTime {
-            total,
-            intra: if eth_bound { 0.0 } else { total },
-            inter: if eth_bound { total } else { 0.0 },
-            flows: step.eth_flows * (p - 1),
-            max_util: step.max_util,
-        }
+        self.cached(spec_key(b'R', bytes, ranks), || {
+            let chunk = bytes / p as f64;
+            let pairs: Vec<(Rank, Rank)> = ranks
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| (r, ranks[(i + 1) % p]))
+                .collect();
+            let step = self.phase_time(&pairs, chunk);
+            let total = (p - 1) as f64 * step.time;
+            let eth_bound = step.eth_time >= step.nv_time;
+            CollectiveTime {
+                total,
+                intra: if eth_bound { 0.0 } else { total },
+                inter: if eth_bound { total } else { 0.0 },
+                flows: step.eth_flows * (p - 1),
+                max_util: step.max_util,
+            }
+        })
     }
 
     /// Ring all-gather — the mirrored cost of [`Self::reduce_scatter`].
@@ -234,10 +312,13 @@ impl<'f> CollectiveEngine<'f> {
             let t = nv.all_reduce_time(bytes);
             return CollectiveTime { total: t, intra: t, ..CollectiveTime::default() };
         }
-        let rails = self.cfg.network.rails.min(g).max(1);
-        let ranks: Vec<Rank> =
-            (0..tp).map(|i| (base_node + i / g, (i % g) % rails)).collect();
-        self.ring_allreduce(&ranks, bytes)
+        self.cached(node_key(b'T', bytes, &[base_node, tp]), || {
+            let rails = self.cfg.network.rails.min(g).max(1);
+            let ranks: Vec<Rank> = (0..tp)
+                .map(|i| (base_node + i / g, (i % g) % rails))
+                .collect();
+            self.ring_allreduce(&ranks, bytes)
+        })
     }
 
     /// Hierarchical (rail-aligned) all-reduce over whole nodes:
@@ -262,34 +343,36 @@ impl<'f> CollectiveEngine<'f> {
         if n == 1 {
             return CollectiveTime { total: intra, intra, ..CollectiveTime::default() };
         }
-        let rail_bytes = bytes / g as f64;
-        let chunk = rail_bytes / n as f64;
-        // one combined ring step across all rails
-        let mut flows = Vec::new();
-        for rail in 0..g {
-            for (i, &node) in nodes.iter().enumerate() {
-                let nnode = nodes[(i + 1) % n];
-                let src = self.fabric.host(node, rail).unwrap();
-                let dst = self.fabric.host(nnode, rail).unwrap();
-                flows.push(Flow {
-                    src,
-                    dst,
-                    bytes: chunk,
-                    start: 0.0,
-                    label: (rail * 1000 + i) as u64,
-                });
+        self.cached(node_key(b'H', bytes, nodes), || {
+            let rail_bytes = bytes / g as f64;
+            let chunk = rail_bytes / n as f64;
+            // one combined ring step across all rails
+            let mut flows = Vec::new();
+            for rail in 0..g {
+                for (i, &node) in nodes.iter().enumerate() {
+                    let nnode = nodes[(i + 1) % n];
+                    let src = self.fabric.host(node, rail).unwrap();
+                    let dst = self.fabric.host(nnode, rail).unwrap();
+                    flows.push(Flow {
+                        src,
+                        dst,
+                        bytes: chunk,
+                        start: 0.0,
+                        label: (rail * 1000 + i) as u64,
+                    });
+                }
             }
-        }
-        let report = self.sim.borrow_mut().run(&flows);
-        let step = report.makespan;
-        let inter = 2.0 * (n - 1) as f64 * step;
-        CollectiveTime {
-            total: intra + inter,
-            intra,
-            inter,
-            flows: flows.len() * 2 * (n - 1),
-            max_util: report.max_util(),
-        }
+            let report = self.sim.borrow_mut().run(&flows);
+            let step = report.makespan;
+            let inter = 2.0 * (n - 1) as f64 * step;
+            CollectiveTime {
+                total: intra + inter,
+                intra,
+                inter,
+                flows: flows.len() * 2 * (n - 1),
+                max_util: report.max_util(),
+            }
+        })
     }
 
     /// If `ranks` cover whole nodes (every distinct node contributes all
@@ -323,21 +406,23 @@ impl<'f> CollectiveEngine<'f> {
         if p < 2 || bytes <= 0.0 {
             return CollectiveTime::default();
         }
-        let chunk = self.bcast_chunk.min(bytes);
-        let n_chunks = (bytes / chunk).ceil();
-        let chain: Vec<(Rank, Rank)> =
-            (0..p - 1).map(|i| (ranks[i], ranks[i + 1])).collect();
-        let step = self.phase_time(&chain, chunk);
-        // pipeline: last chunk arrives after (n_chunks + p - 2) hops
-        let total = (n_chunks + p as f64 - 2.0) * step.time;
-        CollectiveTime {
-            total,
-            inter: total,
-            // every chunk crosses every Ethernet hop of the chain once
-            flows: step.eth_flows * n_chunks as usize,
-            max_util: step.max_util,
-            ..CollectiveTime::default()
-        }
+        self.cached(spec_key(b'B', bytes, ranks), || {
+            let chunk = self.bcast_chunk.min(bytes);
+            let n_chunks = (bytes / chunk).ceil();
+            let chain: Vec<(Rank, Rank)> =
+                (0..p - 1).map(|i| (ranks[i], ranks[i + 1])).collect();
+            let step = self.phase_time(&chain, chunk);
+            // pipeline: last chunk arrives after (n_chunks + p - 2) hops
+            let total = (n_chunks + p as f64 - 2.0) * step.time;
+            CollectiveTime {
+                total,
+                inter: total,
+                // every chunk crosses every Ethernet hop of the chain once
+                flows: step.eth_flows * n_chunks as usize,
+                max_util: step.max_util,
+                ..CollectiveTime::default()
+            }
+        })
     }
 
     /// Latency-bound small all-reduce (HPCG dot products, MxP residual
@@ -354,45 +439,47 @@ impl<'f> CollectiveEngine<'f> {
         if p < 2 || bytes_per_pair <= 0.0 {
             return CollectiveTime::default();
         }
-        let mut flows = Vec::new();
-        let mut nvlink_bytes_max: f64 = 0.0;
-        for (i, &(node, rail)) in ranks.iter().enumerate() {
-            let mut local = 0.0;
-            for (j, &(nnode, nrail)) in ranks.iter().enumerate() {
-                if i == j {
-                    continue;
+        self.cached(spec_key(b'A', bytes_per_pair, ranks), || {
+            let mut flows = Vec::new();
+            let mut nvlink_bytes_max: f64 = 0.0;
+            for (i, &(node, rail)) in ranks.iter().enumerate() {
+                let mut local = 0.0;
+                for (j, &(nnode, nrail)) in ranks.iter().enumerate() {
+                    if i == j {
+                        continue;
+                    }
+                    if node == nnode {
+                        local += bytes_per_pair;
+                    } else {
+                        flows.push(Flow {
+                            src: self.fabric.host(node, rail).unwrap(),
+                            dst: self.fabric.host(nnode, nrail).unwrap(),
+                            bytes: bytes_per_pair,
+                            start: 0.0,
+                            label: (i * p + j) as u64,
+                        });
+                    }
                 }
-                if node == nnode {
-                    local += bytes_per_pair;
-                } else {
-                    flows.push(Flow {
-                        src: self.fabric.host(node, rail).unwrap(),
-                        dst: self.fabric.host(nnode, nrail).unwrap(),
-                        bytes: bytes_per_pair,
-                        start: 0.0,
-                        label: (i * p + j) as u64,
-                    });
-                }
+                nvlink_bytes_max = nvlink_bytes_max.max(local);
             }
-            nvlink_bytes_max = nvlink_bytes_max.max(local);
-        }
-        let nv = nvlink_bytes_max
-            / (self.nvswitch.per_gpu_bw * self.nvswitch.efficiency);
-        let n_flows = flows.len();
-        let (eth, max_util) = if flows.is_empty() {
-            (0.0, 0.0)
-        } else {
-            let report = self.sim.borrow_mut().run(&flows);
-            (report.makespan, report.max_util())
-        };
-        let total = eth.max(nv);
-        CollectiveTime {
-            total,
-            intra: if eth >= nv { 0.0 } else { total },
-            inter: if eth >= nv { total } else { 0.0 },
-            flows: n_flows,
-            max_util,
-        }
+            let nv = nvlink_bytes_max
+                / (self.nvswitch.per_gpu_bw * self.nvswitch.efficiency);
+            let n_flows = flows.len();
+            let (eth, max_util) = if flows.is_empty() {
+                (0.0, 0.0)
+            } else {
+                let report = self.sim.borrow_mut().run(&flows);
+                (report.makespan, report.max_util())
+            };
+            let total = eth.max(nv);
+            CollectiveTime {
+                total,
+                intra: if eth >= nv { 0.0 } else { total },
+                inter: if eth >= nv { total } else { 0.0 },
+                flows: n_flows,
+                max_util,
+            }
+        })
     }
 }
 
@@ -607,6 +694,29 @@ mod tests {
                 t.total
             );
         }
+    }
+
+    #[test]
+    fn time_cache_memoizes_and_returns_identical_values() {
+        let (cfg, f) = engine_for(TopologyKind::RailOptimized, 16);
+        let eng = CollectiveEngine::new(&f, &cfg);
+        let nodes: Vec<usize> = (0..16).collect();
+        assert_eq!(eng.time_cache_len(), 0);
+        let cold = eng.hierarchical_allreduce(&nodes, 1e9);
+        let n_after_cold = eng.time_cache_len();
+        assert!(n_after_cold >= 1);
+        let warm = eng.hierarchical_allreduce(&nodes, 1e9);
+        assert_eq!(eng.time_cache_len(), n_after_cold, "hit must not grow");
+        assert_eq!(cold.total.to_bits(), warm.total.to_bits());
+        assert_eq!(cold.flows, warm.flows);
+        // a different spec is a different entry, never a collision
+        let other = eng.hierarchical_allreduce(&nodes, 2e9);
+        assert!(eng.time_cache_len() > n_after_cold);
+        assert!(other.total > cold.total);
+        eng.clear_time_cache();
+        assert_eq!(eng.time_cache_len(), 0);
+        let recomputed = eng.hierarchical_allreduce(&nodes, 1e9);
+        assert_eq!(recomputed.total.to_bits(), cold.total.to_bits());
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! `sakuraone bench` — the micro-benchmark suites (`runtime::benchsuite`)
+//! as a first-class subcommand, emitting the versioned `BENCH_*.json`
+//! perf-trajectory manifest and gating the deterministic work counters
+//! against a committed baseline (docs/bench.md).
+//!
+//! Two passes. The counter pass runs every case once, in parallel, and is
+//! what the `RunManifest` records — deterministic and byte-identical for
+//! any `--workers` value, like every other subcommand's `--json` output.
+//! The timed pass (skipped with `--counters-only`) samples each case
+//! serially through `util::bench` and fills the bench manifest's timing
+//! fields; wall-clock never enters the run manifest.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ClusterConfig;
+use crate::runtime::benchsuite::{
+    cases, compare_counters, run_counters, run_timed, BenchManifest,
+};
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::util::bench::{BenchConfig, Bencher};
+use crate::util::cli::Args;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let quick = args.flag("quick");
+    let counters_only = args.flag("counters-only");
+    let workers = super::worker_count(args)?;
+    let quiet = super::quiet(args);
+
+    let mut roster = cases(quick);
+    if let Some(filter) = args.get("suite") {
+        roster.retain(|c| c.suite == filter);
+        if roster.is_empty() {
+            bail!(
+                "no bench cases in suite {filter:?} \
+                 (suites: network, topology, collectives, model)"
+            );
+        }
+    }
+
+    let t0 = std::time::Instant::now();
+    let counters = run_counters(&roster, workers);
+    eprintln!(
+        "bench: counters for {} case(s) on {} worker(s) in {:.2}s",
+        roster.len(),
+        workers,
+        t0.elapsed().as_secs_f64()
+    );
+
+    let mut manifest = RunManifest::new("bench", 0, ClusterConfig::default().to_json());
+    for (c, &counter) in roster.iter().zip(&counters) {
+        manifest.push(
+            ScenarioRecord::new(&format!("bench/{}/{}", c.suite, c.name), "bench")
+                .param("suite", c.suite)
+                .metric("counter", counter as f64),
+        );
+    }
+    manifest.note(if quick { "roster: quick" } else { "roster: full" });
+
+    let bench_manifest = if counters_only {
+        None
+    } else {
+        if !quiet {
+            Bencher::header(if quick {
+                "sakuraone bench --quick"
+            } else {
+                "sakuraone bench"
+            });
+        }
+        let config = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+        let t1 = std::time::Instant::now();
+        let results = run_timed(&roster, &config, quiet);
+        eprintln!("bench: timed pass in {:.2}s", t1.elapsed().as_secs_f64());
+        Some(BenchManifest::collect(quick, &roster, &results))
+    };
+
+    if let Some(path) = args.get("bench-out") {
+        let Some(bm) = &bench_manifest else {
+            bail!("--bench-out needs timing data; drop --counters-only");
+        };
+        std::fs::write(path, bm.to_json().emit())?;
+        eprintln!("bench: wrote {path}");
+    }
+
+    if let Some(path) = args.get("baseline") {
+        let tol = args.get_f64("tolerance", 10.0).map_err(anyhow::Error::msg)?;
+        let current = match &bench_manifest {
+            Some(bm) => bm.clone(),
+            None => BenchManifest::from_counters(quick, &roster, &counters),
+        };
+        if let Err(e) = gate(&current, path, tol) {
+            // Emit the manifest wherever the caller asked even on a
+            // regression (main.rs only emits on success), so CI can
+            // upload and diff the regressed run.
+            if args.flag("json") {
+                println!("{}", manifest.to_json().emit());
+            }
+            if let Some(out) = args.get("out") {
+                std::fs::write(out, manifest.to_json().emit())?;
+            }
+            return Err(e);
+        }
+    }
+    Ok(manifest)
+}
+
+/// Compare work counters against the committed `BENCH_*.json`; exits
+/// non-zero on regression. Mirrors `suite::gate`.
+fn gate(current: &BenchManifest, path: &str, tol_pct: f64) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading bench baseline {path}: {e}"))?;
+    let baseline = crate::util::json::Json::parse(&text)
+        .map_err(|e| anyhow!("parsing bench baseline {path}: {e}"))?;
+    let report =
+        compare_counters(current, &baseline, tol_pct).map_err(anyhow::Error::msg)?;
+    if report.bootstrap {
+        eprintln!(
+            "bench baseline {path} is a bootstrap placeholder — gate skipped; \
+             refresh it from this run (see docs/bench.md)"
+        );
+        return Ok(());
+    }
+    if report.passed() {
+        eprintln!(
+            "bench gate: {} counter(s) within {tol_pct}% of {path}",
+            report.compared
+        );
+        return Ok(());
+    }
+    for f in &report.failures {
+        eprintln!("bench regression: {f}");
+    }
+    bail!("{} regression(s) vs bench baseline {path}", report.failures.len());
+}

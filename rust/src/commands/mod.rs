@@ -4,6 +4,7 @@
 //! machine-readable artifact (`--json`, `--out FILE`) from every command,
 //! and human-readable tables are printed unless `--json` asks for quiet.
 
+pub mod bench;
 pub mod campaign;
 pub mod checkpoint;
 pub mod cluster;
@@ -33,7 +34,7 @@ use crate::util::cli::Args;
 /// Boolean flags across all subcommands (everything else is `--key value`).
 pub const FLAGS: &[&str] = &[
     "help", "render", "nics", "bisection", "dump", "top500", "rankings",
-    "software", "json", "degraded", "quick", "serial",
+    "software", "json", "degraded", "quick", "serial", "counters-only",
 ];
 
 /// Apply the CLI's `--nodes/--topology/...` overrides onto `cfg` (on top
@@ -116,6 +117,9 @@ USAGE: sakuraone <subcommand> [options]
   config    [--dump] [--nodes N] [--topology KIND] ...
   suite     [--quick] [--serial] [--workers N] [--seed S]
             [--baseline FILE] [--tolerance PCT] [--plan FILE]
+  bench     [--quick] [--counters-only] [--suite NAME] [--serial]
+            [--workers N] [--bench-out FILE] [--baseline FILE]
+            [--tolerance PCT]          (perf trajectory, docs/bench.md)
   plan      run FILE [--workers N] [--seed S]     (user-authored sweeps,
             | validate FILE... | list              see docs/plans.md)
   cluster   list | show NAME|FILE | validate [NAME|FILE...] | diff A B

@@ -20,6 +20,8 @@
 //!             list/show/validate/diff (docs/clusters.md)
 //!   trace   — workload traces: synth/replay/stats through the Slurm
 //!             simulator's scheduler-policy sweep (docs/traces.md)
+//!   bench   — micro-benchmark suites + the committed `BENCH_*.json`
+//!             perf-trajectory manifest and its counter gate (docs/bench.md)
 //!   validate— numerics checks through the AOT artifacts
 //!   report  — Table 3 census, rankings, config inventory
 //!   suite   — everything above through the parallel sweep engine
@@ -71,6 +73,7 @@ fn run(args: &Args) -> Result<()> {
         "report" => commands::report::handle(args)?,
         "config" => commands::config::handle(args)?,
         "suite" => commands::suite::handle(args)?,
+        "bench" => commands::bench::handle(args)?,
         other => {
             println!("{}", commands::usage());
             bail!("unknown subcommand {other:?}");

@@ -1,15 +1,37 @@
 //! Progressive-filling flow simulator over a `Fabric`.
 //!
-//! Perf note (EXPERIMENTS.md §Perf): the rate allocator and utilisation
-//! tracker use dense per-link vectors with a touched-list reset instead of
-//! hash maps — the allocator runs every flow event and dominated the
-//! simulator profile before this change.
+//! Perf notes (docs/bench.md): the rate allocator and utilisation tracker
+//! use dense per-link vectors with mark/reset lists instead of hash maps,
+//! all water-filling scratch lives on `FlowSim` (zero per-event heap
+//! allocation), and rate recomputation is *incremental*: each admission or
+//! retirement dirties only the links on that flow's path, and the solver
+//! re-solves only the link-sharing connected components that contain dirty
+//! links. Clean components keep their cached rates, which are bitwise
+//! identical to a fresh solve because both the incremental and the
+//! retained from-scratch reference mode ([`FlowSim::reference`]) run the
+//! same per-component kernel over ascending slot order — the equivalence
+//! is pinned by the property test in `tests/proptest_network.rs` and the
+//! speedup is tracked by the committed `sakuraone bench` trajectory.
 
 use std::collections::HashMap;
 
 use super::roce::RoceParams;
 use crate::topology::graph::{DeviceId, Fabric, LinkId};
 use crate::topology::routing::Router;
+
+/// Admission tolerance, relative to the current simulation time: flows
+/// whose start is within `t * ADMIT_REL_EPS` of `t` join the current
+/// event. The old absolute `1e-15` vanished against multi-day campaign
+/// timestamps (t ~ 1e6 s).
+const ADMIT_REL_EPS: f64 = 1e-12;
+
+/// Bottleneck-freeze tolerance, relative to the bottleneck share. The old
+/// absolute `1e-9` was meaningless at 800 GbE shares (~1e10 B/s).
+const FREEZE_REL_EPS: f64 = 1e-9;
+
+/// Retirement tolerance, relative to the flow's size. The old absolute
+/// `1e-9` bytes forced extra micro-events on petabyte-scale flows.
+const RETIRE_REL_EPS: f64 = 1e-12;
 
 #[derive(Debug, Clone)]
 pub struct Flow {
@@ -39,7 +61,11 @@ pub struct SimReport {
     pub makespan: f64,
     /// Peak utilisation (0..1) per link id, sparse.
     pub peak_link_util: HashMap<LinkId, f64>,
-    /// Number of rate recomputation rounds (perf counter).
+    /// Total water-filling freeze rounds across all solved components — a
+    /// deterministic, machine-independent work counter (the `sakuraone
+    /// bench` manifest gates regressions on it, docs/bench.md). Depends on
+    /// the solver mode: the incremental solver does strictly less work
+    /// than [`FlowSim::reference`] on the same batch.
     pub rounds: usize,
 }
 
@@ -53,19 +79,35 @@ pub struct FlowSim<'f> {
     pub fabric: &'f Fabric,
     pub roce: RoceParams,
     router: Router<'f>,
-    // dense scratch, reused across runs (indexed by LinkId)
+    // dense per-link scratch, reused across runs (indexed by LinkId)
     residual: Vec<f64>,
     flows_on_link: Vec<u32>,
     peak_util: Vec<f64>,
-    touched: Vec<LinkId>,
+    link_mark: Vec<bool>,
+    /// Alive active-flow slots currently crossing each link.
+    members: Vec<Vec<u32>>,
+    dirty_mark: Vec<bool>,
+    dirty_links: Vec<LinkId>,
+    // per-slot scratch for component discovery
+    in_comp: Vec<bool>,
+    visited: Vec<u32>,
+    comp_slots: Vec<u32>,
+    comp_links: Vec<LinkId>,
+    // water-filling scratch, hoisted out of the per-event hot path
+    frozen: Vec<bool>,
+    rates: Vec<f64>,
+    order: Vec<u32>,
+    reference_mode: bool,
 }
 
 struct ActiveFlow {
     idx: usize,
-    path: Vec<LinkId>,
+    /// Interned path id in the router (no per-flow `Vec<LinkId>` clone).
+    path: u32,
     remaining: f64,
     rate: f64,
     started_at: f64,
+    alive: bool,
 }
 
 impl<'f> FlowSim<'f> {
@@ -78,8 +120,29 @@ impl<'f> FlowSim<'f> {
             residual: vec![0.0; n],
             flows_on_link: vec![0; n],
             peak_util: vec![0.0; n],
-            touched: Vec::new(),
+            link_mark: vec![false; n],
+            members: vec![Vec::new(); n],
+            dirty_mark: vec![false; n],
+            dirty_links: Vec::new(),
+            in_comp: Vec::new(),
+            visited: Vec::new(),
+            comp_slots: Vec::new(),
+            comp_links: Vec::new(),
+            frozen: Vec::new(),
+            rates: Vec::new(),
+            order: Vec::new(),
+            reference_mode: false,
         }
+    }
+
+    /// The retained from-scratch reference solver: every event re-solves
+    /// every component. Bitwise equivalent to the default incremental
+    /// mode (proven by `tests/proptest_network.rs`) and kept both as the
+    /// equivalence oracle and as the `_reference` bench cases' baseline.
+    pub fn reference(fabric: &'f Fabric, roce: RoceParams) -> Self {
+        let mut s = Self::new(fabric, roce);
+        s.reference_mode = true;
+        s
     }
 
     /// Simulate a batch of flows to completion. Panics if any flow is
@@ -99,9 +162,14 @@ impl<'f> FlowSim<'f> {
         for u in self.peak_util.iter_mut() {
             *u = 0.0;
         }
+        // drop dirt left behind by the previous run's final retirements
+        for &l in &self.dirty_links {
+            self.dirty_mark[l] = false;
+        }
+        self.dirty_links.clear();
 
-        // Route everything up front.
-        let mut pending: Vec<(usize, &Flow, Vec<LinkId>)> = Vec::new();
+        // Route everything up front (interned path ids, no clones).
+        let mut pending: Vec<(usize, u32)> = Vec::new();
         for (i, fl) in flows.iter().enumerate() {
             if fl.src == fl.dst || fl.bytes <= 0.0 {
                 report.results[i] = FlowResult {
@@ -112,77 +180,115 @@ impl<'f> FlowSim<'f> {
                 };
                 continue;
             }
-            let path = self
+            let pid = self
                 .router
-                .route(fl.src, fl.dst, fl.label)
+                .route_id(fl.src, fl.dst, fl.label)
                 .unwrap_or_else(|| {
                     panic!("no route {} -> {}", fl.src, fl.dst)
                 });
-            pending.push((i, fl, path));
+            pending.push((i, pid));
         }
-        pending.sort_by(|a, b| a.1.start.partial_cmp(&b.1.start).unwrap());
+        pending.sort_by(|a, b| {
+            flows[a.0].start.partial_cmp(&flows[b.0].start).unwrap()
+        });
 
-        let mut active: Vec<ActiveFlow> = Vec::new();
+        // Stable slot storage: retirement never moves another flow's slot,
+        // so link membership lists and component discovery stay coherent.
+        let mut slots: Vec<ActiveFlow> = Vec::new();
+        let mut live: Vec<u32> = Vec::new();
         let mut t = 0.0f64;
         let mut next_pending = 0usize;
         let eff = self.roce.dcqcn_efficiency;
 
-        while next_pending < pending.len() || !active.is_empty() {
+        while next_pending < pending.len() || !live.is_empty() {
             // admit flows that have started
-            if active.is_empty() && next_pending < pending.len() {
-                t = t.max(pending[next_pending].1.start);
+            if live.is_empty() && next_pending < pending.len() {
+                t = t.max(flows[pending[next_pending].0].start);
             }
-            while next_pending < pending.len()
-                && pending[next_pending].1.start <= t + 1e-15
-            {
-                let (idx, fl, path) = &pending[next_pending];
-                active.push(ActiveFlow {
-                    idx: *idx,
-                    path: path.clone(),
-                    remaining: fl.bytes,
+            while next_pending < pending.len() {
+                let (idx, pid) = pending[next_pending];
+                let start = flows[idx].start;
+                if start > t + t.abs() * ADMIT_REL_EPS {
+                    break;
+                }
+                let slot = slots.len() as u32;
+                slots.push(ActiveFlow {
+                    idx,
+                    path: pid,
+                    remaining: flows[idx].bytes,
                     rate: 0.0,
-                    started_at: fl.start,
+                    started_at: start,
+                    alive: true,
                 });
+                live.push(slot);
+                for &l in self.router.path(pid) {
+                    self.members[l].push(slot);
+                    if !self.dirty_mark[l] {
+                        self.dirty_mark[l] = true;
+                        self.dirty_links.push(l);
+                    }
+                }
                 next_pending += 1;
             }
 
             // max-min fair rates (water-filling) + peak-utilisation update
-            self.assign_rates(&mut active, eff);
-            report.rounds += 1;
+            if self.reference_mode {
+                self.solve_all(&mut slots, eff, &mut report.rounds);
+            } else {
+                self.solve_dirty(&mut slots, eff, &mut report.rounds);
+            }
 
             // next event: earliest completion or next admission
             let mut dt = f64::INFINITY;
-            for a in &active {
+            for &s in &live {
+                let a = &slots[s as usize];
                 if a.rate > 0.0 {
                     dt = dt.min(a.remaining / a.rate);
                 }
             }
             if next_pending < pending.len() {
-                dt = dt.min(pending[next_pending].1.start - t);
+                dt = dt.min(flows[pending[next_pending].0].start - t);
             }
             assert!(
                 dt.is_finite() && dt >= 0.0,
                 "simulator stuck at t={t} with {} active flows",
-                active.len()
+                live.len()
             );
             t += dt;
 
             // progress + retire
             let mut i = 0;
-            while i < active.len() {
-                active[i].remaining -= active[i].rate * dt;
-                if active[i].remaining <= 1e-9 {
-                    let a = active.swap_remove(i);
-                    let fl = flows[a.idx].clone();
-                    let path_lat = self.fabric.path_latency(&a.path)
+            while i < live.len() {
+                let s = live[i] as usize;
+                slots[s].remaining -= slots[s].rate * dt;
+                let bytes = flows[slots[s].idx].bytes;
+                if slots[s].remaining <= bytes * RETIRE_REL_EPS {
+                    let pid = slots[s].path;
+                    let path = self.router.path(pid);
+                    let hops = path.len();
+                    let path_lat = self.fabric.path_latency(path)
                         + self.roce.transport_latency;
-                    let duration = (t - a.started_at).max(1e-12);
-                    report.results[a.idx] = FlowResult {
+                    let duration = (t - slots[s].started_at).max(1e-12);
+                    report.results[slots[s].idx] = FlowResult {
                         finish: t + path_lat,
                         latency: path_lat,
-                        avg_rate: fl.bytes / duration,
-                        hops: a.path.len(),
+                        avg_rate: bytes / duration,
+                        hops,
                     };
+                    slots[s].alive = false;
+                    for &l in self.router.path(pid) {
+                        let m = &mut self.members[l];
+                        if let Some(pos) =
+                            m.iter().position(|&x| x == s as u32)
+                        {
+                            m.swap_remove(pos);
+                        }
+                        if !self.dirty_mark[l] {
+                            self.dirty_mark[l] = true;
+                            self.dirty_links.push(l);
+                        }
+                    }
+                    live.swap_remove(i);
                 } else {
                     i += 1;
                 }
@@ -204,88 +310,195 @@ impl<'f> FlowSim<'f> {
         report
     }
 
-    /// Water-filling max-min fair allocation among active flows, with the
-    /// optional per-flow DCQCN cap. Dense per-link scratch; O(rounds *
-    /// touched-links) instead of hashing.
-    fn assign_rates(&mut self, active: &mut [ActiveFlow], eff: f64) {
-        let n = active.len();
-        if n == 0 {
-            return;
+    /// Incremental re-solve: only the link-sharing components that contain
+    /// a dirty link (touched by an admitted/retired flow since the last
+    /// solve) are re-gathered and re-solved; every other component keeps
+    /// its cached rates, bitwise identical to a fresh solve.
+    fn solve_dirty(
+        &mut self,
+        slots: &mut [ActiveFlow],
+        eff: f64,
+        rounds: &mut usize,
+    ) {
+        if slots.len() > self.in_comp.len() {
+            self.in_comp.resize(slots.len(), false);
         }
-        // reset scratch for the touched set only
-        for &l in &self.touched {
-            self.residual[l] = 0.0;
-            self.flows_on_link[l] = 0;
+        let mut seeds = std::mem::take(&mut self.dirty_links);
+        for &l in &seeds {
+            self.dirty_mark[l] = false;
         }
-        self.touched.clear();
-        for a in active.iter() {
-            for &l in &a.path {
-                if self.flows_on_link[l] == 0 && self.residual[l] == 0.0 {
+        for si in 0..seeds.len() {
+            let l = seeds[si];
+            let mut mi = 0;
+            while mi < self.members[l].len() {
+                let m = self.members[l][mi];
+                mi += 1;
+                if !self.in_comp[m as usize] {
+                    self.gather_component(slots, m);
+                    self.solve_component(slots, eff, rounds);
+                }
+            }
+        }
+        for k in 0..self.visited.len() {
+            self.in_comp[self.visited[k] as usize] = false;
+        }
+        self.visited.clear();
+        seeds.clear();
+        self.dirty_links = seeds; // hand the buffer back, no realloc
+    }
+
+    /// Reference mode: re-gather and re-solve every component from scratch
+    /// on every event (ascending slot order, same kernel as the
+    /// incremental path — this is what makes the two modes bitwise equal).
+    fn solve_all(
+        &mut self,
+        slots: &mut [ActiveFlow],
+        eff: f64,
+        rounds: &mut usize,
+    ) {
+        if slots.len() > self.in_comp.len() {
+            self.in_comp.resize(slots.len(), false);
+        }
+        for &l in &self.dirty_links {
+            self.dirty_mark[l] = false;
+        }
+        self.dirty_links.clear();
+        for s in 0..slots.len() {
+            if !slots[s].alive || self.in_comp[s] {
+                continue;
+            }
+            self.gather_component(slots, s as u32);
+            self.solve_component(slots, eff, rounds);
+        }
+        for k in 0..self.visited.len() {
+            self.in_comp[self.visited[k] as usize] = false;
+        }
+        self.visited.clear();
+    }
+
+    /// BFS over link-sharing flows from `seed_slot` into `comp_slots`,
+    /// sorted ascending so the solve order (and therefore every FP result)
+    /// is independent of discovery order.
+    fn gather_component(&mut self, slots: &[ActiveFlow], seed_slot: u32) {
+        self.comp_slots.clear();
+        self.in_comp[seed_slot as usize] = true;
+        self.comp_slots.push(seed_slot);
+        let mut qi = 0;
+        while qi < self.comp_slots.len() {
+            let s = self.comp_slots[qi] as usize;
+            qi += 1;
+            let pid = slots[s].path;
+            for &l in self.router.path(pid) {
+                for mi in 0..self.members[l].len() {
+                    let m = self.members[l][mi];
+                    if !self.in_comp[m as usize] {
+                        self.in_comp[m as usize] = true;
+                        self.comp_slots.push(m);
+                    }
+                }
+            }
+        }
+        self.comp_slots.sort_unstable();
+        self.visited.extend_from_slice(&self.comp_slots);
+    }
+
+    /// Water-filling max-min fair allocation within one component, with
+    /// the optional per-flow DCQCN cap. All scratch is `FlowSim` state —
+    /// zero allocation per call.
+    fn solve_component(
+        &mut self,
+        slots: &mut [ActiveFlow],
+        eff: f64,
+        rounds: &mut usize,
+    ) {
+        let n = self.comp_slots.len();
+        self.comp_links.clear();
+        for ci in 0..n {
+            let pid = slots[self.comp_slots[ci] as usize].path;
+            for &l in self.router.path(pid) {
+                if !self.link_mark[l] {
+                    self.link_mark[l] = true;
+                    self.comp_links.push(l);
                     self.residual[l] = self.fabric.links[l].bandwidth * eff;
-                    self.touched.push(l);
+                    self.flows_on_link[l] = 0;
                 }
                 self.flows_on_link[l] += 1;
             }
         }
-        let mut frozen = vec![false; n];
-        let mut rates = vec![0.0f64; n];
+        self.frozen.clear();
+        self.frozen.resize(n, false);
+        self.rates.clear();
+        self.rates.resize(n, 0.0);
+        self.order.clear();
+        self.order.extend(0..n as u32);
         let cap = if self.roce.per_flow_cap > 0.0 {
             self.roce.per_flow_cap
         } else {
             f64::INFINITY
         };
-        loop {
-            // bottleneck link: min fair share among links with unfrozen flows
-            let mut best_share = f64::INFINITY;
-            for &l in &self.touched {
+        while !self.order.is_empty() {
+            *rounds += 1;
+            // bottleneck link: min fair share among links w/ unfrozen flows
+            let mut best = f64::INFINITY;
+            for &l in &self.comp_links {
                 let cnt = self.flows_on_link[l];
                 if cnt == 0 {
                     continue;
                 }
                 let share = self.residual[l] / cnt as f64;
-                if share < best_share {
-                    best_share = share;
+                if share < best {
+                    best = share;
                 }
             }
-            if !best_share.is_finite() {
+            if !best.is_finite() {
                 break;
             }
-            let share = best_share.min(cap);
-            let cap_binds = share >= cap - 1e-9 && cap.is_finite();
+            let share = best.min(cap);
+            let cap_binds = cap.is_finite() && cap <= best;
+            // relative freeze bound; `best + |best|*eps` is >= best for
+            // any sign, so the argmin link always freezes and the loop
+            // always progresses
+            let limit = best + best.abs() * FREEZE_REL_EPS;
             let mut froze_any = false;
-            for (i, a) in active.iter().enumerate() {
-                if frozen[i] {
-                    continue;
-                }
+            let mut w = 0;
+            for r in 0..self.order.len() {
+                let ci = self.order[r] as usize;
+                let pid = slots[self.comp_slots[ci] as usize].path;
                 let on_bottleneck = cap_binds
-                    || a.path.iter().any(|&l| {
+                    || self.router.path(pid).iter().any(|&l| {
                         let cnt = self.flows_on_link[l];
                         cnt > 0
                             && (self.residual[l] / cnt as f64).min(cap)
-                                <= share + 1e-9
+                                <= limit
                     });
                 if on_bottleneck {
-                    frozen[i] = true;
-                    rates[i] = share;
+                    self.frozen[ci] = true;
+                    self.rates[ci] = share;
                     froze_any = true;
-                    for &l in &a.path {
+                    for &l in self.router.path(pid) {
                         self.residual[l] -= share;
                         self.flows_on_link[l] -= 1;
                     }
+                } else {
+                    self.order[w] = self.order[r];
+                    w += 1;
                 }
             }
-            if !froze_any || frozen.iter().all(|&f| f) {
+            self.order.truncate(w);
+            if !froze_any {
                 break;
             }
         }
-        // peak utilisation: re-derive link loads from final rates
-        for (i, a) in active.iter_mut().enumerate() {
-            a.rate = rates[i];
+        for ci in 0..n {
+            slots[self.comp_slots[ci] as usize].rate = self.rates[ci];
         }
-        for &l in &self.touched {
+        for k in 0..self.comp_links.len() {
+            let l = self.comp_links[k];
+            self.link_mark[l] = false;
             // residual now = capacity - sum(rates on l)
             let capacity = self.fabric.links[l].bandwidth * eff;
-            let util = ((capacity - self.residual[l]) / capacity).clamp(0.0, 1.0);
+            let util =
+                ((capacity - self.residual[l]) / capacity).clamp(0.0, 1.0);
             if util > self.peak_util[l] {
                 self.peak_util[l] = util;
             }
@@ -486,5 +699,29 @@ mod tests {
         let a = sim.run(&flows).makespan;
         let b = sim.run(&flows).makespan;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reference_mode_agrees_on_a_small_batch() {
+        // the full equivalence property lives in tests/proptest_network.rs;
+        // this is the unit-sized smoke of the same contract
+        let cfg = sim_cfg();
+        let f = rail_optimized(&cfg);
+        let flows: Vec<Flow> = (0..12)
+            .map(|n| Flow {
+                src: f.host(n, 1).unwrap(),
+                dst: f.host((n * 5 + 3) % 20, 1).unwrap(),
+                bytes: 1e7 + n as f64 * 3e6,
+                start: n as f64 * 1e-4,
+                label: n as u64,
+            })
+            .collect();
+        let inc = FlowSim::new(&f, RoceParams::default()).run(&flows);
+        let refr = FlowSim::reference(&f, RoceParams::default()).run(&flows);
+        assert_eq!(inc.makespan.to_bits(), refr.makespan.to_bits());
+        for (a, b) in inc.results.iter().zip(refr.results.iter()) {
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+            assert_eq!(a.avg_rate.to_bits(), b.avg_rate.to_bits());
+        }
     }
 }

@@ -1,0 +1,782 @@
+//! The `sakuraone bench` suite: one registry of benchmark cases shared by
+//! the CLI subcommand, the `cargo bench` bins and CI (docs/bench.md).
+//!
+//! Every case can run in two modes. `Mode::Counters` executes the case
+//! once and reports only its deterministic work counter (e.g.
+//! `SimReport.rounds`) — machine-independent, byte-identical for any
+//! worker count, and what the committed `BENCH_*.json` baseline gates.
+//! `Mode::Timed` drives the same closure through `util::bench` for the
+//! wall-clock trajectory (mean/p50/p99/min), which is recorded in the
+//! manifest but never gated.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::benchmarks::hpl::{run_hpl, HplParams};
+use crate::collectives::{CollectiveEngine, Rank};
+use crate::config::ClusterConfig;
+use crate::network::{Flow, FlowSim, RoceParams};
+use crate::runtime::run_manifest::BaselineReport;
+use crate::topology::{build, pod_of, Fabric, Router};
+use crate::util::bench::{BenchConfig, BenchResult, Bencher};
+use crate::util::codec::{self, jint, jnum, jstr};
+use crate::util::json::Json;
+
+/// Version of the `BENCH_*.json` manifest layout (docs/bench.md).
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// How a [`BenchCase`] should execute.
+pub enum Mode {
+    /// Run the case body once; report the work counter, no timing.
+    Counters,
+    /// Sample the case body through [`Bencher`] with this config.
+    Timed { config: BenchConfig, quiet: bool },
+}
+
+/// What a case produced: always a counter, timing only in timed mode.
+pub struct CaseOut {
+    pub counter: u64,
+    pub timing: Option<BenchResult>,
+}
+
+/// One registered benchmark. `run` is a plain fn pointer so the counter
+/// pass can fan cases out across the worker pool (`Send + Sync` for free).
+pub struct BenchCase {
+    pub suite: &'static str,
+    pub name: &'static str,
+    pub run: fn(&Mode, &str) -> CaseOut,
+}
+
+impl BenchCase {
+    pub fn id(&self) -> String {
+        format!("{}/{}", self.suite, self.name)
+    }
+}
+
+/// The case roster. `quick` is the CI smoke subset; the full roster is a
+/// strict superset so a quick baseline stays comparable to full runs on
+/// the shared cases.
+pub fn cases(quick: bool) -> Vec<BenchCase> {
+    let mut v = vec![
+        BenchCase { suite: "network", name: "flowsim_256_flows", run: c_flowsim_256 },
+        BenchCase { suite: "network", name: "flowsim_1600_flows", run: c_flowsim_1600 },
+        BenchCase {
+            suite: "network",
+            name: "flowsim_1600_flows_reference",
+            run: c_flowsim_1600_reference,
+        },
+        BenchCase {
+            suite: "network",
+            name: "flowsim_incast_64_staggered",
+            run: c_incast,
+        },
+        BenchCase {
+            suite: "network",
+            name: "flowsim_incast_64_reference",
+            run: c_incast_reference,
+        },
+        BenchCase {
+            suite: "network",
+            name: "flowsim_ring_step_800_flows",
+            run: c_ring_step,
+        },
+        BenchCase { suite: "topology", name: "build_rail_optimized", run: c_build_rail },
+        BenchCase {
+            suite: "topology",
+            name: "router_route_1600_interned",
+            run: c_router_1600,
+        },
+        BenchCase { suite: "collectives", name: "hier_allreduce_100n", run: c_hier },
+        BenchCase {
+            suite: "collectives",
+            name: "hier_allreduce_100n_cached",
+            run: c_hier_cached,
+        },
+    ];
+    if !quick {
+        v.extend([
+            BenchCase { suite: "network", name: "flowsim_8_flows", run: c_flowsim_8 },
+            BenchCase { suite: "network", name: "flowsim_64_flows", run: c_flowsim_64 },
+            BenchCase { suite: "network", name: "flowsim_800_flows", run: c_flowsim_800 },
+            BenchCase {
+                suite: "network",
+                name: "flowsim_1600_flows_cold",
+                run: c_flowsim_1600_cold,
+            },
+            BenchCase { suite: "topology", name: "build_fat_tree", run: c_build_fat_tree },
+            BenchCase { suite: "topology", name: "build_dragonfly", run: c_build_dragonfly },
+            BenchCase {
+                suite: "topology",
+                name: "ecmp_paths_cross_pod",
+                run: c_ecmp_cross_pod,
+            },
+            BenchCase {
+                suite: "topology",
+                name: "bisection_maxflow_800hosts",
+                run: c_bisection,
+            },
+            BenchCase {
+                suite: "collectives",
+                name: "ring_broadcast_49r",
+                run: c_ring_broadcast,
+            },
+            BenchCase { suite: "model", name: "hpl_paper_model", run: c_hpl_paper },
+        ]);
+    }
+    v
+}
+
+/// Counter pass: every case once, fanned out over `workers` threads with
+/// the sweep engine's queue idiom. Output order is the roster order, so
+/// the result is byte-identical for any worker count.
+pub fn run_counters(cases: &[BenchCase], workers: usize) -> Vec<u64> {
+    let workers = workers.clamp(1, cases.len().max(1));
+    let queue: Mutex<VecDeque<usize>> = Mutex::new((0..cases.len()).collect());
+    let slots: Mutex<Vec<Option<u64>>> = Mutex::new(vec![None; cases.len()]);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let next = queue.lock().unwrap().pop_front();
+                let Some(i) = next else { break };
+                let c = &cases[i];
+                let out = (c.run)(&Mode::Counters, c.name);
+                slots.lock().unwrap()[i] = Some(out.counter);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("every queued case ran"))
+        .collect()
+}
+
+/// Timed pass: serial by construction — concurrent timing would measure
+/// scheduler noise, not the code under test.
+pub fn run_timed(
+    cases: &[BenchCase],
+    config: &BenchConfig,
+    quiet: bool,
+) -> Vec<BenchResult> {
+    let mode = Mode::Timed { config: config.clone(), quiet };
+    cases
+        .iter()
+        .map(|c| (c.run)(&mode, c.name).timing.expect("timed mode yields timing"))
+        .collect()
+}
+
+fn drive(mode: &Mode, name: &str, mut f: impl FnMut() -> u64) -> CaseOut {
+    match mode {
+        Mode::Counters => CaseOut { counter: f(), timing: None },
+        Mode::Timed { config, quiet } => {
+            let mut b = Bencher::with_config(config.clone());
+            b.set_quiet(*quiet);
+            b.bench_counted(name, f);
+            let r = b.results()[0].clone();
+            CaseOut { counter: r.counter, timing: Some(r) }
+        }
+    }
+}
+
+// ---- network suite ---------------------------------------------------
+// Flow patterns mirror benches/bench_network.rs so the historical numbers
+// stay comparable.
+
+fn uniform_flows(fabric: &Fabric, n: usize) -> Vec<Flow> {
+    (0..n)
+        .map(|i| Flow {
+            src: fabric.host(i % 100, (i / 100) % 8).unwrap(),
+            dst: fabric.host((i * 37 + 11) % 100, (i / 100) % 8).unwrap(),
+            bytes: 64e6,
+            start: 0.0,
+            label: i as u64,
+        })
+        .collect()
+}
+
+fn incast_flows(fabric: &Fabric) -> Vec<Flow> {
+    (0..64)
+        .map(|i| Flow {
+            src: fabric.host(i % 50, 3).unwrap(),
+            dst: fabric.host(99, 3).unwrap(),
+            bytes: 16e6,
+            start: (i as f64) * 1e-4,
+            label: i as u64,
+        })
+        .collect()
+}
+
+fn ring_flows(fabric: &Fabric) -> Vec<Flow> {
+    (0..800usize)
+        .map(|i| {
+            let node = i % 100;
+            let rail = i / 100;
+            Flow {
+                src: fabric.host(node, rail).unwrap(),
+                dst: fabric.host((node + 1) % 100, rail).unwrap(),
+                bytes: 1.3e6,
+                start: 0.0,
+                label: i as u64,
+            }
+        })
+        .collect()
+}
+
+/// Warm-simulator case: the route cache is populated before measuring, so
+/// the loop exercises the solver, not first-touch path search. Counter is
+/// `SimReport.rounds` — total water-filling freeze rounds.
+fn flowsim_case(
+    mode: &Mode,
+    name: &str,
+    gen: fn(&Fabric) -> Vec<Flow>,
+    reference: bool,
+) -> CaseOut {
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let flows = gen(&fabric);
+    let mut sim = if reference {
+        FlowSim::reference(&fabric, RoceParams::default())
+    } else {
+        FlowSim::new(&fabric, RoceParams::default())
+    };
+    sim.run(&flows);
+    drive(mode, name, || sim.run(&flows).rounds as u64)
+}
+
+fn c_flowsim_8(m: &Mode, n: &str) -> CaseOut {
+    flowsim_case(m, n, |f| uniform_flows(f, 8), false)
+}
+
+fn c_flowsim_64(m: &Mode, n: &str) -> CaseOut {
+    flowsim_case(m, n, |f| uniform_flows(f, 64), false)
+}
+
+fn c_flowsim_256(m: &Mode, n: &str) -> CaseOut {
+    flowsim_case(m, n, |f| uniform_flows(f, 256), false)
+}
+
+fn c_flowsim_800(m: &Mode, n: &str) -> CaseOut {
+    flowsim_case(m, n, |f| uniform_flows(f, 800), false)
+}
+
+fn c_flowsim_1600(m: &Mode, n: &str) -> CaseOut {
+    flowsim_case(m, n, |f| uniform_flows(f, 1600), false)
+}
+
+fn c_flowsim_1600_reference(m: &Mode, n: &str) -> CaseOut {
+    flowsim_case(m, n, |f| uniform_flows(f, 1600), true)
+}
+
+fn c_incast(m: &Mode, n: &str) -> CaseOut {
+    flowsim_case(m, n, incast_flows, false)
+}
+
+fn c_incast_reference(m: &Mode, n: &str) -> CaseOut {
+    flowsim_case(m, n, incast_flows, true)
+}
+
+fn c_ring_step(m: &Mode, n: &str) -> CaseOut {
+    flowsim_case(m, n, ring_flows, false)
+}
+
+/// Cold case: simulator construction and route discovery inside the timed
+/// region — what a one-shot caller pays.
+fn c_flowsim_1600_cold(m: &Mode, n: &str) -> CaseOut {
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let flows = uniform_flows(&fabric, 1600);
+    drive(m, n, || {
+        FlowSim::new(&fabric, RoceParams::default()).run(&flows).rounds as u64
+    })
+}
+
+// ---- topology suite --------------------------------------------------
+
+fn build_case(mode: &Mode, name: &str, kind: &str) -> CaseOut {
+    let mut cfg = ClusterConfig::default();
+    cfg.apply_override("topology", kind).unwrap();
+    drive(mode, name, || {
+        let f = build(&cfg);
+        (f.devices.len() + f.links.len()) as u64
+    })
+}
+
+fn c_build_rail(m: &Mode, n: &str) -> CaseOut {
+    build_case(m, n, "rail-optimized")
+}
+
+fn c_build_fat_tree(m: &Mode, n: &str) -> CaseOut {
+    build_case(m, n, "fat-tree")
+}
+
+fn c_build_dragonfly(m: &Mode, n: &str) -> CaseOut {
+    build_case(m, n, "dragonfly")
+}
+
+fn route_sweep(fabric: &Fabric, router: &mut Router<'_>) -> u64 {
+    let mut hops = 0u64;
+    for i in 0..1600usize {
+        let a = fabric.host(i % 100, (i / 100) % 8).unwrap();
+        let b = fabric.host((i * 37 + 11) % 100, (i / 100) % 8).unwrap();
+        if let Some(id) = router.route_id(a, b, i as u64) {
+            hops += router.path(id).len() as u64;
+        }
+    }
+    hops
+}
+
+/// 1600 interned route lookups on a warm cache — the per-flow cost the
+/// simulator pays after the arena is populated.
+fn c_router_1600(m: &Mode, n: &str) -> CaseOut {
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let mut router = Router::new(&fabric);
+    route_sweep(&fabric, &mut router);
+    drive(m, n, || route_sweep(&fabric, &mut router))
+}
+
+fn c_ecmp_cross_pod(m: &Mode, n: &str) -> CaseOut {
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let a = fabric.host(0, 0).unwrap();
+    let b = fabric.host(99, 0).unwrap();
+    drive(m, n, || {
+        fabric.ecmp_paths(a, b, 16).iter().map(|p| p.len() as u64).sum()
+    })
+}
+
+fn c_bisection(m: &Mode, n: &str) -> CaseOut {
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    drive(m, n, || {
+        let bw = fabric.bisection_bandwidth(|node| pod_of(&cfg, node) == 0);
+        (bw / 1e9) as u64
+    })
+}
+
+// ---- collectives suite -----------------------------------------------
+
+/// Hierarchical allreduce on the full machine with the memo cleared every
+/// iteration: measures the contention simulation. Counter is the number
+/// of simulated Ethernet flow-transfers.
+fn c_hier(m: &Mode, n: &str) -> CaseOut {
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let engine = CollectiveEngine::new(&fabric, &cfg);
+    let nodes: Vec<usize> = (0..cfg.nodes).collect();
+    engine.hierarchical_allreduce(&nodes, 1e9);
+    drive(m, n, || {
+        engine.clear_time_cache();
+        engine.hierarchical_allreduce(&nodes, 1e9).flows as u64
+    })
+}
+
+/// Same collective with the memo warm: measures the cache hit path.
+fn c_hier_cached(m: &Mode, n: &str) -> CaseOut {
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let engine = CollectiveEngine::new(&fabric, &cfg);
+    let nodes: Vec<usize> = (0..cfg.nodes).collect();
+    engine.hierarchical_allreduce(&nodes, 1e9);
+    drive(m, n, || engine.hierarchical_allreduce(&nodes, 1e9).flows as u64)
+}
+
+/// Pipelined row broadcast at HPL's panel size (benches/bench_hpl.rs).
+fn c_ring_broadcast(m: &Mode, n: &str) -> CaseOut {
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let engine = CollectiveEngine::new(&fabric, &cfg);
+    let ranks: Vec<Rank> = (0..49).map(|q| ((q * 16) / 8, (q * 16) % 8)).collect();
+    engine.ring_broadcast(&ranks, 1.4e9);
+    drive(m, n, || {
+        engine.clear_time_cache();
+        engine.ring_broadcast(&ranks, 1.4e9).flows as u64
+    })
+}
+
+// ---- model suite -----------------------------------------------------
+
+/// Full HPL paper model; counter is Rmax in TFLOP/s (deterministic).
+fn c_hpl_paper(m: &Mode, n: &str) -> CaseOut {
+    let cfg = ClusterConfig::default();
+    drive(m, n, || {
+        let r = run_hpl(&cfg, &HplParams::paper());
+        (r.rmax / 1e12) as u64
+    })
+}
+
+// ---- manifest codec --------------------------------------------------
+
+/// One row of the committed `BENCH_*.json` manifest. `counter` is the
+/// gated quantity; the timing fields document the trajectory on the
+/// machine that produced the manifest and are never compared.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRow {
+    pub suite: String,
+    pub name: String,
+    pub counter: u64,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+/// The canonical bench manifest (schema [`BENCH_SCHEMA_VERSION`], emitted
+/// via `util::codec` — byte-stable key order, strict decode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchManifest {
+    pub quick: bool,
+    pub os: String,
+    pub arch: String,
+    pub cpus: u64,
+    pub git_commit: String,
+    pub git_dirty: bool,
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchManifest {
+    /// Assemble from a timed pass, stamping machine + git provenance.
+    pub fn collect(quick: bool, cases: &[BenchCase], results: &[BenchResult]) -> Self {
+        let rows = cases
+            .iter()
+            .zip(results)
+            .map(|(c, r)| BenchRow {
+                suite: c.suite.to_string(),
+                name: c.name.to_string(),
+                counter: r.counter,
+                iters: r.iters as u64,
+                mean_ns: r.mean_ns,
+                p50_ns: r.p50_ns,
+                p99_ns: r.p99_ns,
+                min_ns: r.min_ns,
+            })
+            .collect();
+        let (git_commit, git_dirty) = git_info();
+        Self {
+            quick,
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            cpus: std::thread::available_parallelism()
+                .map(|n| n.get() as u64)
+                .unwrap_or(1),
+            git_commit,
+            git_dirty,
+            rows,
+        }
+    }
+
+    /// A counters-only view (no timed pass ran): rows carry the gated
+    /// counter with zeroed timing fields — enough for `compare_counters`.
+    pub fn from_counters(quick: bool, cases: &[BenchCase], counters: &[u64]) -> Self {
+        let rows = cases
+            .iter()
+            .zip(counters)
+            .map(|(c, &counter)| BenchRow {
+                suite: c.suite.to_string(),
+                name: c.name.to_string(),
+                counter,
+                iters: 0,
+                mean_ns: 0.0,
+                p50_ns: 0.0,
+                p99_ns: 0.0,
+                min_ns: 0.0,
+            })
+            .collect();
+        let (git_commit, git_dirty) = git_info();
+        Self {
+            quick,
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            cpus: std::thread::available_parallelism()
+                .map(|n| n.get() as u64)
+                .unwrap_or(1),
+            git_commit,
+            git_dirty,
+            rows,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), jint(BENCH_SCHEMA_VERSION));
+        root.insert("quick".into(), Json::Bool(self.quick));
+        let mut machine = BTreeMap::new();
+        machine.insert("os".into(), jstr(&self.os));
+        machine.insert("arch".into(), jstr(&self.arch));
+        machine.insert("cpus".into(), jint(self.cpus));
+        root.insert("machine".into(), Json::Obj(machine));
+        let mut git = BTreeMap::new();
+        git.insert("commit".into(), jstr(&self.git_commit));
+        git.insert("dirty".into(), Json::Bool(self.git_dirty));
+        root.insert("git".into(), Json::Obj(git));
+        root.insert(
+            "benches".into(),
+            Json::Arr(self.rows.iter().map(row_to_json).collect()),
+        );
+        Json::Obj(root)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let m = codec::obj(v, "bench manifest")?;
+        codec::check_keys(
+            m,
+            &["schema", "quick", "machine", "git", "benches"],
+            "bench manifest",
+        )?;
+        codec::check_schema(m, BENCH_SCHEMA_VERSION, "bench manifest")?;
+        let quick = codec::bool_or(m, "quick", false, "bench manifest")?;
+        let (os, arch, cpus) = match m.get("machine") {
+            None => ("unknown".to_string(), "unknown".to_string(), 0),
+            Some(j) => {
+                let mm = codec::obj(j, "bench manifest.machine")?;
+                codec::check_keys(mm, &["os", "arch", "cpus"], "machine")?;
+                (
+                    codec::str_or(mm, "os", "unknown", "machine")?,
+                    codec::str_or(mm, "arch", "unknown", "machine")?,
+                    codec::int_or(mm, "cpus", 0, "machine")?,
+                )
+            }
+        };
+        let (git_commit, git_dirty) = match m.get("git") {
+            None => ("unknown".to_string(), false),
+            Some(j) => {
+                let gm = codec::obj(j, "bench manifest.git")?;
+                codec::check_keys(gm, &["commit", "dirty"], "git")?;
+                (
+                    codec::str_or(gm, "commit", "unknown", "git")?,
+                    codec::bool_or(gm, "dirty", false, "git")?,
+                )
+            }
+        };
+        let rows = match m.get("benches") {
+            None => Vec::new(),
+            Some(j) => j
+                .as_arr()
+                .ok_or_else(|| "bench manifest.benches: expected an array".to_string())?
+                .iter()
+                .map(row_from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        Ok(Self { quick, os, arch, cpus, git_commit, git_dirty, rows })
+    }
+
+    pub fn row(&self, suite: &str, name: &str) -> Option<&BenchRow> {
+        self.rows.iter().find(|r| r.suite == suite && r.name == name)
+    }
+}
+
+fn row_to_json(r: &BenchRow) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("suite".into(), jstr(&r.suite));
+    m.insert("name".into(), jstr(&r.name));
+    m.insert("counter".into(), jint(r.counter));
+    m.insert("iters".into(), jint(r.iters));
+    m.insert("mean_ns".into(), jnum(r.mean_ns));
+    m.insert("p50_ns".into(), jnum(r.p50_ns));
+    m.insert("p99_ns".into(), jnum(r.p99_ns));
+    m.insert("min_ns".into(), jnum(r.min_ns));
+    Json::Obj(m)
+}
+
+fn row_from_json(v: &Json) -> Result<BenchRow, String> {
+    let m = codec::obj(v, "bench row")?;
+    codec::check_keys(
+        m,
+        &["suite", "name", "counter", "iters", "mean_ns", "p50_ns", "p99_ns", "min_ns"],
+        "bench row",
+    )?;
+    Ok(BenchRow {
+        suite: codec::str_or(m, "suite", "", "bench row")?,
+        name: codec::str_or(m, "name", "", "bench row")?,
+        counter: codec::int_or(m, "counter", 0, "bench row")?,
+        iters: codec::int_or(m, "iters", 0, "bench row")?,
+        mean_ns: codec::f64_or(m, "mean_ns", 0.0, "bench row")?,
+        p50_ns: codec::f64_or(m, "p50_ns", 0.0, "bench row")?,
+        p99_ns: codec::f64_or(m, "p99_ns", 0.0, "bench row")?,
+        min_ns: codec::f64_or(m, "min_ns", 0.0, "bench row")?,
+    })
+}
+
+fn git_info() -> (String, bool) {
+    let commit = std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string());
+    let dirty = std::process::Command::new("git")
+        .args(["status", "--porcelain"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| !o.stdout.is_empty())
+        .unwrap_or(false);
+    (commit, dirty)
+}
+
+/// Gate a run's work counters against a committed baseline manifest.
+///
+/// Rules (docs/bench.md): a `{"bootstrap": true}` placeholder skips the
+/// gate; a quick/full mismatch fails (different rosters are not
+/// comparable); every baseline row with a non-zero counter must exist in
+/// the current run and agree within `tol_pct` percent. Timing fields are
+/// never compared — they are machine-local trajectory data.
+pub fn compare_counters(
+    current: &BenchManifest,
+    baseline: &Json,
+    tol_pct: f64,
+) -> Result<BaselineReport, String> {
+    if let Some(m) = baseline.as_obj() {
+        if m.get("bootstrap") == Some(&Json::Bool(true)) {
+            return Ok(BaselineReport { bootstrap: true, ..Default::default() });
+        }
+    }
+    let base = BenchManifest::from_json(baseline)?;
+    let mut report = BaselineReport::default();
+    if base.quick != current.quick {
+        report.failures.push(format!(
+            "baseline quick={} but current run quick={} — rosters differ, \
+             refresh the baseline with the matching mode",
+            base.quick, current.quick
+        ));
+        return Ok(report);
+    }
+    for b in &base.rows {
+        if b.counter == 0 {
+            continue; // timing-only case, nothing deterministic to gate
+        }
+        report.compared += 1;
+        let Some(cur) = current.row(&b.suite, &b.name) else {
+            report.failures.push(format!(
+                "{}/{}: present in baseline but missing from this run",
+                b.suite, b.name
+            ));
+            continue;
+        };
+        let drift =
+            (cur.counter as f64 - b.counter as f64).abs() / b.counter as f64 * 100.0;
+        if drift > tol_pct {
+            report.failures.push(format!(
+                "{}/{}: work counter {} vs baseline {} ({drift:.2}% > {tol_pct}%)",
+                b.suite, b.name, cur.counter, b.counter
+            ));
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchManifest {
+        BenchManifest {
+            quick: true,
+            os: "linux".into(),
+            arch: "x86_64".into(),
+            cpus: 8,
+            git_commit: "deadbeef".into(),
+            git_dirty: false,
+            rows: vec![
+                BenchRow {
+                    suite: "network".into(),
+                    name: "flowsim_1600_flows".into(),
+                    counter: 4242,
+                    iters: 10,
+                    mean_ns: 1.25e6,
+                    p50_ns: 1.2e6,
+                    p99_ns: 2.0e6,
+                    min_ns: 1.0e6,
+                },
+                BenchRow {
+                    suite: "topology".into(),
+                    name: "bisection_maxflow_800hosts".into(),
+                    counter: 0,
+                    iters: 5,
+                    mean_ns: 3.0e7,
+                    p50_ns: 3.0e7,
+                    p99_ns: 3.5e7,
+                    min_ns: 2.8e7,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_canonically() {
+        codec::assert_roundtrip(
+            &sample(),
+            BenchManifest::to_json,
+            BenchManifest::from_json,
+        );
+    }
+
+    #[test]
+    fn roster_names_are_unique_and_quick_is_a_subset() {
+        let full = cases(false);
+        let mut ids: Vec<String> = full.iter().map(|c| c.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), full.len(), "duplicate case ids");
+        for q in cases(true) {
+            assert!(
+                full.iter().any(|c| c.id() == q.id()),
+                "quick case {} missing from full roster",
+                q.id()
+            );
+        }
+    }
+
+    #[test]
+    fn gate_passes_against_itself_and_counts_gated_rows() {
+        let m = sample();
+        let report = compare_counters(&m, &m.to_json(), 10.0).unwrap();
+        assert!(report.passed());
+        // only the non-zero-counter row is gated
+        assert_eq!(report.compared, 1);
+    }
+
+    #[test]
+    fn gate_fails_on_drift_missing_case_and_quick_mismatch() {
+        let base = sample();
+        let mut drifted = base.clone();
+        drifted.rows[0].counter = 5000; // ~17.9% off 4242
+        let r = compare_counters(&drifted, &base.to_json(), 10.0).unwrap();
+        assert_eq!(r.failures.len(), 1, "{:?}", r.failures);
+
+        let mut missing = base.clone();
+        missing.rows.remove(0);
+        let r = compare_counters(&missing, &base.to_json(), 10.0).unwrap();
+        assert!(!r.passed());
+
+        let mut full = base.clone();
+        full.quick = false;
+        let r = compare_counters(&full, &base.to_json(), 10.0).unwrap();
+        assert!(!r.passed());
+    }
+
+    #[test]
+    fn gate_honours_bootstrap_placeholder() {
+        let mut m = BTreeMap::new();
+        m.insert("bootstrap".to_string(), Json::Bool(true));
+        let r = compare_counters(&sample(), &Json::Obj(m), 10.0).unwrap();
+        assert!(r.bootstrap && r.passed());
+    }
+
+    #[test]
+    fn counter_pass_is_deterministic_across_worker_counts() {
+        // a cheap subset: topology builds + the router sweep
+        let roster: Vec<BenchCase> = cases(false)
+            .into_iter()
+            .filter(|c| c.suite == "topology")
+            .collect();
+        let serial = run_counters(&roster, 1);
+        let parallel = run_counters(&roster, 4);
+        assert_eq!(serial, parallel);
+        assert!(serial.iter().any(|&c| c > 0));
+    }
+}

@@ -5,6 +5,7 @@
 //! engine.
 
 pub mod artifacts;
+pub mod benchsuite;
 pub mod pjrt;
 pub mod plan;
 pub mod run_manifest;

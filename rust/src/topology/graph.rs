@@ -40,7 +40,7 @@ pub struct Fabric {
     /// Outgoing link ids per device.
     pub adj: Vec<Vec<LinkId>>,
     /// Incoming link ids per device (kept in sync by add_link; used by
-    /// the reverse BFS in ecmp_paths — perf pass, EXPERIMENTS.md §Perf).
+    /// the reverse BFS in ecmp_paths — perf pass, docs/bench.md).
     pub radj: Vec<Vec<LinkId>>,
     /// (node, rail) -> device index (hot lookup in the collectives layer).
     host_index: HashMap<(usize, usize), DeviceId>,

@@ -1,6 +1,11 @@
 //! ECMP routing over a `Fabric`: 5-tuple-style hashing onto the set of
-//! equal-cost shortest paths, with a route cache (the hot path of the
-//! flow simulator — see EXPERIMENTS.md §Perf).
+//! equal-cost shortest paths, with an interning route cache (the hot path
+//! of the flow simulator — see docs/bench.md).
+//!
+//! Paths are stored once in a contiguous arena; the per-(src, dst) cache
+//! maps to an arena range and [`Router::route_id`] hands out a stable
+//! `u32` path id, so the simulator never clones a `Vec<LinkId>` per flow —
+//! it keeps the id and borrows the slice via [`Router::path`] on demand.
 
 use std::collections::HashMap;
 
@@ -22,35 +27,71 @@ pub struct Router<'f> {
     pub fabric: &'f Fabric,
     /// ECMP fanout considered per (src, dst).
     pub max_paths: usize,
-    cache: HashMap<(DeviceId, DeviceId), Vec<Vec<LinkId>>>,
+    /// Path arena: all cached candidate paths, contiguous per (src, dst).
+    arena: Vec<Vec<LinkId>>,
+    /// (src, dst) -> (arena start, candidate count).
+    cache: HashMap<(DeviceId, DeviceId), (u32, u32)>,
 }
 
 impl<'f> Router<'f> {
     pub fn new(fabric: &'f Fabric) -> Self {
-        Self { fabric, max_paths: 16, cache: HashMap::new() }
+        Self {
+            fabric,
+            max_paths: 16,
+            arena: Vec::new(),
+            cache: HashMap::new(),
+        }
+    }
+
+    fn path_range(&mut self, src: DeviceId, dst: DeviceId) -> (u32, u32) {
+        if let Some(&range) = self.cache.get(&(src, dst)) {
+            return range;
+        }
+        let ps = self.fabric.ecmp_paths(src, dst, self.max_paths);
+        let start = self.arena.len() as u32;
+        let count = ps.len() as u32;
+        self.arena.extend(ps);
+        self.cache.insert((src, dst), (start, count));
+        (start, count)
     }
 
     /// All candidate paths (cached).
     pub fn paths(&mut self, src: DeviceId, dst: DeviceId) -> &[Vec<LinkId>] {
-        let max_paths = self.max_paths;
-        self.cache
-            .entry((src, dst))
-            .or_insert_with(|| self.fabric.ecmp_paths(src, dst, max_paths))
+        let (start, count) = self.path_range(src, dst);
+        &self.arena[start as usize..(start + count) as usize]
+    }
+
+    /// Pick the ECMP path for a flow label and return its interned id.
+    /// Returns None if unreachable. Ids are stable for the router's
+    /// lifetime — the flow simulator stores them instead of cloned paths.
+    pub fn route_id(
+        &mut self,
+        src: DeviceId,
+        dst: DeviceId,
+        flow_label: u64,
+    ) -> Option<u32> {
+        let (start, count) = self.path_range(src, dst);
+        if count == 0 {
+            return None;
+        }
+        Some(start + (ecmp_hash(src, dst, flow_label) % count as u64) as u32)
+    }
+
+    /// The link sequence behind an interned path id.
+    pub fn path(&self, id: u32) -> &[LinkId] {
+        &self.arena[id as usize]
     }
 
     /// Pick the ECMP path for a flow label. Returns None if unreachable.
+    /// Borrows from the cache — no per-call clone.
     pub fn route(
         &mut self,
         src: DeviceId,
         dst: DeviceId,
         flow_label: u64,
-    ) -> Option<Vec<LinkId>> {
-        let ps = self.paths(src, dst);
-        if ps.is_empty() {
-            return None;
-        }
-        let idx = (ecmp_hash(src, dst, flow_label) % ps.len() as u64) as usize;
-        Some(ps[idx].clone())
+    ) -> Option<&[LinkId]> {
+        let id = self.route_id(src, dst, flow_label)?;
+        Some(self.path(id))
     }
 
     pub fn cache_len(&self) -> usize {
@@ -98,6 +139,24 @@ mod tests {
         r.route(a, b, 0);
         r.route(a, b, 1);
         assert_eq!(r.cache_len(), 1);
+    }
+
+    #[test]
+    fn route_id_is_stable_and_resolves_to_the_same_slice() {
+        let cfg = ClusterConfig::default();
+        let f = rail_optimized(&cfg);
+        let mut r = Router::new(&f);
+        let a = f.host(0, 0).unwrap();
+        let b = f.host(60, 0).unwrap();
+        let id1 = r.route_id(a, b, 42).unwrap();
+        // more cache traffic must not invalidate earlier ids
+        for n in 1..20 {
+            r.route_id(a, f.host(n, 0).unwrap(), 0);
+        }
+        let id2 = r.route_id(a, b, 42).unwrap();
+        assert_eq!(id1, id2);
+        let owned: Vec<_> = r.path(id1).to_vec();
+        assert_eq!(r.route(a, b, 42).unwrap(), &owned[..]);
     }
 
     #[test]

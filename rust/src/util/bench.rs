@@ -1,5 +1,7 @@
 //! In-repo micro-benchmark harness (criterion is not in the vendored crate
-//! set). `cargo bench` targets use this through `harness = false`.
+//! set). `cargo bench` targets use this through `harness = false`, and the
+//! `sakuraone bench` subcommand drives the same harness to emit the
+//! committed `BENCH_*.json` perf trajectory (docs/bench.md).
 //!
 //! Methodology: warmup iterations, then timed batches until both a minimum
 //! wall budget and a minimum iteration count are met; reports mean, p50,
@@ -26,6 +28,18 @@ impl Default for BenchConfig {
     }
 }
 
+impl BenchConfig {
+    /// The CI smoke budget: enough samples for a stable ballpark, small
+    /// enough that the whole suite runs in seconds (`bench --quick`).
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            min_duration: Duration::from_millis(40),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
@@ -34,6 +48,11 @@ pub struct BenchResult {
     pub p50_ns: f64,
     pub p99_ns: f64,
     pub min_ns: f64,
+    /// Machine-independent work counter returned by the benched closure
+    /// (e.g. `SimReport.rounds`): the deterministic quantity the manifest
+    /// gate compares across machines, unlike the timings (docs/bench.md).
+    /// 0 when the case reports no counter.
+    pub counter: u64,
 }
 
 impl BenchResult {
@@ -68,6 +87,7 @@ fn fmt_ns(ns: f64) -> String {
 pub struct Bencher {
     config: BenchConfig,
     results: Vec<BenchResult>,
+    quiet: bool,
 }
 
 impl Default for Bencher {
@@ -78,17 +98,42 @@ impl Default for Bencher {
 
 impl Bencher {
     pub fn new() -> Self {
-        Self { config: BenchConfig::default(), results: Vec::new() }
+        Self { config: BenchConfig::default(), results: Vec::new(), quiet: false }
     }
 
     pub fn with_config(config: BenchConfig) -> Self {
-        Self { config, results: Vec::new() }
+        Self { config, results: Vec::new(), quiet: false }
+    }
+
+    /// Suppress per-case report lines (the `bench --json` path prints the
+    /// manifest on stdout, so the harness must stay silent there).
+    pub fn set_quiet(&mut self, quiet: bool) {
+        self.quiet = quiet;
     }
 
     /// Time `f`, preventing the closure's result from being optimised out.
     pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
-        for _ in 0..self.config.warmup_iters {
+        self.run_case(name, 0, || {
             std::hint::black_box(f());
+        });
+    }
+
+    /// Time `f` and record the work counter it returns (the counter of the
+    /// last timed iteration — deterministic cases return the same value
+    /// every iteration, which is what the manifest gate relies on).
+    pub fn bench_counted<F: FnMut() -> u64>(&mut self, name: &str, mut f: F) {
+        let mut counter = 0u64;
+        self.run_case(name, 0, || {
+            counter = std::hint::black_box(f());
+        });
+        if let Some(last) = self.results.last_mut() {
+            last.counter = counter;
+        }
+    }
+
+    fn run_case(&mut self, name: &str, counter: u64, mut iter: impl FnMut()) {
+        for _ in 0..self.config.warmup_iters {
+            iter();
         }
         let mut samples_ns: Vec<f64> = Vec::new();
         let start = Instant::now();
@@ -96,7 +141,7 @@ impl Bencher {
             || start.elapsed() < self.config.min_duration
         {
             let t0 = Instant::now();
-            std::hint::black_box(f());
+            iter();
             samples_ns.push(t0.elapsed().as_nanos() as f64);
             if samples_ns.len() > 100_000 {
                 break;
@@ -109,8 +154,11 @@ impl Bencher {
             p50_ns: stats::percentile(&samples_ns, 50.0),
             p99_ns: stats::percentile(&samples_ns, 99.0),
             min_ns: stats::min(&samples_ns),
+            counter,
         };
-        println!("{}", res.report_line());
+        if !self.quiet {
+            println!("{}", res.report_line());
+        }
         self.results.push(res);
     }
 
@@ -150,5 +198,16 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.p99_ns >= r.p50_ns);
         assert!(r.min_ns <= r.mean_ns);
+        assert_eq!(r.counter, 0);
+    }
+
+    #[test]
+    fn counted_bench_records_the_counter() {
+        let mut b = Bencher::with_config(BenchConfig::quick());
+        b.set_quiet(true);
+        b.bench_counted("counted", || 42);
+        let r = &b.results()[0];
+        assert_eq!(r.counter, 42);
+        assert!(r.iters >= 3);
     }
 }

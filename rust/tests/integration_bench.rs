@@ -1,0 +1,150 @@
+//! Integration tests for `sakuraone bench`: the shared case registry, the
+//! counter pass's worker-count determinism, the `BENCH_*.json` manifest,
+//! and the committed perf-trajectory baseline gate (docs/bench.md).
+
+use sakuraone::commands;
+use sakuraone::runtime::benchsuite::{
+    cases, compare_counters, run_counters, run_timed, BenchManifest,
+};
+use sakuraone::util::bench::BenchConfig;
+use sakuraone::util::cli::Args;
+use sakuraone::util::json::Json;
+
+fn args(v: &[&str]) -> Args {
+    Args::parse(v.iter().map(|s| s.to_string()), commands::FLAGS).unwrap()
+}
+
+#[test]
+fn bench_counters_manifest_is_byte_identical_across_worker_counts() {
+    // the run-manifest schema-3 contract extends to bench: `--json` output
+    // carries counters only, so serial and parallel runs emit identical bytes
+    let serial = commands::bench::handle(&args(&[
+        "bench", "--quick", "--counters-only", "--json", "--serial",
+    ]))
+    .unwrap();
+    let parallel = commands::bench::handle(&args(&[
+        "bench", "--quick", "--counters-only", "--json", "--workers", "4",
+    ]))
+    .unwrap();
+    assert_eq!(serial.to_json().emit(), parallel.to_json().emit());
+    assert_eq!(serial.command, "bench");
+    assert_eq!(serial.scenarios.len(), cases(true).len());
+    for s in &serial.scenarios {
+        assert!(s.id.starts_with("bench/"), "{}", s.id);
+        assert_eq!(s.kind, "bench");
+        assert!(s.metric_value("counter").is_some(), "{} lacks counter", s.id);
+    }
+    // the flow-sim cases must do real, nonzero solver work
+    let rounds = serial
+        .scenario("bench/network/flowsim_1600_flows")
+        .unwrap()
+        .metric_value("counter")
+        .unwrap();
+    assert!(rounds >= 1.0);
+}
+
+#[test]
+fn bench_out_writes_a_decodable_manifest_and_rejects_counters_only() {
+    let dir = std::env::temp_dir().join("sakuraone-test-bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_topology.json");
+    // a small timed run: the two quick topology cases are millisecond-scale
+    commands::bench::handle(&args(&[
+        "bench",
+        "--quick",
+        "--suite",
+        "topology",
+        "--json",
+        "--bench-out",
+        path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let m = BenchManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert!(m.quick);
+    assert_eq!(m.rows.len(), 2);
+    assert!(m.rows.iter().all(|r| r.counter > 0 && r.iters > 0));
+    // canonical emission: decode(encode) is byte-stable
+    assert_eq!(m.to_json().emit(), text);
+
+    let err = commands::bench::handle(&args(&[
+        "bench",
+        "--quick",
+        "--counters-only",
+        "--bench-out",
+        path.to_str().unwrap(),
+    ]));
+    assert!(err.is_err(), "--bench-out without timing must be rejected");
+}
+
+#[test]
+fn bench_gate_accepts_bootstrap_and_fails_on_counter_drift() {
+    let dir = std::env::temp_dir().join("sakuraone-test-bench-gate");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("baseline.json");
+
+    std::fs::write(&path, "{\"bootstrap\": true}").unwrap();
+    commands::bench::handle(&args(&[
+        "bench",
+        "--quick",
+        "--counters-only",
+        "--serial",
+        "--suite",
+        "topology",
+        "--baseline",
+        path.to_str().unwrap(),
+    ]))
+    .expect("bootstrap placeholder must not gate");
+
+    // a real baseline with a drifted counter must fail the gate
+    let roster: Vec<_> =
+        cases(true).into_iter().filter(|c| c.suite == "topology").collect();
+    let counters = run_counters(&roster, 1);
+    let mut baseline = BenchManifest::from_counters(true, &roster, &counters);
+    baseline.rows[0].counter = baseline.rows[0].counter * 3 / 2; // +50%
+    std::fs::write(&path, baseline.to_json().emit()).unwrap();
+    let err = commands::bench::handle(&args(&[
+        "bench",
+        "--quick",
+        "--counters-only",
+        "--serial",
+        "--suite",
+        "topology",
+        "--baseline",
+        path.to_str().unwrap(),
+    ]));
+    assert!(err.is_err(), "50% counter drift must fail the 10% gate");
+}
+
+#[test]
+fn committed_bench_baseline_gates_counters() {
+    // The committed perf-trajectory point. While the file still carries
+    // the bootstrap marker, this test blesses it with a real quick-roster
+    // manifest (timings from this machine, counters deterministic) —
+    // commit the blessed file to arm the gate (docs/bench.md). Once real,
+    // any solver change that moves a work counter beyond the CI tolerance
+    // fails here, not just in the bench-smoke job.
+    let path =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../baselines/bench/BENCH_quick.json");
+    let text = std::fs::read_to_string(path).expect("baselines/bench/BENCH_quick.json");
+    let baseline = Json::parse(&text).expect("bench baseline parses");
+    let roster = cases(true);
+
+    if baseline.get("bootstrap") == Some(&Json::Bool(true)) {
+        let results = run_timed(&roster, &BenchConfig::quick(), true);
+        let m = BenchManifest::collect(true, &roster, &results);
+        std::fs::write(path, m.to_json().emit()).expect("bless bench baseline");
+        return;
+    }
+
+    let counters = run_counters(&roster, 2);
+    let current = BenchManifest::from_counters(true, &roster, &counters);
+    let rep = compare_counters(&current, &baseline, 10.0).unwrap();
+    assert!(
+        rep.passed(),
+        "work-counter regressions vs committed BENCH_quick.json (refresh \
+         per docs/bench.md if intentional): {:?}",
+        rep.failures
+    );
+    assert!(rep.compared >= 8, "bench gate coverage shrank: {}", rep.compared);
+}

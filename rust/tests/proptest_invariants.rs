@@ -46,7 +46,7 @@ fn prop_routes_are_valid_walks() {
                 };
                 let mut at = src;
                 let mut seen = std::collections::HashSet::from([src]);
-                for &l in &path {
+                for &l in path {
                     let link = &fabric.links[l];
                     if link.from != at {
                         return Err(format!("disconnected walk at link {l}"));

@@ -1,0 +1,214 @@
+//! Property tests pinning the incremental fair-share solver to the
+//! from-scratch reference solver (`FlowSim::reference`) bit for bit, plus
+//! regression tests for the relative float tolerances (docs/bench.md).
+//!
+//! The equivalence is by construction — both modes run the same
+//! `solve_component` kernel over ascending slot ids — and these tests are
+//! the contract that keeps it that way: random flow batches on
+//! rail-optimized and fat-tree fabrics must produce byte-identical
+//! reports (the `rounds` work counter is mode-dependent and excluded).
+
+use sakuraone::config::{ClusterConfig, TopologyKind};
+use sakuraone::network::sim::SimReport;
+use sakuraone::network::{Flow, FlowSim, RoceParams};
+use sakuraone::topology::builders::build;
+use sakuraone::util::proptest::{check, Config};
+use sakuraone::util::rng::Rng;
+
+/// Bitwise comparison of everything the report promises to be
+/// mode-independent (`rounds` is deliberately not on this list).
+fn assert_bitwise(a: &SimReport, b: &SimReport) -> Result<(), String> {
+    if a.makespan.to_bits() != b.makespan.to_bits() {
+        return Err(format!("makespan {} vs {}", a.makespan, b.makespan));
+    }
+    if a.results.len() != b.results.len() {
+        return Err("result count differs".into());
+    }
+    for (i, (x, y)) in a.results.iter().zip(&b.results).enumerate() {
+        if x.finish.to_bits() != y.finish.to_bits()
+            || x.latency.to_bits() != y.latency.to_bits()
+            || x.avg_rate.to_bits() != y.avg_rate.to_bits()
+            || x.hops != y.hops
+        {
+            return Err(format!("flow {i}: {x:?} vs {y:?}"));
+        }
+    }
+    if a.peak_link_util.len() != b.peak_link_util.len() {
+        return Err(format!(
+            "peak-util coverage {} vs {} links",
+            a.peak_link_util.len(),
+            b.peak_link_util.len()
+        ));
+    }
+    for (l, u) in &a.peak_link_util {
+        match b.peak_link_util.get(l) {
+            Some(v) if v.to_bits() == u.to_bits() => {}
+            other => return Err(format!("link {l}: peak {u} vs {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_incremental_solver_matches_reference_bitwise() {
+    for kind in [TopologyKind::RailOptimized, TopologyKind::FatTree] {
+        let mut cfg = ClusterConfig::default();
+        cfg.network.topology = kind;
+        cfg.apply_override("nodes", "24").unwrap();
+        let fabric = build(&cfg);
+        // the incremental simulator persists across batches (route caches
+        // and scratch reuse must not leak state between runs); the
+        // reference simulator is rebuilt fresh every case
+        let inc = std::cell::RefCell::new(FlowSim::new(&fabric, RoceParams::default()));
+        check(
+            Config { cases: 40, seed: 0xBE9C4, ..Default::default() },
+            |r: &mut Rng| {
+                // (src node, dst node, rail, bytes, start, label); same
+                // rail keeps every pair routable on both fabrics
+                let n = 1 + r.below(40) as usize;
+                (0..n)
+                    .map(|_| {
+                        let a = r.below(24) as usize;
+                        let b = (a + 1 + r.below(23) as usize) % 24;
+                        (
+                            a,
+                            b,
+                            r.below(8) as usize,
+                            r.range(1e5, 64e6),
+                            r.range(0.0, 2e-3),
+                            r.next_u64(),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |batch| {
+                let flows: Vec<Flow> = batch
+                    .iter()
+                    .map(|&(a, b, rail, bytes, start, label)| Flow {
+                        src: fabric.host(a, rail).unwrap(),
+                        dst: fabric.host(b, rail).unwrap(),
+                        bytes,
+                        start,
+                        label,
+                    })
+                    .collect();
+                let got = inc.borrow_mut().run(&flows);
+                let want = FlowSim::reference(&fabric, RoceParams::default()).run(&flows);
+                assert_bitwise(&got, &want)
+            },
+        );
+    }
+}
+
+#[test]
+fn determinism_repeated_runs_are_bitwise_identical() {
+    // warm route caches / scratch must not change results run-to-run
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let flows: Vec<Flow> = (0..200)
+        .map(|i| Flow {
+            src: fabric.host(i % 100, (i / 100) % 8).unwrap(),
+            dst: fabric.host((i * 37 + 11) % 100, (i / 100) % 8).unwrap(),
+            bytes: 64e6,
+            start: (i as f64) * 1e-5,
+            label: i as u64,
+        })
+        .collect();
+    let mut sim = FlowSim::new(&fabric, RoceParams::default());
+    let first = sim.run(&flows);
+    let second = sim.run(&flows);
+    assert_bitwise(&first, &second).unwrap();
+    assert_eq!(first.rounds, second.rounds);
+}
+
+#[test]
+fn admission_tolerance_is_relative_at_campaign_timescales() {
+    // A multi-day campaign trace replays flows millions of seconds into
+    // the simulation, where the old absolute `start <= t + 1e-15` window
+    // was far below one ulp of `t` (ulp(2.6e6) ~ 4.7e-10): a co-scheduled
+    // flow whose start differed by rounding noise missed co-admission.
+    // The relative window admits anything within 1e-12 * t.
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let t0 = 2.6e6; // ~30 days in
+    let batch = |jitter: f64| {
+        vec![
+            Flow {
+                src: fabric.host(0, 0).unwrap(),
+                dst: fabric.host(1, 0).unwrap(),
+                bytes: 64e6,
+                start: t0,
+                label: 1,
+            },
+            Flow {
+                src: fabric.host(2, 0).unwrap(),
+                dst: fabric.host(3, 0).unwrap(),
+                bytes: 64e6,
+                start: t0 * (1.0 + jitter),
+                label: 2,
+            },
+        ]
+    };
+    let mut sim = FlowSim::new(&fabric, RoceParams::default());
+    let exact = sim.run(&batch(0.0));
+    let jittered = sim.run(&batch(5e-13)); // sub-tolerance rounding noise
+    for i in 0..2 {
+        assert_eq!(
+            exact.results[i].finish.to_bits(),
+            jittered.results[i].finish.to_bits(),
+            "flow {i} finish moved under rounding-noise start jitter"
+        );
+    }
+    assert_eq!(exact.rounds, jittered.rounds, "co-admission was lost");
+}
+
+#[test]
+fn freeze_is_single_round_at_800gbe_shares() {
+    // Equal shares at 800 GbE magnitude (~1e10 B/s after efficiency). The
+    // old absolute `<= share + 1e-9` freeze test is sub-ulp there, so
+    // ties produced by `residual / count` rounding could take one freeze
+    // round per flow. The relative tolerance freezes all equal-share
+    // flows of an incast in a single round.
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let flows: Vec<Flow> = (0..8)
+        .map(|i| Flow {
+            src: fabric.host(i, 3).unwrap(),
+            dst: fabric.host(99, 3).unwrap(),
+            bytes: 16e6,
+            start: 0.0,
+            label: i as u64,
+        })
+        .collect();
+    let report = FlowSim::new(&fabric, RoceParams::default()).run(&flows);
+    assert_eq!(
+        report.rounds, 1,
+        "8 equal-share incast flows must freeze in one water-filling round"
+    );
+    let r0 = report.results[0].avg_rate.to_bits();
+    for r in &report.results {
+        assert_eq!(r.avg_rate.to_bits(), r0, "unequal shares in a pure incast");
+    }
+}
+
+#[test]
+fn retire_tolerance_scales_with_flow_bytes() {
+    // A petabyte-scale flow leaves ~2e-16 * bytes of residual after the
+    // final `remaining -= rate * dt` (one rounding step), which dwarfs
+    // any absolute cutoff. The relative retire test (1e-12 * bytes)
+    // finishes it on the first event instead of looping on zero-progress
+    // events.
+    let cfg = ClusterConfig::default();
+    let fabric = build(&cfg);
+    let flows = vec![Flow {
+        src: fabric.host(0, 0).unwrap(),
+        dst: fabric.host(1, 0).unwrap(),
+        bytes: 1e15,
+        start: 0.0,
+        label: 7,
+    }];
+    let report = FlowSim::new(&fabric, RoceParams::default()).run(&flows);
+    assert_eq!(report.rounds, 1);
+    assert!(report.results[0].finish.is_finite());
+    assert!(report.makespan > 1e3, "1 PB at ~50 GB/s takes hours");
+}
