@@ -20,6 +20,7 @@ pub mod power;
 pub mod report;
 pub mod resilience;
 pub mod sched;
+pub mod serving;
 pub mod suite;
 pub mod topo;
 pub mod trace;
@@ -109,6 +110,9 @@ USAGE: sakuraone <subcommand> [options]
   collectives [--quick] [--serial] [--workers N] [--seed S]
   campaign  [--quick] [--serial] [--workers N] [--seed S] [--days D]
             [--node-mtbf H] [--fabric-mtbf H] [--interval K]
+  serving   [--quick] [--serial] [--workers N] [--seed S] [--qps Q]
+            [--hours H] [--replicas R] [--autoscaler static|target-queue-depth]
+            (inference fleets, docs/serving.md)
   power     [--pue X]                 (paper §6 future work: energy/W)
   checkpoint [--params P] [--interval K] [--step-time S]
   resilience [--fail-spines N] [--fail-leaves N] [--cable-cuts F]

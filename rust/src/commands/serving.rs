@@ -1,0 +1,136 @@
+//! `sakuraone serving` — the multi-tenant inference-fleet grid
+//! (continuous batching × KV-cache budgets × autoscaling over the
+//! collective/placement models) through the deterministic parallel sweep
+//! engine. The manifest is byte-identical for any `--workers` value with
+//! the same seed, which `tests/golden/serving.json` pins down (see
+//! docs/serving.md).
+//!
+//! Knob overrides (`--qps`, `--hours`, `--replicas`, `--autoscaler`)
+//! apply to every scenario in the grid, so a one-off what-if run keeps
+//! the same ids and table shape.
+
+use anyhow::Result;
+
+use crate::llm::serving::{AutoscalePolicy, ServingConfig};
+use crate::runtime::run_manifest::RunManifest;
+use crate::runtime::sweep::{
+    run_sweep_named, serving_grid, Scenario, ScenarioSpec, SweepConfig,
+};
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let quick = args.flag("quick");
+    let workers = super::worker_count(args)?;
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let mut scenarios = serving_grid(quick);
+    apply_overrides(args, &mut scenarios)?;
+
+    let t0 = std::time::Instant::now();
+    let manifest =
+        run_sweep_named(&cfg, &scenarios, &SweepConfig { workers, seed }, "serving");
+    eprintln!(
+        "serving: {} scenarios on {} worker(s) in {:.2}s (grid: {}, seed {})",
+        manifest.scenarios.len(),
+        workers,
+        t0.elapsed().as_secs_f64(),
+        if quick { "quick" } else { "full" },
+        seed,
+    );
+
+    if !super::quiet(args) {
+        println!("{}", summary_table(&manifest).render());
+    }
+    Ok(manifest)
+}
+
+/// A `--key value` knob that must be a finite number when present.
+fn finite_knob(args: &Args, key: &str) -> Result<Option<f64>> {
+    let Some(raw) = args.get(key) else { return Ok(None) };
+    let v: f64 = raw
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {raw:?}"))?;
+    if !v.is_finite() {
+        anyhow::bail!("--{key} must be finite, got {raw:?}");
+    }
+    Ok(Some(v))
+}
+
+/// Mutate every grid point with the CLI what-if knobs.
+fn apply_overrides(args: &Args, scenarios: &mut [Scenario]) -> Result<()> {
+    let qps = finite_knob(args, "qps")?;
+    if let Some(q) = qps {
+        if q < 0.0 {
+            anyhow::bail!("--qps must be non-negative, got {q}");
+        }
+    }
+    let hours = finite_knob(args, "hours")?;
+    if let Some(h) = hours {
+        if h <= 0.0 {
+            anyhow::bail!("--hours must be positive, got {h}");
+        }
+    }
+    let replicas = args.get("replicas").map(str::parse::<usize>).transpose()?;
+    if replicas == Some(0) {
+        anyhow::bail!("--replicas must be at least 1");
+    }
+    let autoscaler = args
+        .get("autoscaler")
+        .map(AutoscalePolicy::parse)
+        .transpose()
+        .map_err(anyhow::Error::msg)?;
+    for s in scenarios.iter_mut() {
+        let ScenarioSpec::Serving { serving, .. } = &mut s.spec else {
+            continue;
+        };
+        let sc: &mut ServingConfig = serving;
+        if let Some(q) = qps {
+            sc.qps = q;
+        }
+        if let Some(h) = hours {
+            sc.duration_hours = h;
+        }
+        if let Some(r) = replicas {
+            sc.replicas = r;
+            sc.max_replicas = sc.max_replicas.max(r);
+        }
+        if let Some(a) = autoscaler {
+            sc.autoscaler = a;
+        }
+    }
+    Ok(())
+}
+
+/// Human-readable digest: one row per fleet.
+fn summary_table(manifest: &RunManifest) -> Table {
+    let mut t = Table::new(
+        "Inference serving — latency, goodput and energy under the SLO",
+        &[
+            "Scenario",
+            "Req",
+            "TTFT p50/p99 ms",
+            "TPOT p50/p99 ms",
+            "SLO %",
+            "Goodput rps",
+            "Peak QPS",
+            "Replicas",
+            "J/token",
+        ],
+    );
+    for s in &manifest.scenarios {
+        let get = |k: &str| s.metric_value(k).unwrap_or(f64::NAN);
+        t.row(&[
+            s.id.clone(),
+            format!("{:.0}", get("requests")),
+            format!("{:.0}/{:.0}", get("ttft_p50_ms"), get("ttft_p99_ms")),
+            format!("{:.1}/{:.1}", get("tpot_p50_ms"), get("tpot_p99_ms")),
+            format!("{:.2}", get("slo_attainment_pct")),
+            format!("{:.2}", get("goodput_rps")),
+            format!("{:.2}", get("peak_sustainable_qps")),
+            format!("{:.0}→{:.0}", get("replicas_peak"), get("replicas_final")),
+            format!("{:.1}", get("joules_per_token")),
+        ]);
+    }
+    t
+}

@@ -1,11 +1,14 @@
-//! LLM training on SAKURAONE: the distributed step-time model over the
+//! LLM workloads on SAKURAONE: the distributed step-time model over the
 //! simulated fabric, the goodput-true multi-week campaign simulator that
-//! composes it with failures, checkpoints and restarts, and the *real*
-//! small-scale training loop through the PJRT runtime (Pallas attention
-//! kernel -> JAX train step -> Rust driver).
+//! composes it with failures, checkpoints and restarts, the
+//! inference-serving fleet simulator (continuous batching, KV-cache
+//! budgets, autoscaling — the "millions of users" workload), and the
+//! *real* small-scale training loop through the PJRT runtime (Pallas
+//! attention kernel -> JAX train step -> Rust driver).
 
 pub mod campaign;
 pub mod parallelism;
+pub mod serving;
 pub mod train;
 
 pub use campaign::{
@@ -13,4 +16,8 @@ pub use campaign::{
     TimeBreakdown, CAMPAIGN_SCHEMA_VERSION,
 };
 pub use parallelism::{step_time, LlmConfig, StepTime};
+pub use serving::{
+    run_serving, run_serving_on, AutoscalePolicy, ServingConfig,
+    ServingReport, SERVING_SCHEMA_VERSION,
+};
 pub use train::{train, Corpus, TrainReport};

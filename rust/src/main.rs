@@ -13,6 +13,9 @@
 //!   collectives — algorithm × size × topology × failure grid (§2.2)
 //!   campaign — goodput-true N-day training campaigns (failures ×
 //!              checkpoint/restart × Lustre I/O over the step-time model)
+//!   serving — multi-tenant inference fleets: continuous batching,
+//!             KV-cache budgets, autoscaling, TTFT/TPOT SLOs
+//!             (docs/serving.md)
 //!   plan    — user-authored sweep plans: serializable scenario specs and
 //!             built-in grids in one JSON document, runnable on any
 //!             registry platform or several at once (docs/plans.md)
@@ -63,6 +66,7 @@ fn run(args: &Args) -> Result<()> {
         "sched" => commands::sched::handle(args)?,
         "collectives" => commands::collectives::handle(args)?,
         "campaign" => commands::campaign::handle(args)?,
+        "serving" => commands::serving::handle(args)?,
         "plan" => commands::plan::handle(args)?,
         "cluster" => commands::cluster::handle(args)?,
         "trace" => commands::trace::handle(args)?,

@@ -39,7 +39,9 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::{spec as cluster_spec, ClusterConfig};
 use crate::runtime::scenario::{Scenario, ScenarioSpec};
-use crate::runtime::sweep::{campaign_grid, collectives_grid, standard_grid, SweepRun};
+use crate::runtime::sweep::{
+    campaign_grid, collectives_grid, serving_grid, standard_grid, SweepRun,
+};
 use crate::util::json::Json;
 
 /// Version of the plan document format; also pins the spec encoding the
@@ -50,7 +52,7 @@ use crate::util::json::Json;
 pub const PLAN_SCHEMA_VERSION: u64 = 2;
 
 /// The built-in grids a plan can reference by name.
-pub const GRID_NAMES: [&str; 3] = ["standard", "collectives", "campaign"];
+pub const GRID_NAMES: [&str; 4] = ["standard", "collectives", "campaign", "serving"];
 
 /// Materialize a built-in grid by name.
 pub fn grid_by_name(name: &str, quick: bool) -> Result<Vec<Scenario>, String> {
@@ -58,6 +60,7 @@ pub fn grid_by_name(name: &str, quick: bool) -> Result<Vec<Scenario>, String> {
         "standard" => Ok(standard_grid(quick)),
         "collectives" => Ok(collectives_grid(quick)),
         "campaign" => Ok(campaign_grid(quick)),
+        "serving" => Ok(serving_grid(quick)),
         other => Err(format!(
             "unknown grid {other:?} (known: {})",
             GRID_NAMES.join(", ")

@@ -38,6 +38,9 @@ use crate::benchmarks::report::paper;
 use crate::collectives::{AllReduceAlgo, CollectiveEngine, Rank};
 use crate::config::{ClusterConfig, TopologyKind};
 use crate::llm::campaign::{run_campaign, CampaignConfig, CampaignReport};
+use crate::llm::serving::{
+    run_serving, AutoscalePolicy, ServingConfig, ServingReport,
+};
 use crate::llm::{step_time, LlmConfig};
 use crate::network::{apply_failures, FailurePlan};
 use crate::runtime::run_manifest::ScenarioRecord;
@@ -90,6 +93,9 @@ pub enum ScenarioSpec {
     /// Synthesized workload trace replayed through the Slurm-like
     /// scheduler under a policy (docs/traces.md).
     Trace { synth: Box<SynthConfig>, policy: Policy },
+    /// Multi-tenant inference fleet: seeded arrivals, continuous
+    /// batching with a KV-cache budget, autoscaling (docs/serving.md).
+    Serving { serving: Box<ServingConfig>, topology: TopologyKind },
 }
 
 /// Everything the system knows about one scenario kind. The registry row
@@ -117,9 +123,9 @@ pub struct KindDescriptor {
 }
 
 /// Every scenario kind, in the order specs are documented.
-pub static REGISTRY: [&KindDescriptor; 11] = [
+pub static REGISTRY: [&KindDescriptor; 12] = [
     &HPL, &HPCG, &MXP, &IO500, &LLM, &RESILIENCE, &COLLECTIVE, &CAMPAIGN,
-    &SCHED, &CLUSTER, &TRACE,
+    &SCHED, &CLUSTER, &TRACE, &SERVING,
 ];
 
 /// Look a descriptor up by wire name.
@@ -166,6 +172,7 @@ impl ScenarioSpec {
             ScenarioSpec::Sched { .. } => &SCHED,
             ScenarioSpec::Cluster { .. } => &CLUSTER,
             ScenarioSpec::Trace { .. } => &TRACE,
+            ScenarioSpec::Serving { .. } => &SERVING,
         }
     }
 
@@ -357,6 +364,114 @@ fn campaign_from_json(
             None => base.spine_plan,
         },
     })
+}
+
+fn serving_to_json(c: &ServingConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("llm".into(), llm_to_json(&c.llm));
+    m.insert("duration_hours".into(), jnum(c.duration_hours));
+    m.insert("qps".into(), jnum(c.qps));
+    m.insert("arrival_base_qps".into(), jnum(c.arrival_base_qps));
+    m.insert("diurnal_amplitude".into(), jnum(c.diurnal_amplitude));
+    m.insert("peak_hour".into(), jnum(c.peak_hour));
+    m.insert("tenants".into(), jint(c.tenants as u64));
+    m.insert("prompt_tokens_median".into(), jnum(c.prompt_tokens_median));
+    m.insert("prompt_sigma".into(), jnum(c.prompt_sigma));
+    m.insert("output_tokens_median".into(), jnum(c.output_tokens_median));
+    m.insert("output_sigma".into(), jnum(c.output_sigma));
+    m.insert("max_batch_requests".into(), jint(c.max_batch_requests as u64));
+    m.insert("ttft_slo_s".into(), jnum(c.ttft_slo_s));
+    m.insert("tpot_slo_s".into(), jnum(c.tpot_slo_s));
+    m.insert("replicas".into(), jint(c.replicas as u64));
+    m.insert("max_replicas".into(), jint(c.max_replicas as u64));
+    m.insert("autoscaler".into(), Json::Str(c.autoscaler.name().into()));
+    m.insert("target_queue_depth".into(), jnum(c.target_queue_depth));
+    m.insert("autoscale_interval_s".into(), jnum(c.autoscale_interval_s));
+    m.insert("scale_up_delay_s".into(), jnum(c.scale_up_delay_s));
+    Json::Obj(m)
+}
+
+fn serving_from_json(
+    j: &Json,
+    base: ServingConfig,
+    at: &str,
+) -> Result<ServingConfig, String> {
+    let m = obj(j, at)?;
+    check_keys(
+        m,
+        &[
+            "llm", "duration_hours", "qps", "arrival_base_qps",
+            "diurnal_amplitude", "peak_hour", "tenants",
+            "prompt_tokens_median", "prompt_sigma", "output_tokens_median",
+            "output_sigma", "max_batch_requests", "ttft_slo_s", "tpot_slo_s",
+            "replicas", "max_replicas", "autoscaler", "target_queue_depth",
+            "autoscale_interval_s", "scale_up_delay_s",
+        ],
+        at,
+    )?;
+    let c = ServingConfig {
+        llm: match m.get("llm") {
+            Some(j) => llm_from_json(j, base.llm, &format!("{at}.llm"))?,
+            None => base.llm,
+        },
+        duration_hours: f64_or(m, "duration_hours", base.duration_hours, at)?,
+        qps: f64_or(m, "qps", base.qps, at)?,
+        arrival_base_qps: f64_or(m, "arrival_base_qps", base.arrival_base_qps, at)?,
+        diurnal_amplitude: f64_or(m, "diurnal_amplitude", base.diurnal_amplitude, at)?,
+        peak_hour: f64_or(m, "peak_hour", base.peak_hour, at)?,
+        tenants: usize_or(m, "tenants", base.tenants, at)?,
+        prompt_tokens_median: f64_or(
+            m,
+            "prompt_tokens_median",
+            base.prompt_tokens_median,
+            at,
+        )?,
+        prompt_sigma: f64_or(m, "prompt_sigma", base.prompt_sigma, at)?,
+        output_tokens_median: f64_or(
+            m,
+            "output_tokens_median",
+            base.output_tokens_median,
+            at,
+        )?,
+        output_sigma: f64_or(m, "output_sigma", base.output_sigma, at)?,
+        max_batch_requests: usize_or(
+            m,
+            "max_batch_requests",
+            base.max_batch_requests,
+            at,
+        )?,
+        ttft_slo_s: f64_or(m, "ttft_slo_s", base.ttft_slo_s, at)?,
+        tpot_slo_s: f64_or(m, "tpot_slo_s", base.tpot_slo_s, at)?,
+        replicas: usize_or(m, "replicas", base.replicas, at)?,
+        max_replicas: usize_or(m, "max_replicas", base.max_replicas, at)?,
+        autoscaler: crate::util::codec::name_or(
+            m,
+            "autoscaler",
+            base.autoscaler,
+            at,
+            "autoscale policy",
+            AutoscalePolicy::parse,
+        )?,
+        target_queue_depth: f64_or(
+            m,
+            "target_queue_depth",
+            base.target_queue_depth,
+            at,
+        )?,
+        autoscale_interval_s: f64_or(
+            m,
+            "autoscale_interval_s",
+            base.autoscale_interval_s,
+            at,
+        )?,
+        scale_up_delay_s: f64_or(m, "scale_up_delay_s", base.scale_up_delay_s, at)?,
+    };
+    // the runner asserts a positive horizon — reject here so a bad plan
+    // is a decode error, not a worker-thread panic at run time
+    if !(c.duration_hours > 0.0 && c.duration_hours.is_finite()) {
+        return Err(format!("{at}.duration_hours: must be positive"));
+    }
+    Ok(c)
 }
 
 // ---------------------------------------------------------------------------
@@ -1017,6 +1132,54 @@ static TRACE: KindDescriptor = KindDescriptor {
 };
 
 // ---------------------------------------------------------------------------
+// serving
+
+static SERVING: KindDescriptor = KindDescriptor {
+    kind: "serving",
+    summary: "multi-tenant inference fleet (continuous batching, autoscaling)",
+    fields: "serving{llm{...},duration_hours,qps,arrival_base_qps,\
+             diurnal_amplitude,peak_hour,tenants,prompt_tokens_median,\
+             prompt_sigma,output_tokens_median,output_sigma,\
+             max_batch_requests,ttft_slo_s,tpot_slo_s,replicas,\
+             max_replicas,autoscaler,target_queue_depth,\
+             autoscale_interval_s,scale_up_delay_s}, topology",
+    decode: |j| {
+        let m = obj(j, "serving")?;
+        check_keys(m, &["kind", "serving", "topology"], "serving")?;
+        let serving = match m.get("serving") {
+            Some(c) => {
+                serving_from_json(c, ServingConfig::chat_70b(), "serving.serving")?
+            }
+            None => ServingConfig::chat_70b(),
+        };
+        Ok(ScenarioSpec::Serving {
+            serving: Box::new(serving),
+            topology: topology_or(m, "topology", TopologyKind::RailOptimized, "serving")?,
+        })
+    },
+    encode: |s| {
+        let ScenarioSpec::Serving { serving, topology } = s else { unreachable!() };
+        let mut m = spec_obj("serving");
+        m.insert("serving".into(), serving_to_json(serving));
+        m.insert("topology".into(), Json::Str(topology.name().into()));
+        Json::Obj(m)
+    },
+    run: |s, cfg, seed| {
+        let ScenarioSpec::Serving { serving, topology } = &s.spec else {
+            unreachable!()
+        };
+        let mut c = cfg.clone();
+        c.network.topology = *topology;
+        let report = run_serving(&c, serving, seed);
+        serving_record(&s.id, &report, serving, *topology)
+    },
+    example: || ScenarioSpec::Serving {
+        serving: Box::new(ServingConfig::chat_70b()),
+        topology: TopologyKind::RailOptimized,
+    },
+};
+
+// ---------------------------------------------------------------------------
 // Record builders shared with the single-benchmark subcommands.
 
 pub(crate) fn hpl_record(id: &str, r: &HplResult, anchored: bool) -> ScenarioRecord {
@@ -1153,6 +1316,49 @@ pub(crate) fn trace_record(
         .metric("makespan_h", r.makespan_s / 3600.0)
 }
 
+pub(crate) fn serving_record(
+    id: &str,
+    r: &ServingReport,
+    sc: &ServingConfig,
+    topology: TopologyKind,
+) -> ScenarioRecord {
+    ScenarioRecord::new(id, "serving")
+        .param("serving_schema", r.schema)
+        .param("topology", topology.name())
+        .param("autoscaler", sc.autoscaler.name())
+        .param("gpus_per_replica", sc.llm.gpus())
+        .param("nodes_per_replica", r.nodes_per_replica)
+        .param("replicas", r.replicas_initial)
+        .param("qps", sc.qps)
+        .param("duration_h", sc.duration_hours)
+        .param("tenants", sc.tenants)
+        .metric("requests", r.requests as f64)
+        .metric("completed", r.completed as f64)
+        .metric("offered_qps", r.offered_qps)
+        .metric("goodput_rps", r.goodput_rps)
+        .metric("goodput_tokens_per_s", r.goodput_tokens_per_s)
+        .metric("peak_sustainable_qps", r.peak_sustainable_qps)
+        .metric("slo_attainment_pct", r.slo_attainment * 100.0)
+        .metric("worst_tenant_slo_pct", r.worst_tenant_slo * 100.0)
+        .metric("ttft_p50_ms", r.ttft_p50_s * 1e3)
+        .metric("ttft_p90_ms", r.ttft_p90_s * 1e3)
+        .metric("ttft_p99_ms", r.ttft_p99_s * 1e3)
+        .metric("tpot_p50_ms", r.tpot_p50_s * 1e3)
+        .metric("tpot_p90_ms", r.tpot_p90_s * 1e3)
+        .metric("tpot_p99_ms", r.tpot_p99_s * 1e3)
+        .metric("mean_batch_requests", r.mean_batch_requests)
+        .metric("kv_budget_tokens", r.kv_budget_tokens as f64)
+        .metric("generated_tokens", r.generated_tokens as f64)
+        .metric("replicas_peak", r.replicas_peak as f64)
+        .metric("replicas_final", r.replicas_final as f64)
+        .metric("scale_ups", r.scale_ups as f64)
+        .metric("scale_downs", r.scale_downs as f64)
+        .metric("queue_peak", r.queue_peak as f64)
+        .metric("gpu_util_pct", r.gpu_util * 100.0)
+        .metric("avg_power_w", r.avg_power_w)
+        .metric("joules_per_token", r.joules_per_token)
+}
+
 pub(crate) fn io500_record(id: &str, r: &Io500Result, degraded: bool) -> ScenarioRecord {
     let rec = ScenarioRecord::new(id, "io500")
         .param("client_nodes", r.params.client_nodes)
@@ -1251,6 +1457,34 @@ mod tests {
         assert_eq!(campaign.duration_days, 14.0);
         assert_eq!(campaign.llm, CampaignConfig::llama70b_30d().llm);
         assert_eq!(topology, TopologyKind::RailOptimized);
+
+        let j = Json::parse(
+            r#"{"kind": "serving", "serving": {"qps": 2.5, "autoscaler": "target-queue-depth"}}"#,
+        )
+        .unwrap();
+        let ScenarioSpec::Serving { serving, topology } =
+            ScenarioSpec::from_json(&j).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(serving.qps, 2.5);
+        assert_eq!(serving.autoscaler, AutoscalePolicy::TargetQueueDepth);
+        assert_eq!(serving.llm, ServingConfig::chat_70b().llm);
+        assert_eq!(topology, TopologyKind::RailOptimized);
+
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"kind": "serving", "serving": {"duration_hours": 0}}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.contains("duration_hours"), "{err}");
+
+        let err = ScenarioSpec::from_json(
+            &Json::parse(r#"{"kind": "serving", "serving": {"autoscaler": "warp"}}"#)
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown autoscale policy"), "{err}");
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::benchmarks::io500::Io500Params;
 use crate::collectives::AllReduceAlgo;
 use crate::config::{ClusterConfig, TopologyKind};
 use crate::llm::campaign::CampaignConfig;
+use crate::llm::serving::{AutoscalePolicy, ServingConfig};
 use crate::llm::LlmConfig;
 use crate::network::FailurePlan;
 use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
@@ -168,6 +169,55 @@ pub fn campaign_grid(quick: bool) -> Vec<Scenario> {
     g
 }
 
+fn serving_scenario(id: &str, serving: ServingConfig, topology: TopologyKind) -> Scenario {
+    Scenario::new(
+        &format!("serving/{id}"),
+        ScenarioSpec::Serving { serving: Box::new(serving), topology },
+    )
+}
+
+/// Scenarios in the quick serving grid (the CI determinism cmp pair);
+/// the quick grid is always this prefix of the full grid.
+pub const SERVING_QUICK_LEN: usize = 2;
+
+/// The `sakuraone serving` grid. The quick subset is the 2-scenario CI
+/// determinism pair (static flagship + target-queue-depth autoscaler);
+/// the full grid adds a bursty diurnal point, a fat-tree ablation and the
+/// 8B chat fleet.
+pub fn serving_grid(quick: bool) -> Vec<Scenario> {
+    let flagship = ServingConfig::chat_70b;
+    let mut g = vec![
+        serving_scenario("chat-70b", flagship(), TopologyKind::RailOptimized),
+        serving_scenario(
+            "chat-70b-autoscale",
+            ServingConfig {
+                replicas: 1,
+                autoscaler: AutoscalePolicy::TargetQueueDepth,
+                ..flagship()
+            },
+            TopologyKind::RailOptimized,
+        ),
+    ];
+    debug_assert_eq!(g.len(), SERVING_QUICK_LEN);
+    if quick {
+        return g;
+    }
+    g.extend([
+        serving_scenario(
+            "chat-70b-burst",
+            ServingConfig {
+                diurnal_amplitude: 1.0,
+                peak_hour: 0.25,
+                ..flagship()
+            },
+            TopologyKind::RailOptimized,
+        ),
+        serving_scenario("chat-70b-fat-tree", flagship(), TopologyKind::FatTree),
+        serving_scenario("chat-8b", ServingConfig::chat_8b(), TopologyKind::RailOptimized),
+    ]);
+    g
+}
+
 /// The standard scenario grid. `quick` is the CI smoke subset; the full
 /// grid adds problem-size sweeps and more failure/scale ablations.
 pub fn standard_grid(quick: bool) -> Vec<Scenario> {
@@ -245,6 +295,9 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
     // Goodput campaigns (the `campaign` subcommand runs the full grid;
     // the suite gates the quick pair).
     g.extend(campaign_grid(true));
+    // Inference-serving fleets (the `serving` subcommand runs the full
+    // grid; the suite gates the quick pair behind the baseline gate).
+    g.extend(serving_grid(true));
     if quick {
         return g;
     }
@@ -368,6 +421,8 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
     ]);
     // Campaign ablations beyond the gated quick pair.
     g.extend(campaign_grid(false).into_iter().skip(CAMPAIGN_QUICK_LEN));
+    // Serving ablations beyond the gated quick pair.
+    g.extend(serving_grid(false).into_iter().skip(SERVING_QUICK_LEN));
     g
 }
 
@@ -584,6 +639,62 @@ mod tests {
         for s in &quick {
             assert!(suite_ids.contains(&s.id), "{} not gated by the suite", s.id);
         }
+    }
+
+    #[test]
+    fn serving_grid_quick_is_the_ci_pair_and_a_prefix_of_full() {
+        let quick = serving_grid(true);
+        let full = serving_grid(false);
+        assert_eq!(
+            quick.len(),
+            SERVING_QUICK_LEN,
+            "CI cmp relies on the 2-scenario quick grid"
+        );
+        assert!(full.len() > quick.len());
+        for (q, f) in quick.iter().zip(&full) {
+            assert_eq!(q.id, f.id);
+        }
+        let mut ids: Vec<&str> = full.iter().map(|s| s.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), full.len(), "duplicate serving ids");
+        // the quick pair rides in the gated suite grid
+        let suite_ids: Vec<String> =
+            standard_grid(true).iter().map(|s| s.id.clone()).collect();
+        for s in &quick {
+            assert!(suite_ids.contains(&s.id), "{} not gated by the suite", s.id);
+        }
+    }
+
+    #[test]
+    fn serving_scenario_runs_and_records() {
+        let mut cfg = ClusterConfig::default();
+        cfg.apply_override("nodes", "16").unwrap();
+        let s = serving_scenario(
+            "test",
+            ServingConfig {
+                duration_hours: 0.05,
+                qps: 3.0,
+                arrival_base_qps: 16.0,
+                ..ServingConfig::chat_8b()
+            },
+            TopologyKind::RailOptimized,
+        );
+        assert_eq!(s.id, "serving/test");
+        let rec = s.run(&cfg, 9);
+        assert_eq!(rec.kind, "serving");
+        assert_eq!(rec.params.get("serving_schema").map(String::as_str), Some("1"));
+        let requests = rec.metric_value("requests").unwrap();
+        let completed = rec.metric_value("completed").unwrap();
+        assert!(requests > 0.0);
+        assert_eq!(requests, completed, "fleet must drain");
+        let offered = rec.metric_value("offered_qps").unwrap();
+        let goodput = rec.metric_value("goodput_rps").unwrap();
+        assert!(goodput <= offered * (1.0 + 1e-9), "{goodput} vs {offered}");
+        let slo = rec.metric_value("slo_attainment_pct").unwrap();
+        assert!((0.0..=100.0 + 1e-9).contains(&slo));
+        assert!(rec.metric_value("avg_power_w").unwrap() > 0.0);
+        assert!(rec.metric_value("joules_per_token").unwrap() > 0.0);
     }
 
     #[test]

@@ -119,4 +119,51 @@ mod tests {
         let free: Vec<usize> = (0..5).collect();
         assert!(place(&cfg(), &free, 0).is_none());
     }
+
+    #[test]
+    fn exact_fit_consumes_the_whole_free_list() {
+        // want == free.len(): every node is taken, no duplicates
+        let free: Vec<usize> = (10..22).collect();
+        let p = place(&cfg(), &free, 12).unwrap();
+        assert_eq!(p.nodes, free);
+        assert_eq!(p.pods_spanned, 1);
+
+        // exact fit across the pod boundary (node 50) spans both pods
+        let free: Vec<usize> = (48..52).collect();
+        let p = place(&cfg(), &free, 4).unwrap();
+        assert_eq!(p.nodes, free);
+        assert_eq!(p.pods_spanned, 2);
+    }
+
+    #[test]
+    fn fragmented_free_list_places_from_the_scraps() {
+        // non-contiguous scraps on both sides of the pod boundary; a job
+        // that fits in one pod's fragments must stay inside that pod
+        let free = vec![3, 7, 19, 31, 44, 51, 58, 72, 95];
+        let p = place(&cfg(), &free, 4).unwrap();
+        assert_eq!(p.nodes.len(), 4);
+        assert_eq!(p.pods_spanned, 1);
+        assert!(p.nodes.iter().all(|n| free.contains(n)));
+        let mut dedup = p.nodes.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 4, "duplicate nodes in {:?}", p.nodes);
+
+        // forcing a spill: 6 nodes only exist across both pods
+        let p = place(&cfg(), &free, 6).unwrap();
+        assert_eq!(p.nodes.len(), 6);
+        assert_eq!(p.pods_spanned, 2);
+        // spill output is sorted so downstream free-list math stays stable
+        assert!(p.nodes.windows(2).all(|w| w[0] < w[1]), "{:?}", p.nodes);
+    }
+
+    #[test]
+    fn want_beyond_capacity_is_none_even_when_fragmented() {
+        let free = vec![3, 51, 95];
+        assert!(place(&cfg(), &free, 4).is_none());
+        assert!(place(&cfg(), &[], 1).is_none());
+        // boundary: one more than the free count
+        let free: Vec<usize> = (0..99).collect();
+        assert!(place(&cfg(), &free, 100).is_none());
+    }
 }

@@ -169,14 +169,14 @@ fn plan_list_covers_the_registry_and_grids() {
     assert_eq!(m.command, "plan-list");
     for kind in [
         "hpl", "hpcg", "mxp", "io500", "llm", "resilience", "collective",
-        "campaign", "sched", "cluster",
+        "campaign", "serving", "sched", "cluster", "trace",
     ] {
         assert!(
             m.notes.iter().any(|n| n.starts_with(&format!("kind {kind}:"))),
             "{kind} missing from plan list"
         );
     }
-    for grid in ["standard", "collectives", "campaign"] {
+    for grid in ["standard", "collectives", "campaign", "serving"] {
         assert!(m.notes.iter().any(|n| n.starts_with(&format!("grid {grid}:"))));
     }
 }

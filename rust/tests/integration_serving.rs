@@ -1,0 +1,160 @@
+//! Integration tests for the inference-fleet simulator and the
+//! `sakuraone serving` subcommand: the golden-manifest determinism
+//! contract (byte-identical across worker counts, pinned to a committed
+//! snapshot through `run_sweep_named`), end-to-end grid coverage, the
+//! CLI knob/bad-usage surface and the `--json` manifest round trip.
+
+use sakuraone::commands;
+use sakuraone::config::ClusterConfig;
+use sakuraone::runtime::run_manifest::RunManifest;
+use sakuraone::runtime::sweep::{run_sweep, standard_grid, SweepConfig};
+use sakuraone::util::cli::Args;
+use sakuraone::util::json::Json;
+
+/// Committed snapshot of `serving --json --quick --seed 42`.
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/serving.json");
+
+fn args(v: &[&str]) -> Args {
+    Args::parse(v.iter().map(|s| s.to_string()), commands::FLAGS).unwrap()
+}
+
+fn quick_manifest(workers: &str) -> String {
+    commands::serving::handle(&args(&[
+        "serving", "--json", "--quick", "--seed", "42", "--workers", workers,
+    ]))
+    .unwrap()
+    .to_json()
+    .emit()
+}
+
+#[test]
+fn golden_manifest_reproduces_byte_for_byte_at_1_and_4_workers() {
+    let one = quick_manifest("1");
+    let four = quick_manifest("4");
+    assert_eq!(one, four, "worker count leaked into the serving manifest");
+
+    let committed = std::fs::read_to_string(GOLDEN).expect("golden snapshot");
+    let parsed = Json::parse(&committed).expect("golden snapshot parses");
+    if parsed.get("bootstrap") == Some(&Json::Bool(true)) {
+        // First run after a model change: bless the snapshot. Commit the
+        // blessed file so later runs compare byte-for-byte (docs/ci.md).
+        std::fs::write(GOLDEN, &one).expect("bless golden snapshot");
+        return;
+    }
+    assert_eq!(
+        committed, one,
+        "serving manifest drifted from tests/golden/serving.json; if the \
+         model change is intentional, restore the bootstrap marker and rerun \
+         to re-bless (docs/ci.md)"
+    );
+}
+
+#[test]
+fn serving_subcommand_covers_the_grid() {
+    let m = commands::serving::handle(&args(&[
+        "serving", "--json", "--workers", "2", "--seed", "42",
+    ]))
+    .unwrap();
+    assert_eq!(m.command, "serving");
+    // full grid: static flagship, autoscaler, burst, fat-tree, 8B fleet
+    assert_eq!(m.scenarios.len(), 5);
+
+    let get = |id: &'static str| m.scenario(id).unwrap_or_else(|| panic!("{id} missing"));
+
+    // every fleet is versioned, drains, respects the offered-load bound
+    // and surfaces the power model
+    for s in &m.scenarios {
+        assert_eq!(s.params.get("serving_schema").map(String::as_str), Some("1"));
+        let requests = s.metric_value("requests").unwrap();
+        assert!(requests > 0.0, "{}", s.id);
+        assert_eq!(s.metric_value("completed").unwrap(), requests, "{}", s.id);
+        let offered = s.metric_value("offered_qps").unwrap();
+        let goodput = s.metric_value("goodput_rps").unwrap();
+        assert!(goodput <= offered * (1.0 + 1e-9), "{}", s.id);
+        assert!(s.metric_value("peak_sustainable_qps").unwrap() > 0.0, "{}", s.id);
+        assert!(s.metric_value("avg_power_w").unwrap() > 0.0, "{}", s.id);
+        assert!(s.metric_value("joules_per_token").unwrap() > 0.0, "{}", s.id);
+    }
+
+    // the overloaded single-replica autoscaler actually scales up
+    let auto = get("serving/chat-70b-autoscale");
+    assert_eq!(
+        auto.params.get("autoscaler").map(String::as_str),
+        Some("target-queue-depth")
+    );
+    assert!(auto.metric_value("scale_ups").unwrap() >= 1.0);
+    assert!(auto.metric_value("replicas_peak").unwrap() > 1.0);
+
+    // the static flagship holds its two replicas
+    let flagship = get("serving/chat-70b");
+    assert_eq!(flagship.params.get("autoscaler").map(String::as_str), Some("static"));
+    assert_eq!(flagship.metric_value("replicas_peak").unwrap(), 2.0);
+    assert_eq!(flagship.metric_value("scale_ups").unwrap(), 0.0);
+
+    // the 8B fleet runs a one-node replica shape
+    let small = get("serving/chat-8b");
+    assert_eq!(small.params.get("gpus_per_replica").map(String::as_str), Some("8"));
+    assert_eq!(small.params.get("nodes_per_replica").map(String::as_str), Some("1"));
+}
+
+#[test]
+fn serving_knob_overrides_apply_to_the_grid() {
+    let m = commands::serving::handle(&args(&[
+        "serving", "--json", "--quick", "--seed", "42", "--workers", "2",
+        "--qps", "1", "--hours", "0.1", "--replicas", "2", "--autoscaler", "static",
+    ]))
+    .unwrap();
+    assert_eq!(m.scenarios.len(), 2);
+    for s in &m.scenarios {
+        assert_eq!(s.params.get("qps").map(String::as_str), Some("1"));
+        assert_eq!(s.params.get("duration_h").map(String::as_str), Some("0.1"));
+        assert_eq!(s.params.get("replicas").map(String::as_str), Some("2"));
+        assert_eq!(s.params.get("autoscaler").map(String::as_str), Some("static"));
+        assert_eq!(s.metric_value("scale_ups").unwrap(), 0.0);
+    }
+}
+
+#[test]
+fn serving_bad_usage_is_rejected_with_a_clear_error() {
+    let cases: &[(&[&str], &str)] = &[
+        (&["serving", "--qps", "abc"], "expects a number"),
+        (&["serving", "--qps", "-1"], "non-negative"),
+        (&["serving", "--hours", "0"], "positive"),
+        (&["serving", "--hours", "inf"], "finite"),
+        (&["serving", "--replicas", "0"], "at least 1"),
+        (&["serving", "--autoscaler", "warp"], "unknown autoscale policy"),
+    ];
+    for (argv, needle) in cases {
+        let err = commands::serving::handle(&args(argv)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(needle), "{argv:?}: {msg}");
+    }
+}
+
+#[test]
+fn json_manifest_round_trips_through_the_codec() {
+    let m = commands::serving::handle(&args(&[
+        "serving", "--json", "--quick", "--seed", "7", "--serial",
+    ]))
+    .unwrap();
+    let emitted = m.to_json().emit();
+    let back = RunManifest::from_json(&Json::parse(&emitted).unwrap()).unwrap();
+    assert_eq!(back.to_json().emit(), emitted, "manifest codec is not canonical");
+    assert_eq!(back.command, "serving");
+    assert_eq!(back.seed, 7);
+    assert!(back.scenario("serving/chat-70b").is_some());
+}
+
+#[test]
+fn suite_quick_grid_gates_the_serving_scenarios() {
+    // the suite path (what CI's baseline gate runs) carries the serving
+    // pair and stays byte-deterministic across worker counts
+    let cfg = ClusterConfig::default();
+    let grid = standard_grid(true);
+    let ids: Vec<&str> = grid.iter().map(|s| s.id.as_str()).collect();
+    assert!(ids.contains(&"serving/chat-70b"));
+    assert!(ids.contains(&"serving/chat-70b-autoscale"));
+    let a = run_sweep(&cfg, &grid, &SweepConfig { workers: 1, seed: 7 });
+    let b = run_sweep(&cfg, &grid, &SweepConfig { workers: 3, seed: 7 });
+    assert_eq!(a.to_json().emit(), b.to_json().emit());
+}
