@@ -19,6 +19,7 @@ pub mod plan;
 pub mod power;
 pub mod report;
 pub mod resilience;
+pub mod runs;
 pub mod sched;
 pub mod serving;
 pub mod suite;
@@ -93,6 +94,22 @@ pub(crate) fn quiet(args: &Args) -> bool {
     args.flag("json")
 }
 
+/// The shared `--store DIR` write hook: deposit a returned manifest into
+/// a manifest store (created if missing) under its deterministic store
+/// name, so `suite`/`bench`/`plan` runs become queryable with
+/// `sakuraone runs` (docs/runs.md). `main.rs` calls this for every
+/// subcommand except `runs` itself, which reads `--store`.
+pub fn store_deposit(
+    args: &Args,
+    manifest: &crate::runtime::RunManifest,
+) -> Result<Option<std::path::PathBuf>> {
+    let Some(dir) = args.get("store") else { return Ok(None) };
+    let store = crate::runtime::Store::open_or_create(dir)
+        .map_err(anyhow::Error::msg)?;
+    let stored = store.write(manifest).map_err(anyhow::Error::msg)?;
+    Ok(Some(stored.path))
+}
+
 pub fn usage() -> String {
     format!(
         r#"sakuraone {} — SAKURAONE platform reproduction (see DESIGN.md)
@@ -131,10 +148,17 @@ USAGE: sakuraone <subcommand> [options]
   trace     synth [--seed S] [--preset P] [--days D] [--trace-out FILE]
             | replay FILE|- [--policy fifo|backfill|fairshare]
             | stats FILE|-                 (workload traces, docs/traces.md)
+  runs      list | describe RUN | query [--where EXPR] [--select PATHS]
+            | diff A B [--run RUN] [--tolerance PCT]
+            | render RUN [--format dot|mermaid]
+            (manifest store, default `runs/`; docs/runs.md)
 
 Every subcommand also accepts:
   --json        emit the run manifest as JSON on stdout (quiet tables)
   --out FILE    write the run manifest to FILE
+  --store DIR   deposit the run manifest into a manifest store directory
+                (queryable with `sakuraone runs`; `runs` itself reads
+                --store instead)
   --platform P  start from a registry platform instead of sakuraone
                 (see `sakuraone cluster list`), overrides apply on top;
                 not with `cluster` (positional) or a plan whose

@@ -38,10 +38,81 @@ pub fn handle(args: &Args) -> Result<RunManifest> {
     let cfg = ClusterConfig::default();
     let entries = top500::interconnect_census();
     let mut m = RunManifest::new("report", 0, cfg.to_json());
+    let grand: u32 = entries.iter().map(|e| e.total()).sum();
     m.push(
         ScenarioRecord::new("report/census", "report")
-            .param("sections", format!("{census}/{}/{}", args.flag("rankings"), args.flag("software")))
-            .metric("interconnect_families", entries.len() as f64),
+            .param("census", census)
+            .param("rankings", args.flag("rankings"))
+            .param("software", args.flag("software"))
+            .metric("interconnect_families", entries.len() as f64)
+            .metric("systems_total", grand as f64),
     );
+    // One record per census row so `runs query` can filter the Table 3
+    // dataset like any other run (e.g. --where 'params.family=Slingshot-11'
+    // --select metrics.systems_total).
+    for e in &entries {
+        let mut rec = ScenarioRecord::new(
+            &format!("report/census/{}", family_slug(e.family)),
+            "report",
+        )
+        .param("family", e.family)
+        .metric("systems_total", e.total() as f64);
+        for (i, count) in e.by_year.iter().enumerate() {
+            rec = rec.metric(&format!("systems_{}", 2020 + i), *count as f64);
+        }
+        m.push(rec);
+    }
     Ok(m)
+}
+
+/// Stable scenario-id slug for a census family name (`Slingshot-11` ->
+/// `slingshot-11`, `Tofu interconnect D` -> `tofu-interconnect-d`).
+fn family_slug(family: &str) -> String {
+    let mut s = String::new();
+    for c in family.chars() {
+        if c.is_ascii_alphanumeric() {
+            s.push(c.to_ascii_lowercase());
+        } else if !s.ends_with('-') && !s.is_empty() {
+            s.push('-');
+        }
+    }
+    s.trim_end_matches('-').to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_rows_are_per_entry_records() {
+        let args = Args::parse(
+            ["report".to_string(), "--json".to_string()],
+            crate::commands::FLAGS,
+        )
+        .unwrap();
+        let m = handle(&args).unwrap();
+        let entries = top500::interconnect_census();
+        assert_eq!(m.scenarios.len(), 1 + entries.len());
+        let slingshot = m.scenario("report/census/slingshot-11").unwrap();
+        assert_eq!(slingshot.params["family"], "Slingshot-11");
+        assert_eq!(slingshot.metric_value("systems_2024"), Some(4.0));
+        assert_eq!(slingshot.metric_value("systems_total"), Some(7.0));
+        let summary = m.scenario("report/census").unwrap();
+        assert_eq!(summary.params["census"], "true");
+        assert_eq!(
+            summary.metric_value("interconnect_families"),
+            Some(entries.len() as f64)
+        );
+    }
+
+    #[test]
+    fn family_slugs_are_stable() {
+        assert_eq!(family_slug("Slingshot-11"), "slingshot-11");
+        assert_eq!(family_slug("Tofu interconnect D"), "tofu-interconnect-d");
+        assert_eq!(family_slug("Gigabit Ethernet"), "gigabit-ethernet");
+        assert_eq!(
+            family_slug("Quad-rail NVIDIA HDR100 Infiniband"),
+            "quad-rail-nvidia-hdr100-infiniband"
+        );
+    }
 }

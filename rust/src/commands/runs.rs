@@ -1,0 +1,412 @@
+//! `sakuraone runs` — the manifest store: list, describe, dotted-path
+//! query, cross-run / cross-platform-label diff with a CI tolerance
+//! gate, and dot/mermaid rendering (docs/runs.md).
+//!
+//! Every action reads a store directory (`--store DIR`, default
+//! `runs/`); `describe`, `diff` and `render` also accept plain file
+//! paths. Output inherits the store layer's deterministic ordering
+//! contract: repeated invocations over the same files are
+//! byte-identical, and manifests produced at different worker counts
+//! compare equal because the sweep engine already guarantees their
+//! bytes.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ClusterConfig;
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::runtime::store::{self, DiffReport, RenderFormat, Store, StoredRun};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::pathfilter::{self, Filter};
+use crate::util::table::{kv_table, Table};
+
+/// The store directory every `runs` action (and the `--store` deposit
+/// hook) defaults to.
+pub const DEFAULT_STORE: &str = "runs";
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| {
+            anyhow!(
+                "runs: expected an action: \
+                 list | describe RUN | query | diff A B | render RUN"
+            )
+        })?;
+    match action {
+        "list" => list(args),
+        "describe" => describe(args),
+        "query" => query(args),
+        "diff" => diff(args),
+        "render" => render(args),
+        other => bail!(
+            "runs: unknown action {other:?} \
+             (known: list, describe, query, diff, render)"
+        ),
+    }
+}
+
+fn store_dir(args: &Args) -> String {
+    args.get_or("store", DEFAULT_STORE)
+}
+
+/// Resolve a RUN operand: a file path if one exists, else a store name.
+fn resolve(args: &Args, target: &str) -> Result<StoredRun> {
+    store::resolve(&store_dir(args), target).map_err(anyhow::Error::msg)
+}
+
+fn target_arg(args: &Args, action: &str) -> Result<String> {
+    args.positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow!("runs {action}: expected a RUN (store name or file path)"))
+}
+
+// ------------------------------------------------------------- list --
+
+fn list(args: &Args) -> Result<RunManifest> {
+    let store = Store::open(&store_dir(args)).map_err(anyhow::Error::msg)?;
+    let runs = store.load().map_err(anyhow::Error::msg)?;
+    let mut m = RunManifest::new("runs-list", 0, ClusterConfig::default().to_json());
+    m.note(format!("{} run(s) in store", runs.len()));
+    let mut t = Table::new(
+        &format!("Manifest store — {}", store.dir().display()),
+        &["Run", "Command", "Seed", "Platform", "Scenarios", "Worst Δ%"],
+    );
+    for run in &runs {
+        let rm = &run.manifest;
+        let platform = rm
+            .cluster
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("-")
+            .to_string();
+        let worst = rm.worst_delta();
+        let mut rec = ScenarioRecord::new(&format!("run/{}", run.name), "runs")
+            .param("command", &rm.command)
+            .param("platform", &platform)
+            .param("seed", rm.seed)
+            .param("schema", rm.schema)
+            .metric("scenarios", rm.scenarios.len() as f64)
+            .metric("metrics", rm.total_metrics() as f64);
+        if let Some((_, _, d)) = &worst {
+            rec = rec.metric("worst_abs_delta_pct", *d);
+        }
+        m.push(rec);
+        t.row(&[
+            run.name.clone(),
+            rm.command.clone(),
+            rm.seed.to_string(),
+            platform,
+            rm.scenarios.len().to_string(),
+            worst.map_or("-".to_string(), |(_, _, d)| format!("{d:.2}")),
+        ]);
+    }
+    if !super::quiet(args) {
+        println!("{}", t.render());
+    }
+    Ok(m)
+}
+
+// --------------------------------------------------------- describe --
+
+fn describe(args: &Args) -> Result<RunManifest> {
+    let target = target_arg(args, "describe")?;
+    let run = resolve(args, &target)?;
+    let rm = &run.manifest;
+    let labels = rm.platform_labels();
+    let mut m = RunManifest::new("runs-describe", rm.seed, rm.cluster.clone());
+    let mut rec = ScenarioRecord::new(&format!("run/{}", run.name), "runs")
+        .param("command", &rm.command)
+        .param("seed", rm.seed)
+        .param("schema", rm.schema)
+        .metric("scenarios", rm.scenarios.len() as f64)
+        .metric("metrics", rm.total_metrics() as f64)
+        .metric("notes", rm.notes.len() as f64);
+    if !labels.is_empty() {
+        rec = rec.param("labels", labels.join(","));
+    }
+    if let Some((id, metric, d)) = rm.worst_delta() {
+        rec = rec
+            .param("worst_delta_at", format!("{id}/{metric}"))
+            .metric("worst_abs_delta_pct", d);
+    }
+    m.push(rec);
+    for note in &rm.notes {
+        m.note(format!("{}: {note}", run.name));
+    }
+
+    if !super::quiet(args) {
+        let platform = rm
+            .cluster
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("-")
+            .to_string();
+        println!(
+            "{}",
+            kv_table(
+                &format!("Run {} — ledger", run.name),
+                &[
+                    ("Command", rm.command.clone()),
+                    ("Seed", rm.seed.to_string()),
+                    ("Schema", rm.schema.to_string()),
+                    ("Platform", platform),
+                    ("Labels", if labels.is_empty() { "-".into() } else { labels.join(", ") }),
+                    ("Scenarios", rm.scenarios.len().to_string()),
+                    ("Metrics", rm.total_metrics().to_string()),
+                    ("Notes", rm.notes.len().to_string()),
+                ],
+            )
+        );
+        let mut t = Table::new(
+            "Scenarios",
+            &["Scenario", "Kind", "Metric", "Paper", "Measured", "Delta"],
+        );
+        for s in &rm.scenarios {
+            for mr in &s.metrics {
+                let (paper, delta) = match (mr.paper, mr.delta_pct()) {
+                    (Some(p), Some(d)) => (format!("{p:.2}"), format!("{d:+.1}%")),
+                    _ => ("-".to_string(), "-".to_string()),
+                };
+                t.row(&[
+                    s.id.clone(),
+                    s.kind.clone(),
+                    mr.name.clone(),
+                    paper,
+                    format!("{:.2}", mr.measured),
+                    delta,
+                ]);
+            }
+        }
+        println!("{}", t.render());
+    }
+    Ok(m)
+}
+
+// ------------------------------------------------------------ query --
+
+fn query(args: &Args) -> Result<RunManifest> {
+    let store = Store::open(&store_dir(args)).map_err(anyhow::Error::msg)?;
+    let runs = store.load().map_err(anyhow::Error::msg)?;
+    let filters: Vec<Filter> = match args.get("where") {
+        None => Vec::new(),
+        Some(s) => pathfilter::parse_all(s).map_err(anyhow::Error::msg)?,
+    };
+    let selects: Vec<String> = match args.get("select") {
+        None => Vec::new(),
+        Some(s) => s.split(',').map(|p| p.trim().to_string()).collect(),
+    };
+    let (hits, scanned) =
+        store::query(&runs, &filters, &selects).map_err(anyhow::Error::msg)?;
+
+    let mut m = RunManifest::new("runs-query", 0, ClusterConfig::default().to_json());
+    let mut summary = ScenarioRecord::new("query/summary", "runs")
+        .metric("matched", hits.len() as f64)
+        .metric("scanned", scanned as f64)
+        .metric("runs", runs.len() as f64);
+    if let Some(w) = args.get("where") {
+        summary = summary.param("where", w);
+    }
+    if let Some(s) = args.get("select") {
+        summary = summary.param("select", s);
+    }
+    m.push(summary);
+    // The canonical result set: one record per hit (numeric selections
+    // become metrics, everything else params), plus the row document in
+    // the notes for machine consumers.
+    for hit in &hits {
+        let mut rec = ScenarioRecord::new(&format!("{}/{}", hit.run, hit.id), &hit.kind)
+            .param("run", &hit.run);
+        for (path, v) in &hit.values {
+            match v {
+                Json::Num(n) => rec = rec.metric(path, *n),
+                Json::Str(s) => rec = rec.param(path, s),
+                other => rec = rec.param(path, other.emit()),
+            }
+        }
+        m.push(rec);
+        m.note(hit.to_json().emit());
+    }
+
+    if !super::quiet(args) {
+        let mut headers = vec!["Run".to_string(), "Scenario".to_string(), "Kind".to_string()];
+        headers.extend(selects.iter().cloned());
+        let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut t = Table::new(
+            &format!("Query — {} of {} record(s) matched", hits.len(), scanned),
+            &headers_ref,
+        );
+        for hit in &hits {
+            let mut row = vec![hit.run.clone(), hit.id.clone(), hit.kind.clone()];
+            row.extend(hit.values.iter().map(|(_, v)| match v {
+                Json::Str(s) => s.clone(),
+                Json::Null => "-".to_string(),
+                other => other.emit(),
+            }));
+            t.row(&row);
+        }
+        println!("{}", t.render());
+    }
+    Ok(m)
+}
+
+// ------------------------------------------------------------- diff --
+
+fn diff(args: &Args) -> Result<RunManifest> {
+    let a = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("runs diff: expected two operands A B"))?;
+    let b = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow!("runs diff: expected two operands A B"))?;
+
+    // Two modes: with `--run RUN` the operands are platform labels
+    // inside that cross-platform manifest; without, they are runs
+    // (store names or file paths).
+    let (rep, cluster, mode) = match args.get("run") {
+        Some(target) => {
+            let run = resolve(args, target)?;
+            let rep = store::diff_labels(&run.manifest, a, b)
+                .map_err(anyhow::Error::msg)?;
+            (rep, run.manifest.cluster.clone(), "labels")
+        }
+        None => {
+            let ra = resolve(args, a)?;
+            let rb = resolve(args, b)?;
+            let rep = store::diff_manifests(&ra.name, &ra.manifest, &rb.name, &rb.manifest);
+            (rep, ra.manifest.cluster.clone(), "runs")
+        }
+    };
+
+    let mut m = RunManifest::new("runs-diff", 0, cluster);
+    m.push(
+        ScenarioRecord::new("diff/summary", "runs")
+            .param("a", &rep.a)
+            .param("b", &rep.b)
+            .param("mode", mode)
+            .metric("scenarios_paired", rep.scenarios.len() as f64)
+            .metric("metrics_compared", rep.compared as f64)
+            .metric("missing_in_b", rep.missing_in_b.len() as f64)
+            .metric("extra_in_b", rep.extra_in_b.len() as f64)
+            .metric("max_abs_drift_pct", rep.max_abs_drift_pct()),
+    );
+    for key in &rep.missing_in_b {
+        m.note(format!("missing in {}: {key}", rep.b));
+    }
+    for key in &rep.extra_in_b {
+        m.note(format!("extra in {}: {key}", rep.b));
+    }
+    for sd in &rep.scenarios {
+        // One record per paired scenario: measured = side B, paper =
+        // side A, so the standard delta machinery reads as drift; a
+        // `.paper_delta_pp` row carries the paper-delta drift for
+        // dually-anchored metrics.
+        let mut rec = ScenarioRecord::new(&format!("diff/{}", sd.key), &sd.kind);
+        for d in &sd.drifts {
+            rec = rec.metric_vs_paper(&d.metric, d.b, d.a);
+            if let Some(pp) = d.paper_delta_pp {
+                rec = rec.metric(&format!("{}.paper_delta_pp", d.metric), pp);
+            }
+        }
+        for missing in &sd.missing_metrics {
+            m.note(format!("{}: metric {missing} missing in {}", sd.key, rep.b));
+        }
+        m.push(rec);
+    }
+
+    if !super::quiet(args) {
+        println!("{}", diff_table(&rep).render());
+    }
+
+    if let Some(tol) = args.get("tolerance") {
+        let tol: f64 = tol
+            .parse()
+            .map_err(|_| anyhow!("--tolerance expects a number, got {tol:?}"))?;
+        let failures = rep.gate(tol);
+        if !failures.is_empty() {
+            for f in &failures {
+                eprintln!("runs diff regression: {f}");
+            }
+            // Emit the manifest wherever the caller asked before
+            // erroring (main.rs only emits on success), mirroring the
+            // suite gate, so CI can upload the failing comparison.
+            if args.flag("json") {
+                println!("{}", m.to_json().emit());
+            }
+            if let Some(out) = args.get("out") {
+                std::fs::write(out, m.to_json().emit())?;
+            }
+            bail!(
+                "{} drift(s) between {} and {} beyond {tol}%",
+                failures.len(),
+                rep.a,
+                rep.b
+            );
+        }
+        eprintln!(
+            "runs diff gate: {} metric pair(s) within {tol}% ({} vs {})",
+            rep.compared, rep.a, rep.b
+        );
+    }
+    Ok(m)
+}
+
+fn diff_table(rep: &DiffReport) -> Table {
+    let mut t = Table::new(
+        &format!("Diff — {} vs {}", rep.a, rep.b),
+        &["Scenario", "Metric", "A", "B", "Drift", "ΔPaper pp"],
+    );
+    for sd in &rep.scenarios {
+        for d in &sd.drifts {
+            t.row(&[
+                sd.key.clone(),
+                d.metric.clone(),
+                format!("{:.4}", d.a),
+                format!("{:.4}", d.b),
+                format!("{:+.2}%", d.drift_pct),
+                d.paper_delta_pp
+                    .map_or("-".to_string(), |pp| format!("{pp:+.2}")),
+            ]);
+        }
+    }
+    t
+}
+
+// ----------------------------------------------------------- render --
+
+fn render(args: &Args) -> Result<RunManifest> {
+    let target = target_arg(args, "render")?;
+    let run = resolve(args, &target)?;
+    let format_name = args.get_or("format", "dot");
+    let format = RenderFormat::parse(&format_name).map_err(anyhow::Error::msg)?;
+    let text = store::render_run(&run.manifest, format).map_err(anyhow::Error::msg)?;
+
+    let rm = &run.manifest;
+    let ledgers = rm
+        .scenarios
+        .iter()
+        .filter(|r| r.kind == "campaign" && r.metric_value("compute_s").is_some())
+        .count();
+    let mut m = RunManifest::new("runs-render", rm.seed, rm.cluster.clone());
+    m.push(
+        ScenarioRecord::new(&format!("render/{}", run.name), "runs")
+            .param("format", &format_name)
+            .param("run", &run.name)
+            .metric("lines", text.lines().count() as f64)
+            .metric("campaign_ledgers", ledgers as f64),
+    );
+    // The full render rides in the manifest notes so `--json` output is
+    // self-contained (and byte-compared in CI).
+    m.note(&text);
+
+    if !super::quiet(args) {
+        // Plain text on stdout, pipeable straight into graphviz/mermaid.
+        print!("{text}");
+    }
+    Ok(m)
+}

@@ -70,6 +70,7 @@ pub fn handle(args: &Args) -> Result<RunManifest> {
             if let Some(out) = args.get("out") {
                 std::fs::write(out, manifest.to_json().emit())?;
             }
+            super::store_deposit(args, &manifest)?;
             return Err(e);
         }
     }

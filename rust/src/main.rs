@@ -25,6 +25,8 @@
 //!             simulator's scheduler-policy sweep (docs/traces.md)
 //!   bench   — micro-benchmark suites + the committed `BENCH_*.json`
 //!             perf-trajectory manifest and its counter gate (docs/bench.md)
+//!   runs    — the manifest store: list/describe/query/diff/render over
+//!             manifests deposited with `--store DIR` (docs/runs.md)
 //!   validate— numerics checks through the AOT artifacts
 //!   report  — Table 3 census, rankings, config inventory
 //!   suite   — everything above through the parallel sweep engine
@@ -78,6 +80,7 @@ fn run(args: &Args) -> Result<()> {
         "config" => commands::config::handle(args)?,
         "suite" => commands::suite::handle(args)?,
         "bench" => commands::bench::handle(args)?,
+        "runs" => commands::runs::handle(args)?,
         other => {
             println!("{}", commands::usage());
             bail!("unknown subcommand {other:?}");
@@ -88,6 +91,13 @@ fn run(args: &Args) -> Result<()> {
     }
     if let Some(path) = args.get("out") {
         std::fs::write(path, manifest.to_json().emit())?;
+    }
+    // `--store DIR` deposits the manifest into a manifest store for
+    // `sakuraone runs` (docs/runs.md); the `runs` family reads --store.
+    if sub != "runs" {
+        if let Some(path) = commands::store_deposit(args, &manifest)? {
+            eprintln!("stored manifest: {}", path.display());
+        }
     }
     Ok(())
 }

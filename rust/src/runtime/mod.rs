@@ -1,8 +1,9 @@
 //! Runtime layer: the PJRT bridge (manifest-driven loading and execution
 //! of AOT-compiled HLO artifacts), the versioned run-manifest format every
 //! CLI command emits, the scenario registry + serializable spec API, the
-//! user-authored sweep-plan loader, and the deterministic parallel sweep
-//! engine.
+//! user-authored sweep-plan loader, the deterministic parallel sweep
+//! engine, and the manifest store behind `sakuraone runs`
+//! (list/describe/query/diff/render — docs/runs.md).
 
 pub mod artifacts;
 pub mod benchsuite;
@@ -10,6 +11,7 @@ pub mod pjrt;
 pub mod plan;
 pub mod run_manifest;
 pub mod scenario;
+pub mod store;
 pub mod sweep;
 pub mod xla_stub;
 
@@ -31,6 +33,7 @@ pub use artifacts::{ArtifactMeta, DType, Manifest, TensorSpec};
 pub use pjrt::Runtime;
 pub use plan::{SweepPlan, PLAN_SCHEMA_VERSION};
 pub use run_manifest::{RunManifest, ScenarioRecord};
+pub use store::{Store, StoredRun};
 pub use scenario::{
     descriptor, KindDescriptor, Scenario, ScenarioSpec, REGISTRY,
     SPEC_SCHEMA_VERSION,

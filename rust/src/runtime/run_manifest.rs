@@ -10,8 +10,9 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
+use crate::util::codec;
 use crate::util::json::Json;
 
 /// Bump when the manifest shape changes; `from_json` rejects mismatches so
@@ -224,86 +225,183 @@ impl RunManifest {
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
-        let schema = j
-            .get("schema")
-            .and_then(|s| s.as_f64())
-            .ok_or_else(|| anyhow!("manifest: missing schema"))? as u64;
-        if schema != SCHEMA_VERSION {
-            bail!("manifest schema {schema} != supported {SCHEMA_VERSION}");
-        }
-        if let Some(v) = j.get("spec_schema") {
-            let supported = crate::runtime::scenario::SPEC_SCHEMA_VERSION;
-            match v.as_f64() {
-                Some(n) if n.fract() == 0.0 && n as u64 == supported => {}
-                _ => bail!(
-                    "manifest spec_schema {} != supported {supported}",
-                    v.emit()
-                ),
+        Self::from_json_at(j, "manifest").map_err(|e| anyhow!(e))
+    }
+
+    /// Decode through the shared canonical-codec helpers (`util::codec`),
+    /// with every error locating its field under `at` (the manifest store
+    /// passes the file path, so a bad document in `runs/` names itself).
+    /// Like the scenario/cluster/trace codecs this is strict: unknown
+    /// keys, non-string params and malformed metrics are rejected instead
+    /// of silently dropped.
+    pub fn from_json_at(j: &Json, at: &str) -> Result<Self, String> {
+        let m = codec::obj(j, at)?;
+        codec::check_keys(
+            m,
+            &[
+                "cluster", "cluster_schema", "command", "notes", "schema",
+                "scenarios", "seed", "spec_schema",
+            ],
+            at,
+        )?;
+        codec::check_schema(m, SCHEMA_VERSION, at)?;
+        check_embedded_schema(
+            m,
+            "spec_schema",
+            crate::runtime::scenario::SPEC_SCHEMA_VERSION,
+            at,
+        )?;
+        check_embedded_schema(
+            m,
+            "cluster_schema",
+            crate::config::CLUSTER_SCHEMA_VERSION,
+            at,
+        )?;
+        let command = match m.get("command") {
+            Some(Json::Str(s)) => s.clone(),
+            Some(other) => {
+                return Err(format!(
+                    "{at}.command: expected a string, got {other:?}"
+                ))
             }
-        }
-        if let Some(v) = j.get("cluster_schema") {
-            let supported = crate::config::CLUSTER_SCHEMA_VERSION;
-            match v.as_f64() {
-                Some(n) if n.fract() == 0.0 && n as u64 == supported => {}
-                _ => bail!(
-                    "manifest cluster_schema {} != supported {supported}",
-                    v.emit()
-                ),
+            None => return Err(format!("{at}: missing \"command\"")),
+        };
+        let seed = codec::int_or(m, "seed", 0, at)?;
+        let cluster = m.get("cluster").cloned().unwrap_or(Json::Null);
+        let notes = codec::str_list_or(m, "notes", &[], at)?;
+        let arr = match m.get("scenarios") {
+            Some(Json::Arr(a)) => a,
+            Some(other) => {
+                return Err(format!(
+                    "{at}.scenarios: expected an array, got {other:?}"
+                ))
             }
-        }
-        let command = j
-            .get("command")
-            .and_then(|c| c.as_str())
-            .ok_or_else(|| anyhow!("manifest: missing command"))?
-            .to_string();
-        let seed = j.get("seed").and_then(|s| s.as_f64()).unwrap_or(0.0) as u64;
-        let cluster = j.get("cluster").cloned().unwrap_or(Json::Null);
-        let notes = j
-            .get("notes")
-            .and_then(|n| n.as_arr())
-            .map(|arr| {
-                arr.iter()
-                    .filter_map(|n| n.as_str().map(str::to_string))
-                    .collect()
-            })
-            .unwrap_or_default();
+            None => return Err(format!("{at}: missing \"scenarios\"")),
+        };
         let mut scenarios = Vec::new();
-        for s in j
-            .get("scenarios")
-            .and_then(|s| s.as_arr())
-            .ok_or_else(|| anyhow!("manifest: missing scenarios"))?
-        {
-            let id = s
-                .get("id")
-                .and_then(|i| i.as_str())
-                .ok_or_else(|| anyhow!("scenario: missing id"))?;
-            let kind = s.get("kind").and_then(|k| k.as_str()).unwrap_or("");
-            let mut rec = ScenarioRecord::new(id, kind);
-            rec.spec = s.get("spec").cloned();
-            rec.cluster = s.get("cluster").cloned();
-            if let Some(params) = s.get("params").and_then(|p| p.as_obj()) {
-                for (k, v) in params {
-                    if let Some(v) = v.as_str() {
-                        rec.params.insert(k.clone(), v.to_string());
-                    }
+        for (i, s) in arr.iter().enumerate() {
+            scenarios.push(scenario_from_json(s, &format!("{at}.scenarios[{i}]"))?);
+        }
+        Ok(Self {
+            schema: SCHEMA_VERSION,
+            command,
+            seed,
+            cluster,
+            scenarios,
+            notes,
+        })
+    }
+
+    /// The cluster a record actually ran on: its own `cluster` for
+    /// cross-platform sweep records, else the manifest root's.
+    pub fn effective_cluster<'a>(&'a self, rec: &'a ScenarioRecord) -> &'a Json {
+        rec.cluster.as_ref().unwrap_or(&self.cluster)
+    }
+
+    /// Platform labels of a cross-platform sweep, recovered from the
+    /// `"cluster <label>: ..."` notes the sweep engine writes (in note
+    /// order). Empty for single-cluster runs.
+    pub fn platform_labels(&self) -> Vec<String> {
+        self.notes
+            .iter()
+            .filter_map(|n| {
+                let rest = n.strip_prefix("cluster ")?;
+                Some(rest.split_once(": ")?.0.to_string())
+            })
+            .collect()
+    }
+
+    /// Total metric rows across all scenarios.
+    pub fn total_metrics(&self) -> usize {
+        self.scenarios.iter().map(|s| s.metrics.len()).sum()
+    }
+}
+
+/// `spec_schema` / `cluster_schema` are optional on the wire (sparse
+/// hand-written manifests may omit them) but must match when present.
+fn check_embedded_schema(
+    m: &BTreeMap<String, Json>,
+    key: &str,
+    supported: u64,
+    at: &str,
+) -> Result<(), String> {
+    match codec::num(m, key, at)? {
+        None => Ok(()),
+        Some(n) if n == supported as f64 => Ok(()),
+        Some(n) => Err(format!(
+            "{at}.{key}: version {n} is not supported (expected {supported})"
+        )),
+    }
+}
+
+fn scenario_from_json(j: &Json, at: &str) -> Result<ScenarioRecord, String> {
+    let m = codec::obj(j, at)?;
+    codec::check_keys(
+        m,
+        &["cluster", "id", "kind", "metrics", "params", "spec"],
+        at,
+    )?;
+    let id = match m.get("id") {
+        Some(Json::Str(s)) => s.clone(),
+        Some(other) => {
+            return Err(format!("{at}.id: expected a string, got {other:?}"))
+        }
+        None => return Err(format!("{at}: missing \"id\"")),
+    };
+    let kind = codec::str_or(m, "kind", "", at)?;
+    let mut rec = ScenarioRecord::new(&id, &kind);
+    rec.spec = m.get("spec").cloned();
+    rec.cluster = m.get("cluster").cloned();
+    if let Some(params) = m.get("params") {
+        let po = codec::obj(params, &format!("{at}.params"))?;
+        for (k, v) in po {
+            match v {
+                Json::Str(s) => {
+                    rec.params.insert(k.clone(), s.clone());
+                }
+                other => {
+                    return Err(format!(
+                        "{at}.params.{k}: expected a string, got {other:?}"
+                    ))
                 }
             }
-            for m in s.get("metrics").and_then(|m| m.as_arr()).unwrap_or(&[]) {
-                let name = m
-                    .get("name")
-                    .and_then(|n| n.as_str())
-                    .ok_or_else(|| anyhow!("{id}: metric missing name"))?;
-                let measured = m
-                    .get("measured")
-                    .and_then(|v| v.as_f64())
-                    .ok_or_else(|| anyhow!("{id}/{name}: missing measured"))?;
-                let paper = m.get("paper").and_then(|p| p.as_f64());
-                rec.metrics.push(MetricRow { name: name.to_string(), measured, paper });
-            }
-            scenarios.push(rec);
         }
-        Ok(Self { schema, command, seed, cluster, scenarios, notes })
     }
+    if let Some(metrics) = m.get("metrics") {
+        let arr = metrics.as_arr().ok_or_else(|| {
+            format!("{at}.metrics: expected an array")
+        })?;
+        for (k, mj) in arr.iter().enumerate() {
+            rec.metrics.push(metric_from_json(mj, &format!("{at}.metrics[{k}]"))?);
+        }
+    }
+    Ok(rec)
+}
+
+fn metric_from_json(j: &Json, at: &str) -> Result<MetricRow, String> {
+    let m = codec::obj(j, at)?;
+    codec::check_keys(m, &["measured", "name", "paper"], at)?;
+    let name = match m.get("name") {
+        Some(Json::Str(s)) => s.clone(),
+        Some(other) => {
+            return Err(format!("{at}.name: expected a string, got {other:?}"))
+        }
+        None => return Err(format!("{at}: missing \"name\"")),
+    };
+    let measured = codec::num(m, "measured", at)?
+        .ok_or_else(|| format!("{at}: missing \"measured\""))?;
+    // `to_json` emits an explicit `"paper": null` for unanchored metrics,
+    // so Null and absent are both None here.
+    let paper = match m.get("paper") {
+        None | Some(Json::Null) => None,
+        Some(Json::Num(n)) if n.is_finite() => Some(*n),
+        Some(other) => {
+            return Err(format!(
+                "{at}.paper: expected a finite number or null, got {other:?}"
+            ))
+        }
+    };
+    Ok(MetricRow { name, measured, paper })
 }
 
 /// What the baseline gate concluded.
@@ -536,6 +634,86 @@ mod tests {
         let rep = compare_to_baseline(&cur, &base.to_json(), 50.0).unwrap();
         assert_eq!(rep.failures.len(), 1);
         assert!(rep.failures[0].contains("lost its paper anchor"));
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_with_located_paths() {
+        let m = sample();
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("wallclock".into(), Json::Num(1.0));
+        }
+        let err = RunManifest::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("manifest: unknown field \"wallclock\""), "{err}");
+
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(sc)) = o.get_mut("scenarios") {
+                if let Json::Obj(s0) = &mut sc[0] {
+                    s0.insert("extra".into(), Json::Null);
+                }
+            }
+        }
+        let err = RunManifest::from_json(&j).unwrap_err().to_string();
+        assert!(
+            err.contains("manifest.scenarios[0]: unknown field \"extra\""),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn non_string_params_and_bad_metrics_are_located_errors() {
+        let text = sample().to_json().emit();
+        let bad = text.replace("\"jobs\":\"200\"", "\"jobs\":200");
+        let err =
+            RunManifest::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert!(
+            err.to_string()
+                .contains("manifest.scenarios[1].params.jobs: expected a string"),
+            "{err}"
+        );
+
+        let bad = text.replace("\"measured\":391", "\"measured\":\"391\"");
+        let err =
+            RunManifest::from_json(&Json::parse(&bad).unwrap()).unwrap_err();
+        let err = err.to_string();
+        assert!(err.contains("scenarios[0].metrics[1]"), "{err}");
+        assert!(err.contains("measured"), "{err}");
+    }
+
+    #[test]
+    fn missing_required_fields_name_themselves() {
+        for (field, needle) in [
+            ("command", "missing \"command\""),
+            ("scenarios", "missing \"scenarios\""),
+            ("schema", "missing \"schema\""),
+        ] {
+            let mut j = sample().to_json();
+            if let Json::Obj(o) = &mut j {
+                o.remove(field);
+            }
+            let err = RunManifest::from_json(&j).unwrap_err().to_string();
+            assert!(err.contains(needle), "{field}: {err}");
+        }
+    }
+
+    #[test]
+    fn effective_cluster_falls_back_to_root() {
+        let mut m = sample();
+        let per_record = Json::parse(r#"{"nodes":50}"#).unwrap();
+        m.scenarios[0].cluster = Some(per_record.clone());
+        assert_eq!(m.effective_cluster(&m.scenarios[0]), &per_record);
+        assert_eq!(m.effective_cluster(&m.scenarios[1]), &m.cluster);
+    }
+
+    #[test]
+    fn platform_labels_recovered_from_sweep_notes() {
+        let mut m = sample();
+        assert!(m.platform_labels().is_empty());
+        m.note("cluster sakuraone: SAKURAONE (5 scenario(s))");
+        m.note("cluster abci3-like: ABCI3-LIKE (5 scenario(s))");
+        assert_eq!(m.platform_labels(), vec!["sakuraone", "abci3-like"]);
+        assert_eq!(m.total_metrics(), 3);
     }
 
     #[test]

@@ -1,0 +1,883 @@
+//! The manifest store — provenance over runs (docs/runs.md).
+//!
+//! A store is a plain directory of run-manifest JSON files (default
+//! `runs/`). Every `*.json` file must decode through the strict
+//! `RunManifest::from_json_at` codec, so the store can never silently
+//! accumulate unreadable provenance; discovery is filename-ordered and
+//! filenames are derived deterministically from embedded provenance
+//! (`<command>-seed<seed>.json`), which makes every `sakuraone runs`
+//! subcommand byte-identical across repeated invocations and across
+//! manifests produced at different worker counts (the engine's own
+//! determinism contract).
+//!
+//! The layer owns discovery, the query row view (one canonical JSON
+//! document per scenario record, filterable with `util::pathfilter`),
+//! cross-run and cross-platform-label diffing (value drift plus
+//! paper-delta drift), and dot/mermaid rendering of a manifest's
+//! embedded cluster topology and campaign wall-time ledgers.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::ClusterConfig;
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::util::json::Json;
+use crate::util::pathfilter::{self, Filter};
+
+/// One manifest discovered in (or resolved against) a store.
+#[derive(Debug, Clone)]
+pub struct StoredRun {
+    /// File stem — the name `runs describe`/`diff`/`render` accept.
+    pub name: String,
+    pub path: PathBuf,
+    pub manifest: RunManifest,
+}
+
+/// A manifest-store directory.
+#[derive(Debug, Clone)]
+pub struct Store {
+    dir: PathBuf,
+}
+
+impl Store {
+    /// Open an existing store directory.
+    pub fn open(dir: &str) -> Result<Self, String> {
+        let p = PathBuf::from(dir);
+        if !p.is_dir() {
+            return Err(format!(
+                "store {dir}: not a directory (create it, or deposit a \
+                 first manifest with `--store {dir}`)"
+            ));
+        }
+        Ok(Self { dir: p })
+    }
+
+    /// Open, creating the directory if needed (the `--store` deposit
+    /// path).
+    pub fn open_or_create(dir: &str) -> Result<Self, String> {
+        let p = PathBuf::from(dir);
+        if !p.is_dir() {
+            std::fs::create_dir_all(&p)
+                .map_err(|e| format!("store {dir}: create: {e}"))?;
+        }
+        Ok(Self { dir: p })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Every manifest in the store, sorted by file name — the
+    /// deterministic ordering contract all `runs` subcommands inherit.
+    /// Non-`.json` entries are ignored; a `.json` file that fails the
+    /// strict manifest codec is an error naming the file.
+    pub fn load(&self) -> Result<Vec<StoredRun>, String> {
+        let rd = std::fs::read_dir(&self.dir)
+            .map_err(|e| format!("store {}: {e}", self.dir.display()))?;
+        let mut names: Vec<String> = Vec::new();
+        for entry in rd {
+            let entry =
+                entry.map_err(|e| format!("store {}: {e}", self.dir.display()))?;
+            let fname = entry.file_name().to_string_lossy().to_string();
+            if let Some(stem) = fname.strip_suffix(".json") {
+                names.push(stem.to_string());
+            }
+        }
+        names.sort();
+        names.iter().map(|n| self.get(n)).collect()
+    }
+
+    /// Load one run by store name (file stem).
+    pub fn get(&self, name: &str) -> Result<StoredRun, String> {
+        let path = self.dir.join(format!("{name}.json"));
+        if !path.is_file() {
+            let known = self
+                .load_names()
+                .map(|v| {
+                    if v.is_empty() {
+                        "store is empty".to_string()
+                    } else {
+                        format!("known: {}", v.join(", "))
+                    }
+                })
+                .unwrap_or_else(|e| e);
+            return Err(format!(
+                "run {name:?} not in store {} ({known})",
+                self.dir.display()
+            ));
+        }
+        load_manifest(&path)
+    }
+
+    fn load_names(&self) -> Result<Vec<String>, String> {
+        let rd = std::fs::read_dir(&self.dir)
+            .map_err(|e| format!("store {}: {e}", self.dir.display()))?;
+        let mut names: Vec<String> = rd
+            .flatten()
+            .filter_map(|e| {
+                e.file_name()
+                    .to_string_lossy()
+                    .strip_suffix(".json")
+                    .map(str::to_string)
+            })
+            .collect();
+        names.sort();
+        Ok(names)
+    }
+
+    /// Deposit a manifest under its deterministic store name. Same
+    /// command + seed overwrites (re-running a deterministic sweep
+    /// yields the same bytes anyway), different seeds coexist.
+    pub fn write(&self, m: &RunManifest) -> Result<StoredRun, String> {
+        let name = run_name(m);
+        let path = self.dir.join(format!("{name}.json"));
+        std::fs::write(&path, m.to_json().emit())
+            .map_err(|e| format!("store write {}: {e}", path.display()))?;
+        Ok(StoredRun { name, path, manifest: m.clone() })
+    }
+}
+
+/// The deterministic store filename stem for a manifest:
+/// sanitized command + `-seed<seed>` (e.g. `plan/platform-compare` at
+/// seed 21 becomes `plan-platform-compare-seed21`).
+pub fn run_name(m: &RunManifest) -> String {
+    let mut s = String::new();
+    for c in m.command.chars() {
+        if c.is_ascii_alphanumeric() {
+            s.push(c.to_ascii_lowercase());
+        } else if !s.ends_with('-') && !s.is_empty() {
+            s.push('-');
+        }
+    }
+    let cmd = s.trim_end_matches('-');
+    let cmd = if cmd.is_empty() { "run" } else { cmd };
+    format!("{cmd}-seed{}", m.seed)
+}
+
+/// Read + strictly decode one manifest file; errors name the file.
+pub fn load_manifest(path: &Path) -> Result<StoredRun, String> {
+    let shown = path.display().to_string();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{shown}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("{shown}: {e}"))?;
+    let manifest = RunManifest::from_json_at(&j, &shown)?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| shown.clone());
+    Ok(StoredRun { name, path: path.to_path_buf(), manifest })
+}
+
+/// Resolve a `runs` operand: an existing file path loads directly,
+/// anything else is a store name.
+pub fn resolve(store_dir: &str, target: &str) -> Result<StoredRun, String> {
+    let p = Path::new(target);
+    if p.is_file() {
+        return load_manifest(p);
+    }
+    Store::open(store_dir)?.get(target)
+}
+
+// ---------------------------------------------------------------------
+// Query: one canonical JSON document per scenario record
+// ---------------------------------------------------------------------
+
+/// The canonical row document `runs query` filters and selects over:
+///
+/// ```json
+/// {"command": ..., "run": ..., "seed": ..., "id": ..., "kind": ...,
+///  "params": {...}, "metrics": {NAME: {"measured": ..., "paper": ...,
+///  "delta_pct": ...}}, "cluster": <canonical cluster spec>}
+/// ```
+///
+/// The cluster is the record's *effective* cluster (its own for
+/// cross-platform sweep records, else the root's), re-encoded through
+/// the cluster codec so sparse hand-written specs query like full
+/// ones. Pass `cluster: None` to skip that decode when no path needs
+/// it.
+pub fn record_doc(
+    run: &StoredRun,
+    rec: &ScenarioRecord,
+    cluster: Option<&Json>,
+) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("command".into(), Json::Str(run.manifest.command.clone()));
+    o.insert("run".into(), Json::Str(run.name.clone()));
+    o.insert("seed".into(), Json::Num(run.manifest.seed as f64));
+    o.insert("id".into(), Json::Str(rec.id.clone()));
+    o.insert("kind".into(), Json::Str(rec.kind.clone()));
+    o.insert(
+        "params".into(),
+        Json::Obj(
+            rec.params
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect(),
+        ),
+    );
+    let mut metrics = BTreeMap::new();
+    for m in &rec.metrics {
+        let mut mo = BTreeMap::new();
+        mo.insert("measured".into(), Json::Num(m.measured));
+        mo.insert("paper".into(), m.paper.map_or(Json::Null, Json::Num));
+        mo.insert(
+            "delta_pct".into(),
+            m.delta_pct().filter(|d| d.is_finite()).map_or(Json::Null, Json::Num),
+        );
+        metrics.insert(m.name.clone(), Json::Obj(mo));
+    }
+    o.insert("metrics".into(), Json::Obj(metrics));
+    o.insert("cluster".into(), cluster.cloned().unwrap_or(Json::Null));
+    Json::Obj(o)
+}
+
+/// `metrics.NAME` is shorthand for `metrics.NAME.measured`; every other
+/// path is taken literally.
+pub fn canonical_path(path: &str) -> String {
+    let segs: Vec<&str> = path.split('.').collect();
+    if segs.len() == 2 && segs[0] == "metrics" {
+        return format!("{path}.measured");
+    }
+    path.to_string()
+}
+
+/// One matched query row: the selected values in `--select` order.
+#[derive(Debug, Clone)]
+pub struct QueryHit {
+    pub run: String,
+    pub id: String,
+    pub kind: String,
+    /// `(select path as given, resolved value)`; missing paths resolve
+    /// to `Json::Null` so row arity is stable across records.
+    pub values: Vec<(String, Json)>,
+}
+
+impl QueryHit {
+    /// The canonical result-row JSON (`runs query`'s manifest embeds
+    /// one of these per hit, in its notes).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("id".into(), Json::Str(self.id.clone()));
+        o.insert("kind".into(), Json::Str(self.kind.clone()));
+        o.insert("run".into(), Json::Str(self.run.clone()));
+        let mut sel = BTreeMap::new();
+        for (k, v) in &self.values {
+            sel.insert(k.clone(), v.clone());
+        }
+        o.insert("select".into(), Json::Obj(sel));
+        Json::Obj(o)
+    }
+}
+
+/// Filter every record of every run (runs in store order, records in
+/// manifest order) and project the selected paths. Returns the hits
+/// plus the scanned-record count. The effective cluster is decoded
+/// only when some filter or select path starts with `cluster`.
+pub fn query(
+    runs: &[StoredRun],
+    filters: &[Filter],
+    selects: &[String],
+) -> Result<(Vec<QueryHit>, usize), String> {
+    let needs_cluster = filters
+        .iter()
+        .map(|f| f.path.as_str())
+        .chain(selects.iter().map(|s| s.as_str()))
+        .any(|p| p == "cluster" || p.starts_with("cluster."));
+    let mut hits = Vec::new();
+    let mut scanned = 0usize;
+    for run in runs {
+        let root_cluster = if needs_cluster {
+            Some(canonical_cluster(&run.manifest.cluster, &run.name)?)
+        } else {
+            None
+        };
+        for rec in &run.manifest.scenarios {
+            scanned += 1;
+            let own_cluster = match (&rec.cluster, needs_cluster) {
+                (Some(c), true) => {
+                    Some(canonical_cluster(c, &format!("{}/{}", run.name, rec.id))?)
+                }
+                _ => None,
+            };
+            let cluster = own_cluster.as_ref().or(root_cluster.as_ref());
+            let doc = record_doc(run, rec, cluster);
+            let mut keep = true;
+            for f in filters {
+                let cf = Filter {
+                    path: canonical_path(&f.path),
+                    op: f.op,
+                    value: f.value.clone(),
+                };
+                if !pathfilter::matches(&doc, &cf)? {
+                    keep = false;
+                    break;
+                }
+            }
+            if !keep {
+                continue;
+            }
+            let values = selects
+                .iter()
+                .map(|s| {
+                    let v = pathfilter::lookup(&doc, &canonical_path(s))
+                        .cloned()
+                        .unwrap_or(Json::Null);
+                    (s.clone(), v)
+                })
+                .collect();
+            hits.push(QueryHit {
+                run: run.name.clone(),
+                id: rec.id.clone(),
+                kind: rec.kind.clone(),
+                values,
+            });
+        }
+    }
+    Ok((hits, scanned))
+}
+
+/// Decode + re-encode a cluster spec through the canonical codec so
+/// sparse specs gain their platform-filled fields.
+fn canonical_cluster(j: &Json, at: &str) -> Result<Json, String> {
+    let cfg = ClusterConfig::from_json(j).map_err(|e| format!("{at}: {e}"))?;
+    Ok(cfg.to_json())
+}
+
+// ---------------------------------------------------------------------
+// Diff: value drift + paper-delta drift between two record sets
+// ---------------------------------------------------------------------
+
+/// Drift of one metric between side A and side B.
+#[derive(Debug, Clone)]
+pub struct MetricDrift {
+    pub metric: String,
+    pub a: f64,
+    pub b: f64,
+    /// Relative value drift, percent of A (denominator floored at
+    /// 1e-12 so zero baselines do not explode).
+    pub drift_pct: f64,
+    /// Paper-delta drift in percentage points (B's paper delta minus
+    /// A's), when both sides anchor this metric to a paper value.
+    pub paper_delta_pp: Option<f64>,
+}
+
+/// All metric drifts for one paired scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioDrift {
+    /// Pairing key: the scenario id, or the label-stripped suffix when
+    /// diffing two platform labels inside one manifest.
+    pub key: String,
+    pub kind: String,
+    pub drifts: Vec<MetricDrift>,
+    /// Metric names present on side A but missing from side B.
+    pub missing_metrics: Vec<String>,
+}
+
+/// The full cross-run (or cross-label) comparison.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub a: String,
+    pub b: String,
+    pub scenarios: Vec<ScenarioDrift>,
+    /// Scenario keys present on side A but missing from side B.
+    pub missing_in_b: Vec<String>,
+    /// Scenario keys present on side B only (reported, never gated).
+    pub extra_in_b: Vec<String>,
+    /// Metric pairs compared.
+    pub compared: usize,
+}
+
+impl DiffReport {
+    pub fn max_abs_drift_pct(&self) -> f64 {
+        self.scenarios
+            .iter()
+            .flat_map(|s| s.drifts.iter())
+            .map(|d| d.drift_pct.abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Gate failures at `tol_pct` percent value drift. Like the
+    /// baseline gate, coverage is one-sided: anything on side A must
+    /// exist on side B; extras on B are fine.
+    pub fn gate(&self, tol_pct: f64) -> Vec<String> {
+        let mut failures = Vec::new();
+        for key in &self.missing_in_b {
+            failures.push(format!("scenario {key} missing from {}", self.b));
+        }
+        for s in &self.scenarios {
+            for m in &s.missing_metrics {
+                failures.push(format!(
+                    "{}/{m}: metric missing from {}",
+                    s.key, self.b
+                ));
+            }
+            for d in &s.drifts {
+                if d.drift_pct.abs() > tol_pct {
+                    failures.push(format!(
+                        "{}/{}: {} -> {} drifted {:+.4}% (> {tol_pct}%)",
+                        s.key, d.metric, d.a, d.b, d.drift_pct
+                    ));
+                }
+            }
+        }
+        failures
+    }
+}
+
+/// Pair two keyed record lists (A's order wins) and compute drifts.
+fn diff_pairs(
+    a_label: &str,
+    b_label: &str,
+    a: &[(String, &ScenarioRecord)],
+    b: &[(String, &ScenarioRecord)],
+) -> DiffReport {
+    let b_by_key: BTreeMap<&str, &ScenarioRecord> =
+        b.iter().map(|(k, r)| (k.as_str(), *r)).collect();
+    let a_keys: std::collections::BTreeSet<&str> =
+        a.iter().map(|(k, _)| k.as_str()).collect();
+    let mut rep = DiffReport {
+        a: a_label.to_string(),
+        b: b_label.to_string(),
+        scenarios: Vec::new(),
+        missing_in_b: Vec::new(),
+        extra_in_b: b
+            .iter()
+            .filter(|(k, _)| !a_keys.contains(k.as_str()))
+            .map(|(k, _)| k.clone())
+            .collect(),
+        compared: 0,
+    };
+    for (key, ar) in a {
+        let Some(br) = b_by_key.get(key.as_str()) else {
+            rep.missing_in_b.push(key.clone());
+            continue;
+        };
+        let mut sd = ScenarioDrift {
+            key: key.clone(),
+            kind: ar.kind.clone(),
+            drifts: Vec::new(),
+            missing_metrics: Vec::new(),
+        };
+        for am in &ar.metrics {
+            let Some(bm) = br.metrics.iter().find(|m| m.name == am.name) else {
+                sd.missing_metrics.push(am.name.clone());
+                continue;
+            };
+            rep.compared += 1;
+            let denom = am.measured.abs().max(1e-12);
+            sd.drifts.push(MetricDrift {
+                metric: am.name.clone(),
+                a: am.measured,
+                b: bm.measured,
+                drift_pct: 100.0 * (bm.measured - am.measured) / denom,
+                paper_delta_pp: match (am.delta_pct(), bm.delta_pct()) {
+                    (Some(da), Some(db)) => Some(db - da),
+                    _ => None,
+                },
+            });
+        }
+        rep.scenarios.push(sd);
+    }
+    rep
+}
+
+/// Diff two whole manifests, pairing scenarios by id.
+pub fn diff_manifests(
+    a_name: &str,
+    am: &RunManifest,
+    b_name: &str,
+    bm: &RunManifest,
+) -> DiffReport {
+    let a: Vec<(String, &ScenarioRecord)> =
+        am.scenarios.iter().map(|r| (r.id.clone(), r)).collect();
+    let b: Vec<(String, &ScenarioRecord)> =
+        bm.scenarios.iter().map(|r| (r.id.clone(), r)).collect();
+    diff_pairs(a_name, b_name, &a, &b)
+}
+
+/// Diff two platform labels inside one cross-platform manifest,
+/// pairing records by their label-stripped id suffix (the sweep engine
+/// prefixes every record id with `<label>/`).
+pub fn diff_labels(
+    m: &RunManifest,
+    label_a: &str,
+    label_b: &str,
+) -> Result<DiffReport, String> {
+    let side = |label: &str| -> Vec<(String, &ScenarioRecord)> {
+        m.scenarios
+            .iter()
+            .filter_map(|r| {
+                r.id.strip_prefix(&format!("{label}/"))
+                    .map(|suffix| (suffix.to_string(), r))
+            })
+            .collect()
+    };
+    let a = side(label_a);
+    let b = side(label_b);
+    let labels = m.platform_labels();
+    let known = if labels.is_empty() {
+        "run has no platform labels (not a cross-platform sweep)".to_string()
+    } else {
+        format!("labels: {}", labels.join(", "))
+    };
+    if a.is_empty() {
+        return Err(format!("label {label_a:?} matches no scenarios ({known})"));
+    }
+    if b.is_empty() {
+        return Err(format!("label {label_b:?} matches no scenarios ({known})"));
+    }
+    Ok(diff_pairs(label_a, label_b, &a, &b))
+}
+
+// ---------------------------------------------------------------------
+// Render: topology + campaign wall-time ledgers as dot / mermaid
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RenderFormat {
+    Dot,
+    Mermaid,
+}
+
+impl RenderFormat {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "dot" => Ok(Self::Dot),
+            "mermaid" => Ok(Self::Mermaid),
+            other => Err(format!(
+                "unknown render format {other:?} (known: dot, mermaid)"
+            )),
+        }
+    }
+}
+
+/// The campaign wall-time ledger buckets (`llm::campaign::TimeBreakdown`
+/// metric names), display label first.
+const LEDGER_BUCKETS: [(&str, &str); 5] = [
+    ("compute", "compute_s"),
+    ("checkpoint", "checkpoint_s"),
+    ("lost_work", "lost_work_s"),
+    ("restart", "restart_s"),
+    ("queue", "queue_s"),
+];
+
+fn fmt_gbps(g: f64) -> String {
+    if g.fract() == 0.0 {
+        format!("{g:.0}G")
+    } else {
+        format!("{g}G")
+    }
+}
+
+/// Render a manifest: the embedded root cluster as a tier-level fabric
+/// graph (spines, per-pod leaves, one aggregated node group per pod —
+/// per-NIC fan-out is summarized in the node-group label, so the graph
+/// stays readable at any node count), followed by one wall-time ledger
+/// per `campaign` record. Output is pure function of the manifest.
+pub fn render_run(m: &RunManifest, format: RenderFormat) -> Result<String, String> {
+    let cfg =
+        ClusterConfig::from_json(&m.cluster).map_err(|e| format!("cluster: {e}"))?;
+    let mut out = match format {
+        RenderFormat::Dot => render_topology_dot(&cfg),
+        RenderFormat::Mermaid => render_topology_mermaid(&cfg),
+    };
+    for (i, rec) in m
+        .scenarios
+        .iter()
+        .filter(|r| r.kind == "campaign")
+        .enumerate()
+    {
+        let buckets: Vec<(&str, f64)> = LEDGER_BUCKETS
+            .iter()
+            .filter_map(|(label, metric)| {
+                rec.metric_value(metric).map(|v| (*label, v))
+            })
+            .collect();
+        if buckets.is_empty() {
+            continue;
+        }
+        out.push('\n');
+        match format {
+            RenderFormat::Dot => {
+                out.push_str(&format!(
+                    "graph ledger{i} {{\n  label=\"{} wall-time ledger (s)\";\n",
+                    rec.id
+                ));
+                let cells: Vec<String> = buckets
+                    .iter()
+                    .map(|(l, v)| format!("{l} {v:.1}"))
+                    .collect();
+                out.push_str(&format!(
+                    "  l{i} [shape=record, label=\"{}\"];\n}}\n",
+                    cells.join(" | ")
+                ));
+            }
+            RenderFormat::Mermaid => {
+                out.push_str(&format!(
+                    "pie title {} wall-time ledger (s)\n",
+                    rec.id
+                ));
+                for (l, v) in &buckets {
+                    out.push_str(&format!("  \"{l}\" : {v:.1}\n"));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn render_topology_dot(cfg: &ClusterConfig) -> String {
+    let n = &cfg.network;
+    let mut out = String::from("graph fabric {\n");
+    out.push_str(&format!(
+        "  label=\"{}: {} — {} nodes, {} pod(s), {} rail(s)\";\n",
+        cfg.name,
+        n.topology.name(),
+        cfg.nodes,
+        n.pods,
+        n.rails
+    ));
+    out.push_str("  node [shape=box];\n");
+    for s in 0..n.spines {
+        out.push_str(&format!("  spine{s};\n"));
+    }
+    for p in 0..n.pods {
+        out.push_str(&format!(
+            "  subgraph cluster_pod{p} {{\n    label=\"pod {p}\";\n"
+        ));
+        for l in 0..n.leaf_per_pod {
+            out.push_str(&format!("    pod{p}_leaf{l};\n"));
+        }
+        out.push_str(&format!(
+            "    pod{p}_nodes [shape=folder, label=\"{} nodes x {} NIC(s) @ {}\"];\n",
+            n.nodes_per_pod,
+            n.rails,
+            fmt_gbps(n.node_leaf_gbps)
+        ));
+        out.push_str("  }\n");
+    }
+    for p in 0..n.pods {
+        for l in 0..n.leaf_per_pod {
+            out.push_str(&format!("  pod{p}_nodes -- pod{p}_leaf{l};\n"));
+            for s in 0..n.spines {
+                out.push_str(&format!(
+                    "  pod{p}_leaf{l} -- spine{s} [label=\"{} x{}\"];\n",
+                    fmt_gbps(n.leaf_spine_gbps),
+                    n.leaf_spine_parallel
+                ));
+            }
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn render_topology_mermaid(cfg: &ClusterConfig) -> String {
+    let n = &cfg.network;
+    let mut out = String::from("graph TD\n");
+    out.push_str(&format!(
+        "  %% {}: {} — {} nodes, {} pod(s), {} rail(s)\n",
+        cfg.name,
+        n.topology.name(),
+        cfg.nodes,
+        n.pods,
+        n.rails
+    ));
+    for s in 0..n.spines {
+        out.push_str(&format!("  s{s}[\"spine {s}\"]\n"));
+    }
+    for p in 0..n.pods {
+        out.push_str(&format!("  subgraph pod{p}\n"));
+        out.push_str(&format!(
+            "    p{p}n[\"{} nodes x {} NIC(s) @ {}\"]\n",
+            n.nodes_per_pod,
+            n.rails,
+            fmt_gbps(n.node_leaf_gbps)
+        ));
+        for l in 0..n.leaf_per_pod {
+            out.push_str(&format!("    p{p}l{l}[\"leaf {p}/{l}\"]\n"));
+        }
+        out.push_str("  end\n");
+    }
+    for p in 0..n.pods {
+        for l in 0..n.leaf_per_pod {
+            out.push_str(&format!("  p{p}n --- p{p}l{l}\n"));
+            for s in 0..n.spines {
+                out.push_str(&format!(
+                    "  p{p}l{l} ---|{} x{}| s{s}\n",
+                    fmt_gbps(n.leaf_spine_gbps),
+                    n.leaf_spine_parallel
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::run_manifest::MetricRow;
+
+    fn tmp_store(test: &str) -> Store {
+        let dir = std::env::temp_dir()
+            .join(format!("sakuraone-store-{}-{test}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Store::open_or_create(dir.to_str().unwrap()).unwrap()
+    }
+
+    fn sample(command: &str, seed: u64, base: f64) -> RunManifest {
+        let cfg = ClusterConfig::default();
+        let mut m = RunManifest::new(command, seed, cfg.to_json());
+        m.push(
+            ScenarioRecord::new("hpl/paper", "hpl")
+                .param("n", 1024u64)
+                .metric_vs_paper("rmax_pflops", base, 33.95)
+                .metric("time_s", base * 10.0),
+        );
+        m.push(
+            ScenarioRecord::new("sched/200jobs", "sched")
+                .param("jobs", 200usize)
+                .metric("utilization", 0.83),
+        );
+        m
+    }
+
+    #[test]
+    fn run_names_are_sanitized_and_deterministic() {
+        assert_eq!(run_name(&sample("suite", 42, 1.0)), "suite-seed42");
+        assert_eq!(
+            run_name(&sample("plan/platform-compare", 21, 1.0)),
+            "plan-platform-compare-seed21"
+        );
+        assert_eq!(run_name(&sample("//", 7, 1.0)), "run-seed7");
+    }
+
+    #[test]
+    fn write_then_load_roundtrips_in_name_order() {
+        let store = tmp_store("roundtrip");
+        store.write(&sample("suite", 43, 1.0)).unwrap();
+        store.write(&sample("suite", 42, 1.0)).unwrap();
+        store.write(&sample("bench", 42, 1.0)).unwrap();
+        let runs = store.load().unwrap();
+        let names: Vec<&str> = runs.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, ["bench-seed42", "suite-seed42", "suite-seed43"]);
+        assert_eq!(runs[1].manifest, sample("suite", 42, 1.0));
+    }
+
+    #[test]
+    fn unknown_name_lists_known_and_bad_json_names_file() {
+        let store = tmp_store("errors");
+        store.write(&sample("suite", 42, 1.0)).unwrap();
+        let err = store.get("nope").unwrap_err();
+        assert!(err.contains("run \"nope\" not in store"), "{err}");
+        assert!(err.contains("suite-seed42"), "{err}");
+
+        let bad = store.dir().join("broken.json");
+        std::fs::write(&bad, "{\"schema\": 3}").unwrap();
+        let err = store.load().unwrap_err();
+        assert!(err.contains("broken.json"), "{err}");
+    }
+
+    #[test]
+    fn query_filters_params_metrics_and_cluster() {
+        let store = tmp_store("query");
+        store.write(&sample("suite", 42, 33.4)).unwrap();
+        store.write(&sample("suite", 43, 30.0)).unwrap();
+        let runs = store.load().unwrap();
+
+        let filters = pathfilter::parse_all("kind=hpl,metrics.rmax_pflops>=33").unwrap();
+        let selects = vec!["metrics.rmax_pflops".to_string(), "params.n".to_string()];
+        let (hits, scanned) = query(&runs, &filters, &selects).unwrap();
+        assert_eq!(scanned, 4);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].run, "suite-seed42");
+        assert_eq!(hits[0].values[0].1.as_f64(), Some(33.4));
+        assert_eq!(hits[0].values[1].1.as_str(), Some("1024"));
+
+        // cluster paths resolve through the canonical cluster codec
+        let filters = pathfilter::parse_all("cluster.network.pods=2").unwrap();
+        let (hits, _) = query(&runs, &filters, &[]).unwrap();
+        assert_eq!(hits.len(), 4);
+        let filters = pathfilter::parse_all("cluster.network.pods=9").unwrap();
+        let (hits, _) = query(&runs, &filters, &[]).unwrap();
+        assert!(hits.is_empty());
+    }
+
+    #[test]
+    fn diff_reports_drift_and_paper_delta_drift() {
+        let a = sample("suite", 42, 33.4);
+        let b = sample("suite", 43, 30.0);
+        let rep = diff_manifests("a", &a, "b", &b);
+        assert_eq!(rep.compared, 3);
+        assert!(rep.missing_in_b.is_empty());
+        let d = &rep.scenarios[0].drifts[0];
+        assert_eq!(d.metric, "rmax_pflops");
+        assert!((d.drift_pct - 100.0 * (30.0 - 33.4) / 33.4).abs() < 1e-9);
+        let pp = d.paper_delta_pp.unwrap();
+        let expect = 100.0 * (30.0 - 33.95) / 33.95 - 100.0 * (33.4 - 33.95) / 33.95;
+        assert!((pp - expect).abs() < 1e-9, "{pp} vs {expect}");
+
+        // identical sides gate clean at zero tolerance
+        let rep = diff_manifests("a", &a, "a2", &a.clone());
+        assert!(rep.gate(0.0).is_empty());
+        assert_eq!(rep.max_abs_drift_pct(), 0.0);
+
+        // drift beyond tolerance + one-sided coverage both fail
+        let mut shrunk = b.clone();
+        shrunk.scenarios.remove(1);
+        shrunk.scenarios[0].metrics.pop();
+        let rep = diff_manifests("a", &a, "b", &shrunk);
+        let failures = rep.gate(0.5);
+        assert!(failures.iter().any(|f| f.contains("missing from b")), "{failures:?}");
+        assert!(failures.iter().any(|f| f.contains("drifted")), "{failures:?}");
+    }
+
+    #[test]
+    fn label_diff_pairs_by_suffix() {
+        let cfg = ClusterConfig::default();
+        let mut m = RunManifest::new("plan/compare", 21, cfg.to_json());
+        m.note("cluster left: SAKURAONE (1 scenario(s))");
+        m.note("cluster right: ABCI3-LIKE (1 scenario(s))");
+        let mut rec = ScenarioRecord::new("left/hpl/paper", "hpl");
+        rec.metrics.push(MetricRow { name: "t".into(), measured: 2.0, paper: None });
+        m.push(rec);
+        let mut rec = ScenarioRecord::new("right/hpl/paper", "hpl");
+        rec.metrics.push(MetricRow { name: "t".into(), measured: 3.0, paper: None });
+        m.push(rec);
+
+        let rep = diff_labels(&m, "left", "right").unwrap();
+        assert_eq!(rep.scenarios.len(), 1);
+        assert_eq!(rep.scenarios[0].key, "hpl/paper");
+        assert!((rep.scenarios[0].drifts[0].drift_pct - 50.0).abs() < 1e-9);
+
+        let err = diff_labels(&m, "left", "nope").unwrap_err();
+        assert!(err.contains("labels: left, right"), "{err}");
+    }
+
+    #[test]
+    fn render_is_deterministic_and_covers_both_formats() {
+        let mut m = sample("campaign", 42, 33.4);
+        m.push(
+            ScenarioRecord::new("campaign/flagship", "campaign")
+                .metric("compute_s", 2_000_000.0)
+                .metric("checkpoint_s", 50_000.0)
+                .metric("lost_work_s", 10_000.0)
+                .metric("restart_s", 4_000.0)
+                .metric("queue_s", 1_000.0),
+        );
+        let dot = render_run(&m, RenderFormat::Dot).unwrap();
+        assert!(dot.starts_with("graph fabric {"), "{dot}");
+        assert!(dot.contains("spine7"), "{dot}");
+        assert!(dot.contains("pod1_leaf7"), "{dot}");
+        assert!(dot.contains("800G x1"), "{dot}");
+        assert!(dot.contains("campaign/flagship wall-time ledger"), "{dot}");
+        assert_eq!(dot, render_run(&m, RenderFormat::Dot).unwrap());
+
+        let mm = render_run(&m, RenderFormat::Mermaid).unwrap();
+        assert!(mm.starts_with("graph TD"), "{mm}");
+        assert!(mm.contains("pie title campaign/flagship"), "{mm}");
+        assert!(mm.contains("\"compute\" : 2000000.0"), "{mm}");
+        assert!(RenderFormat::parse("svg").is_err());
+    }
+}

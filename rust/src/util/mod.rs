@@ -1,12 +1,14 @@
 //! Dependency-light utility layer: deterministic RNG, statistics, units,
-//! ASCII tables, minimal JSON, shared canonical-codec helpers, micro-bench
-//! harness, CLI parsing and a small property-testing helper. Everything
+//! ASCII tables, minimal JSON, shared canonical-codec helpers, dotted-path
+//! JSON filters (the `runs query` grammar), micro-bench harness, CLI
+//! parsing and a small property-testing helper. Everything
 //! above this module builds on std only.
 
 pub mod bench;
 pub mod cli;
 pub mod codec;
 pub mod json;
+pub mod pathfilter;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

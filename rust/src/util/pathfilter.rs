@@ -1,0 +1,258 @@
+//! Dotted-path filters over JSON documents — the query grammar behind
+//! `sakuraone runs query --where 'cluster.network.pods=2'`
+//! (docs/runs.md).
+//!
+//! A filter is `PATH OP VALUE` where `PATH` is a dotted key path into a
+//! JSON object tree (`params.jobs`, `metrics.rmax_pflops.measured`),
+//! `OP` is one of `=`, `!=`, `<`, `<=`, `>`, `>=` and `VALUE` is a bare
+//! token. Comparison is numeric whenever both sides parse as numbers
+//! (so the stringly scenario params `"200"` compare as 200), string
+//! otherwise; the ordering operators require numbers. A path that does
+//! not resolve matches nothing — not even `!=` — so filters never
+//! invent rows for absent fields.
+
+use crate::util::json::Json;
+
+/// Comparison operator, in the order `parse` tries them at each
+/// position (two-character operators first, so `<=` is never read as
+/// `<` followed by a value starting with `=`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Ne,
+    Le,
+    Ge,
+    Eq,
+    Lt,
+    Gt,
+}
+
+impl Op {
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            Op::Ne => "!=",
+            Op::Le => "<=",
+            Op::Ge => ">=",
+            Op::Eq => "=",
+            Op::Lt => "<",
+            Op::Gt => ">",
+        }
+    }
+
+    fn ordering(&self) -> bool {
+        matches!(self, Op::Le | Op::Ge | Op::Lt | Op::Gt)
+    }
+
+    fn eval_num(&self, a: f64, b: f64) -> bool {
+        match self {
+            Op::Eq => a == b,
+            Op::Ne => a != b,
+            Op::Lt => a < b,
+            Op::Le => a <= b,
+            Op::Gt => a > b,
+            Op::Ge => a >= b,
+        }
+    }
+}
+
+/// One parsed `PATH OP VALUE` clause.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Filter {
+    pub path: String,
+    pub op: Op,
+    /// The right-hand side, verbatim (numeric interpretation happens at
+    /// match time so `=` can still compare strings).
+    pub value: String,
+}
+
+/// The two-before-one scan order (see [`Op`]).
+const OPS: [Op; 6] = [Op::Ne, Op::Le, Op::Ge, Op::Eq, Op::Lt, Op::Gt];
+
+/// Parse one clause. The first operator occurrence splits the string;
+/// at that position two-character operators win over one-character
+/// ones, so `a!=b` is `a != b` and never `a! = b`.
+pub fn parse(s: &str) -> Result<Filter, String> {
+    let bytes = s.as_bytes();
+    for i in 0..bytes.len() {
+        for op in OPS {
+            let sym = op.symbol();
+            if s[i..].starts_with(sym) {
+                let path = s[..i].trim();
+                let value = s[i + sym.len()..].trim();
+                if path.is_empty() {
+                    return Err(format!(
+                        "filter {s:?}: missing path before {sym:?}"
+                    ));
+                }
+                if value.is_empty() {
+                    return Err(format!(
+                        "filter {s:?}: missing value after {sym:?}"
+                    ));
+                }
+                return Ok(Filter {
+                    path: path.to_string(),
+                    op,
+                    value: value.to_string(),
+                });
+            }
+        }
+    }
+    Err(format!(
+        "filter {s:?}: expected PATH OP VALUE with OP one of \
+         =, !=, <=, >=, <, >"
+    ))
+}
+
+/// Parse a comma-separated conjunction (`kind=hpl,cluster.nodes>=50`).
+/// Clauses are ANDed; values therefore cannot contain commas, which no
+/// manifest field does.
+pub fn parse_all(s: &str) -> Result<Vec<Filter>, String> {
+    s.split(',').map(|c| parse(c.trim())).collect()
+}
+
+/// Descend a dotted path through JSON objects. Any missing key or
+/// non-object intermediate yields `None`.
+pub fn lookup<'a>(j: &'a Json, path: &str) -> Option<&'a Json> {
+    let mut cur = j;
+    for seg in path.split('.') {
+        cur = cur.get(seg)?;
+    }
+    Some(cur)
+}
+
+/// Evaluate one filter against a document. Missing paths never match;
+/// type mismatches for the ordering operators are reported, not
+/// silently false, so a typo'd path string fails loudly in tests.
+pub fn matches(doc: &Json, f: &Filter) -> Result<bool, String> {
+    let Some(actual) = lookup(doc, &f.path) else {
+        return Ok(false);
+    };
+    let actual_num = match actual {
+        Json::Num(n) => Some(*n),
+        Json::Str(s) => s.parse::<f64>().ok(),
+        _ => None,
+    };
+    let value_num = f.value.parse::<f64>().ok();
+    if let (Some(a), Some(b)) = (actual_num, value_num) {
+        return Ok(f.op.eval_num(a, b));
+    }
+    if f.op.ordering() {
+        return Err(format!(
+            "filter {}{}{}: ordering needs numbers, got {}",
+            f.path,
+            f.op.symbol(),
+            f.value,
+            actual.emit()
+        ));
+    }
+    let eq = match actual {
+        Json::Str(s) => s == &f.value,
+        Json::Bool(b) => f.value == if *b { "true" } else { "false" },
+        Json::Null => f.value == "null",
+        other => other.emit() == f.value,
+    };
+    Ok(match f.op {
+        Op::Eq => eq,
+        Op::Ne => !eq,
+        _ => unreachable!("ordering handled above"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn parses_every_operator() {
+        for (s, op) in [
+            ("a=1", Op::Eq),
+            ("a!=1", Op::Ne),
+            ("a<1", Op::Lt),
+            ("a<=1", Op::Le),
+            ("a>1", Op::Gt),
+            ("a>=1", Op::Ge),
+        ] {
+            let f = parse(s).unwrap();
+            assert_eq!(f.op, op, "{s}");
+            assert_eq!(f.path, "a");
+            assert_eq!(f.value, "1");
+        }
+    }
+
+    #[test]
+    fn two_char_operators_win_over_one_char() {
+        assert_eq!(parse("m<=3").unwrap().op, Op::Le);
+        assert_eq!(parse("m>=3").unwrap().op, Op::Ge);
+        assert_eq!(parse("m!=x").unwrap().op, Op::Ne);
+        // `<` before a later `=` still splits at the `<`
+        let f = parse("m<a=b").unwrap();
+        assert_eq!(f.op, Op::Lt);
+        assert_eq!(f.value, "a=b");
+    }
+
+    #[test]
+    fn whitespace_around_operator_is_trimmed() {
+        let f = parse("  cluster.network.pods  =  2 ").unwrap();
+        assert_eq!(f.path, "cluster.network.pods");
+        assert_eq!(f.value, "2");
+    }
+
+    #[test]
+    fn bad_clauses_are_rejected() {
+        assert!(parse("nonsense").unwrap_err().contains("PATH OP VALUE"));
+        assert!(parse("=5").unwrap_err().contains("missing path"));
+        assert!(parse("a=").unwrap_err().contains("missing value"));
+        assert!(parse("<=x").unwrap_err().contains("missing path"));
+        assert!(parse("").unwrap_err().contains("PATH OP VALUE"));
+    }
+
+    #[test]
+    fn comma_conjunction_parses_each_clause() {
+        let v = parse_all("kind=hpl, cluster.nodes>=50").unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].path, "kind");
+        assert_eq!(v[1].op, Op::Ge);
+        assert!(parse_all("a=1,,b=2").is_err());
+    }
+
+    #[test]
+    fn lookup_descends_objects_only() {
+        let d = doc(r#"{"a":{"b":{"c":3}},"s":"x"}"#);
+        assert_eq!(lookup(&d, "a.b.c").unwrap().as_f64(), Some(3.0));
+        assert_eq!(lookup(&d, "s").unwrap().as_str(), Some("x"));
+        assert!(lookup(&d, "a.b.missing").is_none());
+        assert!(lookup(&d, "s.deeper").is_none());
+        assert!(lookup(&d, "missing").is_none());
+    }
+
+    #[test]
+    fn numeric_comparison_covers_stringly_params() {
+        let d = doc(r#"{"params":{"jobs":"200"},"n":12}"#);
+        assert!(matches(&d, &parse("params.jobs=200").unwrap()).unwrap());
+        assert!(matches(&d, &parse("params.jobs>=100").unwrap()).unwrap());
+        assert!(!matches(&d, &parse("params.jobs<100").unwrap()).unwrap());
+        assert!(matches(&d, &parse("n!=13").unwrap()).unwrap());
+    }
+
+    #[test]
+    fn string_equality_when_not_numeric() {
+        let d = doc(r#"{"kind":"hpl","flag":true,"none":null}"#);
+        assert!(matches(&d, &parse("kind=hpl").unwrap()).unwrap());
+        assert!(matches(&d, &parse("kind!=mxp").unwrap()).unwrap());
+        assert!(matches(&d, &parse("flag=true").unwrap()).unwrap());
+        assert!(matches(&d, &parse("none=null").unwrap()).unwrap());
+        let err = matches(&d, &parse("kind<mxp").unwrap()).unwrap_err();
+        assert!(err.contains("ordering needs numbers"), "{err}");
+    }
+
+    #[test]
+    fn missing_paths_never_match() {
+        let d = doc(r#"{"a":1}"#);
+        assert!(!matches(&d, &parse("b=1").unwrap()).unwrap());
+        assert!(!matches(&d, &parse("b!=1").unwrap()).unwrap());
+        assert!(!matches(&d, &parse("b>=0").unwrap()).unwrap());
+    }
+}

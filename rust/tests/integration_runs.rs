@@ -1,0 +1,332 @@
+//! Integration tests for the manifest store and the `sakuraone runs`
+//! command family (docs/runs.md): list/describe/query/diff/render over
+//! the two committed example manifests, byte-identical repeat
+//! invocations, the `diff --tolerance` exit gate, cross-platform label
+//! diffs over 1-vs-4-worker source manifests, and bad-usage errors.
+
+use sakuraone::commands;
+use sakuraone::runtime::store::Store;
+use sakuraone::util::cli::Args;
+
+/// The committed example store: two hand-authored manifests with
+/// different seeds and platforms.
+const EXAMPLES: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/runs");
+const COMPARE: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/../examples/plans/platform-compare.json"
+);
+
+fn args(v: &[&str]) -> Args {
+    Args::parse(v.iter().map(|s| s.to_string()), commands::FLAGS).unwrap()
+}
+
+fn tmp_dir(test: &str) -> String {
+    let dir = std::env::temp_dir()
+        .join(format!("sakuraone-runs-{}-{test}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.to_str().unwrap().to_string()
+}
+
+#[test]
+fn example_store_lists_and_describes_byte_identically() {
+    let one = commands::runs::handle(&args(&[
+        "runs", "list", "--store", EXAMPLES, "--json",
+    ]))
+    .unwrap();
+    assert_eq!(one.command, "runs-list");
+    assert_eq!(one.scenarios.len(), 2);
+    assert_eq!(one.notes, vec!["2 run(s) in store"]);
+
+    let seed7 = one.scenario("run/demo-seed7").unwrap();
+    assert_eq!(seed7.params["command"], "demo");
+    assert_eq!(seed7.params["platform"], "SAKURAONE");
+    assert_eq!(seed7.params["seed"], "7");
+    assert_eq!(seed7.metric_value("scenarios"), Some(3.0));
+    // worst anchored delta is the io500 row: (95-98)/98 = -3.06%
+    let worst = seed7.metric_value("worst_abs_delta_pct").unwrap();
+    assert!((worst - 3.0612).abs() < 0.01, "{worst}");
+    let seed9 = one.scenario("run/demo-seed9").unwrap();
+    assert_eq!(seed9.params["platform"], "ABCI3-LIKE");
+
+    let two = commands::runs::handle(&args(&[
+        "runs", "list", "--store", EXAMPLES, "--json",
+    ]))
+    .unwrap();
+    assert_eq!(one.to_json().emit(), two.to_json().emit());
+
+    let d = commands::runs::handle(&args(&[
+        "runs", "describe", "demo-seed7", "--store", EXAMPLES, "--json",
+    ]))
+    .unwrap();
+    assert_eq!(d.command, "runs-describe");
+    assert_eq!(d.seed, 7);
+    let rec = d.scenario("run/demo-seed7").unwrap();
+    assert_eq!(rec.metric_value("metrics"), Some(4.0));
+    assert_eq!(rec.params["worst_delta_at"], "io500/10node/bw_gibs");
+    // describe also resolves plain file paths
+    let by_path = commands::runs::handle(&args(&[
+        "runs",
+        "describe",
+        &format!("{EXAMPLES}/demo-seed7.json"),
+        "--json",
+    ]))
+    .unwrap();
+    assert_eq!(by_path.to_json().emit(), d.to_json().emit());
+}
+
+#[test]
+fn example_store_query_filters_and_selects() {
+    let q = |v: &[&str]| commands::runs::handle(&args(v)).unwrap();
+    let one = q(&[
+        "runs", "query", "--store", EXAMPLES,
+        "--where", "kind=hpl,metrics.rmax_pflops>=33",
+        "--select", "metrics.rmax_pflops,params.n", "--json",
+    ]);
+    let summary = one.scenario("query/summary").unwrap();
+    assert_eq!(summary.metric_value("matched"), Some(1.0));
+    assert_eq!(summary.metric_value("scanned"), Some(5.0));
+    assert_eq!(summary.metric_value("runs"), Some(2.0));
+    let hit = one.scenario("demo-seed7/hpl/paper").unwrap();
+    assert_eq!(hit.kind, "hpl");
+    assert_eq!(hit.metric_value("metrics.rmax_pflops"), Some(33.4));
+    assert_eq!(hit.params["params.n"], "2706432");
+    // the canonical row document rides in the notes
+    assert!(one.notes[0].contains("\"run\":\"demo-seed7\""), "{}", one.notes[0]);
+
+    // repeat invocation is byte-identical
+    let two = q(&[
+        "runs", "query", "--store", EXAMPLES,
+        "--where", "kind=hpl,metrics.rmax_pflops>=33",
+        "--select", "metrics.rmax_pflops,params.n", "--json",
+    ]);
+    assert_eq!(one.to_json().emit(), two.to_json().emit());
+
+    // cluster paths go through the canonical cluster codec, so the
+    // sparse hand-written specs gain their platform-filled fields
+    let c = q(&[
+        "runs", "query", "--store", EXAMPLES,
+        "--where", "cluster.name=SAKURAONE", "--json",
+    ]);
+    assert_eq!(
+        c.scenario("query/summary").unwrap().metric_value("matched"),
+        Some(3.0)
+    );
+    let c = q(&[
+        "runs", "query", "--store", EXAMPLES,
+        "--where", "cluster.network.pods>=1,kind=sched", "--json",
+    ]);
+    assert_eq!(
+        c.scenario("query/summary").unwrap().metric_value("matched"),
+        Some(2.0)
+    );
+}
+
+#[test]
+fn example_store_diff_reports_drift_and_gates() {
+    let d = commands::runs::handle(&args(&[
+        "runs", "diff", "demo-seed7", "demo-seed9", "--store", EXAMPLES, "--json",
+    ]))
+    .unwrap();
+    assert_eq!(d.command, "runs-diff");
+    let summary = d.scenario("diff/summary").unwrap();
+    assert_eq!(summary.params["mode"], "runs");
+    assert_eq!(summary.metric_value("scenarios_paired"), Some(2.0));
+    assert_eq!(summary.metric_value("missing_in_b"), Some(1.0));
+    assert!(d.notes.contains(&"missing in demo-seed9: io500/10node".to_string()));
+
+    let hpl = d.scenario("diff/hpl/paper").unwrap();
+    let rmax = hpl.metrics.iter().find(|m| m.name == "rmax_pflops").unwrap();
+    assert_eq!(rmax.measured, 30.1);
+    assert_eq!(rmax.paper, Some(33.4));
+    let pp = hpl.metric_value("rmax_pflops.paper_delta_pp").unwrap();
+    let expect = 100.0 * (30.1 - 33.95) / 33.95 - 100.0 * (33.4 - 33.95) / 33.95;
+    assert!((pp - expect).abs() < 1e-9, "{pp} vs {expect}");
+
+    // identical pair gates clean at zero tolerance
+    commands::runs::handle(&args(&[
+        "runs", "diff", "demo-seed7", "demo-seed7", "--store", EXAMPLES,
+        "--tolerance", "0", "--json",
+    ]))
+    .unwrap();
+
+    // drifted pair fails the gate with a counting error
+    let err = commands::runs::handle(&args(&[
+        "runs", "diff", "demo-seed7", "demo-seed9", "--store", EXAMPLES,
+        "--tolerance", "1", "--json",
+    ]))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("beyond 1%"), "{msg}");
+}
+
+#[test]
+fn cross_platform_label_diff_is_byte_identical_across_worker_counts() {
+    // Build the same cross-platform manifest serially and at 4 workers,
+    // deposit each into its own store, and label-diff both.
+    let serial = commands::plan::handle(&args(&[
+        "plan", "run", COMPARE, "--serial", "--json",
+    ]))
+    .unwrap();
+    let parallel = commands::plan::handle(&args(&[
+        "plan", "run", COMPARE, "--workers", "4", "--json",
+    ]))
+    .unwrap();
+    assert_eq!(serial.to_json().emit(), parallel.to_json().emit());
+
+    let mut diffs = Vec::new();
+    for (tag, manifest) in [("serial", &serial), ("parallel", &parallel)] {
+        let dir = tmp_dir(&format!("labeldiff-{tag}"));
+        let stored = Store::open(&dir).unwrap().write(manifest).unwrap();
+        assert_eq!(stored.name, "plan-platform-compare-seed21");
+        for _ in 0..2 {
+            let d = commands::runs::handle(&args(&[
+                "runs", "diff", "sakuraone", "abci3-like",
+                "--run", "plan-platform-compare-seed21",
+                "--store", &dir, "--json",
+            ]))
+            .unwrap();
+            diffs.push(d.to_json().emit());
+        }
+    }
+    // repeated invocations AND 1-vs-4-worker sources: all byte-identical
+    assert!(diffs.windows(2).all(|w| w[0] == w[1]));
+
+    let d: sakuraone::runtime::RunManifest =
+        sakuraone::runtime::RunManifest::from_json(
+            &sakuraone::util::json::Json::parse(&diffs[0]).unwrap(),
+        )
+        .unwrap();
+    let summary = d.scenario("diff/summary").unwrap();
+    assert_eq!(summary.params["mode"], "labels");
+    assert!(summary.metric_value("scenarios_paired").unwrap() > 0.0);
+    // the platforms genuinely differ, so drift is non-zero...
+    assert!(summary.metric_value("max_abs_drift_pct").unwrap() > 0.0);
+
+    // ...which means a tight tolerance gate fails across labels
+    let dir = tmp_dir("labelgate");
+    Store::open(&dir).unwrap().write(&serial).unwrap();
+    let err = commands::runs::handle(&args(&[
+        "runs", "diff", "sakuraone", "abci3-like",
+        "--run", "plan-platform-compare-seed21",
+        "--store", &dir, "--tolerance", "0.000001", "--json",
+    ]))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("drift"), "{err:#}");
+    // while a label diffed against itself passes at zero tolerance
+    commands::runs::handle(&args(&[
+        "runs", "diff", "sakuraone", "sakuraone",
+        "--run", "plan-platform-compare-seed21",
+        "--store", &dir, "--tolerance", "0", "--json",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn render_covers_both_formats_and_embeds_the_text() {
+    let dot = commands::runs::handle(&args(&[
+        "runs", "render", "demo-seed7", "--store", EXAMPLES, "--json",
+    ]))
+    .unwrap();
+    assert_eq!(dot.command, "runs-render");
+    let rec = dot.scenario("render/demo-seed7").unwrap();
+    assert_eq!(rec.params["format"], "dot");
+    assert!(rec.metric_value("lines").unwrap() > 10.0);
+    assert!(dot.notes[0].starts_with("graph fabric {"), "{}", dot.notes[0]);
+    // the sparse example cluster decoded through the platform base:
+    // sakuraone has 8 spines, 2 pods
+    assert!(dot.notes[0].contains("spine7"));
+    assert!(dot.notes[0].contains("cluster_pod1"));
+
+    let mm = commands::runs::handle(&args(&[
+        "runs", "render", "demo-seed7", "--store", EXAMPLES,
+        "--format", "mermaid", "--json",
+    ]))
+    .unwrap();
+    assert!(mm.notes[0].starts_with("graph TD"), "{}", mm.notes[0]);
+
+    let again = commands::runs::handle(&args(&[
+        "runs", "render", "demo-seed7", "--store", EXAMPLES,
+        "--format", "mermaid", "--json",
+    ]))
+    .unwrap();
+    assert_eq!(mm.to_json().emit(), again.to_json().emit());
+}
+
+#[test]
+fn deposited_manifests_are_discoverable_and_queryable() {
+    let dir = tmp_dir("deposit");
+    let m = commands::report::handle(&args(&["report", "--json"])).unwrap();
+    let path = commands::store_deposit(
+        &args(&["report", "--json", "--store", &dir]),
+        &m,
+    )
+    .unwrap()
+    .unwrap();
+    assert!(path.ends_with("report-seed0.json"), "{}", path.display());
+    // no --store, no deposit
+    assert!(commands::store_deposit(&args(&["report", "--json"]), &m)
+        .unwrap()
+        .is_none());
+
+    let list = commands::runs::handle(&args(&[
+        "runs", "list", "--store", &dir, "--json",
+    ]))
+    .unwrap();
+    assert!(list.scenario("run/report-seed0").is_some());
+
+    // the per-entry census records are filterable like any other run
+    let q = commands::runs::handle(&args(&[
+        "runs", "query", "--store", &dir,
+        "--where", "params.family=Slingshot-11",
+        "--select", "metrics.systems_total", "--json",
+    ]))
+    .unwrap();
+    assert_eq!(
+        q.scenario("query/summary").unwrap().metric_value("matched"),
+        Some(1.0)
+    );
+    assert_eq!(
+        q.scenario("report-seed0/report/census/slingshot-11")
+            .unwrap()
+            .metric_value("metrics.systems_total"),
+        Some(7.0)
+    );
+}
+
+#[test]
+fn bad_usage_is_reported_with_context() {
+    let err = |v: &[&str]| {
+        format!("{:#}", commands::runs::handle(&args(v)).unwrap_err())
+    };
+    assert!(err(&["runs"]).contains("expected an action"));
+    assert!(err(&["runs", "warp"]).contains("unknown action \"warp\""));
+    assert!(err(&["runs", "describe", "--store", EXAMPLES]).contains("expected a RUN"));
+    assert!(err(&["runs", "describe", "nope", "--store", EXAMPLES])
+        .contains("not in store"));
+    assert!(err(&["runs", "describe", "nope", "--store", EXAMPLES])
+        .contains("demo-seed7"));
+    assert!(err(&["runs", "list", "--store", "/does/not/exist"])
+        .contains("not a directory"));
+    assert!(err(&["runs", "query", "--store", EXAMPLES, "--where", "nonsense"])
+        .contains("PATH OP VALUE"));
+    assert!(err(&["runs", "query", "--store", EXAMPLES, "--where", "kind<hpl"])
+        .contains("ordering needs numbers"));
+    assert!(err(&["runs", "diff", "demo-seed7", "--store", EXAMPLES])
+        .contains("expected two operands"));
+    assert!(err(&[
+        "runs", "diff", "demo-seed7", "demo-seed9", "--store", EXAMPLES,
+        "--tolerance", "lots",
+    ])
+    .contains("--tolerance expects a number"));
+    assert!(err(&[
+        "runs", "render", "demo-seed7", "--store", EXAMPLES, "--format", "svg",
+    ])
+    .contains("unknown render format"));
+    assert!(err(&[
+        "runs", "diff", "sakuraone", "nope", "--run", "demo-seed7",
+        "--store", EXAMPLES,
+    ])
+    .contains("no platform labels"));
+}
