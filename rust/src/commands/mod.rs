@@ -27,6 +27,7 @@ pub mod topo;
 pub mod trace;
 pub mod train;
 pub mod validate;
+pub mod wan;
 
 use anyhow::Result;
 
@@ -149,9 +150,12 @@ USAGE: sakuraone <subcommand> [options]
             | replay FILE|- [--policy fifo|backfill|fairshare]
             | stats FILE|-                 (workload traces, docs/traces.md)
   runs      list | describe RUN | query [--where EXPR] [--select PATHS]
-            | diff A B [--run RUN] [--tolerance PCT]
+            [--format table|csv] | diff A B [--run RUN] [--tolerance PCT]
             | render RUN [--format dot|mermaid]
             (manifest store, default `runs/`; docs/runs.md)
+  wan       show [NAME|FILE] | validate [NAME|FILE...]
+            | run [--quick] [--serial] [--workers N] [--seed S]
+            (multi-site WAN tier, docs/wan.md)
 
 Every subcommand also accepts:
   --json        emit the run manifest as JSON on stdout (quiet tables)

@@ -199,11 +199,16 @@ fn query(args: &Args) -> Result<RunManifest> {
         None => Vec::new(),
         Some(s) => s.split(',').map(|p| p.trim().to_string()).collect(),
     };
+    let format = args.get_or("format", "table");
+    if !["table", "csv"].contains(&format.as_str()) {
+        bail!("runs query: unknown --format {format:?} (known: table, csv)");
+    }
     let (hits, scanned) =
         store::query(&runs, &filters, &selects).map_err(anyhow::Error::msg)?;
 
     let mut m = RunManifest::new("runs-query", 0, ClusterConfig::default().to_json());
     let mut summary = ScenarioRecord::new("query/summary", "runs")
+        .param("format", &format)
         .metric("matched", hits.len() as f64)
         .metric("scanned", scanned as f64)
         .metric("runs", runs.len() as f64);
@@ -232,25 +237,56 @@ fn query(args: &Args) -> Result<RunManifest> {
     }
 
     if !super::quiet(args) {
-        let mut headers = vec!["Run".to_string(), "Scenario".to_string(), "Kind".to_string()];
-        headers.extend(selects.iter().cloned());
-        let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
-        let mut t = Table::new(
-            &format!("Query — {} of {} record(s) matched", hits.len(), scanned),
-            &headers_ref,
-        );
-        for hit in &hits {
-            let mut row = vec![hit.run.clone(), hit.id.clone(), hit.kind.clone()];
-            row.extend(hit.values.iter().map(|(_, v)| match v {
-                Json::Str(s) => s.clone(),
-                Json::Null => "-".to_string(),
-                other => other.emit(),
-            }));
-            t.row(&row);
+        let cell = |v: &Json| match v {
+            Json::Str(s) => s.clone(),
+            Json::Null => "-".to_string(),
+            other => other.emit(),
+        };
+        if format == "csv" {
+            // Spreadsheet/pandas-ready projection: fixed identity columns
+            // then the `--select` paths in order, RFC 4180 quoting.
+            let mut header = vec!["run".to_string(), "scenario".to_string(), "kind".to_string()];
+            header.extend(selects.iter().cloned());
+            println!("{}", csv_line(&header));
+            for hit in &hits {
+                let mut row = vec![hit.run.clone(), hit.id.clone(), hit.kind.clone()];
+                row.extend(hit.values.iter().map(|(_, v)| cell(v)));
+                println!("{}", csv_line(&row));
+            }
+        } else {
+            let mut headers =
+                vec!["Run".to_string(), "Scenario".to_string(), "Kind".to_string()];
+            headers.extend(selects.iter().cloned());
+            let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+            let mut t = Table::new(
+                &format!("Query — {} of {} record(s) matched", hits.len(), scanned),
+                &headers_ref,
+            );
+            for hit in &hits {
+                let mut row = vec![hit.run.clone(), hit.id.clone(), hit.kind.clone()];
+                row.extend(hit.values.iter().map(|(_, v)| cell(v)));
+                t.row(&row);
+            }
+            println!("{}", t.render());
         }
-        println!("{}", t.render());
     }
     Ok(m)
+}
+
+/// One CSV row, RFC 4180: fields holding commas, quotes or newlines are
+/// double-quoted with embedded quotes doubled.
+fn csv_line(fields: &[String]) -> String {
+    fields
+        .iter()
+        .map(|f| {
+            if f.contains([',', '"', '\n', '\r']) {
+                format!("\"{}\"", f.replace('"', "\"\""))
+            } else {
+                f.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
 }
 
 // ------------------------------------------------------------- diff --
@@ -375,6 +411,21 @@ fn diff_table(rep: &DiffReport) -> Table {
         }
     }
     t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::csv_line;
+
+    #[test]
+    fn csv_lines_quote_only_what_rfc_4180_requires() {
+        let s = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(csv_line(&s(&["run", "scenario", "kind"])), "run,scenario,kind");
+        assert_eq!(csv_line(&s(&["a,b", "plain"])), "\"a,b\",plain");
+        assert_eq!(csv_line(&s(&["say \"hi\""])), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_line(&s(&["two\nlines"])), "\"two\nlines\"");
+        assert_eq!(csv_line(&s(&[""])), "");
+    }
 }
 
 // ----------------------------------------------------------- render --

@@ -1,0 +1,164 @@
+//! `sakuraone wan` — the multi-site WAN tier (see docs/wan.md).
+//!
+//!   wan show [NAME|FILE]         canonical WAN spec (codec output);
+//!                                default `sakuraone-2site`
+//!   wan validate [ARG...]        decode + invariant-check + exact
+//!                                re-emission; no args = every preset
+//!   wan run [--quick] [...]      the cross-site collective grid through
+//!                                the deterministic sweep engine
+//!
+//! `show`/`validate` arguments are WAN preset names or paths to JSON WAN
+//! spec files (sites may name registry platforms or carry inline cluster
+//! specs). `run` produces a manifest that is byte-identical for any
+//! `--workers` value with the same seed — the same contract as `suite`,
+//! `campaign` and `serving`, pinned by `tests/golden/wan.json`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ClusterConfig;
+use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
+use crate::runtime::sweep::{run_sweep_named, wan_grid, SweepConfig};
+use crate::topology::wan::{wan_preset, WanSpec, WAN_PRESETS};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub fn handle(args: &Args) -> Result<RunManifest> {
+    match args.positional.first().map(String::as_str) {
+        Some("show") => show(args),
+        Some("validate") => validate(args),
+        Some("run") => run(args),
+        Some(other) => bail!("unknown wan action {other:?} (show | validate | run)"),
+        None => bail!(
+            "wan needs an action: wan show [NAME|FILE] | \
+             validate [NAME|FILE...] | run [--quick]"
+        ),
+    }
+}
+
+/// Resolve a WAN preset name or spec-file path to a validated spec.
+fn resolve(arg: &str) -> Result<WanSpec> {
+    if let Some(p) = wan_preset(arg) {
+        return Ok((p.build)());
+    }
+    if std::path::Path::new(arg).is_file() {
+        let text = std::fs::read_to_string(arg)
+            .map_err(|e| anyhow!("reading WAN spec {arg}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing WAN spec {arg}: {e}"))?;
+        return WanSpec::from_json_at(&j, arg).map_err(anyhow::Error::msg);
+    }
+    bail!(
+        "unknown WAN preset or spec file {arg:?} (known presets: {})",
+        crate::topology::wan::known_wan_presets()
+    )
+}
+
+fn wan_record(name: &str, spec: &WanSpec) -> ScenarioRecord {
+    ScenarioRecord::new(&format!("wan/{name}"), "wan")
+        .param("name", &spec.name)
+        .metric("sites", spec.sites.len() as f64)
+        .metric("links", spec.links.len() as f64)
+        .metric("nodes_total", spec.total_nodes() as f64)
+}
+
+fn show(args: &Args) -> Result<RunManifest> {
+    let arg = args.positional.get(1).map(String::as_str).unwrap_or("sakuraone-2site");
+    let spec = resolve(arg)?;
+    let mut manifest = RunManifest::new("wan-show", 0, ClusterConfig::default().to_json());
+    manifest.push(wan_record(arg, &spec));
+    if !super::quiet(args) {
+        println!("{}", spec.to_json().emit());
+    }
+    Ok(manifest)
+}
+
+fn validate(args: &Args) -> Result<RunManifest> {
+    // No arguments: validate every preset (what CI runs).
+    let names: Vec<String> = if args.positional.len() > 1 {
+        args.positional[1..].to_vec()
+    } else {
+        WAN_PRESETS.iter().map(|p| p.name.to_string()).collect()
+    };
+    let mut manifest =
+        RunManifest::new("wan-validate", 0, ClusterConfig::default().to_json());
+    for name in &names {
+        let spec = resolve(name)?;
+        spec.validate().map_err(|e| anyhow!("{name}: {e}"))?;
+        // the codec round trip is part of the contract being validated
+        let j = spec.to_json();
+        let back = WanSpec::from_json(&j).map_err(|e| anyhow!("{name}: {e}"))?;
+        if back.to_json().emit() != j.emit() {
+            bail!("{name}: canonical WAN spec does not re-emit byte-identically");
+        }
+        let note = format!(
+            "{name}: ok — {} ({} sites, {} links, {} nodes, round-trip exact)",
+            spec.name,
+            spec.sites.len(),
+            spec.links.len(),
+            spec.total_nodes(),
+        );
+        if !super::quiet(args) {
+            println!("{note}");
+        }
+        manifest.note(note);
+        manifest.push(wan_record(name, &spec));
+    }
+    Ok(manifest)
+}
+
+fn run(args: &Args) -> Result<RunManifest> {
+    let cfg = super::cluster_config(args)?;
+    let quick = args.flag("quick");
+    let workers = super::worker_count(args)?;
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let scenarios = wan_grid(quick);
+
+    let t0 = std::time::Instant::now();
+    let manifest =
+        run_sweep_named(&cfg, &scenarios, &SweepConfig { workers, seed }, "wan");
+    eprintln!(
+        "wan: {} scenarios on {} worker(s) in {:.2}s (grid: {}, seed {})",
+        manifest.scenarios.len(),
+        workers,
+        t0.elapsed().as_secs_f64(),
+        if quick { "quick" } else { "full" },
+        seed,
+    );
+
+    if !super::quiet(args) {
+        println!("{}", summary_table(&manifest).render());
+    }
+    Ok(manifest)
+}
+
+/// Human-readable digest: one row per cross-site scenario.
+fn summary_table(manifest: &RunManifest) -> Table {
+    let mut t = Table::new(
+        "Multi-site WAN tier — cross-site all-reduce over the site fabrics",
+        &[
+            "Scenario",
+            "Sites",
+            "Nodes",
+            "All-reduce ms",
+            "Intra ms",
+            "WAN ms",
+            "WAN util",
+            "Replicate s",
+        ],
+    );
+    for s in &manifest.scenarios {
+        let get = |k: &str| s.metric_value(k).unwrap_or(f64::NAN);
+        let param = |k: &str| s.params.get(k).cloned().unwrap_or_else(|| "-".into());
+        t.row(&[
+            s.id.clone(),
+            param("sites"),
+            param("nodes_total"),
+            format!("{:.2}", get("allreduce_ms")),
+            format!("{:.2}", get("intra_ms")),
+            format!("{:.2}", get("wan_ms")),
+            format!("{:.2}", get("wan_peak_util")),
+            format!("{:.2}", get("replicate_s")),
+        ]);
+    }
+    t
+}

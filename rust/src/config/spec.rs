@@ -82,6 +82,42 @@ static SAKURAONE_HALFSCALE: PlatformDescriptor = PlatformDescriptor {
     },
 };
 
+static SAKURAONE_10X: PlatformDescriptor = PlatformDescriptor {
+    name: "sakuraone-10x",
+    summary: "10x scale-out of the paper cluster: 1000 nodes in ten \
+              100-node pods, doubled spine tier, 4x the Lustre servers \
+              (ROADMAP scale-out item; one site of a WAN plan)",
+    build: || {
+        let mut c = ClusterConfig::default();
+        c.name = "SAKURAONE-10X".into();
+        c.nodes = 1000;
+        c.network.pods = 10;
+        c.network.nodes_per_pod = 100;
+        c.network.spines = 16;
+        c.storage.servers = 16;
+        c.storage.theoretical_bw_bytes_per_s = 800e9;
+        c
+    },
+};
+
+static SAKURAONE_100X: PlatformDescriptor = PlatformDescriptor {
+    name: "sakuraone-100x",
+    summary: "100x scale-out: 10000 nodes in a hundred 100-node pods, \
+              32 spines, 64 Lustre servers — the datacenter-scale end of \
+              the WAN tier (docs/wan.md scale limits)",
+    build: || {
+        let mut c = ClusterConfig::default();
+        c.name = "SAKURAONE-100X".into();
+        c.nodes = 10_000;
+        c.network.pods = 100;
+        c.network.nodes_per_pod = 100;
+        c.network.spines = 32;
+        c.storage.servers = 64;
+        c.storage.theoretical_bw_bytes_per_s = 3.2e12;
+        c
+    },
+};
+
 static ABCI3_LIKE: PlatformDescriptor = PlatformDescriptor {
     name: "abci3-like",
     summary: "InfiniBand-flavored contrast in the spirit of ABCI 3.0 \
@@ -122,8 +158,14 @@ static FAT_TREE_800G: PlatformDescriptor = PlatformDescriptor {
 };
 
 /// Every registered platform, in documentation order.
-pub static PLATFORMS: [&PlatformDescriptor; 4] =
-    [&SAKURAONE, &SAKURAONE_HALFSCALE, &ABCI3_LIKE, &FAT_TREE_800G];
+pub static PLATFORMS: [&PlatformDescriptor; 6] = [
+    &SAKURAONE,
+    &SAKURAONE_HALFSCALE,
+    &SAKURAONE_10X,
+    &SAKURAONE_100X,
+    &ABCI3_LIKE,
+    &FAT_TREE_800G,
+];
 
 /// Look a platform up by wire name.
 pub fn platform(name: &str) -> Option<&'static PlatformDescriptor> {
@@ -599,6 +641,18 @@ mod tests {
             let reparsed = Json::parse(&j.emit()).unwrap();
             assert_eq!(from_json(&reparsed).unwrap(), cfg, "{}: text", p.name);
         }
+    }
+
+    #[test]
+    fn scale_out_platforms_cover_1k_and_10k_nodes() {
+        let c10 = (SAKURAONE_10X.build)();
+        assert_eq!(c10.nodes, 1000);
+        assert_eq!(c10.network.pods * c10.network.nodes_per_pod, 1000);
+        assert_eq!(c10.total_gpus(), 8_000);
+        let c100 = (SAKURAONE_100X.build)();
+        assert_eq!(c100.nodes, 10_000);
+        assert_eq!(c100.network.pods, 100);
+        assert_eq!(c100.total_gpus(), 80_000);
     }
 
     #[test]

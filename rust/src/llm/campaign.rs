@@ -30,6 +30,7 @@
 //! keyed by candidate index, never by how many events were accepted.
 
 use crate::config::ClusterConfig;
+use crate::hardware::power::PowerModel;
 use crate::llm::parallelism::{step_time, LlmConfig};
 use crate::network::{apply_failures, FailurePlan};
 use crate::scheduler::{Job, SlurmSim};
@@ -87,6 +88,16 @@ pub struct CampaignConfig {
     pub cable_plan: FailurePlan,
     /// Fabric damage applied on a spine-class fabric failure.
     pub spine_plan: FailurePlan,
+    /// Replicate every committed checkpoint to a remote site over the WAN
+    /// (docs/wan.md). A write that completes while the previous replica
+    /// transfer is still in flight stalls training until the WAN drains;
+    /// a node death during a write forces the subsequent restart to read
+    /// the checkpoint back over the WAN (failover path).
+    pub replicate: bool,
+    /// WAN wave to the replica site (Gbit/s line rate).
+    pub wan_gbps: f64,
+    /// WAN round-trip time to the replica site (ms).
+    pub wan_rtt_ms: f64,
 }
 
 impl CampaignConfig {
@@ -108,7 +119,15 @@ impl CampaignConfig {
             hazard_base_per_hour: 1.0,
             cable_plan: FailurePlan::cable_cuts(0.05, 11),
             spine_plan: FailurePlan::spine_down(1),
+            replicate: false,
+            wan_gbps: 100.0,
+            wan_rtt_ms: 10.0,
         }
+    }
+
+    /// One-way checkpoint transfer time over the configured WAN wave (s).
+    pub fn wan_transfer_s(&self, bytes: f64) -> f64 {
+        bytes / (self.wan_gbps.max(1e-9) * 1e9 / 8.0) + self.wan_rtt_ms.max(0.0) * 1e-3
     }
 
     /// Whole nodes the job occupies (node-granular allocation).
@@ -177,6 +196,24 @@ pub struct CampaignReport {
     pub availability: f64,
     pub node_failures: u32,
     pub fabric_failures: u32,
+    /// Checkpoint replicas shipped to the remote site (0 when
+    /// `replicate` is off).
+    pub replications: u64,
+    /// Training stall waiting for the WAN replica pipe to drain — a
+    /// subset of `time.checkpoint_s`, so the ledger partition holds.
+    pub wan_stall_s: f64,
+    /// Restarts that had to read the checkpoint back over the WAN
+    /// because a node death killed the local write (failover path).
+    pub remote_restores: u32,
+    /// Mean cluster IT power over the allocation (`hardware::power`,
+    /// GPU util = committed-compute fraction, CPU util = 30% of it).
+    pub avg_power_w: f64,
+    /// `avg_power_w * duration_s` — allocation energy, joules.
+    pub joules_total: f64,
+    /// Energy the remote replica site spends receiving checkpoints
+    /// (storage + storage-switch draw for the WAN-transfer seconds;
+    /// 0 when `replicate` is off).
+    pub joules_remote_site: f64,
     pub time: TimeBreakdown,
 }
 
@@ -381,6 +418,10 @@ pub fn run_campaign_on(
     let readback_s = ckpt.bytes / read_bw;
     let restart_cost_s = readback_s + cc.restart_fixed_s.max(0.0);
     let repair_s = cc.fabric_repair_hours.max(0.0) * 3_600.0;
+    // WAN replication path (docs/wan.md): transfer time per replica, and
+    // the failover read-back cost when the local write was killed
+    let repl_s = cc.wan_transfer_s(ckpt.bytes);
+    let wan_restore_cost_s = repl_s + cc.restart_fixed_s.max(0.0);
 
     // --- the campaign loop -----------------------------------------------
     let mut now = 0.0f64;
@@ -396,6 +437,15 @@ pub fn run_campaign_on(
     let mut worst_degraded = step_healthy;
     let mut ni = 0usize;
     let mut fi = 0usize;
+    let mut replications = 0u64;
+    let mut wan_stall_s = 0.0f64;
+    let mut remote_restores = 0u32;
+    // the WAN pipe drains one replica at a time; transfers keep flowing
+    // while the job is queued or restarting
+    let mut repl_busy_until = f64::NEG_INFINITY;
+    // a node death killed a local write: the next restart reads the last
+    // good checkpoint back from the replica site
+    let mut restore_remote = false;
 
     while now < duration {
         // (a) node failures that have struck (including during downtime:
@@ -414,7 +464,14 @@ pub fn run_campaign_on(
             if now >= duration {
                 break;
             }
-            let take = restart_cost_s.min(duration - now);
+            let cost = if restore_remote {
+                remote_restores += 1;
+                restore_remote = false;
+                wan_restore_cost_s
+            } else {
+                restart_cost_s
+            };
+            let take = cost.min(duration - now);
             tb.restart_s += take;
             now += take;
             continue;
@@ -462,6 +519,9 @@ pub fn run_campaign_on(
             if next_node_t < now + stall_s && next_node_t < duration {
                 tb.lost_work_s += next_node_t - now;
                 now = next_node_t;
+                // the death cut the local write short: fail over to the
+                // replica site for the next read-back
+                restore_remote = cc.replicate;
                 continue;
             }
             if now + stall_s > duration {
@@ -476,6 +536,21 @@ pub fn run_campaign_on(
             pending_work_s = 0.0;
             since_ckpt = 0;
             checkpoint_writes += 1;
+            // (g) ship the replica; a still-draining WAN pipe stalls
+            // training (charged as checkpoint time, tracked separately)
+            if cc.replicate {
+                if now < repl_busy_until {
+                    let take = (repl_busy_until - now).min(duration - now);
+                    tb.checkpoint_s += take;
+                    wan_stall_s += take;
+                    now += take;
+                    if now >= duration {
+                        break;
+                    }
+                }
+                repl_busy_until = now + repl_s;
+                replications += 1;
+            }
         }
     }
     // the allocation drains with a final checkpoint (written as the job
@@ -487,6 +562,13 @@ pub fn run_campaign_on(
     let goodput = committed_tokens / duration;
     let fault_free = cc.llm.batch_tokens / step_healthy;
     let goodput_fraction = goodput / fault_free;
+    // power/energy co-report (hardware::power): the GPUs run at full tilt
+    // only while committed work is on the clock
+    let power = PowerModel::sakuraone();
+    let gpu_util = (tb.compute_s / duration).clamp(0.0, 1.0);
+    let avg_power_w = power.cluster_power_w(cfg, gpu_util, 0.3 * gpu_util);
+    let remote_receive_w = cfg.storage.servers as f64 * power.storage_server_w
+        + cfg.storage.storage_switches as f64 * power.switch_w;
     CampaignReport {
         schema: CAMPAIGN_SCHEMA_VERSION,
         duration_s: duration,
@@ -507,6 +589,12 @@ pub fn run_campaign_on(
         availability: 1.0 - (tb.queue_s + tb.restart_s) / duration,
         node_failures,
         fabric_failures,
+        replications,
+        wan_stall_s,
+        remote_restores,
+        avg_power_w,
+        joules_total: avg_power_w * duration,
+        joules_remote_site: replications as f64 * repl_s * remote_receive_w,
         time: tb,
     }
 }
@@ -593,6 +681,63 @@ mod tests {
         assert_eq!(r.node_failures, 0);
         assert_eq!(r.availability, 1.0, "fabric events never requeue");
         assert!(r.degraded_step_time_s >= r.step_time_s);
+    }
+
+    #[test]
+    fn power_report_is_consistent_and_off_without_replication() {
+        let (cfg, cc) = small();
+        let r = run_campaign(&cfg, &cc, 3);
+        assert!(r.avg_power_w > 0.0);
+        assert!((r.joules_total - r.avg_power_w * r.duration_s).abs() < 1.0);
+        assert_eq!(r.replications, 0);
+        assert_eq!(r.wan_stall_s, 0.0);
+        assert_eq!(r.remote_restores, 0);
+        assert_eq!(r.joules_remote_site, 0.0);
+        // more committed work -> hotter GPUs -> more power
+        let (cfg, mut quiet) = small();
+        quiet.node_mtbf_hours = 0.0;
+        quiet.fabric_mtbf_hours = 0.0;
+        let q = run_campaign(&cfg, &quiet, 3);
+        assert!(q.avg_power_w > r.avg_power_w, "{} vs {}", q.avg_power_w, r.avg_power_w);
+    }
+
+    #[test]
+    fn replication_ships_replicas_and_keeps_the_ledger_partition() {
+        let (cfg, mut cc) = small();
+        cc.replicate = true;
+        cc.wan_gbps = 1.0; // a deliberately thin wave: stalls must appear
+        let r = run_campaign(&cfg, &cc, 3);
+        assert!(r.replications > 0);
+        assert!(r.wan_stall_s > 0.0, "thin WAN must stall training");
+        assert!(r.wan_stall_s <= r.time.checkpoint_s + 1e-9);
+        assert!(r.joules_remote_site > 0.0);
+        assert!(
+            (r.time.total() - r.duration_s).abs() < 1e-6 * r.duration_s,
+            "partition holds under replication"
+        );
+        // a fatter wave never stalls more
+        cc.wan_gbps = 800.0;
+        let fat = run_campaign(&cfg, &cc, 3);
+        assert!(fat.wan_stall_s <= r.wan_stall_s);
+        assert!(fat.goodput_tokens_per_s >= r.goodput_tokens_per_s);
+    }
+
+    #[test]
+    fn killed_writes_fail_over_to_the_remote_site() {
+        let (cfg, mut cc) = small();
+        cc.replicate = true;
+        cc.node_mtbf_hours = 5.0; // storm of failures: some strike writes
+        let r = run_campaign(&cfg, &cc, 11);
+        assert!(r.node_failures > 0);
+        assert!(
+            r.remote_restores <= r.node_failures,
+            "only killed writes restore remotely"
+        );
+        // without replication the same seed never restores remotely
+        cc.replicate = false;
+        let local = run_campaign(&cfg, &cc, 11);
+        assert_eq!(local.remote_restores, 0);
+        assert_eq!(local.node_failures, r.node_failures, "coupled failure draw");
     }
 
     #[test]

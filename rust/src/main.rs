@@ -27,6 +27,9 @@
 //!             perf-trajectory manifest and its counter gate (docs/bench.md)
 //!   runs    — the manifest store: list/describe/query/diff/render over
 //!             manifests deposited with `--store DIR` (docs/runs.md)
+//!   wan     — the multi-site WAN tier: show/validate WAN specs and run
+//!             the cross-site collective grid through the two-level
+//!             hierarchical flow solver (docs/wan.md)
 //!   validate— numerics checks through the AOT artifacts
 //!   report  — Table 3 census, rankings, config inventory
 //!   suite   — everything above through the parallel sweep engine
@@ -81,6 +84,7 @@ fn run(args: &Args) -> Result<()> {
         "suite" => commands::suite::handle(args)?,
         "bench" => commands::bench::handle(args)?,
         "runs" => commands::runs::handle(args)?,
+        "wan" => commands::wan::handle(args)?,
         other => {
             println!("{}", commands::usage());
             bail!("unknown subcommand {other:?}");

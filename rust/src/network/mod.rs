@@ -10,7 +10,9 @@
 pub mod failures;
 pub mod roce;
 pub mod sim;
+pub mod wan;
 
 pub use failures::{apply as apply_failures, FailurePlan};
 pub use roce::RoceParams;
 pub use sim::{Flow, FlowResult, FlowSim, SimReport};
+pub use wan::{cross_site_allreduce, CrossSiteTime, HierReport, WanFlow, WanSim};

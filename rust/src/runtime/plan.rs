@@ -40,7 +40,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::config::{spec as cluster_spec, ClusterConfig};
 use crate::runtime::scenario::{Scenario, ScenarioSpec};
 use crate::runtime::sweep::{
-    campaign_grid, collectives_grid, serving_grid, standard_grid, SweepRun,
+    campaign_grid, collectives_grid, serving_grid, standard_grid, wan_grid, SweepRun,
 };
 use crate::util::json::Json;
 
@@ -52,7 +52,8 @@ use crate::util::json::Json;
 pub const PLAN_SCHEMA_VERSION: u64 = 2;
 
 /// The built-in grids a plan can reference by name.
-pub const GRID_NAMES: [&str; 4] = ["standard", "collectives", "campaign", "serving"];
+pub const GRID_NAMES: [&str; 5] =
+    ["standard", "collectives", "campaign", "serving", "wan"];
 
 /// Materialize a built-in grid by name.
 pub fn grid_by_name(name: &str, quick: bool) -> Result<Vec<Scenario>, String> {
@@ -61,6 +62,7 @@ pub fn grid_by_name(name: &str, quick: bool) -> Result<Vec<Scenario>, String> {
         "collectives" => Ok(collectives_grid(quick)),
         "campaign" => Ok(campaign_grid(quick)),
         "serving" => Ok(serving_grid(quick)),
+        "wan" => Ok(wan_grid(quick)),
         other => Err(format!(
             "unknown grid {other:?} (known: {})",
             GRID_NAMES.join(", ")

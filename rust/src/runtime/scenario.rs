@@ -42,12 +42,14 @@ use crate::llm::serving::{
     run_serving, AutoscalePolicy, ServingConfig, ServingReport,
 };
 use crate::llm::{step_time, LlmConfig};
+use crate::network::wan::cross_site_allreduce;
 use crate::network::{apply_failures, FailurePlan};
 use crate::runtime::run_manifest::ScenarioRecord;
 use crate::scheduler::trace::{self, Policy, SynthConfig};
 use crate::scheduler::{Job, SlurmSim};
 use crate::storage::LustreModel;
 use crate::topology::builders::build;
+use crate::topology::wan::{wan_preset_or_err, WanSpec};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -96,6 +98,58 @@ pub enum ScenarioSpec {
     /// Multi-tenant inference fleet: seeded arrivals, continuous
     /// batching with a KV-cache budget, autoscaling (docs/serving.md).
     Serving { serving: Box<ServingConfig>, topology: TopologyKind },
+    /// Multi-site WAN tier: cross-site DP all-reduce over a `WanSpec`
+    /// (preset name or inline document) through the hierarchical solver,
+    /// plus a sized checkpoint-replica WAN transfer (docs/wan.md).
+    Wan {
+        wan: WanRef,
+        bytes: f64,
+        nodes_per_site: usize,
+        replicate_gb: f64,
+    },
+}
+
+/// A `wan` scenario's WAN: a preset by wire name, or a full inline spec —
+/// the same two shapes a site's `cluster` field takes one level down.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WanRef {
+    Preset(String),
+    Inline(Box<WanSpec>),
+}
+
+impl WanRef {
+    /// Materialize the spec (preset names are validated at decode time).
+    pub fn resolve(&self) -> WanSpec {
+        match self {
+            Self::Preset(name) => {
+                (wan_preset_or_err(name).expect("validated preset name").build)()
+            }
+            Self::Inline(spec) => (**spec).clone(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Self::Preset(name) => Json::Str(name.clone()),
+            Self::Inline(spec) => spec.to_json(),
+        }
+    }
+
+    fn from_json(j: &Json, at: &str) -> Result<Self, String> {
+        match j {
+            Json::Str(name) => {
+                wan_preset_or_err(name).map_err(|e| format!("{at}: {e}"))?;
+                Ok(Self::Preset(name.clone()))
+            }
+            Json::Obj(_) => {
+                Ok(Self::Inline(Box::new(WanSpec::from_json_at(j, at)?)))
+            }
+            other => Err(format!(
+                "{at}: expected a WAN preset name or an inline WAN spec, \
+                 got {other:?}"
+            )),
+        }
+    }
 }
 
 /// Everything the system knows about one scenario kind. The registry row
@@ -123,9 +177,9 @@ pub struct KindDescriptor {
 }
 
 /// Every scenario kind, in the order specs are documented.
-pub static REGISTRY: [&KindDescriptor; 12] = [
+pub static REGISTRY: [&KindDescriptor; 13] = [
     &HPL, &HPCG, &MXP, &IO500, &LLM, &RESILIENCE, &COLLECTIVE, &CAMPAIGN,
-    &SCHED, &CLUSTER, &TRACE, &SERVING,
+    &SCHED, &CLUSTER, &TRACE, &SERVING, &WAN,
 ];
 
 /// Look a descriptor up by wire name.
@@ -173,6 +227,7 @@ impl ScenarioSpec {
             ScenarioSpec::Cluster { .. } => &CLUSTER,
             ScenarioSpec::Trace { .. } => &TRACE,
             ScenarioSpec::Serving { .. } => &SERVING,
+            ScenarioSpec::Wan { .. } => &WAN,
         }
     }
 
@@ -306,6 +361,9 @@ fn campaign_to_json(c: &CampaignConfig) -> Json {
     m.insert("hazard_base_per_hour".into(), jnum(c.hazard_base_per_hour));
     m.insert("cable_plan".into(), failure_plan_to_json(&c.cable_plan));
     m.insert("spine_plan".into(), failure_plan_to_json(&c.spine_plan));
+    m.insert("replicate".into(), Json::Bool(c.replicate));
+    m.insert("wan_gbps".into(), jnum(c.wan_gbps));
+    m.insert("wan_rtt_ms".into(), jnum(c.wan_rtt_ms));
     Json::Obj(m)
 }
 
@@ -321,7 +379,8 @@ fn campaign_from_json(
             "llm", "duration_days", "node_mtbf_hours", "fabric_mtbf_hours",
             "interval_override", "overhead_budget", "ckpt_overlap",
             "restart_fixed_s", "fabric_repair_hours", "requeue_bg_jobs",
-            "hazard_base_per_hour", "cable_plan", "spine_plan",
+            "hazard_base_per_hour", "cable_plan", "spine_plan", "replicate",
+            "wan_gbps", "wan_rtt_ms",
         ],
         at,
     )?;
@@ -363,6 +422,9 @@ fn campaign_from_json(
             Some(j) => failure_plan_from_json(j, base.spine_plan, &format!("{at}.spine_plan"))?,
             None => base.spine_plan,
         },
+        replicate: bool_or(m, "replicate", base.replicate, at)?,
+        wan_gbps: f64_or(m, "wan_gbps", base.wan_gbps, at)?,
+        wan_rtt_ms: f64_or(m, "wan_rtt_ms", base.wan_rtt_ms, at)?,
     })
 }
 
@@ -958,8 +1020,8 @@ static CAMPAIGN: KindDescriptor = KindDescriptor {
     fields: "campaign{llm{...},duration_days,node_mtbf_hours,\
              fabric_mtbf_hours,interval_override,overhead_budget,\
              ckpt_overlap,restart_fixed_s,fabric_repair_hours,\
-             requeue_bg_jobs,hazard_base_per_hour,cable_plan,spine_plan}, \
-             topology",
+             requeue_bg_jobs,hazard_base_per_hour,cable_plan,spine_plan,\
+             replicate,wan_gbps,wan_rtt_ms}, topology",
     decode: |j| {
         let m = obj(j, "campaign")?;
         check_keys(m, &["kind", "campaign", "topology"], "campaign")?;
@@ -1180,6 +1242,104 @@ static SERVING: KindDescriptor = KindDescriptor {
 };
 
 // ---------------------------------------------------------------------------
+// wan
+
+static WAN: KindDescriptor = KindDescriptor {
+    kind: "wan",
+    summary: "multi-site WAN: cross-site DP all-reduce over the two-level \
+              hierarchical solver (docs/wan.md)",
+    fields: "wan(preset name | inline {schema,name,sites,links}), bytes, \
+             nodes_per_site, replicate_gb",
+    decode: |j| {
+        let m = obj(j, "wan")?;
+        check_keys(
+            m,
+            &["kind", "wan", "bytes", "nodes_per_site", "replicate_gb"],
+            "wan",
+        )?;
+        let wan = match m.get("wan") {
+            Some(w) => WanRef::from_json(w, "wan.wan")?,
+            None => WanRef::Preset("sakuraone-2site-halfscale".into()),
+        };
+        let nodes_per_site = usize_or(m, "nodes_per_site", 4, "wan")?;
+        if nodes_per_site == 0 {
+            return Err("wan.nodes_per_site: must be at least 1".into());
+        }
+        let replicate_gb = f64_or(m, "replicate_gb", 0.0, "wan")?;
+        if !(replicate_gb >= 0.0 && replicate_gb.is_finite()) {
+            return Err(format!(
+                "wan.replicate_gb: must be non-negative and finite, got {replicate_gb}"
+            ));
+        }
+        Ok(ScenarioSpec::Wan {
+            wan,
+            bytes: f64_or(m, "bytes", 1e9, "wan")?,
+            nodes_per_site,
+            replicate_gb,
+        })
+    },
+    encode: |s| {
+        let ScenarioSpec::Wan { wan, bytes, nodes_per_site, replicate_gb } = s
+        else {
+            unreachable!()
+        };
+        let mut m = spec_obj("wan");
+        m.insert("wan".into(), wan.to_json());
+        m.insert("bytes".into(), jnum(*bytes));
+        m.insert("nodes_per_site".into(), jint(*nodes_per_site as u64));
+        m.insert("replicate_gb".into(), jnum(*replicate_gb));
+        Json::Obj(m)
+    },
+    run: |s, _cfg, _seed| {
+        let ScenarioSpec::Wan { wan, bytes, nodes_per_site, replicate_gb } =
+            &s.spec
+        else {
+            unreachable!()
+        };
+        // the WAN spec names its own site clusters; the sweep's root
+        // cluster config deliberately plays no part here (docs/wan.md)
+        let spec = wan.resolve();
+        let sites = spec.build_sites();
+        let graph = spec.graph();
+        let x = cross_site_allreduce(&sites, &graph, *nodes_per_site, *bytes);
+        // checkpoint-replica transfer: first site to the farthest-index
+        // site, bottleneck bandwidth along the fixed route + one-way lat
+        let replicate_s = if *replicate_gb > 0.0 && spec.sites.len() > 1 {
+            let route = graph
+                .route(0, spec.sites.len() - 1)
+                .expect("validated WANs are connected");
+            let bottleneck = route
+                .iter()
+                .map(|&l| graph.links[l].bandwidth)
+                .fold(f64::INFINITY, f64::min);
+            replicate_gb * 1e9 / bottleneck + graph.path_latency(&route)
+        } else {
+            0.0
+        };
+        ScenarioRecord::new(&s.id, s.kind())
+            .param("wan", spec.name.as_str())
+            .param("sites", spec.sites.len())
+            .param("wan_links", spec.links.len())
+            .param("nodes_total", spec.total_nodes())
+            .param("nodes_per_site", *nodes_per_site)
+            .param("bytes", *bytes as u64)
+            .metric("allreduce_ms", x.total * 1e3)
+            .metric("intra_ms", x.intra_s * 1e3)
+            .metric("wan_ms", x.wan_s * 1e3)
+            .metric("eth_flows", x.flows as f64)
+            .metric("peak_link_util", x.max_util)
+            .metric("wan_peak_util", x.wan_util)
+            .metric("replicate_s", replicate_s)
+    },
+    example: || ScenarioSpec::Wan {
+        wan: WanRef::Preset("sakuraone-2site-halfscale".into()),
+        bytes: 1e9,
+        nodes_per_site: 4,
+        replicate_gb: 0.0,
+    },
+};
+
+// ---------------------------------------------------------------------------
 // Record builders shared with the single-benchmark subcommands.
 
 pub(crate) fn hpl_record(id: &str, r: &HplResult, anchored: bool) -> ScenarioRecord {
@@ -1276,6 +1436,7 @@ pub(crate) fn campaign_record(
         .param("fabric_mtbf_h", cc.fabric_mtbf_hours)
         .param("interval_source", r.interval_source)
         .param("ckpt_fits_backend", r.checkpoint_fits_backend)
+        .param("replicate", cc.replicate)
         .metric("goodput_tokens_per_s", r.goodput_tokens_per_s)
         .metric("fault_free_tokens_per_s", r.fault_free_tokens_per_s)
         .metric("goodput_frac_pct", r.goodput_fraction * 100.0)
@@ -1294,6 +1455,12 @@ pub(crate) fn campaign_record(
         .metric("lost_work_s", r.time.lost_work_s)
         .metric("restart_s", r.time.restart_s)
         .metric("queue_s", r.time.queue_s)
+        .metric("replications", r.replications as f64)
+        .metric("wan_stall_s", r.wan_stall_s)
+        .metric("remote_restores", r.remote_restores as f64)
+        .metric("avg_power_w", r.avg_power_w)
+        .metric("joules_total", r.joules_total)
+        .metric("joules_remote_site", r.joules_remote_site)
 }
 
 pub(crate) fn trace_record(
@@ -1485,6 +1652,75 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.contains("unknown autoscale policy"), "{err}");
+    }
+
+    #[test]
+    fn wan_specs_decode_presets_and_inline_documents() {
+        let j = Json::parse(r#"{"kind": "wan"}"#).unwrap();
+        let spec = ScenarioSpec::from_json(&j).unwrap();
+        let ScenarioSpec::Wan { wan, bytes, nodes_per_site, replicate_gb } = &spec
+        else {
+            panic!()
+        };
+        assert_eq!(*wan, WanRef::Preset("sakuraone-2site-halfscale".into()));
+        assert_eq!(*bytes, 1e9);
+        assert_eq!(*nodes_per_site, 4);
+        assert_eq!(*replicate_gb, 0.0);
+        assert_eq!(spec.to_json().emit(), {
+            let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec);
+            back.to_json().emit()
+        });
+
+        let j = Json::parse(
+            r#"{"kind": "wan", "bytes": 5e8, "replicate_gb": 100,
+                "wan": {"schema": 1, "name": "pair",
+                        "sites": [{"name": "a", "cluster": "sakuraone-halfscale"},
+                                  {"name": "b", "cluster": "sakuraone-halfscale"}],
+                        "links": [{"a": "a", "b": "b", "gbps": 400}]}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&j).unwrap();
+        let ScenarioSpec::Wan { wan, replicate_gb, .. } = &spec else { panic!() };
+        assert!(matches!(wan, WanRef::Inline(_)));
+        assert_eq!(wan.resolve().sites.len(), 2);
+        assert_eq!(*replicate_gb, 100.0);
+        let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec, "inline WAN round trip");
+
+        for (doc, needle) in [
+            (r#"{"kind": "wan", "wan": "warp"}"#, "unknown WAN preset"),
+            (r#"{"kind": "wan", "wan": 4}"#, "preset name or an inline WAN"),
+            (r#"{"kind": "wan", "nodes_per_site": 0}"#, "at least 1"),
+            (r#"{"kind": "wan", "replicate_gb": -1}"#, "non-negative"),
+            (r#"{"kind": "wan", "warp": 1}"#, "unknown field"),
+            (
+                r#"{"kind": "wan", "wan": {"schema": 1, "name": "x", "sites": []}}"#,
+                "at least one site",
+            ),
+        ] {
+            let err =
+                ScenarioSpec::from_json(&Json::parse(doc).unwrap()).unwrap_err();
+            assert!(err.contains(needle), "{doc}: {err}");
+        }
+    }
+
+    #[test]
+    fn campaign_replication_fields_roundtrip_sparsely() {
+        let j = Json::parse(
+            r#"{"kind": "campaign",
+                "campaign": {"replicate": true, "wan_gbps": 400, "wan_rtt_ms": 8}}"#,
+        )
+        .unwrap();
+        let ScenarioSpec::Campaign { campaign, .. } =
+            ScenarioSpec::from_json(&j).unwrap()
+        else {
+            panic!()
+        };
+        assert!(campaign.replicate);
+        assert_eq!(campaign.wan_gbps, 400.0);
+        assert_eq!(campaign.wan_rtt_ms, 8.0);
+        assert_eq!(campaign.llm, CampaignConfig::llama70b_30d().llm);
     }
 
     #[test]

@@ -32,7 +32,7 @@ use crate::runtime::run_manifest::{RunManifest, ScenarioRecord};
 use crate::scheduler::trace::{Policy, SynthConfig};
 use crate::util::rng::Rng;
 
-pub use crate::runtime::scenario::{Scenario, ScenarioSpec};
+pub use crate::runtime::scenario::{Scenario, ScenarioSpec, WanRef};
 
 /// How a sweep runs; the seed feeds every stochastic scenario.
 #[derive(Debug, Clone)]
@@ -218,6 +218,56 @@ pub fn serving_grid(quick: bool) -> Vec<Scenario> {
     g
 }
 
+fn wan_scenario(
+    id: &str,
+    preset: &str,
+    bytes: f64,
+    nodes_per_site: usize,
+    replicate_gb: f64,
+) -> Scenario {
+    Scenario::new(
+        &format!("wan/{id}"),
+        ScenarioSpec::Wan {
+            wan: WanRef::Preset(preset.into()),
+            bytes,
+            nodes_per_site,
+            replicate_gb,
+        },
+    )
+}
+
+/// Scenarios in the quick wan grid (the CI determinism cmp pair); the
+/// quick grid is always this prefix of the full grid.
+pub const WAN_QUICK_LEN: usize = 2;
+
+/// The `sakuraone wan run` grid. The quick subset is the 2-scenario CI
+/// determinism pair on the half-scale two-site preset (cross-site DP +
+/// checkpoint replication); the full grid adds the 1000-node-per-site
+/// flagship pair, the four-site ring and a message-size ablation.
+pub fn wan_grid(quick: bool) -> Vec<Scenario> {
+    let mut g = vec![
+        wan_scenario("2site-halfscale", "sakuraone-2site-halfscale", 1e9, 4, 0.0),
+        wan_scenario(
+            "2site-halfscale-replicated",
+            "sakuraone-2site-halfscale",
+            1e9,
+            4,
+            100.0,
+        ),
+    ];
+    debug_assert_eq!(g.len(), WAN_QUICK_LEN);
+    if quick {
+        return g;
+    }
+    g.extend([
+        wan_scenario("2site-10x", "sakuraone-2site", 1e9, 8, 0.0),
+        wan_scenario("2site-10x-replicated", "sakuraone-2site", 1e9, 8, 1_000.0),
+        wan_scenario("4site-ring", "sakuraone-4site-ring", 1e9, 4, 0.0),
+        wan_scenario("2site-halfscale-4g", "sakuraone-2site-halfscale", 4e9, 4, 0.0),
+    ]);
+    g
+}
+
 /// The standard scenario grid. `quick` is the CI smoke subset; the full
 /// grid adds problem-size sweeps and more failure/scale ablations.
 pub fn standard_grid(quick: bool) -> Vec<Scenario> {
@@ -298,6 +348,9 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
     // Inference-serving fleets (the `serving` subcommand runs the full
     // grid; the suite gates the quick pair behind the baseline gate).
     g.extend(serving_grid(true));
+    // Multi-site WAN tier (the `wan run` subcommand runs the full grid;
+    // the suite gates the quick pair).
+    g.extend(wan_grid(true));
     if quick {
         return g;
     }
@@ -423,6 +476,8 @@ pub fn standard_grid(quick: bool) -> Vec<Scenario> {
     g.extend(campaign_grid(false).into_iter().skip(CAMPAIGN_QUICK_LEN));
     // Serving ablations beyond the gated quick pair.
     g.extend(serving_grid(false).into_iter().skip(SERVING_QUICK_LEN));
+    // WAN ablations beyond the gated quick pair.
+    g.extend(wan_grid(false).into_iter().skip(WAN_QUICK_LEN));
     g
 }
 
@@ -658,6 +713,31 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), full.len(), "duplicate serving ids");
+        // the quick pair rides in the gated suite grid
+        let suite_ids: Vec<String> =
+            standard_grid(true).iter().map(|s| s.id.clone()).collect();
+        for s in &quick {
+            assert!(suite_ids.contains(&s.id), "{} not gated by the suite", s.id);
+        }
+    }
+
+    #[test]
+    fn wan_grid_quick_is_the_ci_pair_and_a_prefix_of_full() {
+        let quick = wan_grid(true);
+        let full = wan_grid(false);
+        assert_eq!(
+            quick.len(),
+            WAN_QUICK_LEN,
+            "CI cmp relies on the 2-scenario quick grid"
+        );
+        assert!(full.len() > quick.len());
+        for (q, f) in quick.iter().zip(&full) {
+            assert_eq!(q.id, f.id);
+        }
+        let mut ids: Vec<&str> = full.iter().map(|s| s.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), full.len(), "duplicate wan ids");
         // the quick pair rides in the gated suite grid
         let suite_ids: Vec<String> =
             standard_grid(true).iter().map(|s| s.id.clone()).collect();

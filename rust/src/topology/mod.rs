@@ -1,11 +1,14 @@
 //! Fabric topologies (paper §2.2): graph substrate, the four builders the
-//! paper surveys, ECMP routing, bisection analysis and ASCII rendering.
+//! paper surveys, ECMP routing, bisection analysis, ASCII rendering, and
+//! the multi-site WAN tier (docs/wan.md).
 
 pub mod builders;
 pub mod graph;
 pub mod render;
 pub mod routing;
+pub mod wan;
 
 pub use builders::{build, pod_of};
 pub use graph::{Device, DeviceId, Fabric, Link, LinkId, SwitchTier};
 pub use routing::{ecmp_hash, Router};
+pub use wan::{wan_preset, wan_preset_or_err, WanGraph, WanSpec, WAN_PRESETS};

@@ -1,0 +1,700 @@
+//! Multi-site WAN topology (ROADMAP "Scale out 10-100x"): a versioned
+//! canonical codec for [`WanSpec`] — named sites, each a registry platform
+//! or an inline cluster spec, joined by inter-site links with
+//! bandwidth/RTT/availability — plus a preset registry and the site-level
+//! [`WanGraph`] the hierarchical flow solver (`network::wan`) routes on.
+//!
+//! Encoding contract (WAN schema [`WAN_SCHEMA_VERSION`], the same
+//! discipline as `config::spec` / `runtime::scenario`):
+//! - [`WanSpec::to_json`] emits every field, keys sorted, sites and links
+//!   in declaration order — deterministic bytes;
+//! - [`WanSpec::from_json`] is strict: unknown fields, unknown platform
+//!   names, bad link endpoints and version mismatches are located errors;
+//!   a site's `"cluster"` is either a platform name (string) or an inline
+//!   cluster spec (object, decoded through `config::spec` with its own
+//!   sparse-field and `"platform"`-base semantics);
+//! - exact round trip: `from_json(to_json(w)) == w` with byte-identical
+//!   re-emission;
+//! - every decode ends in [`WanSpec::validate`] (see docs/wan.md).
+//!
+//! Determinism note: link `availability` is modelled as a *capacity
+//! derate* (the expected usable fraction of the line rate), not a
+//! stochastic outage process — WAN runs stay byte-reproducible and
+//! bandwidth monotonicity stays testable.
+
+use std::collections::BTreeMap;
+
+use crate::config::{spec as cluster_spec, ClusterConfig};
+use crate::topology::builders;
+use crate::topology::graph::Fabric;
+use crate::util::codec::{
+    check_keys, check_schema, f64_or, jnum, jstr, obj, str_or,
+};
+use crate::util::json::Json;
+
+/// Version of the WAN wire encoding; bump on incompatible field changes.
+pub const WAN_SCHEMA_VERSION: u64 = 1;
+
+/// A site's cluster: a registry platform by wire name, or a full inline
+/// cluster spec (the same two shapes a plan's `cluster` field takes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SiteCluster {
+    Platform(String),
+    Inline(Box<ClusterConfig>),
+}
+
+impl SiteCluster {
+    pub fn build(&self) -> ClusterConfig {
+        match self {
+            Self::Platform(name) => {
+                // validated at decode time; registry builds are valid
+                (cluster_spec::platform_or_err(name)
+                    .expect("validated platform name")
+                    .build)()
+            }
+            Self::Inline(cfg) => (**cfg).clone(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Self::Platform(name) => jstr(name),
+            Self::Inline(cfg) => cfg.to_json(),
+        }
+    }
+
+    fn from_json(j: &Json, at: &str) -> Result<Self, String> {
+        match j {
+            Json::Str(name) => {
+                cluster_spec::platform_or_err(name).map_err(|e| format!("{at}: {e}"))?;
+                Ok(Self::Platform(name.clone()))
+            }
+            Json::Obj(_) => Ok(Self::Inline(Box::new(
+                cluster_spec::from_json_at(j, at)?,
+            ))),
+            other => Err(format!(
+                "{at}: expected a platform name or an inline cluster spec, \
+                 got {other:?}"
+            )),
+        }
+    }
+}
+
+/// One datacenter site of the WAN.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WanSite {
+    /// Id-safe name (lowercase alphanumerics, `-`, `_`) — used in link
+    /// endpoints, scenario ids and report labels.
+    pub name: String,
+    pub cluster: SiteCluster,
+}
+
+/// One inter-site cable bundle (full duplex).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WanLink {
+    pub a: String,
+    pub b: String,
+    /// Line rate, Gbit/s (both directions).
+    pub gbps: f64,
+    /// Round-trip time, milliseconds.
+    pub rtt_ms: f64,
+    /// Expected usable fraction of the line rate in (0, 1] — a
+    /// deterministic capacity derate, not a stochastic outage process.
+    pub availability: f64,
+}
+
+impl WanLink {
+    /// Usable payload bandwidth per direction, bytes/s.
+    pub fn payload_bytes_per_s(&self) -> f64 {
+        self.gbps * 1e9 / 8.0 * self.availability
+    }
+
+    /// One-way propagation latency, seconds.
+    pub fn one_way_latency_s(&self) -> f64 {
+        self.rtt_ms * 1e-3 / 2.0
+    }
+}
+
+/// A multi-site WAN: named sites + inter-site links.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WanSpec {
+    pub name: String,
+    pub sites: Vec<WanSite>,
+    pub links: Vec<WanLink>,
+}
+
+const WAN_KEYS: &[&str] = &["schema", "name", "sites", "links"];
+const SITE_KEYS: &[&str] = &["name", "cluster"];
+const LINK_KEYS: &[&str] = &["a", "b", "gbps", "rtt_ms", "availability"];
+
+fn id_safe(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-' || c == '_')
+}
+
+impl WanSpec {
+    /// Canonical encoding: every field, keys sorted, deterministic bytes.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), jnum(WAN_SCHEMA_VERSION as f64));
+        m.insert("name".into(), jstr(&self.name));
+        m.insert(
+            "sites".into(),
+            Json::Arr(
+                self.sites
+                    .iter()
+                    .map(|s| {
+                        let mut sm = BTreeMap::new();
+                        sm.insert("name".into(), jstr(&s.name));
+                        sm.insert("cluster".into(), s.cluster.to_json());
+                        Json::Obj(sm)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "links".into(),
+            Json::Arr(
+                self.links
+                    .iter()
+                    .map(|l| {
+                        let mut lm = BTreeMap::new();
+                        lm.insert("a".into(), jstr(&l.a));
+                        lm.insert("b".into(), jstr(&l.b));
+                        lm.insert("gbps".into(), jnum(l.gbps));
+                        lm.insert("rtt_ms".into(), jnum(l.rtt_ms));
+                        lm.insert("availability".into(), jnum(l.availability));
+                        Json::Obj(lm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        Self::from_json_at(j, "wan")
+    }
+
+    /// Strict decode + validation; `at` prefixes every error path.
+    pub fn from_json_at(j: &Json, at: &str) -> Result<Self, String> {
+        let m = obj(j, at)?;
+        check_keys(m, WAN_KEYS, at)?;
+        check_schema(m, WAN_SCHEMA_VERSION, at)?;
+        let name = str_or(m, "name", "", at)?;
+
+        let sites_j = m
+            .get("sites")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("{at}.sites: expected an array of sites"))?;
+        let mut sites = Vec::with_capacity(sites_j.len());
+        for (i, sj) in sites_j.iter().enumerate() {
+            let sat = format!("{at}.sites[{i}]");
+            let sm = obj(sj, &sat)?;
+            check_keys(sm, SITE_KEYS, &sat)?;
+            let sname = str_or(sm, "name", "", &sat)?;
+            let cluster_j = sm
+                .get("cluster")
+                .ok_or_else(|| format!("{sat}: missing \"cluster\""))?;
+            let cluster =
+                SiteCluster::from_json(cluster_j, &format!("{sat}.cluster"))?;
+            sites.push(WanSite { name: sname, cluster });
+        }
+
+        let mut links = Vec::new();
+        if let Some(links_v) = m.get("links") {
+            let links_j = links_v
+                .as_arr()
+                .ok_or_else(|| format!("{at}.links: expected an array of links"))?;
+            for (i, lj) in links_j.iter().enumerate() {
+                let lat = format!("{at}.links[{i}]");
+                let lm = obj(lj, &lat)?;
+                check_keys(lm, LINK_KEYS, &lat)?;
+                links.push(WanLink {
+                    a: str_or(lm, "a", "", &lat)?,
+                    b: str_or(lm, "b", "", &lat)?,
+                    gbps: f64_or(lm, "gbps", 100.0, &lat)?,
+                    rtt_ms: f64_or(lm, "rtt_ms", 10.0, &lat)?,
+                    availability: f64_or(lm, "availability", 1.0, &lat)?,
+                });
+            }
+        }
+
+        let spec = Self { name, sites, links };
+        spec.validate().map_err(|e| format!("{at}: {e}"))?;
+        Ok(spec)
+    }
+
+    /// Enforce the documented WAN invariants (docs/wan.md): at least one
+    /// site, id-safe unique site names, links between existing distinct
+    /// sites with no duplicate pairs, positive finite bandwidth,
+    /// non-negative RTT, availability in (0, 1], and (for multi-site
+    /// specs) a connected site graph.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("name: must not be empty".into());
+        }
+        if self.sites.is_empty() {
+            return Err("sites: must declare at least one site".into());
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &self.sites {
+            if !id_safe(&s.name) {
+                return Err(format!(
+                    "sites: name {:?} must be lowercase alphanumerics, '-' \
+                     or '_'",
+                    s.name
+                ));
+            }
+            if !seen.insert(s.name.as_str()) {
+                return Err(format!("sites: duplicate site name {:?}", s.name));
+            }
+        }
+        let mut pairs = std::collections::BTreeSet::new();
+        for (i, l) in self.links.iter().enumerate() {
+            for end in [&l.a, &l.b] {
+                if self.site_index(end).is_none() {
+                    return Err(format!(
+                        "links[{i}]: endpoint {end:?} is not a declared site"
+                    ));
+                }
+            }
+            if l.a == l.b {
+                return Err(format!(
+                    "links[{i}]: endpoints must be distinct sites, got {:?}",
+                    l.a
+                ));
+            }
+            let key = if l.a <= l.b {
+                (l.a.clone(), l.b.clone())
+            } else {
+                (l.b.clone(), l.a.clone())
+            };
+            if !pairs.insert(key) {
+                return Err(format!(
+                    "links[{i}]: duplicate link between {:?} and {:?}",
+                    l.a, l.b
+                ));
+            }
+            if !(l.gbps > 0.0 && l.gbps.is_finite()) {
+                return Err(format!(
+                    "links[{i}].gbps: must be positive and finite, got {}",
+                    l.gbps
+                ));
+            }
+            if !(l.rtt_ms >= 0.0 && l.rtt_ms.is_finite()) {
+                return Err(format!(
+                    "links[{i}].rtt_ms: must be non-negative and finite, got {}",
+                    l.rtt_ms
+                ));
+            }
+            if !(l.availability > 0.0 && l.availability <= 1.0) {
+                return Err(format!(
+                    "links[{i}].availability: must be in (0, 1], got {}",
+                    l.availability
+                ));
+            }
+        }
+        // Multi-site WANs must be one connected graph; a single-site spec
+        // (the flat-equivalence case) needs no links at all.
+        if self.sites.len() > 1 {
+            let g = self.graph();
+            let mut reach = vec![false; self.sites.len()];
+            reach[0] = true;
+            let mut q = std::collections::VecDeque::from([0usize]);
+            while let Some(s) = q.pop_front() {
+                for &l in &g.adj[s] {
+                    let to = g.links[l].to;
+                    if !reach[to] {
+                        reach[to] = true;
+                        q.push_back(to);
+                    }
+                }
+            }
+            if let Some(i) = reach.iter().position(|r| !r) {
+                return Err(format!(
+                    "links: site {:?} is unreachable from {:?} — the WAN \
+                     graph must be connected",
+                    self.sites[i].name, self.sites[0].name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn site_index(&self, name: &str) -> Option<usize> {
+        self.sites.iter().position(|s| s.name == name)
+    }
+
+    /// Sum of per-site node counts.
+    pub fn total_nodes(&self) -> usize {
+        self.sites.iter().map(|s| s.cluster.build().nodes).sum()
+    }
+
+    /// Resolve every site into its cluster config and built fabric, in
+    /// declaration order — the per-site substrate the hierarchical solver
+    /// runs the existing single-site `FlowSim` on.
+    pub fn build_sites(&self) -> Vec<(ClusterConfig, Fabric)> {
+        self.sites
+            .iter()
+            .map(|s| {
+                let cfg = s.cluster.build();
+                let fabric = builders::build(&cfg);
+                (cfg, fabric)
+            })
+            .collect()
+    }
+
+    /// The site-level routing graph (two directed links per [`WanLink`],
+    /// payload-derated bandwidth, one-way latencies).
+    pub fn graph(&self) -> WanGraph {
+        let mut g = WanGraph {
+            n_sites: self.sites.len(),
+            links: Vec::with_capacity(self.links.len() * 2),
+            adj: vec![Vec::new(); self.sites.len()],
+        };
+        for l in &self.links {
+            let a = self.site_index(&l.a).expect("validated endpoint");
+            let b = self.site_index(&l.b).expect("validated endpoint");
+            let bw = l.payload_bytes_per_s();
+            let lat = l.one_way_latency_s();
+            for (from, to) in [(a, b), (b, a)] {
+                let id = g.links.len();
+                g.links.push(WanGraphLink { from, to, bandwidth: bw, latency: lat });
+                g.adj[from].push(id);
+            }
+        }
+        g
+    }
+}
+
+/// Directed site-level link of the [`WanGraph`].
+#[derive(Debug, Clone)]
+pub struct WanGraphLink {
+    pub from: usize,
+    pub to: usize,
+    /// Usable payload bandwidth, bytes/s (line rate x availability derate).
+    pub bandwidth: f64,
+    /// One-way latency contribution, seconds.
+    pub latency: f64,
+}
+
+/// The site-level routing graph the WAN-tier solver water-fills on.
+#[derive(Debug, Clone)]
+pub struct WanGraph {
+    pub n_sites: usize,
+    pub links: Vec<WanGraphLink>,
+    /// Outgoing link ids per site, in link-id (declaration) order — the
+    /// deterministic BFS visiting order routing relies on.
+    pub adj: Vec<Vec<usize>>,
+}
+
+impl WanGraph {
+    /// The fixed shortest-hop route between two sites, as a link-id
+    /// sequence. Deterministic: BFS visits adjacency in link-id order, so
+    /// among equal-hop routes the one through the earliest-declared links
+    /// wins. `None` when unreachable, `Some(vec![])` when `src == dst`.
+    pub fn route(&self, src: usize, dst: usize) -> Option<Vec<usize>> {
+        if src == dst {
+            return Some(Vec::new());
+        }
+        let mut prev: Vec<Option<usize>> = vec![None; self.n_sites];
+        let mut seen = vec![false; self.n_sites];
+        seen[src] = true;
+        let mut q = std::collections::VecDeque::from([src]);
+        while let Some(s) = q.pop_front() {
+            for &l in &self.adj[s] {
+                let to = self.links[l].to;
+                if !seen[to] {
+                    seen[to] = true;
+                    prev[to] = Some(l);
+                    if to == dst {
+                        let mut path = Vec::new();
+                        let mut cur = dst;
+                        while cur != src {
+                            let link = prev[cur].unwrap();
+                            path.push(link);
+                            cur = self.links[link].from;
+                        }
+                        path.reverse();
+                        return Some(path);
+                    }
+                    q.push_back(to);
+                }
+            }
+        }
+        None
+    }
+
+    /// Sum of one-way latencies along a route.
+    pub fn path_latency(&self, path: &[usize]) -> f64 {
+        path.iter().map(|&l| self.links[l].latency).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Preset registry — the WAN-side mirror of `config::spec::PLATFORMS`.
+
+/// A named multi-site WAN preset: wire name (usable in `wan` scenario
+/// specs and the `sakuraone wan` CLI), summary, constructor.
+pub struct WanDescriptor {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub build: fn() -> WanSpec,
+}
+
+fn site(name: &str, platform: &str) -> WanSite {
+    WanSite {
+        name: name.into(),
+        cluster: SiteCluster::Platform(platform.into()),
+    }
+}
+
+fn link(a: &str, b: &str, gbps: f64, rtt_ms: f64, availability: f64) -> WanLink {
+    WanLink { a: a.into(), b: b.into(), gbps, rtt_ms, availability }
+}
+
+static SAKURAONE_2SITE: WanDescriptor = WanDescriptor {
+    name: "sakuraone-2site",
+    summary: "two sakuraone-10x sites (2000 nodes total) joined by an \
+              800G WAN wave, 8 ms RTT — the cross-site DP / checkpoint \
+              replication flagship",
+    build: || WanSpec {
+        name: "sakuraone-2site".into(),
+        sites: vec![site("tokyo", "sakuraone-10x"), site("ishikari", "sakuraone-10x")],
+        links: vec![link("tokyo", "ishikari", 800.0, 8.0, 0.9995)],
+    },
+};
+
+static SAKURAONE_2SITE_HALFSCALE: WanDescriptor = WanDescriptor {
+    name: "sakuraone-2site-halfscale",
+    summary: "two half-scale sites on a 400G / 10 ms wave — the fast CI \
+              shape of the WAN tier",
+    build: || WanSpec {
+        name: "sakuraone-2site-halfscale".into(),
+        sites: vec![
+            site("tokyo", "sakuraone-halfscale"),
+            site("ishikari", "sakuraone-halfscale"),
+        ],
+        links: vec![link("tokyo", "ishikari", 400.0, 10.0, 0.999)],
+    },
+};
+
+static SAKURAONE_4SITE_RING: WanDescriptor = WanDescriptor {
+    name: "sakuraone-4site-ring",
+    summary: "four sakuraone-10x sites (4000 nodes) on a 400G ring, \
+              12 ms RTT per hop — the 2-4 site end of the scale-out item",
+    build: || WanSpec {
+        name: "sakuraone-4site-ring".into(),
+        sites: vec![
+            site("tokyo", "sakuraone-10x"),
+            site("ishikari", "sakuraone-10x"),
+            site("osaka", "sakuraone-10x"),
+            site("fukuoka", "sakuraone-10x"),
+        ],
+        links: vec![
+            link("tokyo", "ishikari", 400.0, 12.0, 0.999),
+            link("ishikari", "osaka", 400.0, 12.0, 0.999),
+            link("osaka", "fukuoka", 400.0, 12.0, 0.999),
+            link("fukuoka", "tokyo", 400.0, 12.0, 0.999),
+        ],
+    },
+};
+
+/// Every registered WAN preset, in documentation order.
+pub static WAN_PRESETS: [&WanDescriptor; 3] = [
+    &SAKURAONE_2SITE,
+    &SAKURAONE_2SITE_HALFSCALE,
+    &SAKURAONE_4SITE_RING,
+];
+
+/// Look a WAN preset up by wire name.
+pub fn wan_preset(name: &str) -> Option<&'static WanDescriptor> {
+    WAN_PRESETS.iter().find(|p| p.name == name).copied()
+}
+
+/// [`wan_preset`] with the canonical lookup-failure message.
+pub fn wan_preset_or_err(name: &str) -> Result<&'static WanDescriptor, String> {
+    wan_preset(name).ok_or_else(|| {
+        format!("unknown WAN preset {name:?} (known: {})", known_wan_presets())
+    })
+}
+
+/// Comma-separated preset names for error messages.
+pub fn known_wan_presets() -> String {
+    WAN_PRESETS.iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::codec::assert_roundtrip;
+
+    #[test]
+    fn presets_are_unique_valid_and_roundtrip_exactly() {
+        let mut names: Vec<&str> = WAN_PRESETS.iter().map(|p| p.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), WAN_PRESETS.len(), "duplicate preset names");
+        for p in WAN_PRESETS {
+            assert!(std::ptr::eq(wan_preset(p.name).unwrap(), p));
+            let spec = (p.build)();
+            spec.validate().unwrap_or_else(|e| panic!("{}: {e}", p.name));
+            assert_eq!(spec.name, p.name, "preset name matches spec name");
+            assert_roundtrip(&spec, WanSpec::to_json, WanSpec::from_json);
+        }
+        assert!(wan_preset("sakuraone-9site").is_none());
+        assert!(wan_preset_or_err("x").unwrap_err().contains("known:"));
+    }
+
+    #[test]
+    fn two_site_preset_shape() {
+        let spec = (SAKURAONE_2SITE.build)();
+        assert_eq!(spec.sites.len(), 2);
+        assert_eq!(spec.total_nodes(), 2000);
+        let g = spec.graph();
+        assert_eq!(g.links.len(), 2, "one cable, two directions");
+        // 800 Gbit/s * 0.9995 derate = ~99.95 GB/s payload
+        let bw = g.links[0].bandwidth;
+        assert!((bw - 800.0 * 1e9 / 8.0 * 0.9995).abs() < 1.0, "bw={bw}");
+        assert!((g.links[0].latency - 4e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_docs_decode_with_link_defaults() {
+        let j = Json::parse(
+            r#"{"schema": 1, "name": "pair",
+                "sites": [{"name": "a", "cluster": "sakuraone-halfscale"},
+                          {"name": "b", "cluster": {"nodes": 10}}],
+                "links": [{"a": "a", "b": "b"}]}"#,
+        )
+        .unwrap();
+        let spec = WanSpec::from_json(&j).unwrap();
+        assert_eq!(spec.links[0].gbps, 100.0);
+        assert_eq!(spec.links[0].rtt_ms, 10.0);
+        assert_eq!(spec.links[0].availability, 1.0);
+        match &spec.sites[1].cluster {
+            SiteCluster::Inline(cfg) => assert_eq!(cfg.nodes, 10),
+            other => panic!("expected inline cluster, got {other:?}"),
+        }
+        // single-site specs need no links at all
+        let j = Json::parse(
+            r#"{"schema": 1, "name": "solo",
+                "sites": [{"name": "only", "cluster": "sakuraone"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(WanSpec::from_json(&j).unwrap().sites.len(), 1);
+    }
+
+    #[test]
+    fn bad_documents_are_rejected_with_located_errors() {
+        for (doc, needle) in [
+            (r#"{"name": "x", "sites": []}"#, "missing \"schema\""),
+            (r#"{"schema": 2, "name": "x", "sites": []}"#, "not supported"),
+            (r#"{"schema": 1, "name": "x", "sites": [], "warp": 1}"#, "unknown field"),
+            (r#"{"schema": 1, "name": "x", "sites": []}"#, "at least one site"),
+            (r#"{"schema": 1, "name": "", "sites": [{"name": "a", "cluster": "sakuraone"}]}"#, "name: must not be empty"),
+            (
+                r#"{"schema": 1, "name": "x", "sites": [{"name": "A", "cluster": "sakuraone"}]}"#,
+                "lowercase alphanumerics",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "sites": [
+                    {"name": "a", "cluster": "sakuraone"},
+                    {"name": "a", "cluster": "sakuraone"}]}"#,
+                "duplicate site name",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "sites": [{"name": "a", "cluster": "tsubame"}]}"#,
+                "unknown platform",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "sites": [{"name": "a", "cluster": 4}]}"#,
+                "platform name or an inline cluster spec",
+            ),
+            (
+                r#"{"schema": 1, "name": "x", "sites": [{"name": "a"}]}"#,
+                "missing \"cluster\"",
+            ),
+            (
+                r#"{"schema": 1, "name": "x",
+                    "sites": [{"name": "a", "cluster": "sakuraone"},
+                              {"name": "b", "cluster": "sakuraone"}],
+                    "links": [{"a": "a", "b": "mars"}]}"#,
+                "not a declared site",
+            ),
+            (
+                r#"{"schema": 1, "name": "x",
+                    "sites": [{"name": "a", "cluster": "sakuraone"},
+                              {"name": "b", "cluster": "sakuraone"}],
+                    "links": [{"a": "a", "b": "a"}]}"#,
+                "must be distinct sites",
+            ),
+            (
+                r#"{"schema": 1, "name": "x",
+                    "sites": [{"name": "a", "cluster": "sakuraone"},
+                              {"name": "b", "cluster": "sakuraone"}],
+                    "links": [{"a": "a", "b": "b"}, {"a": "b", "b": "a"}]}"#,
+                "duplicate link",
+            ),
+            (
+                r#"{"schema": 1, "name": "x",
+                    "sites": [{"name": "a", "cluster": "sakuraone"},
+                              {"name": "b", "cluster": "sakuraone"}],
+                    "links": [{"a": "a", "b": "b", "gbps": 0}]}"#,
+                "gbps: must be positive",
+            ),
+            (
+                r#"{"schema": 1, "name": "x",
+                    "sites": [{"name": "a", "cluster": "sakuraone"},
+                              {"name": "b", "cluster": "sakuraone"}],
+                    "links": [{"a": "a", "b": "b", "availability": 1.5}]}"#,
+                "availability: must be in (0, 1]",
+            ),
+            (
+                r#"{"schema": 1, "name": "x",
+                    "sites": [{"name": "a", "cluster": "sakuraone"},
+                              {"name": "b", "cluster": "sakuraone"}]}"#,
+                "must be connected",
+            ),
+            (
+                r#"{"schema": 1, "name": "x",
+                    "sites": [{"name": "a", "cluster": {"nodes": 0}}]}"#,
+                "nodes",
+            ),
+            (r#"[]"#, "expected an object"),
+        ] {
+            let err = WanSpec::from_json(&Json::parse(doc).unwrap()).unwrap_err();
+            assert!(err.contains(needle), "{doc}: {err}");
+        }
+    }
+
+    #[test]
+    fn routes_are_deterministic_shortest_hop() {
+        let spec = (SAKURAONE_4SITE_RING.build)();
+        let g = spec.graph();
+        // tokyo(0) -> osaka(2): two 2-hop routes around the ring; the one
+        // through earliest-declared links (via ishikari) wins.
+        let path = g.route(0, 2).unwrap();
+        assert_eq!(path.len(), 2);
+        assert_eq!(g.links[path[0]].to, 1, "tie-break routes via ishikari");
+        assert_eq!(g.route(1, 1).unwrap().len(), 0);
+        // repeated calls are identical
+        assert_eq!(g.route(0, 2).unwrap(), path);
+        let lat = g.path_latency(&path);
+        assert!((lat - 2.0 * 6e-3).abs() < 1e-12, "two 6 ms one-way hops");
+    }
+
+    #[test]
+    fn build_sites_resolves_every_site_fabric() {
+        let spec = (SAKURAONE_2SITE_HALFSCALE.build)();
+        let sites = spec.build_sites();
+        assert_eq!(sites.len(), 2);
+        for (cfg, fabric) in &sites {
+            assert_eq!(cfg.nodes, 50);
+            assert_eq!(fabric.hosts().count(), 50 * 8);
+        }
+    }
+}

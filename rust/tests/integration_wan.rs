@@ -1,0 +1,191 @@
+//! Integration tests for the multi-site WAN tier and the `sakuraone wan`
+//! subcommand: the golden-manifest determinism contract (byte-identical
+//! across worker counts, pinned to a committed snapshot), preset
+//! validation, suite-grid gating, and the committed multi-site example
+//! plan end-to-end through `suite --plan`.
+
+use sakuraone::commands;
+use sakuraone::config::ClusterConfig;
+use sakuraone::runtime::sweep::{run_sweep, standard_grid, SweepConfig};
+use sakuraone::util::cli::Args;
+use sakuraone::util::json::Json;
+
+/// Committed snapshot of `wan run --json --quick --seed 42`.
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/wan.json");
+
+/// The committed multi-site example plan (2 x 1000-node sites).
+const MULTISITE_PLAN: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/plans/multisite.json");
+
+fn args(v: &[&str]) -> Args {
+    Args::parse(v.iter().map(|s| s.to_string()), commands::FLAGS).unwrap()
+}
+
+fn quick_manifest(workers: &str) -> String {
+    commands::wan::handle(&args(&[
+        "wan", "run", "--json", "--quick", "--seed", "42", "--workers", workers,
+    ]))
+    .unwrap()
+    .to_json()
+    .emit()
+}
+
+#[test]
+fn golden_manifest_reproduces_byte_for_byte_at_1_and_4_workers() {
+    let one = quick_manifest("1");
+    let four = quick_manifest("4");
+    assert_eq!(one, four, "worker count leaked into the wan manifest");
+
+    let committed = std::fs::read_to_string(GOLDEN).expect("golden snapshot");
+    let parsed = Json::parse(&committed).expect("golden snapshot parses");
+    if parsed.get("bootstrap") == Some(&Json::Bool(true)) {
+        // First run after a model change: bless the snapshot. Commit the
+        // blessed file so later runs compare byte-for-byte (docs/ci.md).
+        std::fs::write(GOLDEN, &one).expect("bless golden snapshot");
+        return;
+    }
+    assert_eq!(
+        committed, one,
+        "wan manifest drifted from tests/golden/wan.json; if the model \
+         change is intentional, restore the bootstrap marker and rerun to \
+         re-bless (docs/ci.md)"
+    );
+}
+
+#[test]
+fn wan_run_covers_the_full_grid() {
+    let m = commands::wan::handle(&args(&[
+        "wan", "run", "--json", "--workers", "2", "--seed", "42",
+    ]))
+    .unwrap();
+    assert_eq!(m.command, "wan");
+    // quick pair + flagship pair + 4-site ring + message-size ablation
+    assert_eq!(m.scenarios.len(), 6);
+
+    let get = |id: &'static str| m.scenario(id).unwrap_or_else(|| panic!("{id} missing"));
+    for s in &m.scenarios {
+        assert_eq!(s.kind, "wan");
+        let total = s.metric_value("allreduce_ms").unwrap();
+        let intra = s.metric_value("intra_ms").unwrap();
+        let wan = s.metric_value("wan_ms").unwrap();
+        assert!(total > 0.0 && intra > 0.0 && wan > 0.0, "{}", s.id);
+        assert!((total - (intra + wan)).abs() < 1e-9 * total.max(1.0), "{}", s.id);
+        let util = s.metric_value("wan_peak_util").unwrap();
+        assert!(util > 0.0 && util <= 1.0 + 1e-9, "{}", s.id);
+    }
+
+    // replication cost only when the scenario ships a replica
+    assert!(get("wan/2site-halfscale-replicated").metric_value("replicate_s").unwrap() > 0.0);
+    assert_eq!(get("wan/2site-halfscale").metric_value("replicate_s").unwrap(), 0.0);
+
+    // the flagship pair really is the two-pod-of-1000-nodes platform
+    let flagship = get("wan/2site-10x");
+    assert_eq!(flagship.params.get("sites").map(String::as_str), Some("2"));
+    assert_eq!(flagship.params.get("nodes_total").map(String::as_str), Some("2000"));
+
+    // 4x the message takes strictly longer on the same WAN
+    assert!(
+        get("wan/2site-halfscale-4g").metric_value("allreduce_ms").unwrap()
+            > get("wan/2site-halfscale").metric_value("allreduce_ms").unwrap()
+    );
+}
+
+#[test]
+fn wan_show_and_validate_cover_presets_files_and_errors() {
+    // show: default preset is the flagship two-site WAN
+    let m = commands::wan::handle(&args(&["wan", "show", "--json"])).unwrap();
+    assert_eq!(m.command, "wan-show");
+    let rec = &m.scenarios[0];
+    assert_eq!(rec.params.get("name").map(String::as_str), Some("sakuraone-2site"));
+    assert_eq!(rec.metric_value("nodes_total").unwrap(), 2000.0);
+
+    // validate with no operand checks every preset round trip
+    let m = commands::wan::handle(&args(&["wan", "validate", "--json"])).unwrap();
+    assert_eq!(m.scenarios.len(), 3);
+    assert!(m.notes.iter().all(|n| n.contains("round-trip exact")));
+
+    // a spec file on disk resolves exactly like a preset
+    let path = std::env::temp_dir().join("sakuraone-wan-it.json");
+    std::fs::write(
+        &path,
+        r#"{"schema": 1, "name": "pair",
+            "sites": [{"name": "a", "cluster": "sakuraone-halfscale"},
+                      {"name": "b", "cluster": "sakuraone-halfscale"}],
+            "links": [{"a": "a", "b": "b", "gbps": 400}]}"#,
+    )
+    .unwrap();
+    let m = commands::wan::handle(&args(&[
+        "wan",
+        "validate",
+        path.to_str().unwrap(),
+        "--json",
+    ]))
+    .unwrap();
+    assert_eq!(m.scenarios.len(), 1);
+    assert_eq!(m.scenarios[0].metric_value("sites").unwrap(), 2.0);
+    std::fs::remove_file(&path).ok();
+
+    // errors: unknown preset, unknown action, missing action
+    let err = commands::wan::handle(&args(&["wan", "validate", "warp"])).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown WAN preset"));
+    let err = commands::wan::handle(&args(&["wan", "warp"])).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown wan action"));
+    let err = commands::wan::handle(&args(&["wan"])).unwrap_err();
+    assert!(format!("{err:#}").contains("needs an action"));
+}
+
+#[test]
+fn suite_quick_grid_gates_the_wan_scenarios() {
+    // the suite path (what CI's baseline gate runs) carries the WAN pair
+    // and stays byte-deterministic across worker counts
+    let cfg = ClusterConfig::default();
+    let grid = standard_grid(true);
+    let ids: Vec<&str> = grid.iter().map(|s| s.id.as_str()).collect();
+    assert!(ids.contains(&"wan/2site-halfscale"));
+    assert!(ids.contains(&"wan/2site-halfscale-replicated"));
+    let a = run_sweep(&cfg, &grid, &SweepConfig { workers: 1, seed: 7 });
+    let b = run_sweep(&cfg, &grid, &SweepConfig { workers: 3, seed: 7 });
+    assert_eq!(a.to_json().emit(), b.to_json().emit());
+}
+
+#[test]
+fn multisite_plan_runs_end_to_end_byte_identically() {
+    let run = |workers: &str| {
+        commands::suite::handle(&args(&[
+            "suite",
+            "--plan",
+            MULTISITE_PLAN,
+            "--json",
+            "--workers",
+            workers,
+            "--seed",
+            "42",
+        ]))
+        .unwrap()
+    };
+    let one = run("1");
+    let four = run("4");
+    assert_eq!(
+        one.to_json().emit(),
+        four.to_json().emit(),
+        "worker count leaked into the multisite plan manifest"
+    );
+
+    // the committed plan really exercises a >= 1k-node, >= 2-site platform
+    let flagship = one.scenario("wan/flagship").expect("wan/flagship missing");
+    assert_eq!(flagship.params.get("sites").map(String::as_str), Some("2"));
+    assert_eq!(flagship.params.get("nodes_total").map(String::as_str), Some("2000"));
+    assert!(flagship.metric_value("replicate_s").unwrap() > 0.0);
+
+    let ring = one.scenario("wan/ring").expect("wan/ring missing");
+    assert_eq!(ring.params.get("sites").map(String::as_str), Some("4"));
+
+    // the replicated campaign reports the WAN/power satellite metrics
+    let campaign = one
+        .scenario("campaign/replicated-2d")
+        .expect("campaign/replicated-2d missing");
+    assert!(campaign.metric_value("replications").unwrap() > 0.0);
+    assert!(campaign.metric_value("joules_total").unwrap() > 0.0);
+    assert!(campaign.metric_value("avg_power_w").unwrap() > 0.0);
+    assert_eq!(campaign.params.get("replicate").map(String::as_str), Some("true"));
+}

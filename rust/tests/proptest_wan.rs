@@ -1,0 +1,311 @@
+//! Property tests pinning the hierarchical WAN solver to the flat
+//! single-site path bit for bit, plus the WAN-capacity monotonicity the
+//! two-level model promises (docs/wan.md).
+//!
+//! The equivalence is by construction — intra-site flows are delegated
+//! verbatim (same batch, same order, same solver mode) to each site's own
+//! incremental `FlowSim` — and these tests are the contract that keeps it
+//! that way: random batches on a one-site WAN, and on a two-site WAN with
+//! zero inter-site flows, must reproduce the flat reports byte for byte.
+
+use std::cell::RefCell;
+
+use sakuraone::network::sim::SimReport;
+use sakuraone::network::wan::{cross_site_allreduce, WanFlow, WanSim};
+use sakuraone::network::{Flow, FlowSim, RoceParams};
+use sakuraone::topology::wan::WanSpec;
+use sakuraone::util::json::Json;
+use sakuraone::util::proptest::{check, Config};
+use sakuraone::util::rng::Rng;
+
+/// A chain-of-sites WAN whose every site is an 8-node half-scale cluster.
+fn wan_spec(sites: usize, gbps: f64, availability: f64) -> WanSpec {
+    let site_docs: Vec<String> = (0..sites)
+        .map(|i| {
+            format!(
+                r#"{{"name": "s{i}", "cluster":
+                    {{"platform": "sakuraone-halfscale", "nodes": 8}}}}"#
+            )
+        })
+        .collect();
+    let link_docs: Vec<String> = (1..sites)
+        .map(|i| {
+            format!(
+                r#"{{"a": "s{}", "b": "s{i}", "gbps": {gbps}, "rtt_ms": 10,
+                     "availability": {availability}}}"#,
+                i - 1
+            )
+        })
+        .collect();
+    let doc = format!(
+        r#"{{"schema": 1, "name": "prop", "sites": [{}], "links": [{}]}}"#,
+        site_docs.join(","),
+        link_docs.join(","),
+    );
+    WanSpec::from_json(&Json::parse(&doc).unwrap()).unwrap()
+}
+
+/// Bitwise comparison of everything the report promises to be
+/// path-independent (`rounds` is deliberately not on this list).
+fn assert_bitwise(a: &SimReport, b: &SimReport) -> Result<(), String> {
+    if a.makespan.to_bits() != b.makespan.to_bits() {
+        return Err(format!("makespan {} vs {}", a.makespan, b.makespan));
+    }
+    if a.results.len() != b.results.len() {
+        return Err("result count differs".into());
+    }
+    for (i, (x, y)) in a.results.iter().zip(&b.results).enumerate() {
+        if x.finish.to_bits() != y.finish.to_bits()
+            || x.latency.to_bits() != y.latency.to_bits()
+            || x.avg_rate.to_bits() != y.avg_rate.to_bits()
+            || x.hops != y.hops
+        {
+            return Err(format!("flow {i}: {x:?} vs {y:?}"));
+        }
+    }
+    if a.peak_link_util.len() != b.peak_link_util.len() {
+        return Err(format!(
+            "peak-util coverage {} vs {} links",
+            a.peak_link_util.len(),
+            b.peak_link_util.len()
+        ));
+    }
+    for (l, u) in &a.peak_link_util {
+        match b.peak_link_util.get(l) {
+            Some(v) if v.to_bits() == u.to_bits() => {}
+            other => return Err(format!("link {l}: peak {u} vs {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+/// (site, src node, dst node, rail, bytes, start, label) — an intra-site
+/// flow of a random batch over 8-node sites with 8 rails.
+type Gen = (usize, usize, usize, usize, f64, f64, u64);
+
+fn gen_batch(sites: usize) -> impl Fn(&mut Rng) -> Vec<Gen> {
+    move |r: &mut Rng| {
+        let n = 1 + r.below(30) as usize;
+        (0..n)
+            .map(|_| {
+                let a = r.below(8) as usize;
+                let b = (a + 1 + r.below(7) as usize) % 8;
+                (
+                    r.below(sites as u64) as usize,
+                    a,
+                    b,
+                    r.below(8) as usize,
+                    r.range(1e5, 64e6),
+                    r.range(0.0, 2e-3),
+                    r.next_u64(),
+                )
+            })
+            .collect()
+    }
+}
+
+#[test]
+fn prop_one_site_wan_is_bitwise_the_flat_solver() {
+    let spec = wan_spec(1, 100.0, 1.0);
+    let sites = spec.build_sites();
+    let graph = spec.graph();
+    // both solvers persist across batches, exactly like production use
+    let wan = RefCell::new(WanSim::new(&graph, &sites, RoceParams::default()));
+    let flat = RefCell::new(FlowSim::new(&sites[0].1, RoceParams::default()));
+    check(
+        Config { cases: 30, seed: 0x5A10, ..Default::default() },
+        gen_batch(1),
+        |batch| {
+            let fabric = &sites[0].1;
+            let flows: Vec<Flow> = batch
+                .iter()
+                .map(|&(_, a, b, rail, bytes, start, label)| Flow {
+                    src: fabric.host(a, rail).unwrap(),
+                    dst: fabric.host(b, rail).unwrap(),
+                    bytes,
+                    start,
+                    label,
+                })
+                .collect();
+            let wan_flows: Vec<WanFlow> = flows
+                .iter()
+                .map(|f| WanFlow {
+                    site_src: 0,
+                    site_dst: 0,
+                    src: f.src,
+                    dst: f.dst,
+                    bytes: f.bytes,
+                    start: f.start,
+                    label: f.label,
+                })
+                .collect();
+            let hier = wan.borrow_mut().run(&wan_flows);
+            let want = flat.borrow_mut().run(&flows);
+            assert_bitwise(&hier.site_reports[0], &want)?;
+            if hier.makespan.to_bits() != want.makespan.to_bits() {
+                return Err("hierarchical makespan drifted".into());
+            }
+            for (i, (x, y)) in hier.results.iter().zip(&want.results).enumerate() {
+                if x.finish.to_bits() != y.finish.to_bits() {
+                    return Err(format!("flow {i} result not copied bitwise"));
+                }
+            }
+            if !hier.peak_wan_util.is_empty() {
+                return Err("one-site WAN must not report WAN utilisation".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_two_sites_without_inter_flows_match_per_site_flat_solvers() {
+    let spec = wan_spec(2, 400.0, 0.999);
+    let sites = spec.build_sites();
+    let graph = spec.graph();
+    let wan = RefCell::new(WanSim::new(&graph, &sites, RoceParams::default()));
+    let flats: Vec<RefCell<FlowSim>> = sites
+        .iter()
+        .map(|(_, fabric)| RefCell::new(FlowSim::new(fabric, RoceParams::default())))
+        .collect();
+    check(
+        Config { cases: 30, seed: 0x5A11, ..Default::default() },
+        gen_batch(2),
+        |batch| {
+            // every flow stays inside its site — the WAN tier must be idle
+            let wan_flows: Vec<WanFlow> = batch
+                .iter()
+                .map(|&(s, a, b, rail, bytes, start, label)| WanFlow {
+                    site_src: s,
+                    site_dst: s,
+                    src: sites[s].1.host(a, rail).unwrap(),
+                    dst: sites[s].1.host(b, rail).unwrap(),
+                    bytes,
+                    start,
+                    label,
+                })
+                .collect();
+            let hier = wan.borrow_mut().run(&wan_flows);
+            if !hier.peak_wan_util.is_empty() {
+                return Err("zero inter-site flows must leave the WAN idle".into());
+            }
+            let mut expect_makespan = 0.0f64;
+            for s in 0..2 {
+                let sub: Vec<Flow> = wan_flows
+                    .iter()
+                    .filter(|f| f.site_src == s)
+                    .map(|f| Flow {
+                        src: f.src,
+                        dst: f.dst,
+                        bytes: f.bytes,
+                        start: f.start,
+                        label: f.label,
+                    })
+                    .collect();
+                let want = flats[s].borrow_mut().run(&sub);
+                assert_bitwise(&hier.site_reports[s], &want)
+                    .map_err(|e| format!("site {s}: {e}"))?;
+                expect_makespan = expect_makespan.max(want.makespan);
+            }
+            if hier.makespan.to_bits() != expect_makespan.to_bits() {
+                return Err("makespan is not the max over site makespans".into());
+            }
+            // input-order results: walk per-site cursors
+            let mut cursor = [0usize; 2];
+            for (i, f) in wan_flows.iter().enumerate() {
+                let s = f.site_src;
+                let want = &hier.site_reports[s].results[cursor[s]];
+                cursor[s] += 1;
+                if hier.results[i].finish.to_bits() != want.finish.to_bits() {
+                    return Err(format!("flow {i}: slot copy-back broke order"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn wan_bandwidth_and_availability_ladders_are_monotone() {
+    // More WAN bandwidth never slows the cross-site phase down...
+    let mut last = f64::INFINITY;
+    for gbps in [10.0, 50.0, 100.0, 400.0, 800.0] {
+        let spec = wan_spec(2, gbps, 0.999);
+        let sites = spec.build_sites();
+        let x = cross_site_allreduce(&sites, &spec.graph(), 4, 1e9);
+        assert!(x.wan_s > 0.0);
+        assert!(x.wan_s <= last, "{gbps} Gbps regressed: {} > {last}", x.wan_s);
+        last = x.wan_s;
+    }
+    // ...and neither does more availability (the deterministic derate).
+    let mut last = f64::INFINITY;
+    for availability in [0.25, 0.5, 0.9, 0.999, 1.0] {
+        let spec = wan_spec(2, 100.0, availability);
+        let sites = spec.build_sites();
+        let x = cross_site_allreduce(&sites, &spec.graph(), 4, 1e9);
+        assert!(
+            x.wan_s <= last,
+            "availability {availability} regressed: {} > {last}",
+            x.wan_s
+        );
+        last = x.wan_s;
+    }
+}
+
+#[test]
+fn prop_more_wan_bandwidth_never_delays_any_inter_site_flow() {
+    let lo = wan_spec(2, 50.0, 0.999);
+    let hi = wan_spec(2, 200.0, 0.999);
+    let sites_lo = lo.build_sites();
+    let sites_hi = hi.build_sites();
+    let graph_lo = lo.graph();
+    let graph_hi = hi.graph();
+    let sim_lo = RefCell::new(WanSim::new(&graph_lo, &sites_lo, RoceParams::default()));
+    let sim_hi = RefCell::new(WanSim::new(&graph_hi, &sites_hi, RoceParams::default()));
+    let h0 = sites_lo[0].1.host(0, 0).unwrap();
+    check(
+        Config { cases: 25, seed: 0x5A12, ..Default::default() },
+        |r: &mut Rng| {
+            let n = 1 + r.below(12) as usize;
+            (0..n)
+                .map(|_| {
+                    (
+                        r.below(2) as usize,
+                        r.range(1e6, 20e9),
+                        r.range(0.0, 2.0),
+                        r.next_u64(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |batch| {
+            let flows: Vec<WanFlow> = batch
+                .iter()
+                .map(|&(dir, bytes, start, label)| WanFlow {
+                    site_src: dir,
+                    site_dst: 1 - dir,
+                    src: h0,
+                    dst: h0,
+                    bytes,
+                    start,
+                    label,
+                })
+                .collect();
+            let slow = sim_lo.borrow_mut().run(&flows);
+            let fast = sim_hi.borrow_mut().run(&flows);
+            for (i, (s, f)) in slow.results.iter().zip(&fast.results).enumerate() {
+                if f.finish > s.finish + 1e-9 {
+                    return Err(format!(
+                        "flow {i} finished later on the 4x-faster WAN: \
+                         {} vs {}",
+                        f.finish, s.finish
+                    ));
+                }
+            }
+            if fast.makespan > slow.makespan + 1e-9 {
+                return Err("makespan regressed with more bandwidth".into());
+            }
+            Ok(())
+        },
+    );
+}
